@@ -1,0 +1,57 @@
+//! Memory-environment robustness scenario (Fig 7 as an application):
+//! how does the RFU's classifier hold up when the LLC slows down —
+//! e.g. the MPU is deployed next to a bigger, slower LLC, or the cache
+//! is shared under contention?
+//!
+//! Sweeps LLC hit latency and compares the dynamic-threshold classifier
+//! against a static 64-cycle threshold, printing the classifier state
+//! (threshold, grant rate) at each point.
+
+use dare::coordinator::{run_one, BenchPoint, RunSpec};
+use dare::energy::{efficiency, EnergyModel};
+use dare::kernels::KernelKind;
+use dare::sim::Variant;
+use dare::sparse::DatasetKind;
+use dare::util::table::Table;
+
+fn main() {
+    let scale = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.3f64);
+    let model = EnergyModel::default();
+    let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::Gpt2Attention, 8, scale);
+
+    let mut t = Table::new(
+        "RFU robustness as the LLC slows (SDDMM B=8)",
+        &["llc hit lat", "rfu", "cycles", "eff vs base", "grant rate", "suppressed uops"],
+    );
+    for lat in [20u64, 40, 60, 80, 100] {
+        let mut base = RunSpec::new(p, Variant::Baseline);
+        base.llc_hit_latency = Some(lat);
+        let rb = run_one(&base, false);
+        let base_eff = efficiency(&rb.stats, &model);
+        for dynamic in [true, false] {
+            let mut s = RunSpec::new(p, Variant::DareFre);
+            s.llc_hit_latency = Some(lat);
+            s.rfu_dynamic = Some(dynamic);
+            s.verify = true;
+            let r = run_one(&s, false);
+            let total = r.stats.rfu.classified_hit + r.stats.rfu.classified_miss;
+            let grant =
+                if total == 0 { 0.0 } else { r.stats.rfu.classified_miss as f64 / total as f64 };
+            t.row(vec![
+                format!("{lat} cy"),
+                if dynamic { "dynamic".into() } else { "static 64cy".to_string() },
+                r.stats.cycles.to_string(),
+                Table::x(efficiency(&r.stats, &model) / base_eff),
+                Table::pct(grant),
+                r.stats.rfu.suppressed_uops.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    let _ = t.write_csv("example_robustness");
+    println!(
+        "\nthe static classifier collapses once LLC latency crosses its threshold\n\
+         (every hit is classified as a miss -> grants everything, Fig 7's cliff);\n\
+         the dynamic classifier tracks the hit/miss modes and stays selective."
+    );
+}

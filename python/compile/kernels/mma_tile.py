@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: the systolic MMA tile.
+
+This is the compute hot-spot of the DARE MPU — one ``mma`` instruction
+(``C[MxN] += A[MxK] @ B[NxK]^T``) expressed as a Pallas kernel. The rust
+runtime executes the AOT-lowered artifact for every retired ``mma`` in
+functional mode, so simulated numerics really are produced by this
+kernel.
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): the paper's
+16x16 systolic array with 32-bit PEs maps onto the MXU as a single
+f32 tile contraction; both operands are VMEM-resident tiles (a full
+16x16 f32 tile is 1 KiB — far under the ~16 MiB VMEM budget), and the
+contraction is a single MXU pass per tile. ``interpret=True`` is
+mandatory on CPU: real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The architectural tile edge (16 rows x 16 f32 per matrix register).
+TILE = 16
+
+
+def _mma_kernel(acc_ref, a_ref, b_ref, o_ref):
+    """o = acc + a @ b.T over full VMEM-resident tiles."""
+    a = a_ref[...]
+    b = b_ref[...]
+    # Contract the K dimension on the MXU; preferred_element_type pins the
+    # accumulator to f32 (the paper's 32-bit PE datapath).
+    prod = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = acc_ref[...] + prod
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mma_tile(acc, a, b):
+    """``acc[M,N] += a[M,K] @ b[N,K]^T`` as a Pallas call.
+
+    All operands are padded-to-16 tiles (padding rows/cols are zero, which
+    is exact for a matmul-accumulate).
+    """
+    m, n = acc.shape
+    return pl.pallas_call(
+        _mma_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(acc, a, b)
+
+
+def mma_tile_full(acc, a, b):
+    """Fixed-shape (16,16,16) entry point for AOT lowering."""
+    assert acc.shape == (TILE, TILE) and a.shape == (TILE, TILE) and b.shape == (TILE, TILE)
+    return mma_tile(acc, a, b)

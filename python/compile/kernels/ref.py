@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package is checked against its oracle by ``python/tests`` (hypothesis
+sweeps shapes and seeds), and the rust simulator's functional mode is
+checked against the same semantics through the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def mma_tile_ref(acc, a, b):
+    """Systolic tile semantics (DARE ``mma``): ``acc += a @ b.T``.
+
+    acc: [M, N], a: [M, K], b: [N, K] (operand shapes matrixM x matrixK
+    and matrixN x matrixK, paper section III-A).
+    """
+    return acc + a @ b.T
+
+
+def gather_mma_ref(acc, a_buf, idx, b):
+    """GSA densified operation: gather rows of ``a_buf`` then MMA.
+
+    acc: [M, N], a_buf: [R, K] (the backing array the base-address
+    vector points into), idx: [M] int32 row indices, b: [N, K].
+    ``out = acc + a_buf[idx] @ b.T``
+    """
+    return acc + a_buf[idx] @ b.T
+
+
+def sddmm_tile_ref(a, b, mask):
+    """Sampled tile product: ``(a @ b.T) * mask``.
+
+    a: [M, K], b: [N, K], mask: [M, N] (1.0 at sampled positions).
+    """
+    return (a @ b.T) * mask
+
+
+def spmm_col_ref(c_rows, vals, feats):
+    """SpMM densified column update (batched rank-1).
+
+    c_rows: [M, F] gathered C rows, vals: [M] nonzero values of one
+    sparse column, feats: [F] the B row of that column.
+    ``out = c_rows + vals[:, None] * feats[None, :]``
+    """
+    return c_rows + vals[:, None] * feats[None, :]

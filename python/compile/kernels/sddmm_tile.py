@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel: sampled dense-dense tile product (SDDMM).
+
+``out[M,N] = (a[M,K] @ b[N,K]^T) * mask[M,N]`` — the dense tile compute
+of the paper's SDDMM benchmark. The mask carries the sparsity pattern of
+the sampled block; multiplying after the MXU contraction matches how the
+MPU discards unsampled lanes (only the gathered rows were real work, the
+rest of the tile is masked).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16
+
+
+def _sddmm_kernel(a_ref, b_ref, mask_ref, o_ref):
+    prod = jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = prod * mask_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sddmm_tile(a, b, mask):
+    """``(a @ b.T) * mask`` as a Pallas call."""
+    m = a.shape[0]
+    n = b.shape[0]
+    return pl.pallas_call(
+        _sddmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, mask)
+
+
+def sddmm_tile_full(a, b, mask):
+    """Fixed-shape (16,16,16) entry for AOT lowering."""
+    assert a.shape == (TILE, TILE) and b.shape == (TILE, TILE)
+    return sddmm_tile(a, b, mask)

@@ -1,0 +1,39 @@
+"""Layer-1 Pallas kernel: the SpMM densified column update.
+
+One GSA SpMM step (`mgather C -> mma -> mscatter C`, see
+rust/src/kernels/spmm.rs) updates m gathered C rows with a batched
+rank-1 product: ``C_rows += vals (x) feats``. As an MXU operation this
+is a K=1 contraction: ``a = vals[:, None]`` (ms1, matrixK = 4 bytes),
+``b = feats[:, None]`` (ms2, features as rows).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16
+
+
+def _spmm_update_kernel(c_ref, vals_ref, feats_ref, o_ref):
+    vals = vals_ref[...]  # [M]
+    feats = feats_ref[...]  # [F]
+    o_ref[...] = c_ref[...] + vals[:, None] * feats[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def spmm_update(c_rows, vals, feats):
+    """``c_rows[M,F] += vals[M] (x) feats[F]``."""
+    m, f = c_rows.shape
+    return pl.pallas_call(
+        _spmm_update_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, f), jnp.float32),
+        interpret=True,
+    )(c_rows, vals, feats)
+
+
+def spmm_update_full(c_rows, vals, feats):
+    """Fixed-shape (16, 64) entry for AOT lowering."""
+    assert c_rows.shape == (TILE, 64) and vals.shape == (TILE,) and feats.shape == (64,)
+    return spmm_update(c_rows, vals, feats)

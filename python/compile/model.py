@@ -1,0 +1,102 @@
+"""Layer-2: the paper's workload compute graphs in JAX, calling the
+Layer-1 Pallas kernels.
+
+The MPU executes SpMM/SDDMM as sequences of densified tile operations;
+this module is the same computation expressed as a JAX graph over the
+kernels — the numerical ground truth the rust simulator is validated
+against, and the source of the AOT artifacts the rust runtime executes.
+
+Group encoding (mirrors the rust kernel compilers): each sparse column's
+nonzeros are chunked into groups of <= 16; a group carries the gathered
+row indices (padded), a validity mask, and its column id.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.gather_mma import gather_mma
+from .kernels.mma_tile import mma_tile
+
+GROUP = 16
+
+
+def build_groups(rows_by_col, vals_by_col=None):
+    """Host-side grouping: ``rows_by_col[c]`` is the sorted nonzero row
+    list of column ``c``. Returns (idx [G,16] i32, mask [G,16] f32,
+    cols [G] i32, vals [G,16] f32) numpy arrays (padded with row 0,
+    mask 0). ``vals_by_col`` defaults to ones (SDDMM pattern use)."""
+    idx, mask, cols, vals = [], [], [], []
+    for c, rows in enumerate(rows_by_col):
+        cvals = vals_by_col[c] if vals_by_col is not None else [1.0] * len(rows)
+        for g in range(0, len(rows), GROUP):
+            chunk = list(rows[g : g + GROUP])
+            vchunk = list(cvals[g : g + GROUP])
+            pad = GROUP - len(chunk)
+            idx.append(chunk + [0] * pad)
+            mask.append([1.0] * len(chunk) + [0.0] * pad)
+            vals.append(vchunk + [0.0] * pad)
+            cols.append(c)
+    if not idx:
+        z = np.zeros((0, GROUP), np.float32)
+        return np.zeros((0, GROUP), np.int32), z, np.zeros((0,), np.int32), z
+    return (
+        np.asarray(idx, np.int32),
+        np.asarray(mask, np.float32),
+        np.asarray(cols, np.int32),
+        np.asarray(vals, np.float32),
+    )
+
+
+def sddmm(a, b, idx, mask, cols):
+    """SDDMM over grouped samples: ``out[g,i] = <A[idx[g,i]], B[cols[g]]>``
+    masked by validity — each group is one densified GSA operation
+    (gather 16 A rows, MMA against the column's B row).
+
+    a: [M, F], b: [N, F], idx: [G, 16] i32, mask: [G, 16], cols: [G] i32.
+    Returns [G, 16] sampled dot products (0 at padding).
+    """
+
+    def one_group(carry, g):
+        gi, gm, gc = g
+        acc = jnp.zeros((GROUP, 1), jnp.float32)
+        bt = b[gc][None, :]  # [1, F] — the ms2 tile (matrixN = 1)
+        out = gather_mma(acc, a, gi, bt)  # [16, 1]
+        return carry, out[:, 0] * gm
+
+    _, outs = jax.lax.scan(one_group, None, (idx, mask, cols))
+    return outs
+
+
+def spmm(c_init, vals, idx, mask, cols, b):
+    """SpMM over grouped nonzeros: for each group (one sparse column's
+    chunk), ``C[idx[g]] += vals[g] * B[cols[g]]`` — the densified
+    rank-1 batch computed with the mma tile kernel (K = 1) and applied
+    with a scatter-add, mirroring ``mgather -> mma -> mscatter``.
+
+    c_init: [M, F], vals/mask: [G, 16], idx: [G, 16] i32, cols: [G] i32,
+    b: [K, F]. Returns the accumulated C.
+    """
+
+    def one_group(c, g):
+        gv, gi, gm, gc = g
+        c_rows = c[gi]  # mgather: the C rows under update
+        a = (gv * gm)[:, None]  # [16, 1] masked values (ms1, K = 1)
+        bt = b[gc][:, None]  # [F, 1] features as ms2 rows (N = F, K = 1)
+        updated = mma_tile(c_rows, a, bt)  # c_rows + vals (x) feats
+        # mscatter as a scatter-add of the delta: padding lanes carry a
+        # zero delta, so their duplicate row-0 indices are harmless.
+        return c.at[gi].add(updated - c_rows), None
+
+    c, _ = jax.lax.scan(one_group, c_init, (vals, idx, mask, cols))
+    return c
+
+
+def sddmm_dense_ref(a, b, mask_dense):
+    """Dense reference for tests: ``(A @ B^T) * mask``."""
+    return (a @ b.T) * mask_dense
+
+
+def spmm_dense_ref(s_dense, b):
+    """Dense reference for tests: ``S @ B``."""
+    return s_dense @ b

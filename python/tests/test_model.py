@@ -1,0 +1,87 @@
+"""L2 model graphs vs dense references (shapes + numerics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def random_pattern(rng, m, n, density):
+    dense = (rng.random((m, n)) < density).astype(np.float32)
+    rows_by_col = [np.nonzero(dense[:, c])[0].tolist() for c in range(n)]
+    return dense, rows_by_col
+
+
+def test_build_groups_structure():
+    rows_by_col = [[0, 5, 9], list(range(20)), []]
+    idx, mask, cols, vals = model.build_groups(rows_by_col)
+    # col 0: 1 group; col 1: 2 groups (20 nnz); col 2: none
+    assert idx.shape == (3, 16)
+    assert cols.tolist() == [0, 1, 1]
+    assert mask[0].sum() == 3
+    assert mask[1].sum() == 16
+    assert mask[2].sum() == 4
+    # padding indices are 0 with mask 0
+    assert idx[0, 3:].tolist() == [0] * 13
+
+
+def test_build_groups_empty():
+    idx, mask, cols, vals = model.build_groups([[], []])
+    assert idx.shape == (0, 16)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), density=st.floats(0.02, 0.3))
+def test_sddmm_matches_dense(seed, density):
+    rng = np.random.default_rng(seed)
+    m, n, f = 24, 20, 32
+    dense_mask, rows_by_col = random_pattern(rng, m, n, density)
+    a = jnp.asarray(rng.standard_normal((m, f)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    idx, mask, cols, _ = model.build_groups(rows_by_col)
+    if idx.shape[0] == 0:
+        return
+    out = model.sddmm(a, b, idx, mask, cols)
+    want_dense = model.sddmm_dense_ref(a, b, jnp.asarray(dense_mask))
+    # compare group-by-group against the dense reference
+    for g in range(idx.shape[0]):
+        for i in range(16):
+            if mask[g, i] == 0.0:
+                assert float(out[g, i]) == 0.0
+            else:
+                r, c = int(idx[g, i]), int(cols[g])
+                np.testing.assert_allclose(
+                    float(out[g, i]), float(want_dense[r, c]), rtol=2e-4, atol=2e-4
+                )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), density=st.floats(0.02, 0.3))
+def test_spmm_matches_dense(seed, density):
+    rng = np.random.default_rng(seed)
+    m, k, f = 24, 20, 32
+    dense_pat, rows_by_col = random_pattern(rng, m, k, density)
+    svals = dense_pat * rng.standard_normal((m, k)).astype(np.float32)
+    vals_by_col = [svals[rows_by_col[c], c].tolist() for c in range(k)]
+    b = jnp.asarray(rng.standard_normal((k, f)), jnp.float32)
+    idx, mask, cols, vals = model.build_groups(rows_by_col, vals_by_col)
+    c0 = jnp.zeros((m, f), jnp.float32)
+    if idx.shape[0] == 0:
+        return
+    got = model.spmm(c0, jnp.asarray(vals), jnp.asarray(idx), jnp.asarray(mask),
+                     jnp.asarray(cols), b)
+    want = model.spmm_dense_ref(jnp.asarray(svals), b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_spmm_accumulates_onto_initial_c():
+    b = jnp.ones((2, 4), jnp.float32)
+    idx, mask, cols, vals = model.build_groups([[1]], [[2.0]])
+    c0 = jnp.full((3, 4), 5.0)
+    got = model.spmm(c0, jnp.asarray(vals), jnp.asarray(idx), jnp.asarray(mask),
+                     jnp.asarray(cols), b)
+    want = c0.at[1].add(2.0)
+    np.testing.assert_allclose(got, want)

@@ -1,0 +1,31 @@
+"""spmm_update kernel vs oracle (hypothesis sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.spmm_update import spmm_update
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    f=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_update_matches_ref(m, f, seed):
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(seed), 3)
+    c = jax.random.uniform(ka, (m, f), jnp.float32, -2.0, 2.0)
+    vals = jax.random.uniform(kb, (m,), jnp.float32, -2.0, 2.0)
+    feats = jax.random.uniform(kc, (f,), jnp.float32, -2.0, 2.0)
+    got = spmm_update(c, vals, feats)
+    want = ref.spmm_col_ref(c, vals, feats)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_vals_is_identity():
+    c = jnp.ones((4, 8))
+    out = spmm_update(c, jnp.zeros((4,)), jnp.ones((8,)))
+    np.testing.assert_array_equal(out, c)

@@ -1,0 +1,30 @@
+//! End-to-end benches: one per paper table/figure family — the wall
+//! time to regenerate each experiment at smoke scale, plus the simulated
+//! results themselves (shape checks live in the test suite; these track
+//! regeneration cost).
+
+use dare::harness::{fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
+use dare::util::bench::Bencher;
+
+fn main() {
+    // Figure regeneration is itself the workload: bench at smoke scale.
+    let opts = HarnessOpts { scale: 0.08, threads: 0, verify: false };
+    let mut b = Bencher::new();
+    // Silence harness stdout while timing.
+    b.bench("figures/fig1a", || fig1::fig1a(opts).rows.len());
+    b.bench("figures/fig1b", || fig1::fig1b(opts).rows.len());
+    b.bench("figures/fig1c", || fig1::fig1c(opts).rows.len());
+    b.bench("figures/fig3a", || fig3::fig3a(opts).rows.len());
+    b.bench("figures/fig3b", || fig3::fig3b(opts).rows.len());
+    b.bench("figures/fig5", || fig5::fig5(opts).rows.len());
+    b.bench("figures/fig6", || fig5::fig6(opts).rows.len());
+    b.bench("figures/fig7", || fig7::fig7(opts).rows.len());
+    b.bench("figures/fig8", || fig8::fig8(opts).rows.len());
+    b.bench("figures/fig9", || fig9::fig9(opts).rows.len());
+    b.bench("figures/tables", || {
+        tables::table1();
+        tables::table2();
+        tables::overhead_report().rows.len()
+    });
+    let _ = b.write_csv("results/bench_figures.csv");
+}

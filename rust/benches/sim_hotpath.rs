@@ -1,0 +1,97 @@
+//! Simulator hot-path micro-benchmarks (in-repo bench harness; criterion
+//! is unavailable offline). Reports simulated-cycles-per-second — the L3
+//! metric optimized in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --offline` (add `-- --fast` for a smoke pass,
+//! `-- --filter <substr>` to select).
+
+use dare::coordinator::BenchPoint;
+use dare::kernels::KernelKind;
+use dare::mem::{Llc, LlcConfig, MemRequest};
+use dare::sim::{MmaExec, Mpu, NativeMma, SimConfig, Variant};
+use dare::sparse::DatasetKind;
+use dare::util::bench::Bencher;
+
+fn sim_cycles(point: BenchPoint, variant: Variant) -> (u64, impl FnMut() -> u64) {
+    let w = point.build(variant.has_gsa() && point.kernel != KernelKind::Gemm);
+    let cfg = SimConfig::for_variant(variant);
+    // one calibration run for the cycle count
+    let mut mpu = Mpu::new(cfg.clone(), w.mem.clone(), Box::new(NativeMma));
+    let cycles = mpu.run(&w.program).cycles;
+    (cycles, move || {
+        let mut mpu = Mpu::new(cfg.clone(), w.mem.clone(), Box::new(NativeMma));
+        mpu.run(&w.program).cycles
+    })
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Whole-MPU simulation throughput per variant (simulated cycles/s).
+    for variant in Variant::ALL {
+        let point = BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, 0.12);
+        let (cycles, mut f) = sim_cycles(point, variant);
+        b.bench_elems(&format!("mpu/sddmm-pubmed-b1/{}", variant.name()), cycles, &mut f);
+    }
+    for variant in [Variant::Baseline, Variant::Nvr, Variant::DareFre] {
+        let point = BenchPoint::new(KernelKind::SpMM, DatasetKind::Gpt2Attention, 8, 0.12);
+        let (cycles, mut f) = sim_cycles(point, variant);
+        b.bench_elems(&format!("mpu/spmm-gpt2-b8/{}", variant.name()), cycles, &mut f);
+    }
+
+    // LLC access path in isolation.
+    {
+        let mut llc = Llc::new(LlcConfig::default());
+        let mut now = 0u64;
+        let mut id = 0u64;
+        b.bench_elems("llc/access+tick", 1000, move || {
+            let mut done = 0usize;
+            for _ in 0..1000 {
+                now += 1;
+                done += llc.tick(now).len();
+                let _ = llc.access(
+                    MemRequest {
+                        id,
+                        addr: (id * 64) % (8 * 1024 * 1024),
+                        is_write: id % 7 == 0,
+                        is_prefetch: id % 3 == 0,
+                    },
+                    now,
+                );
+                id += 1;
+            }
+            done
+        });
+    }
+
+    // Functional mma tile (native backend).
+    {
+        let a: Vec<f32> = (0..256).map(|i| i as f32 * 0.01).collect();
+        let bb: Vec<f32> = (0..256).map(|i| i as f32 * 0.02).collect();
+        let mut acc = vec![0.0f32; 256];
+        let mut exec = NativeMma;
+        b.bench_elems("exec/native-mma-16x16x16", 16 * 16 * 16, move || {
+            exec.mma(&mut acc, &a, &bb, 16, 16, 16);
+            acc[0]
+        });
+    }
+
+    // Kernel compilation (program generation) throughput.
+    {
+        let point = BenchPoint::new(KernelKind::SpMM, DatasetKind::OgblCollab, 1, 0.25);
+        let nnz = point.matrix().nnz() as u64;
+        b.bench_elems("compile/spmm-gsa", nnz, move || point.build(true).program.instrs.len());
+        let point2 = BenchPoint::new(KernelKind::Sddmm, DatasetKind::OgblCollab, 1, 0.25);
+        let nnz2 = point2.matrix().nnz() as u64;
+        b.bench_elems("compile/sddmm-strided", nnz2, move || {
+            point2.build(false).program.instrs.len()
+        });
+    }
+
+    // Dataset generation.
+    b.bench("datasets/pubmed-full", || {
+        dare::sparse::Dataset::load(DatasetKind::PubMed, 1.0).matrix.nnz()
+    });
+
+    let _ = b.write_csv("results/bench_sim_hotpath.csv");
+}

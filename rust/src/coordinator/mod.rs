@@ -1,0 +1,13 @@
+//! Host-CPU coordinator: builds workloads, dispatches them to simulated
+//! MPUs, fans parameter sweeps across OS threads, and aggregates the
+//! results the figure harnesses report.
+//!
+//! This is the Layer-3 process role: the rust binary owns workload
+//! construction (kernel compilation), the simulation loop, metrics and
+//! the CLI; python never runs here.
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{run_many, run_one, RunResult};
+pub use spec::{BenchPoint, RunSpec};

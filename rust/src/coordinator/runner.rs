@@ -1,0 +1,130 @@
+//! Execute run specifications, in sequence or fanned across OS threads
+//! (tokio is unavailable offline; simulations are CPU-bound anyway, so a
+//! scoped-thread pool is the right tool).
+
+use super::spec::RunSpec;
+use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
+use crate::runtime::XlaMma;
+use crate::sim::{Mpu, NativeMma, SimStats};
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub name: String,
+    pub stats: SimStats,
+    pub energy: EnergyBreakdown,
+    /// Max relative functional error, when verification was requested.
+    pub verify_err: Option<f32>,
+}
+
+impl RunResult {
+    pub fn cycles(&self) -> u64 {
+        self.stats.cycles
+    }
+
+    pub fn energy_pj(&self) -> f64 {
+        self.energy.total_pj()
+    }
+}
+
+/// Run one spec to completion. `use_xla` executes `mma` through the AOT
+/// PJRT artifact instead of the native backend (slower; used by the
+/// end-to-end examples and integration tests).
+pub fn run_one(spec: &RunSpec, use_xla: bool) -> RunResult {
+    let workload = spec.point.build(spec.uses_gsa());
+    let cfg = spec.config();
+    let exec: Box<dyn crate::sim::MmaExec> = if use_xla {
+        Box::new(XlaMma::from_artifacts().expect("artifacts missing: run `make artifacts`"))
+    } else {
+        Box::new(NativeMma)
+    };
+    let mut mpu = Mpu::new(cfg, workload.mem.clone(), exec);
+    let stats = mpu.run(&workload.program);
+    let verify_err = if spec.verify {
+        Some(
+            workload
+                .verify(&mpu.mem, 1e-3)
+                .unwrap_or_else(|e| panic!("functional verification failed for {}: {e}", spec.name())),
+        )
+    } else {
+        None
+    };
+    RunResult {
+        name: spec.name(),
+        stats,
+        energy: energy_of(&stats, &EnergyModel::default()),
+        verify_err,
+    }
+}
+
+/// Run many specs across up to `threads` OS threads (0 = all cores),
+/// preserving input order in the results.
+pub fn run_many(specs: &[RunSpec], threads: usize) -> Vec<RunResult> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let workers = if threads == 0 { cores } else { threads }.min(n);
+    if workers <= 1 {
+        return specs.iter().map(|s| run_one(s, false)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<RunResult>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = run_one(&specs[i], false);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::BenchPoint;
+    use crate::kernels::KernelKind;
+    use crate::sim::Variant;
+    use crate::sparse::DatasetKind;
+
+    fn tiny(kernel: KernelKind, variant: Variant) -> RunSpec {
+        let mut s = RunSpec::new(
+            BenchPoint::new(kernel, DatasetKind::PubMed, 1, 0.04),
+            variant,
+        );
+        s.verify = true;
+        s
+    }
+
+    #[test]
+    fn run_one_verifies_functionally() {
+        let r = run_one(&tiny(KernelKind::Sddmm, Variant::Baseline), false);
+        assert!(r.cycles() > 0);
+        assert!(r.verify_err.unwrap() < 1e-3);
+        assert!(r.energy_pj() > 0.0);
+    }
+
+    #[test]
+    fn run_many_preserves_order_and_is_deterministic() {
+        let specs = vec![
+            tiny(KernelKind::Sddmm, Variant::Baseline),
+            tiny(KernelKind::Sddmm, Variant::DareFull),
+            tiny(KernelKind::SpMM, Variant::Baseline),
+            tiny(KernelKind::SpMM, Variant::DareFull),
+        ];
+        let par = run_many(&specs, 4);
+        let seq = run_many(&specs, 1);
+        assert_eq!(par.len(), 4);
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.name, s.name);
+            assert_eq!(p.stats.cycles, s.stats.cycles, "thread count must not change results");
+        }
+    }
+}

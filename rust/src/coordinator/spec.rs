@@ -1,0 +1,169 @@
+//! Experiment specifications: a benchmark point (kernel × dataset ×
+//! block size) plus the design variant and config overrides to simulate.
+
+use crate::kernels::{compile_gemm, compile_sddmm, compile_spmm, KernelKind, Workload};
+use crate::sim::{SimConfig, Variant};
+use crate::sparse::blockify::blockify_structurize;
+use crate::sparse::{Csc, Dataset, DatasetKind};
+
+/// One benchmark point of the evaluation grid (§V-A2): a kernel, a
+/// dataset, and the blockification size `B`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BenchPoint {
+    pub kernel: KernelKind,
+    pub dataset: DatasetKind,
+    /// Block size `B` (1 = original unstructured pattern).
+    pub block: usize,
+    /// Dataset scale in (0, 1] — shrinks matrices for fast runs.
+    pub scale: f64,
+}
+
+impl BenchPoint {
+    pub fn new(kernel: KernelKind, dataset: DatasetKind, block: usize, scale: f64) -> Self {
+        Self { kernel, dataset, block, scale }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}/{}/B={}", self.kernel.name(), self.dataset.name(), self.block)
+    }
+
+    /// The (possibly blockified) sparse operand.
+    pub fn matrix(&self) -> Csc {
+        let ds = Dataset::load(self.dataset, self.scale);
+        if self.block > 1 {
+            blockify_structurize(&ds.matrix, self.block, 0xB10C * self.block as u64)
+        } else {
+            ds.matrix
+        }
+    }
+
+    /// Compile this point for a strided (`gsa = false`) or densified
+    /// (`gsa = true`) lowering. The value seed is fixed so every variant
+    /// computes the identical problem.
+    pub fn build(&self, gsa: bool) -> Workload {
+        let ds = Dataset::load(self.dataset, self.scale);
+        let f = ds.feature_dim;
+        let m = self.matrix();
+        match self.kernel {
+            KernelKind::SpMM => compile_spmm(&m, f, gsa, 0xBEEF),
+            KernelKind::Sddmm => compile_sddmm(&m, f, gsa, 0xBEEF),
+            KernelKind::Gemm => {
+                // Dense GEMM at the dataset's logical shape (Fig 1a
+                // normalizes sparse kernels to this).
+                let dim = (m.nrows / 16).max(1) * 16;
+                compile_gemm(dim, dim, f, 0xBEEF)
+            }
+        }
+    }
+}
+
+/// A full run specification: a bench point on a design variant, with
+/// optional config overrides.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub point: BenchPoint,
+    pub variant: Variant,
+    /// Applied on top of `SimConfig::for_variant(variant)`.
+    pub config_override: Option<fn(&mut SimConfig)>,
+    /// Arbitrary closure-free parametric overrides (riq/vmr/llc latency).
+    pub riq_entries: Option<usize>,
+    pub vmr_entries: Option<usize>,
+    pub llc_hit_latency: Option<u64>,
+    pub rfu_dynamic: Option<bool>,
+    pub oracle_llc: bool,
+    /// Verify functional outputs after the run.
+    pub verify: bool,
+}
+
+impl RunSpec {
+    pub fn new(point: BenchPoint, variant: Variant) -> Self {
+        Self {
+            point,
+            variant,
+            config_override: None,
+            riq_entries: None,
+            vmr_entries: None,
+            llc_hit_latency: None,
+            rfu_dynamic: None,
+            oracle_llc: false,
+            verify: false,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.point.name(), self.variant.name())
+    }
+
+    /// Does this spec use the GSA (densified) program lowering?
+    pub fn uses_gsa(&self) -> bool {
+        // GEMM has no sparse structure to densify.
+        self.variant.has_gsa() && self.point.kernel != KernelKind::Gemm
+    }
+
+    pub fn config(&self) -> SimConfig {
+        let mut cfg = SimConfig::for_variant(self.variant);
+        if let Some(r) = self.riq_entries {
+            cfg.riq_entries = r;
+        }
+        if let Some(v) = self.vmr_entries {
+            cfg.vmr_entries = v;
+        }
+        if let Some(l) = self.llc_hit_latency {
+            cfg.llc.hit_latency = l;
+        }
+        if let Some(d) = self.rfu_dynamic {
+            cfg.rfu.dynamic = d;
+        }
+        cfg.llc.oracle = self.oracle_llc;
+        if let Some(f) = self.config_override {
+            f(&mut cfg);
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_point_builds_both_lowerings() {
+        let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, 0.05);
+        let strided = p.build(false);
+        let gsa = p.build(true);
+        assert_eq!(strided.checks[0].expect, gsa.checks[0].expect, "same problem");
+        assert!(gsa.program.stats().mgather > 0);
+        assert_eq!(strided.program.stats().mgather, 0);
+    }
+
+    #[test]
+    fn blockified_point_changes_pattern() {
+        let p1 = BenchPoint::new(KernelKind::SpMM, DatasetKind::PubMed, 1, 0.05);
+        let p8 = BenchPoint { block: 8, ..p1 };
+        let (n1, n8) = (p1.matrix().nnz() as f64, p8.matrix().nnz() as f64);
+        assert!((n8 / n1) < 1.3, "structurize keeps the nnz budget: {n1} -> {n8}");
+    }
+
+    #[test]
+    fn spec_overrides_apply() {
+        let p = BenchPoint::new(KernelKind::SpMM, DatasetKind::PubMed, 1, 0.05);
+        let mut s = RunSpec::new(p, Variant::DareFull);
+        s.riq_entries = Some(8);
+        s.llc_hit_latency = Some(40);
+        s.rfu_dynamic = Some(false);
+        let cfg = s.config();
+        assert_eq!(cfg.riq_entries, 8);
+        assert_eq!(cfg.llc.hit_latency, 40);
+        assert!(!cfg.rfu.dynamic);
+        assert!(s.uses_gsa());
+        let s2 = RunSpec::new(p, Variant::DareFre);
+        assert!(!s2.uses_gsa());
+    }
+
+    #[test]
+    fn gemm_never_uses_gsa() {
+        let p = BenchPoint::new(KernelKind::Gemm, DatasetKind::PubMed, 1, 0.05);
+        let s = RunSpec::new(p, Variant::DareFull);
+        assert!(!s.uses_gsa());
+    }
+}

@@ -1,0 +1,193 @@
+//! Event-based energy model (the role CACTI 7 + Design Compiler power
+//! reports play in §V-A1).
+//!
+//! Per-event energies are CACTI-7-like values for a 28 nm process at
+//! 2 GHz. Absolute joules are not the claim — Fig 6/7 report energy
+//! *efficiency ratios* against a baseline simulated with the same
+//! constants, so what matters is the relative weighting of event
+//! classes (MAC ≪ SRAM access ≪ DRAM line transfer) and the static/
+//! dynamic split.
+
+use crate::sim::SimStats;
+
+/// Per-event energies in picojoules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// One 32-bit MAC.
+    pub mac_pj: f64,
+    /// One idle-PE cycle while the array is streaming (clocking/leakage).
+    pub pe_idle_pj: f64,
+    /// One matrix-register row (64 B) read or write.
+    pub mreg_row_pj: f64,
+    /// One LLC access (tag + data, 64 B) — hit or probe.
+    pub llc_access_pj: f64,
+    /// One DRAM line (64 B) transfer.
+    pub dram_line_pj: f64,
+    /// One RIQ entry operation (insert / wake / decompose step).
+    pub riq_op_pj: f64,
+    /// One VMR row fill or read.
+    pub vmr_op_pj: f64,
+    /// One RFU observation/classification.
+    pub rfu_op_pj: f64,
+    /// MPU static power per cycle (clock tree + leakage).
+    pub mpu_static_pj: f64,
+    /// LLC static power per cycle.
+    pub llc_static_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            mac_pj: 1.0,
+            pe_idle_pj: 0.03,
+            mreg_row_pj: 6.0,
+            llc_access_pj: 150.0,
+            dram_line_pj: 3200.0,
+            riq_op_pj: 1.0,
+            vmr_op_pj: 1.5,
+            rfu_op_pj: 0.5,
+            mpu_static_pj: 30.0,
+            llc_static_pj: 100.0,
+        }
+    }
+}
+
+/// Energy breakdown for one simulation, in picojoules.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EnergyBreakdown {
+    pub compute_active: f64,
+    pub compute_idle: f64,
+    pub regfile: f64,
+    pub llc: f64,
+    pub dram: f64,
+    pub runahead: f64,
+    pub static_: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.compute_active
+            + self.compute_idle
+            + self.regfile
+            + self.llc
+            + self.dram
+            + self.runahead
+            + self.static_
+    }
+
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() / 1e6
+    }
+}
+
+/// Compute the energy of a finished run.
+pub fn energy_of(stats: &SimStats, model: &EnergyModel) -> EnergyBreakdown {
+    let sys = &stats.systolic;
+    let idle_pe_cycles = sys.provisioned_pe_cycles.saturating_sub(sys.active_pe_cycles);
+    // Register-file rows moved: demand uops each fill/drain one row; each
+    // mma reads 2 operand tiles + reads/writes the accumulator.
+    let mma_rows = sys.mma_count * (16 + 16 + 2 * 16);
+    EnergyBreakdown {
+        compute_active: sys.active_pe_cycles as f64 * model.mac_pj,
+        compute_idle: idle_pe_cycles as f64 * model.pe_idle_pj,
+        regfile: (stats.demand_uops + mma_rows) as f64 * model.mreg_row_pj,
+        llc: stats.llc.slots_used as f64 * model.llc_access_pj,
+        dram: (stats.dram.reads + stats.dram.writes) as f64 * model.dram_line_pj,
+        runahead: stats.prefetch_uops_issued as f64 * model.riq_op_pj
+            + (stats.vmr_fill_uops + stats.vmr.allocs) as f64 * model.vmr_op_pj
+            + (stats.rfu.observations + stats.rfu.classified_hit + stats.rfu.classified_miss)
+                as f64
+                * model.rfu_op_pj,
+        static_: stats.cycles as f64 * (model.mpu_static_pj + model.llc_static_pj),
+    }
+}
+
+/// Energy efficiency of a run: useful work per joule (MAC/pJ here; only
+/// ratios between runs are reported).
+pub fn efficiency(stats: &SimStats, model: &EnergyModel) -> f64 {
+    let e = energy_of(stats, model).total_pj();
+    if e == 0.0 {
+        0.0
+    } else {
+        stats.useful_macs as f64 / e
+    }
+}
+
+/// Fig 6's metric: efficiency of `run` normalized to `baseline` (same
+/// logical workload).
+pub fn efficiency_vs(run: &SimStats, baseline: &SimStats, model: &EnergyModel) -> f64 {
+    efficiency(run, model) / efficiency(baseline, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(cycles: u64) -> SimStats {
+        let mut s = SimStats::default();
+        s.cycles = cycles;
+        s.useful_macs = 1000;
+        s.systolic.active_pe_cycles = 1000;
+        s.systolic.provisioned_pe_cycles = 4000;
+        s.systolic.mma_count = 4;
+        s.demand_uops = 100;
+        s.llc.slots_used = 100;
+        s.dram.reads = 10;
+        s
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let b = energy_of(&stats(1000), &EnergyModel::default());
+        assert!(b.compute_active > 0.0);
+        assert!(b.compute_idle > 0.0);
+        assert!(b.dram > 0.0);
+        assert!(b.static_ > 0.0);
+        let total = b.total_pj();
+        assert!(
+            (total
+                - (b.compute_active
+                    + b.compute_idle
+                    + b.regfile
+                    + b.llc
+                    + b.dram
+                    + b.runahead
+                    + b.static_))
+                .abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn faster_run_is_more_efficient() {
+        let m = EnergyModel::default();
+        let slow = stats(10_000);
+        let fast = stats(1_000);
+        assert!(efficiency(&fast, &m) > efficiency(&slow, &m));
+        let ratio = efficiency_vs(&fast, &slow, &m);
+        assert!(ratio > 1.0);
+    }
+
+    #[test]
+    fn dram_heavy_run_pays() {
+        let m = EnergyModel::default();
+        let mut light = stats(1000);
+        let mut heavy = stats(1000);
+        light.dram.reads = 1;
+        heavy.dram.reads = 1000;
+        assert!(
+            energy_of(&heavy, &m).total_pj() > 2.0 * energy_of(&light, &m).total_pj(),
+            "DRAM traffic must dominate at this scale"
+        );
+    }
+
+    #[test]
+    fn efficiency_counts_useful_work_not_issued() {
+        let m = EnergyModel::default();
+        let mut a = stats(1000);
+        let mut b = stats(1000);
+        a.useful_macs = 1000;
+        b.useful_macs = 2000; // same energy, more useful work
+        assert!(efficiency(&b, &m) > efficiency(&a, &m));
+    }
+}

@@ -1,0 +1,90 @@
+//! Shared harness plumbing: run options, direct workload execution, and
+//! the uniform-random patterns used by Fig 1a.
+
+use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
+use crate::kernels::Workload;
+use crate::sim::{Mpu, NativeMma, SimConfig, SimStats};
+use crate::sparse::{Csc, Triplet};
+use crate::util::prng::Pcg32;
+use crate::util::table::Table;
+
+/// Common options for every figure harness.
+#[derive(Debug, Clone, Copy)]
+pub struct HarnessOpts {
+    /// Dataset scale in (0, 1]; 1.0 = evaluation size.
+    pub scale: f64,
+    /// Worker threads for sweep fan-out (0 = all cores).
+    pub threads: usize,
+    /// Verify functional outputs of every run.
+    pub verify: bool,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        Self { scale: 0.5, threads: 0, verify: false }
+    }
+}
+
+/// Run one pre-built workload under `cfg` (native functional backend).
+pub fn run_workload(w: &Workload, cfg: SimConfig, verify: bool) -> (SimStats, EnergyBreakdown) {
+    let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+    let stats = mpu.run(&w.program);
+    if verify {
+        w.verify(&mpu.mem, 1e-3)
+            .unwrap_or_else(|e| panic!("verification failed for '{}': {e}", w.program.name));
+    }
+    (stats, energy_of(&stats, &EnergyModel::default()))
+}
+
+/// Uniform-random sparsity pattern (Fig 1a sweeps sparsity directly).
+pub fn uniform_pattern(n: usize, sparsity: f64, seed: u64) -> Csc {
+    let mut rng = Pcg32::new(seed);
+    let target = ((1.0 - sparsity) * (n * n) as f64).max(1.0) as usize;
+    let mut ts = Vec::with_capacity(target);
+    let mut seen = std::collections::BTreeSet::new();
+    while ts.len() < target {
+        let r = rng.range(0, n) as u32;
+        let c = rng.range(0, n) as u32;
+        if seen.insert((c, r)) {
+            ts.push(Triplet { row: r, col: c, val: rng.f32() * 0.9 + 0.1 });
+        }
+    }
+    Csc::from_triplets(n, n, ts)
+}
+
+/// Print the table and write its CSV, returning the CSV path.
+pub fn emit(table: &Table, csv_name: &str) -> String {
+    table.print();
+    match table.write_csv(csv_name) {
+        Ok(p) => {
+            println!("[csv] {p}");
+            p
+        }
+        Err(e) => {
+            eprintln!("[warn] could not write CSV: {e}");
+            String::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_pattern_hits_sparsity() {
+        let p = uniform_pattern(64, 0.9, 1);
+        p.check().unwrap();
+        let got = p.sparsity();
+        assert!((got - 0.9).abs() < 0.01, "sparsity {got}");
+    }
+
+    #[test]
+    fn run_workload_smoke() {
+        let w = crate::kernels::compile_gemm(16, 16, 16, 1);
+        let (stats, energy) =
+            run_workload(&w, SimConfig::for_variant(crate::sim::Variant::Baseline), true);
+        assert!(stats.cycles > 0);
+        assert!(energy.total_pj() > 0.0);
+    }
+}

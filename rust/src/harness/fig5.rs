@@ -1,0 +1,138 @@
+//! Fig 5 (performance) and Fig 6 (energy efficiency) — the main
+//! evaluation grid: {SpMM, SDDMM} × {pubmed, ogbl-collab,
+//! ogbn-proteins, gpt2-attn} × B ∈ {1, 8}, every design variant
+//! normalized to the baseline. "DARE" is the better of DARE-FRE and
+//! DARE-full per benchmark (GSA is disabled by offline profiling,
+//! §V-A1/§V-G).
+
+use super::common::{emit, HarnessOpts};
+use crate::coordinator::{run_many, BenchPoint, RunResult, RunSpec};
+use crate::energy::{efficiency, EnergyModel};
+use crate::kernels::KernelKind;
+use crate::sim::Variant;
+use crate::sparse::DatasetKind;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+
+pub const VARIANTS: [Variant; 4] =
+    [Variant::Nvr, Variant::DareFre, Variant::DareGsa, Variant::DareFull];
+
+pub struct GridResults {
+    pub points: Vec<BenchPoint>,
+    /// results[point][0] = baseline, then VARIANTS order.
+    pub runs: Vec<Vec<RunResult>>,
+}
+
+pub fn run_grid(opts: HarnessOpts, blocks: &[usize]) -> GridResults {
+    let mut points = Vec::new();
+    for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {
+        for dataset in DatasetKind::ALL {
+            for &b in blocks {
+                points.push(BenchPoint::new(kernel, dataset, b, opts.scale));
+            }
+        }
+    }
+    let mut specs = Vec::new();
+    for &p in &points {
+        let mut s = RunSpec::new(p, Variant::Baseline);
+        s.verify = opts.verify;
+        specs.push(s);
+        for v in VARIANTS {
+            let mut s = RunSpec::new(p, v);
+            s.verify = opts.verify;
+            specs.push(s);
+        }
+    }
+    let flat = run_many(&specs, opts.threads);
+    let per = 1 + VARIANTS.len();
+    let runs = flat.chunks(per).map(|c| c.to_vec()).collect();
+    GridResults { points, runs }
+}
+
+/// Fig 5: performance normalized to baseline.
+pub fn fig5(opts: HarnessOpts) -> Table {
+    let grid = run_grid(opts, &[1, 8]);
+    let mut t = Table::new(
+        "Fig 5 — performance normalized to baseline",
+        &["benchmark", "nvr", "dare-fre", "dare-gsa", "dare-full", "DARE"],
+    );
+    let mut per_variant: Vec<Vec<f64>> = vec![Vec::new(); VARIANTS.len() + 1];
+    for (p, runs) in grid.points.iter().zip(&grid.runs) {
+        let base = &runs[0].stats;
+        let mut row = vec![p.name()];
+        let mut speeds = Vec::new();
+        for (vi, r) in runs[1..].iter().enumerate() {
+            let sp = r.stats.speedup_vs(base);
+            per_variant[vi].push(sp);
+            speeds.push(sp);
+            row.push(Table::x(sp));
+        }
+        // DARE = better of FRE (idx 1) and full (idx 3).
+        let dare = speeds[1].max(speeds[3]);
+        per_variant[VARIANTS.len()].push(dare);
+        row.push(Table::x(dare));
+        t.row(row);
+    }
+    let mut gm_row = vec!["geomean".to_string()];
+    for v in &per_variant {
+        gm_row.push(Table::x(geomean(v)));
+    }
+    t.row(gm_row);
+    emit(&t, "fig5");
+    t
+}
+
+/// Fig 6: energy efficiency normalized to baseline.
+pub fn fig6(opts: HarnessOpts) -> Table {
+    let grid = run_grid(opts, &[1, 8]);
+    let model = EnergyModel::default();
+    let mut t = Table::new(
+        "Fig 6 — energy efficiency normalized to baseline",
+        &["benchmark", "nvr", "dare-fre", "dare-gsa", "dare-full", "DARE"],
+    );
+    let mut per_variant: Vec<Vec<f64>> = vec![Vec::new(); VARIANTS.len() + 1];
+    for (p, runs) in grid.points.iter().zip(&grid.runs) {
+        let base_eff = efficiency(&runs[0].stats, &model);
+        let mut row = vec![p.name()];
+        let mut effs = Vec::new();
+        for (vi, r) in runs[1..].iter().enumerate() {
+            let e = efficiency(&r.stats, &model) / base_eff;
+            per_variant[vi].push(e);
+            effs.push(e);
+            row.push(Table::x(e));
+        }
+        // DARE picks the variant chosen for performance (offline
+        // profiling decides by runtime, §V-G).
+        let fre_faster = runs[2].stats.cycles <= runs[4].stats.cycles;
+        let dare = if fre_faster { effs[1] } else { effs[3] };
+        per_variant[VARIANTS.len()].push(dare);
+        row.push(Table::x(dare));
+        t.row(row);
+    }
+    let mut gm_row = vec!["geomean".to_string()];
+    for v in &per_variant {
+        gm_row.push(Table::x(geomean(v)));
+    }
+    t.row(gm_row);
+    emit(&t, "fig6");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_runs_all_points_tiny() {
+        let opts = HarnessOpts { scale: 0.04, threads: 0, verify: true };
+        let grid = run_grid(opts, &[1]);
+        assert_eq!(grid.points.len(), 8); // 2 kernels × 4 datasets × 1 block
+        for runs in &grid.runs {
+            assert_eq!(runs.len(), 5);
+            for r in runs {
+                assert!(r.stats.cycles > 0);
+                assert!(r.verify_err.is_some(), "verification requested");
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig 8 — sensitivity of DARE-full performance to VMR size and RIQ
+//! size, at B=1 (gather-heavy) and B=8 (FRE-dominated). Performance is
+//! min-max normalized to [0, 1] per case, as in the paper.
+
+use super::common::{emit, HarnessOpts};
+use crate::coordinator::{run_many, BenchPoint, RunSpec};
+use crate::kernels::KernelKind;
+use crate::sim::Variant;
+use crate::sparse::DatasetKind;
+use crate::util::stats::minmax_normalize;
+use crate::util::table::Table;
+
+pub const RIQ_SIZES: [usize; 4] = [8, 16, 32, 64];
+pub const VMR_SIZES: [usize; 4] = [4, 8, 16, 32];
+
+pub fn fig8(opts: HarnessOpts) -> Table {
+    let mut t = Table::new(
+        "Fig 8 — performance sensitivity to VMR size × RIQ size (SpMM, DARE-full, normalized [0,1])",
+        &["case", "riq", "vmr=4", "vmr=8", "vmr=16", "vmr=32"],
+    );
+    for block in [1usize, 8] {
+        let p = BenchPoint::new(KernelKind::SpMM, DatasetKind::PubMed, block, opts.scale);
+        let mut specs = Vec::new();
+        for &riq in &RIQ_SIZES {
+            for &vmr in &VMR_SIZES {
+                let mut s = RunSpec::new(p, Variant::DareFull);
+                s.riq_entries = Some(riq);
+                s.vmr_entries = Some(vmr);
+                specs.push(s);
+            }
+        }
+        let results = run_many(&specs, opts.threads);
+        // higher perf = fewer cycles → normalize 1/cycles
+        let perfs: Vec<f64> = results.iter().map(|r| 1.0 / r.stats.cycles as f64).collect();
+        let norm = minmax_normalize(&perfs);
+        for (ri, &riq) in RIQ_SIZES.iter().enumerate() {
+            let mut row = vec![format!("B={block}"), riq.to_string()];
+            for vi in 0..VMR_SIZES.len() {
+                row.push(Table::f(norm[ri * VMR_SIZES.len() + vi]));
+            }
+            t.row(row);
+        }
+    }
+    emit(&t, "fig8");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_normalized_range() {
+        let t = fig8(HarnessOpts { scale: 0.05, threads: 0, verify: false });
+        assert_eq!(t.rows.len(), 8);
+        for row in &t.rows {
+            for cell in &row[2..] {
+                let v: f64 = cell.parse().unwrap();
+                assert!((0.0..=1.0).contains(&v), "normalized value {v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Fig 9 — sensitivity to block size: baseline / NVR / DARE-FRE /
+//! DARE-full across B ∈ {1, 2, 4, 8, 16}, all normalized to the
+//! baseline at B=1. Shows the GSA↔FRE crossover that motivates the
+//! offline profiling switch of §V-G.
+
+use super::common::{emit, HarnessOpts};
+use crate::coordinator::{run_many, BenchPoint, RunSpec};
+use crate::kernels::KernelKind;
+use crate::sim::Variant;
+use crate::sparse::DatasetKind;
+use crate::util::table::Table;
+
+pub const BLOCKS: [usize; 5] = [1, 2, 4, 8, 16];
+const VARIANTS: [Variant; 4] =
+    [Variant::Baseline, Variant::Nvr, Variant::DareFre, Variant::DareFull];
+
+pub fn fig9(opts: HarnessOpts) -> Table {
+    let mut t = Table::new(
+        "Fig 9 — performance vs block size (normalized to baseline B=1)",
+        &["kernel", "B", "baseline", "nvr", "dare-fre", "dare-full"],
+    );
+    for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {
+        let mut specs = Vec::new();
+        for &b in &BLOCKS {
+            let p = BenchPoint::new(kernel, DatasetKind::PubMed, b, opts.scale);
+            for v in VARIANTS {
+                specs.push(RunSpec::new(p, v));
+            }
+        }
+        let results = run_many(&specs, opts.threads);
+        // normalizer: baseline at B=1
+        let base_b1 = results[0].stats.cycles as f64;
+        for (bi, &b) in BLOCKS.iter().enumerate() {
+            let mut row = vec![kernel.name().to_string(), b.to_string()];
+            for vi in 0..VARIANTS.len() {
+                let cy = results[bi * VARIANTS.len() + vi].stats.cycles as f64;
+                row.push(Table::x(base_b1 / cy));
+            }
+            t.row(row);
+        }
+    }
+    emit(&t, "fig9");
+    t
+}
+
+/// The §V-G decision rule computed from a fig9-style sweep: the block
+/// size at which GSA should be disabled (DARE-full stops beating
+/// DARE-FRE).
+pub fn gsa_disable_threshold(opts: HarnessOpts, kernel: KernelKind) -> usize {
+    let mut specs = Vec::new();
+    for &b in &BLOCKS {
+        let p = BenchPoint::new(kernel, DatasetKind::PubMed, b, opts.scale);
+        specs.push(RunSpec::new(p, Variant::DareFre));
+        specs.push(RunSpec::new(p, Variant::DareFull));
+    }
+    let results = run_many(&specs, opts.threads);
+    for (bi, &b) in BLOCKS.iter().enumerate() {
+        let fre = results[2 * bi].stats.cycles;
+        let full = results[2 * bi + 1].stats.cycles;
+        if full >= fre {
+            return b; // first block size where GSA stops paying
+        }
+    }
+    usize::MAX
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_blockify_helps_baseline() {
+        let t = fig9(HarnessOpts { scale: 0.05, threads: 0, verify: false });
+        assert_eq!(t.rows.len(), 10);
+        let parse = |s: &str| s.trim_end_matches('x').parse::<f64>().unwrap();
+        // Larger blocks fit the systolic array better: baseline at B=16
+        // beats baseline at B=1 (both normalized to baseline B=1).
+        for kernel_rows in t.rows.chunks(5) {
+            let b1 = parse(&kernel_rows[0][2]);
+            let b16 = parse(&kernel_rows[4][2]);
+            assert!(
+                b16 > b1,
+                "blockification should speed the baseline: B=1 {b1} vs B=16 {b16}"
+            );
+        }
+    }
+}

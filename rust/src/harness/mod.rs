@@ -1,0 +1,15 @@
+//! Figure/table harnesses: one module per experiment in the paper's
+//! evaluation (see DESIGN.md §Experiment-index). Each harness runs the
+//! required simulations, prints the same rows/series the paper reports,
+//! and writes a CSV under `results/`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig3;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod tables;
+
+pub use common::HarnessOpts;

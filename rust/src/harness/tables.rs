@@ -1,0 +1,121 @@
+//! Table I (the ISA listing), Table II (system configuration) and the
+//! §V-B hardware-overhead report.
+
+use super::common::emit;
+use crate::overhead::{overhead_of, NVR_STORAGE_BYTES};
+use crate::sim::{SimConfig, Variant};
+use crate::util::table::Table;
+
+/// Table I — the DARE instruction listing.
+pub fn table1() -> Table {
+    let mut t = Table::new("Table I — DARE instruction list", &["assembly format", "description"]);
+    for (asm, desc) in [
+        ("mcfg rs1, rs2", "Write the value in rs2 to the CSR indexed by rs1"),
+        ("mld md, (rs1), rs2", "Load a tile from address rs1 with rs2 stride to md"),
+        ("mst ms3, (rs1), rs2", "Store a tile to address rs1 with rs2 stride from ms3"),
+        ("mma md, ms1, ms2", "Multiply ms1 and ms2 and accumulate to md"),
+        ("mgather md, (ms1)", "Load a tile addressed by ms1 to md (GSA)"),
+        ("mscatter ms2, (ms1)", "Store a tile addressed by ms1 from ms2 (GSA)"),
+    ] {
+        t.row(vec![asm.into(), desc.into()]);
+    }
+    emit(&t, "table1_isa");
+    t
+}
+
+/// Table II — the simulated system configuration.
+pub fn table2() -> Table {
+    let cfg = SimConfig::for_variant(Variant::DareFull);
+    let mut t = Table::new("Table II — system configuration", &["name", "detailed configuration"]);
+    t.row(vec!["Frequency".into(), "2.0 GHz".into()]);
+    t.row(vec![
+        "Host CPU".into(),
+        "RV64GC + DARE ISA, non-speculative dispatch to the MPU".into(),
+    ]);
+    t.row(vec![
+        "MPU".into(),
+        format!(
+            "{}-entry LQ/SQ, {}x{} systolic array (32-bit PEs), {}-way-issue OoO, no renaming",
+            cfg.lq_entries, cfg.pe_rows, cfg.pe_cols, cfg.issue_width
+        ),
+    ]);
+    t.row(vec![
+        "LLC".into(),
+        format!(
+            "{} MB, {}-way, {} banks, 1R/1W port per bank, {}-cycle hit",
+            cfg.llc.size_bytes / (1024 * 1024),
+            cfg.llc.ways,
+            cfg.llc.banks,
+            cfg.llc.hit_latency
+        ),
+    ]);
+    t.row(vec![
+        "Main memory".into(),
+        format!(
+            "{} cycles latency (45 ns @ 2 GHz), {:.1} B/cycle (50 GiB/s)",
+            cfg.llc.dram.latency, cfg.llc.dram.bytes_per_cycle
+        ),
+    ]);
+    t.row(vec![
+        "DARE".into(),
+        format!("{}-entry RIQ, {}-entry VMR, dynamic-threshold RFU", cfg.riq_entries, cfg.vmr_entries),
+    ]);
+    emit(&t, "table2_config");
+    t
+}
+
+/// §V-B — storage and area overhead vs NVR.
+pub fn overhead_report() -> Table {
+    let cfg = SimConfig::for_variant(Variant::DareFull);
+    let r = overhead_of(&cfg);
+    let mut t = Table::new(
+        "§V-B — hardware overhead (storage + area) of the DARE additions",
+        &["component", "storage", "area (% of baseline MPU)"],
+    );
+    t.row(vec![
+        "RIQ (32 entries)".into(),
+        format!("{:.2} KB", r.riq_bytes / 1024.0),
+        Table::pct(r.riq_area_frac),
+    ]);
+    t.row(vec![
+        "VMR (16 × 16 × 48b)".into(),
+        format!("{:.2} KB", r.vmr_bytes / 1024.0),
+        Table::pct(r.vmr_area_frac),
+    ]);
+    t.row(vec![
+        "RFU (32-latency window)".into(),
+        format!("{:.2} KB", r.rfu_bytes / 1024.0),
+        Table::pct(r.rfu_area_frac),
+    ]);
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{:.2} KB", r.total_kb()),
+        Table::pct(r.total_area_frac()),
+    ]);
+    t.row(vec![
+        "NVR (reported)".into(),
+        format!("{:.2} KB", NVR_STORAGE_BYTES / 1024.0),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "reduction vs NVR".into(),
+        Table::x(r.reduction_vs_nvr()),
+        "-".into(),
+    ]);
+    emit(&t, "overhead");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        assert_eq!(table1().rows.len(), 6);
+        assert!(table2().rows.len() >= 5);
+        let o = overhead_report();
+        assert_eq!(o.rows.len(), 6);
+        assert!(o.rows[3][1].contains("KB"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Assembler / disassembler for the *dispatched* (trace) form of DARE
+//! programs.
+//!
+//! Syntax (one instruction per line; `#` starts a comment):
+//!
+//! ```text
+//! mcfg matrixM, 16
+//! mld  m0, (0x10000), 64       # base address, stride in bytes
+//! mgather m1, (m0)
+//! mma  m2, m0, m1
+//! mst  m2, (0x20000), 64
+//! mscatter m2, (m0)
+//! ```
+//!
+//! This is the interchange format between the kernel compilers and the
+//! simulator (`dare asm`/`dare run --program` on the CLI), and doubles as
+//! a readable trace dump (`Display` on `MInstr` emits the same syntax).
+
+use super::instr::{Csr, MInstr, MReg, NUM_MREGS};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum AsmError {
+    #[error("line {line}: unknown mnemonic '{mnemonic}'")]
+    UnknownMnemonic { line: usize, mnemonic: String },
+    #[error("line {line}: expected {expected} operands, got {got}")]
+    OperandCount { line: usize, expected: usize, got: usize },
+    #[error("line {line}: bad matrix register '{tok}'")]
+    BadMReg { line: usize, tok: String },
+    #[error("line {line}: bad CSR name '{tok}' (matrixM/matrixK/matrixN)")]
+    BadCsr { line: usize, tok: String },
+    #[error("line {line}: bad integer '{tok}'")]
+    BadInt { line: usize, tok: String },
+    #[error("line {line}: expected parenthesized operand, got '{tok}'")]
+    ExpectedParen { line: usize, tok: String },
+}
+
+fn parse_mreg(tok: &str, line: usize) -> Result<MReg, AsmError> {
+    let t = tok.trim();
+    let idx = t
+        .strip_prefix('m')
+        .and_then(|r| r.parse::<u8>().ok())
+        .filter(|&i| (i as usize) < NUM_MREGS);
+    idx.map(MReg).ok_or(AsmError::BadMReg { line, tok: t.to_string() })
+}
+
+fn parse_int(tok: &str, line: usize) -> Result<u64, AsmError> {
+    let t = tok.trim();
+    let r = if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16)
+    } else {
+        t.parse()
+    };
+    r.map_err(|_| AsmError::BadInt { line, tok: t.to_string() })
+}
+
+fn parse_csr(tok: &str, line: usize) -> Result<Csr, AsmError> {
+    match tok.trim() {
+        "matrixM" | "matrixm" | "0" => Ok(Csr::MatrixM),
+        "matrixK" | "matrixk" | "1" => Ok(Csr::MatrixK),
+        "matrixN" | "matrixn" | "2" => Ok(Csr::MatrixN),
+        t => Err(AsmError::BadCsr { line, tok: t.to_string() }),
+    }
+}
+
+fn strip_paren<'a>(tok: &'a str, line: usize) -> Result<&'a str, AsmError> {
+    let t = tok.trim();
+    t.strip_prefix('(')
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or(AsmError::ExpectedParen { line, tok: t.to_string() })
+}
+
+/// Parse one line of assembly (comments/blank lines yield `None`).
+pub fn parse_line(text: &str, line: usize) -> Result<Option<MInstr>, AsmError> {
+    let code = text.split('#').next().unwrap_or("").trim();
+    if code.is_empty() {
+        return Ok(None);
+    }
+    let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r),
+        None => (code, ""),
+    };
+    let ops: Vec<&str> = rest
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    let need = |expected: usize| -> Result<(), AsmError> {
+        if ops.len() == expected {
+            Ok(())
+        } else {
+            Err(AsmError::OperandCount { line, expected, got: ops.len() })
+        }
+    };
+    let instr = match mnemonic {
+        "mcfg" => {
+            need(2)?;
+            MInstr::Mcfg { csr: parse_csr(ops[0], line)?, val: parse_int(ops[1], line)? as u32 }
+        }
+        "mld" => {
+            need(3)?;
+            MInstr::Mld {
+                md: parse_mreg(ops[0], line)?,
+                base: parse_int(strip_paren(ops[1], line)?, line)?,
+                stride: parse_int(ops[2], line)?,
+            }
+        }
+        "mst" => {
+            need(3)?;
+            MInstr::Mst {
+                ms3: parse_mreg(ops[0], line)?,
+                base: parse_int(strip_paren(ops[1], line)?, line)?,
+                stride: parse_int(ops[2], line)?,
+            }
+        }
+        "mma" => {
+            need(3)?;
+            MInstr::Mma {
+                md: parse_mreg(ops[0], line)?,
+                ms1: parse_mreg(ops[1], line)?,
+                ms2: parse_mreg(ops[2], line)?,
+            }
+        }
+        "mgather" => {
+            need(2)?;
+            MInstr::Mgather {
+                md: parse_mreg(ops[0], line)?,
+                ms1: parse_mreg(strip_paren(ops[1], line)?, line)?,
+            }
+        }
+        "mscatter" => {
+            need(2)?;
+            MInstr::Mscatter {
+                ms2: parse_mreg(ops[0], line)?,
+                ms1: parse_mreg(strip_paren(ops[1], line)?, line)?,
+            }
+        }
+        m => {
+            return Err(AsmError::UnknownMnemonic { line, mnemonic: m.to_string() });
+        }
+    };
+    Ok(Some(instr))
+}
+
+/// Assemble a whole program.
+pub fn assemble(text: &str) -> Result<Vec<MInstr>, AsmError> {
+    let mut out = Vec::new();
+    for (i, l) in text.lines().enumerate() {
+        if let Some(instr) = parse_line(l, i + 1)? {
+            out.push(instr);
+        }
+    }
+    Ok(out)
+}
+
+/// Disassemble to the same syntax `assemble` accepts.
+pub fn disassemble(prog: &[MInstr]) -> String {
+    let mut s = String::new();
+    for i in prog {
+        s.push_str(&i.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_program() {
+        let src = "\
+# configure 16x64x16
+mcfg matrixM, 16
+mcfg matrixK, 64
+mcfg matrixN, 16
+mld m0, (0x10000), 64
+mld m1, (0x20000), 64   # B tile
+mgather m2, (m0)
+mma m3, m2, m1
+mst m3, (0x30000), 64
+mscatter m3, (m0)
+";
+        let prog = assemble(src).unwrap();
+        assert_eq!(prog.len(), 9);
+        let dis = disassemble(&prog);
+        let prog2 = assemble(&dis).unwrap();
+        assert_eq!(prog, prog2, "asm → disasm → asm is a fixed point");
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let prog = assemble("\n  # nothing\n\nmma m0, m1, m2\n").unwrap();
+        assert_eq!(prog.len(), 1);
+    }
+
+    #[test]
+    fn error_reporting() {
+        assert!(matches!(
+            assemble("bogus m0"),
+            Err(AsmError::UnknownMnemonic { line: 1, .. })
+        ));
+        assert!(matches!(
+            assemble("mma m0, m1"),
+            Err(AsmError::OperandCount { expected: 3, got: 2, .. })
+        ));
+        assert!(matches!(
+            assemble("mld m9, (0x0), 64"),
+            Err(AsmError::BadMReg { .. })
+        ));
+        assert!(matches!(
+            assemble("mld m0, 0x0, 64"),
+            Err(AsmError::ExpectedParen { .. })
+        ));
+        assert!(matches!(
+            assemble("mcfg matrixQ, 4"),
+            Err(AsmError::BadCsr { .. })
+        ));
+        assert!(matches!(
+            assemble("mld m0, (zz), 64"),
+            Err(AsmError::BadInt { .. })
+        ));
+    }
+
+    #[test]
+    fn hex_and_decimal() {
+        let p = assemble("mld m0, (65536), 0x40").unwrap();
+        assert_eq!(p[0], MInstr::Mld { md: MReg(0), base: 65536, stride: 64 });
+    }
+}

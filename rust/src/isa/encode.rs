@@ -1,0 +1,208 @@
+//! 32-bit architectural encoding of the DARE ISA.
+//!
+//! DARE instructions live in the RISC-V *custom-1* major opcode space
+//! (0b0101011, the opcode used by several academic matrix extensions).
+//! The R-type-like layout is:
+//!
+//! ```text
+//!  31    25 24  20 19  15 14    12 11   7 6      0
+//! ┌────────┬──────┬──────┬────────┬──────┬────────┐
+//! │ funct7 │ rs2  │ rs1  │ funct3 │  rd  │ opcode │
+//! └────────┴──────┴──────┴────────┴──────┴────────┘
+//! ```
+//!
+//! * `funct3` selects the DARE instruction (see [`funct3`]).
+//! * Matrix registers occupy the low 3 bits of their 5-bit field.
+//! * `mcfg`/`mld`/`mst` carry GPR indices in `rs1`/`rs2`; the *values* of
+//!   those GPRs are resolved by the host at dispatch (see `isa::instr`).
+//!
+//! The decoder is total: every 32-bit word either decodes to a valid
+//! [`ArchInstr`] or returns a descriptive [`DecodeError`]. Encoding and
+//! decoding round-trip exactly (property-tested in `rust/tests/`).
+
+use super::instr::{MReg, NUM_MREGS};
+use thiserror::Error;
+
+/// The DARE major opcode (RISC-V custom-1).
+pub const OPCODE: u32 = 0b010_1011;
+
+/// `funct3` assignments.
+pub mod funct3 {
+    pub const MCFG: u32 = 0b000;
+    pub const MLD: u32 = 0b001;
+    pub const MST: u32 = 0b010;
+    pub const MMA: u32 = 0b011;
+    pub const MGATHER: u32 = 0b100;
+    pub const MSCATTER: u32 = 0b101;
+}
+
+/// Architectural (register-index) form of a DARE instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchInstr {
+    /// `mcfg rs1, rs2` — CSR index in GPR rs1, value in GPR rs2.
+    Mcfg { rs1: u8, rs2: u8 },
+    /// `mld md, (rs1), rs2`.
+    Mld { md: MReg, rs1: u8, rs2: u8 },
+    /// `mst ms3, (rs1), rs2`.
+    Mst { ms3: MReg, rs1: u8, rs2: u8 },
+    /// `mma md, ms1, ms2`.
+    Mma { md: MReg, ms1: MReg, ms2: MReg },
+    /// `mgather md, (ms1)`.
+    Mgather { md: MReg, ms1: MReg },
+    /// `mscatter ms2, (ms1)`.
+    Mscatter { ms2: MReg, ms1: MReg },
+}
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("opcode 0x{0:02x} is not the DARE custom-1 opcode")]
+    BadOpcode(u32),
+    #[error("funct3 {0:#05b} is not a DARE instruction")]
+    BadFunct3(u32),
+    #[error("matrix register index {0} out of range (m0-m7)")]
+    BadMReg(u32),
+    #[error("reserved field is non-zero: {0:#x}")]
+    ReservedNonZero(u32),
+}
+
+#[inline]
+fn field(word: u32, lo: u32, width: u32) -> u32 {
+    (word >> lo) & ((1 << width) - 1)
+}
+
+fn mreg(bits: u32) -> Result<MReg, DecodeError> {
+    if (bits as usize) < NUM_MREGS {
+        Ok(MReg(bits as u8))
+    } else {
+        Err(DecodeError::BadMReg(bits))
+    }
+}
+
+impl ArchInstr {
+    /// Encode to a 32-bit instruction word.
+    pub fn encode(&self) -> u32 {
+        let (f3, rd, rs1, rs2) = match *self {
+            ArchInstr::Mcfg { rs1, rs2 } => (funct3::MCFG, 0, rs1 as u32, rs2 as u32),
+            ArchInstr::Mld { md, rs1, rs2 } => {
+                (funct3::MLD, md.0 as u32, rs1 as u32, rs2 as u32)
+            }
+            ArchInstr::Mst { ms3, rs1, rs2 } => {
+                (funct3::MST, ms3.0 as u32, rs1 as u32, rs2 as u32)
+            }
+            ArchInstr::Mma { md, ms1, ms2 } => {
+                (funct3::MMA, md.0 as u32, ms1.0 as u32, ms2.0 as u32)
+            }
+            ArchInstr::Mgather { md, ms1 } => (funct3::MGATHER, md.0 as u32, ms1.0 as u32, 0),
+            ArchInstr::Mscatter { ms2, ms1 } => {
+                (funct3::MSCATTER, ms2.0 as u32, ms1.0 as u32, 0)
+            }
+        };
+        debug_assert!(rd < 32 && rs1 < 32 && rs2 < 32);
+        (rs2 << 20) | (rs1 << 15) | (f3 << 12) | (rd << 7) | OPCODE
+    }
+
+    /// Decode from a 32-bit instruction word.
+    pub fn decode(word: u32) -> Result<Self, DecodeError> {
+        let opcode = field(word, 0, 7);
+        if opcode != OPCODE {
+            return Err(DecodeError::BadOpcode(opcode));
+        }
+        let f3 = field(word, 12, 3);
+        let rd = field(word, 7, 5);
+        let rs1 = field(word, 15, 5);
+        let rs2 = field(word, 20, 5);
+        let funct7 = field(word, 25, 7);
+        if funct7 != 0 {
+            return Err(DecodeError::ReservedNonZero(funct7));
+        }
+        match f3 {
+            funct3::MCFG => {
+                if rd != 0 {
+                    return Err(DecodeError::ReservedNonZero(rd));
+                }
+                Ok(ArchInstr::Mcfg { rs1: rs1 as u8, rs2: rs2 as u8 })
+            }
+            funct3::MLD => Ok(ArchInstr::Mld { md: mreg(rd)?, rs1: rs1 as u8, rs2: rs2 as u8 }),
+            funct3::MST => Ok(ArchInstr::Mst { ms3: mreg(rd)?, rs1: rs1 as u8, rs2: rs2 as u8 }),
+            funct3::MMA => Ok(ArchInstr::Mma { md: mreg(rd)?, ms1: mreg(rs1)?, ms2: mreg(rs2)? }),
+            funct3::MGATHER => {
+                if rs2 != 0 {
+                    return Err(DecodeError::ReservedNonZero(rs2));
+                }
+                Ok(ArchInstr::Mgather { md: mreg(rd)?, ms1: mreg(rs1)? })
+            }
+            funct3::MSCATTER => {
+                if rs2 != 0 {
+                    return Err(DecodeError::ReservedNonZero(rs2));
+                }
+                Ok(ArchInstr::Mscatter { ms2: mreg(rd)?, ms1: mreg(rs1)? })
+            }
+            other => Err(DecodeError::BadFunct3(other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<ArchInstr> {
+        vec![
+            ArchInstr::Mcfg { rs1: 5, rs2: 6 },
+            ArchInstr::Mld { md: MReg(3), rs1: 10, rs2: 11 },
+            ArchInstr::Mst { ms3: MReg(7), rs1: 12, rs2: 13 },
+            ArchInstr::Mma { md: MReg(0), ms1: MReg(1), ms2: MReg(2) },
+            ArchInstr::Mgather { md: MReg(4), ms1: MReg(5) },
+            ArchInstr::Mscatter { ms2: MReg(6), ms1: MReg(7) },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        for i in all_variants() {
+            let w = i.encode();
+            assert_eq!(field(w, 0, 7), OPCODE);
+            assert_eq!(ArchInstr::decode(w), Ok(i), "roundtrip failed for {i:?}");
+        }
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        assert_eq!(
+            ArchInstr::decode(0x0000_0013), // RISC-V addi x0,x0,0
+            Err(DecodeError::BadOpcode(0b001_0011))
+        );
+    }
+
+    #[test]
+    fn bad_funct3_rejected() {
+        let w = (0b111 << 12) | OPCODE;
+        assert_eq!(ArchInstr::decode(w), Err(DecodeError::BadFunct3(0b111)));
+    }
+
+    #[test]
+    fn bad_mreg_rejected() {
+        // mma with rd = 9 (> m7)
+        let w = (funct3::MMA << 12) | (9 << 7) | OPCODE;
+        assert_eq!(ArchInstr::decode(w), Err(DecodeError::BadMReg(9)));
+    }
+
+    #[test]
+    fn reserved_fields_rejected() {
+        // mgather with non-zero rs2
+        let w = (1 << 20) | (funct3::MGATHER << 12) | OPCODE;
+        assert_eq!(ArchInstr::decode(w), Err(DecodeError::ReservedNonZero(1)));
+        // non-zero funct7
+        let w2 = (1 << 25) | (funct3::MMA << 12) | OPCODE;
+        assert_eq!(ArchInstr::decode(w2), Err(DecodeError::ReservedNonZero(1)));
+    }
+
+    #[test]
+    fn distinct_encodings() {
+        let words: Vec<u32> = all_variants().iter().map(|i| i.encode()).collect();
+        let mut dedup = words.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(words.len(), dedup.len(), "encodings must be distinct");
+    }
+}

@@ -1,0 +1,280 @@
+//! Instruction and register definitions.
+
+/// Number of architectural matrix registers (`m0`–`m7`).
+pub const NUM_MREGS: usize = 8;
+/// Rows per matrix register.
+pub const MREG_ROWS: usize = 16;
+/// Bytes per matrix-register row.
+pub const MREG_ROW_BYTES: usize = 64;
+/// Total bytes per matrix register (1 KB, as in AMX).
+pub const MREG_BYTES: usize = MREG_ROWS * MREG_ROW_BYTES;
+
+/// A matrix register id (`m0`–`m7`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MReg(pub u8);
+
+impl MReg {
+    pub fn new(i: u8) -> Self {
+        assert!((i as usize) < NUM_MREGS, "m{i} out of range");
+        MReg(i)
+    }
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for MReg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// The three shape CSRs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Csr {
+    /// Rows of the A/C tiles (≤ 16).
+    MatrixM,
+    /// Bytes per row of the A/B tiles (≤ 64).
+    MatrixK,
+    /// Rows of the B tile / columns of the C tile (≤ 16).
+    MatrixN,
+}
+
+impl Csr {
+    pub fn index(self) -> u32 {
+        match self {
+            Csr::MatrixM => 0,
+            Csr::MatrixK => 1,
+            Csr::MatrixN => 2,
+        }
+    }
+
+    pub fn from_index(i: u32) -> Option<Self> {
+        match i {
+            0 => Some(Csr::MatrixM),
+            1 => Some(Csr::MatrixK),
+            2 => Some(Csr::MatrixN),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Csr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Csr::MatrixM => write!(f, "matrixM"),
+            Csr::MatrixK => write!(f, "matrixK"),
+            Csr::MatrixN => write!(f, "matrixN"),
+        }
+    }
+}
+
+/// The logical tile shape held in the CSRs.
+///
+/// `m` = A/C tile rows, `k` = bytes per A/B row, `n` = B tile rows.
+/// With the 32-bit PE datapath the element type is f32, so a row holds
+/// `k / 4` elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatShape {
+    pub m: u16,
+    pub k: u16,
+    pub n: u16,
+}
+
+impl MatShape {
+    pub const FULL: MatShape = MatShape { m: 16, k: 64, n: 16 };
+
+    pub fn new(m: u16, k: u16, n: u16) -> Self {
+        let s = MatShape { m, k, n };
+        s.validate().expect("invalid MatShape");
+        s
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.m == 0 || self.m as usize > MREG_ROWS {
+            return Err(format!("matrixM={} out of [1,{MREG_ROWS}]", self.m));
+        }
+        if self.k == 0 || self.k as usize > MREG_ROW_BYTES || self.k % 4 != 0 {
+            return Err(format!("matrixK={} out of [4,{MREG_ROW_BYTES}] or not /4", self.k));
+        }
+        if self.n == 0 || self.n as usize > MREG_ROWS {
+            return Err(format!("matrixN={} out of [1,{MREG_ROWS}]", self.n));
+        }
+        Ok(())
+    }
+
+    /// Elements per row (f32).
+    pub fn k_elems(&self) -> usize {
+        self.k as usize / 4
+    }
+
+    /// MAC operations performed by one `mma` at this shape.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.n as u64 * self.k_elems() as u64
+    }
+}
+
+impl Default for MatShape {
+    fn default() -> Self {
+        MatShape::FULL
+    }
+}
+
+/// A dispatched DARE instruction (scalar operands resolved by the host).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MInstr {
+    /// Write `val` into `csr`.
+    Mcfg { csr: Csr, val: u32 },
+    /// Load a `matrixM × matrixK`-byte tile from `base` with row `stride`
+    /// into `md`.
+    Mld { md: MReg, base: u64, stride: u64 },
+    /// Store the tile in `ms3` to `base` with row `stride`.
+    Mst { ms3: MReg, base: u64, stride: u64 },
+    /// `md += ms1 × ms2ᵀ` (shapes `M×K` and `N×K`).
+    Mma { md: MReg, ms1: MReg, ms2: MReg },
+    /// Gather-load: row `r` of the tile comes from the address in element
+    /// `r` of the base-address vector held in `ms1` (GSA extension).
+    Mgather { md: MReg, ms1: MReg },
+    /// Scatter-store of `ms2` through the base-address vector in `ms1`.
+    Mscatter { ms2: MReg, ms1: MReg },
+}
+
+impl MInstr {
+    /// Is this a memory-access instruction (decomposed into per-row uops)?
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            MInstr::Mld { .. }
+                | MInstr::Mst { .. }
+                | MInstr::Mgather { .. }
+                | MInstr::Mscatter { .. }
+        )
+    }
+
+    /// Is this a load (fills a matrix register)?
+    pub fn is_load(&self) -> bool {
+        matches!(self, MInstr::Mld { .. } | MInstr::Mgather { .. })
+    }
+
+    /// Is this a store?
+    pub fn is_store(&self) -> bool {
+        matches!(self, MInstr::Mst { .. } | MInstr::Mscatter { .. })
+    }
+
+    /// Does this instruction use the GSA extension?
+    pub fn is_gsa(&self) -> bool {
+        matches!(self, MInstr::Mgather { .. } | MInstr::Mscatter { .. })
+    }
+
+    /// The matrix register written by this instruction, if any.
+    pub fn dst(&self) -> Option<MReg> {
+        match self {
+            MInstr::Mld { md, .. } | MInstr::Mgather { md, .. } | MInstr::Mma { md, .. } => {
+                Some(*md)
+            }
+            _ => None,
+        }
+    }
+
+    /// The matrix registers read by this instruction.
+    pub fn srcs(&self) -> Vec<MReg> {
+        match self {
+            MInstr::Mcfg { .. } | MInstr::Mld { .. } => vec![],
+            MInstr::Mst { ms3, .. } => vec![*ms3],
+            // mma reads its accumulator as well.
+            MInstr::Mma { md, ms1, ms2 } => vec![*md, *ms1, *ms2],
+            MInstr::Mgather { ms1, .. } => vec![*ms1],
+            MInstr::Mscatter { ms2, ms1 } => vec![*ms2, *ms1],
+        }
+    }
+
+    /// Mnemonic for display/trace purposes.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            MInstr::Mcfg { .. } => "mcfg",
+            MInstr::Mld { .. } => "mld",
+            MInstr::Mst { .. } => "mst",
+            MInstr::Mma { .. } => "mma",
+            MInstr::Mgather { .. } => "mgather",
+            MInstr::Mscatter { .. } => "mscatter",
+        }
+    }
+}
+
+impl std::fmt::Display for MInstr {
+    /// Renders in the assembler's syntax (see `isa::asm`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MInstr::Mcfg { csr, val } => write!(f, "mcfg {}, {}", csr, val),
+            MInstr::Mld { md, base, stride } => {
+                write!(f, "mld {}, (0x{:x}), {}", md, base, stride)
+            }
+            MInstr::Mst { ms3, base, stride } => {
+                write!(f, "mst {}, (0x{:x}), {}", ms3, base, stride)
+            }
+            MInstr::Mma { md, ms1, ms2 } => write!(f, "mma {}, {}, {}", md, ms1, ms2),
+            MInstr::Mgather { md, ms1 } => write!(f, "mgather {}, ({})", md, ms1),
+            MInstr::Mscatter { ms2, ms1 } => write!(f, "mscatter {}, ({})", ms2, ms1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mreg_bounds() {
+        assert_eq!(MReg::new(7).index(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn mreg_out_of_range() {
+        MReg::new(8);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(MatShape { m: 16, k: 64, n: 16 }.validate().is_ok());
+        assert!(MatShape { m: 0, k: 64, n: 16 }.validate().is_err());
+        assert!(MatShape { m: 16, k: 65, n: 16 }.validate().is_err());
+        assert!(MatShape { m: 16, k: 62, n: 16 }.validate().is_err()); // not /4
+        assert!(MatShape { m: 16, k: 64, n: 17 }.validate().is_err());
+        assert_eq!(MatShape::FULL.k_elems(), 16);
+        assert_eq!(MatShape::FULL.macs(), 16 * 16 * 16);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        for csr in [Csr::MatrixM, Csr::MatrixK, Csr::MatrixN] {
+            assert_eq!(Csr::from_index(csr.index()), Some(csr));
+        }
+        assert_eq!(Csr::from_index(3), None);
+    }
+
+    #[test]
+    fn instr_classification() {
+        let ld = MInstr::Mld { md: MReg(0), base: 0x1000, stride: 64 };
+        let ga = MInstr::Mgather { md: MReg(1), ms1: MReg(2) };
+        let ma = MInstr::Mma { md: MReg(3), ms1: MReg(0), ms2: MReg(1) };
+        let st = MInstr::Mst { ms3: MReg(3), base: 0x2000, stride: 64 };
+        assert!(ld.is_mem() && ld.is_load() && !ld.is_gsa());
+        assert!(ga.is_mem() && ga.is_load() && ga.is_gsa());
+        assert!(!ma.is_mem());
+        assert!(st.is_store());
+        assert_eq!(ld.dst(), Some(MReg(0)));
+        assert_eq!(st.dst(), None);
+        assert_eq!(ma.srcs(), vec![MReg(3), MReg(0), MReg(1)]);
+        assert_eq!(ga.srcs(), vec![MReg(2)]);
+    }
+
+    #[test]
+    fn display_syntax() {
+        let i = MInstr::Mld { md: MReg(2), base: 0x1000, stride: 64 };
+        assert_eq!(i.to_string(), "mld m2, (0x1000), 64");
+        let g = MInstr::Mgather { md: MReg(1), ms1: MReg(0) };
+        assert_eq!(g.to_string(), "mgather m1, (m0)");
+    }
+}

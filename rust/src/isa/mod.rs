@@ -1,0 +1,35 @@
+//! The DARE instruction set architecture (paper §III, Table I).
+//!
+//! DARE is a RISC-V matrix ISA inspired by Intel AMX: eight 1 KB matrix
+//! registers (`m0`–`m7`), each 16 rows × 64 bytes, three CSRs
+//! (`matrixM`, `matrixK`, `matrixN`) defining the logical tile shape, and
+//! six instructions:
+//!
+//! | assembly                 | description                                        |
+//! |--------------------------|----------------------------------------------------|
+//! | `mcfg rs1, rs2`          | write rs2 to the CSR indexed by rs1                |
+//! | `mld md, (rs1), rs2`     | load a tile from address rs1 with stride rs2 to md |
+//! | `mst ms3, (rs1), rs2`    | store a tile to address rs1 with stride rs2        |
+//! | `mma md, ms1, ms2`       | md += ms1 × ms2ᵀ                                   |
+//! | `mgather md, (ms1)`      | load a tile addressed per-row by ms1 to md (GSA)   |
+//! | `mscatter ms2, (ms1)`    | store a tile addressed per-row by ms1 from ms2     |
+//!
+//! Two views of an instruction exist:
+//!
+//! * [`instr::MInstr`] — the *dispatched* form the MPU consumes. The host
+//!   CPU dispatches non-speculatively and reads scalar operands at
+//!   dispatch, so `mld`/`mst` carry concrete base/stride values
+//!   (trace-driven scalars). `mgather`/`mscatter` addresses stay
+//!   *symbolic* (a matrix-register id) — they materialize inside the MPU
+//!   when the producing `mld` returns, which is exactly what the
+//!   RIQ/DMU/VMR machinery models.
+//! * [`encode::ArchInstr`] — the architectural 32-bit encoding with GPR
+//!   indices, exercised by the assembler/encoder round-trip tests.
+
+pub mod asm;
+pub mod encode;
+pub mod instr;
+pub mod program;
+
+pub use instr::{Csr, MInstr, MReg, MatShape, NUM_MREGS, MREG_BYTES, MREG_ROWS, MREG_ROW_BYTES};
+pub use program::{Program, ProgramBuilder, ProgramStats};

@@ -1,0 +1,223 @@
+//! Program container + builder used by the kernel compilers.
+//!
+//! A [`Program`] is the unit the coordinator dispatches to a simulated
+//! MPU: the dispatched instruction stream plus static metadata the figure
+//! harnesses need (useful vs issued MACs for PE-utilization accounting,
+//! memory footprint, a human-readable name).
+
+use super::instr::{Csr, MInstr, MReg, MatShape};
+
+/// A fully-lowered DARE program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub instrs: Vec<MInstr>,
+    /// MACs that contribute to the mathematical result (nnz-driven).
+    pub useful_macs: u64,
+    /// MACs the PE array actually performs (tile-shape-driven); the ratio
+    /// useful/issued is an upper bound on PE utilization.
+    pub issued_macs: u64,
+    /// Highest address touched (for address-space sanity checks).
+    pub mem_high_water: u64,
+}
+
+impl Program {
+    pub fn stats(&self) -> ProgramStats {
+        let mut s = ProgramStats::default();
+        for i in &self.instrs {
+            match i {
+                MInstr::Mcfg { .. } => s.mcfg += 1,
+                MInstr::Mld { .. } => s.mld += 1,
+                MInstr::Mst { .. } => s.mst += 1,
+                MInstr::Mma { .. } => s.mma += 1,
+                MInstr::Mgather { .. } => s.mgather += 1,
+                MInstr::Mscatter { .. } => s.mscatter += 1,
+            }
+        }
+        s
+    }
+}
+
+/// Per-mnemonic instruction counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgramStats {
+    pub mcfg: usize,
+    pub mld: usize,
+    pub mst: usize,
+    pub mma: usize,
+    pub mgather: usize,
+    pub mscatter: usize,
+}
+
+impl ProgramStats {
+    pub fn total(&self) -> usize {
+        self.mcfg + self.mld + self.mst + self.mma + self.mgather + self.mscatter
+    }
+
+    pub fn mem_instrs(&self) -> usize {
+        self.mld + self.mst + self.mgather + self.mscatter
+    }
+}
+
+/// Builder that tracks the architectural CSR state so the compilers can't
+/// emit ill-formed programs (e.g. an `mma` under an invalid shape).
+#[derive(Debug)]
+pub struct ProgramBuilder {
+    name: String,
+    instrs: Vec<MInstr>,
+    shape: MatShape,
+    useful_macs: u64,
+    issued_macs: u64,
+    mem_high_water: u64,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: &str) -> Self {
+        let mut b = Self {
+            name: name.to_string(),
+            instrs: Vec::new(),
+            shape: MatShape::FULL,
+            useful_macs: 0,
+            issued_macs: 0,
+            mem_high_water: 0,
+        };
+        // Architectural reset state: emit the full-shape configuration so
+        // the program is self-contained.
+        b.cfg_shape(MatShape::FULL);
+        b
+    }
+
+    pub fn shape(&self) -> MatShape {
+        self.shape
+    }
+
+    /// Emit the `mcfg` triple for `shape` (skipping CSRs already equal).
+    pub fn cfg_shape(&mut self, shape: MatShape) {
+        shape.validate().expect("cfg_shape: invalid shape");
+        // Always emit all three on first call (self.instrs empty).
+        let first = self.instrs.is_empty();
+        if first || self.shape.m != shape.m {
+            self.instrs.push(MInstr::Mcfg { csr: Csr::MatrixM, val: shape.m as u32 });
+        }
+        if first || self.shape.k != shape.k {
+            self.instrs.push(MInstr::Mcfg { csr: Csr::MatrixK, val: shape.k as u32 });
+        }
+        if first || self.shape.n != shape.n {
+            self.instrs.push(MInstr::Mcfg { csr: Csr::MatrixN, val: shape.n as u32 });
+        }
+        self.shape = shape;
+    }
+
+    fn touch(&mut self, base: u64, stride: u64) {
+        let rows = self.shape.m as u64;
+        let last = base + stride.max(self.shape.k as u64) * rows;
+        self.mem_high_water = self.mem_high_water.max(last);
+    }
+
+    pub fn mld(&mut self, md: MReg, base: u64, stride: u64) {
+        self.touch(base, stride);
+        self.instrs.push(MInstr::Mld { md, base, stride });
+    }
+
+    pub fn mst(&mut self, ms3: MReg, base: u64, stride: u64) {
+        self.touch(base, stride);
+        self.instrs.push(MInstr::Mst { ms3, base, stride });
+    }
+
+    /// Emit `mma md, ms1, ms2`, accounting `useful` MACs against the
+    /// shape-implied issued MACs. `useful` defaults to the full tile when
+    /// `None` (dense operation).
+    pub fn mma(&mut self, md: MReg, ms1: MReg, ms2: MReg, useful: Option<u64>) {
+        let issued = self.shape.macs();
+        let useful = useful.unwrap_or(issued);
+        debug_assert!(useful <= issued, "useful {useful} > issued {issued}");
+        self.useful_macs += useful;
+        self.issued_macs += issued;
+        self.instrs.push(MInstr::Mma { md, ms1, ms2 });
+    }
+
+    pub fn mgather(&mut self, md: MReg, ms1: MReg) {
+        self.instrs.push(MInstr::Mgather { md, ms1 });
+    }
+
+    pub fn mscatter(&mut self, ms2: MReg, ms1: MReg) {
+        self.instrs.push(MInstr::Mscatter { ms2, ms1 });
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    pub fn build(self) -> Program {
+        Program {
+            name: self.name,
+            instrs: self.instrs,
+            useful_macs: self.useful_macs,
+            issued_macs: self.issued_macs,
+            mem_high_water: self.mem_high_water,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_emits_reset_cfg() {
+        let b = ProgramBuilder::new("t");
+        let p = b.build();
+        assert_eq!(p.stats().mcfg, 3, "self-contained programs configure all CSRs");
+    }
+
+    #[test]
+    fn cfg_dedup() {
+        let mut b = ProgramBuilder::new("t");
+        b.cfg_shape(MatShape::FULL); // same as reset → no new mcfg
+        assert_eq!(b.len(), 3);
+        b.cfg_shape(MatShape::new(8, 64, 16)); // only M changes
+        assert_eq!(b.len(), 4);
+        b.cfg_shape(MatShape::new(4, 32, 8)); // all three change
+        assert_eq!(b.len(), 7);
+    }
+
+    #[test]
+    fn mac_accounting() {
+        let mut b = ProgramBuilder::new("t");
+        b.mma(MReg(0), MReg(1), MReg(2), None);
+        b.mma(MReg(0), MReg(1), MReg(2), Some(100));
+        let p = b.build();
+        let full = MatShape::FULL.macs();
+        assert_eq!(p.issued_macs, 2 * full);
+        assert_eq!(p.useful_macs, full + 100);
+    }
+
+    #[test]
+    fn high_water_tracks_touches() {
+        let mut b = ProgramBuilder::new("t");
+        b.mld(MReg(0), 0x1000, 64);
+        let p = b.build();
+        assert!(p.mem_high_water >= 0x1000 + 16 * 64);
+    }
+
+    #[test]
+    fn stats_count_all() {
+        let mut b = ProgramBuilder::new("t");
+        b.mld(MReg(0), 0, 64);
+        b.mgather(MReg(1), MReg(0));
+        b.mma(MReg(2), MReg(1), MReg(0), None);
+        b.mst(MReg(2), 0x100, 64);
+        b.mscatter(MReg(2), MReg(0));
+        let s = b.build().stats();
+        assert_eq!(
+            s,
+            ProgramStats { mcfg: 3, mld: 1, mst: 1, mma: 1, mgather: 1, mscatter: 1 }
+        );
+        assert_eq!(s.total(), 8);
+        assert_eq!(s.mem_instrs(), 4);
+    }
+}

@@ -1,0 +1,41 @@
+//! Kernel compilers: lower dense GEMM, SpMM and SDDMM onto the DARE ISA,
+//! with and without GSA densification.
+//!
+//! ## Densification forms (§II-B, Fig 2c)
+//!
+//! `mma md, ms1, ms2` computes `md[M×N] += ms1[M×Kₑ] · ms2[N×Kₑ]ᵀ`
+//! (operand shapes `matrixM×matrixK` and `matrixN×matrixK`, §III-A).
+//!
+//! * **SDDMM** `C = (A·Bᵀ) ⊙ pattern(S)` (A: M×F, B: N×F dense, S
+//!   sparse): computed per S-column `c` — the nonzero rows of column `c`
+//!   select rows of A. Without GSA only *stride-contiguous row runs* can
+//!   share an `mma` (run length ≈ block size), the paper's "two-step
+//!   execution". With GSA, up to 16 arbitrary rows are gathered into one
+//!   densified tile (`mgather` through a host-built address table) —
+//!   `ms1 = gather(A rows)`, `ms2 = B[c, ftile]` as a 1×Kₑ tile.
+//! * **SpMM** `C = S·B` (S sparse M×K, B dense K×F): per S-column `k`,
+//!   each nonzero `s(r,k)` contributes the rank-1 update
+//!   `C[r,:] += s(r,k)·B[k,:]`. Densified: 16 nonzeros of a column form
+//!   `ms1 = vals[16×1]`, `ms2 = B[k, ftile][16×1]` (features as rows),
+//!   and the *accumulator is the gathered C rows* — `mgather C rows →
+//!   mma → mscatter` performs 16 read-modify-write row updates in one
+//!   dense 16×16 operation. Without GSA, C rows load/store strided per
+//!   contiguous run.
+//! * **GEMM**: plain 16×16×16 tiling over a dense A and a Bᵀ-layout
+//!   dense B (the Fig 1a reference point).
+//!
+//! Every compiler returns a [`Workload`]: the DARE program, the memory
+//! image it runs against, and the expected output values for functional
+//! verification.
+
+pub mod gemm;
+pub mod layout;
+pub mod sddmm;
+pub mod spmm;
+pub mod workload;
+
+pub use gemm::compile_gemm;
+pub use layout::Layout;
+pub use sddmm::compile_sddmm;
+pub use spmm::compile_spmm;
+pub use workload::{KernelKind, Workload};

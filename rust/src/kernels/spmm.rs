@@ -1,0 +1,216 @@
+//! SpMM compiler: `C[M×F] = S[M×K]·B[K×F]` with sparse S.
+//!
+//! Computation proceeds per S-column `k` (CSC): each nonzero `s(r,k)`
+//! contributes the rank-1 update `C[r,:] += s(r,k) · B[k,:]`. The value
+//! array of the column is contiguous, the B row is contiguous — the
+//! irregularity is entirely in the *C rows* selected by the nonzero row
+//! indices.
+//!
+//! * **GSA form**: up to 16 nonzeros of a column are densified into one
+//!   `mma`: `ms1 = vals[m×1]`, `ms2 = B[k, ftile][16×1]` (features as
+//!   register rows) and the *accumulator is the gathered C rows* —
+//!   `mgather C → mma → mscatter C` performs m scattered read-modify-
+//!   write row updates as one dense m×16 operation.
+//! * **Strided form**: C rows load/store strided per stride-contiguous
+//!   run of nonzero rows (run length ≈ block size B).
+
+use super::layout::Layout;
+use super::sddmm::contiguous_runs;
+use super::workload::{KernelKind, RegionCheck, Workload};
+use crate::isa::{MReg, MatShape, ProgramBuilder};
+use crate::sparse::{Csc, Dense};
+use crate::util::prng::Pcg32;
+
+const FT: usize = 16;
+
+/// Compile SpMM over sparse `s` (with values) and feature dim `f`
+/// (multiple of 16); the dense B is generated deterministically from
+/// `seed`.
+pub fn compile_spmm(s: &Csc, f: usize, gsa: bool, seed: u64) -> Workload {
+    assert!(f % FT == 0, "feature dim must be a multiple of 16");
+    let mut rng = Pcg32::new(seed);
+    // B is K×F where K = s.ncols (C = S·B).
+    let bm = Dense::from_fn(s.ncols, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25);
+
+    let row_bytes = (f * 4) as u64;
+    let ftiles = f / FT;
+    let mut lay = Layout::new();
+    let vals_addr = lay.alloc("Svals", (s.nnz() * 4) as u64);
+    let b_addr = lay.alloc("B", (s.ncols * f * 4) as u64);
+    let c_addr = lay.alloc("C", (s.nrows * f * 4) as u64);
+    let tbl_addr = if gsa { lay.alloc("tables", (s.nnz() * ftiles * 8 + 128) as u64) } else { 0 };
+
+    let mut mem = lay.build_image();
+    mem.write_f32_slice(vals_addr, &s.vals);
+    Layout::write_dense(&mut mem, b_addr, &bm, row_bytes);
+    // C starts zeroed (MemImage zero-fills).
+
+    let mut b = ProgramBuilder::new(if gsa { "spmm-gsa" } else { "spmm" });
+    b.cfg_shape(MatShape::FULL);
+    let mut tbl_cursor = tbl_addr;
+
+    for k in 0..s.ncols {
+        let rows = s.col_rows(k);
+        if rows.is_empty() {
+            continue;
+        }
+        let col_vals_base = vals_addr + s.col_ptr[k] as u64 * 4;
+        // ms2 feature tiles for this column: B[k, t*16..] as 16 rows of
+        // one f32 (stride 4 walks the contiguous B row) → m2..m5.
+        b.cfg_shape(MatShape::new(16, 4, 16));
+        for t in 0..ftiles {
+            b.mld(
+                MReg(2 + (t % 4) as u8),
+                b_addr + k as u64 * row_bytes + (t * 64) as u64,
+                4,
+            );
+        }
+        debug_assert!(ftiles <= 4);
+
+        if gsa {
+            let mut off_in_col = 0u64;
+            for group in rows.chunks(16) {
+                let m = group.len() as u16;
+                // ms1: the nonzero values, m rows × 4 B.
+                b.cfg_shape(MatShape::new(m, 4, 16));
+                b.mld(MReg(1), col_vals_base + off_in_col * 4, 4);
+                for t in 0..ftiles {
+                    // host-built table of C-row pointers for this ftile
+                    let this_tbl = tbl_cursor;
+                    for (i, &r) in group.iter().enumerate() {
+                        mem.write_addr48(
+                            this_tbl + i as u64 * 8,
+                            c_addr + r as u64 * row_bytes + (t * 64) as u64,
+                        );
+                    }
+                    tbl_cursor += group.len() as u64 * 8;
+                    let (treg, greg) = if t % 2 == 0 {
+                        (MReg(0), MReg(6))
+                    } else {
+                        (MReg(7), MReg(0))
+                    };
+                    b.cfg_shape(MatShape::new(m, 8, 16));
+                    b.mld(treg, this_tbl, 8); // base-address vector
+                    b.cfg_shape(MatShape::new(m, 64, 16));
+                    b.mgather(greg, treg); // C rows (read-modify-write)
+                    b.cfg_shape(MatShape::new(m, 4, 16));
+                    // acc = gathered C; useful = m×16 (all lanes carry a
+                    // real rank-1 contribution)
+                    b.mma(greg, MReg(1), MReg(2 + (t % 4) as u8), None);
+                    b.cfg_shape(MatShape::new(m, 64, 16));
+                    b.mscatter(greg, treg);
+                }
+                off_in_col += group.len() as u64;
+            }
+        } else {
+            let mut off_in_col = 0u64;
+            for (start, len) in contiguous_runs(rows) {
+                let m = len as u16;
+                b.cfg_shape(MatShape::new(m, 4, 16));
+                b.mld(MReg(1), col_vals_base + off_in_col * 4, 4);
+                for t in 0..ftiles {
+                    let creg = if t % 2 == 0 { MReg(0) } else { MReg(6) };
+                    let c_run = c_addr + start as u64 * row_bytes + (t * 64) as u64;
+                    b.cfg_shape(MatShape::new(m, 64, 16));
+                    b.mld(creg, c_run, row_bytes); // C rows in
+                    b.cfg_shape(MatShape::new(m, 4, 16));
+                    b.mma(creg, MReg(1), MReg(2 + (t % 4) as u8), None);
+                    b.cfg_shape(MatShape::new(m, 64, 16));
+                    b.mst(creg, c_run, row_bytes); // C rows out
+                }
+                off_in_col += len as u64;
+            }
+        }
+    }
+
+    // Reference: C = S·B.
+    let c_ref = s.to_csr().spmm(&bm);
+    Workload {
+        kind: KernelKind::SpMM,
+        program: b.build(),
+        mem,
+        checks: vec![RegionCheck { name: "C".into(), addr: c_addr, expect: c_ref.data }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Mpu, NativeMma, SimConfig, Variant};
+    use crate::sparse::Triplet;
+
+    fn sparse() -> Csc {
+        let mut ts = Vec::new();
+        for (r, c, v) in [
+            (0u32, 0u32, 0.5f32),
+            (3, 0, 1.0),
+            (4, 0, -0.25),
+            (5, 0, 2.0),
+            (17, 0, 0.75),
+            (1, 2, 1.5),
+            (2, 2, -1.0),
+            (3, 2, 0.25),
+            (8, 5, 1.0),
+            (30, 5, 0.5),
+            (9, 7, -0.5),
+        ] {
+            ts.push(Triplet { row: r, col: c, val: v });
+        }
+        Csc::from_triplets(32, 8, ts)
+    }
+
+    #[test]
+    fn spmm_strided_verifies() {
+        let w = compile_spmm(&sparse(), 64, false, 11);
+        let mut cfg = SimConfig::for_variant(Variant::Baseline);
+        cfg.max_cycles = 10_000_000;
+        let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+        let stats = mpu.run(&w.program);
+        assert_eq!(stats.instrs_retired as usize, w.program.instrs.len());
+        w.verify(&mpu.mem, 1e-4).expect("strided SpMM mismatch");
+    }
+
+    #[test]
+    fn spmm_gsa_verifies() {
+        let w = compile_spmm(&sparse(), 64, true, 11);
+        let st = w.program.stats();
+        assert!(st.mgather > 0 && st.mscatter > 0, "GSA SpMM gathers and scatters C rows");
+        for variant in [Variant::DareGsa, Variant::DareFull] {
+            let mut cfg = SimConfig::for_variant(variant);
+            cfg.max_cycles = 10_000_000;
+            let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+            mpu.run(&w.program);
+            w.verify(&mpu.mem, 1e-4).unwrap_or_else(|e| panic!("{variant:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn gsa_reduces_operations() {
+        let sw = compile_spmm(&sparse(), 64, false, 11);
+        let gw = compile_spmm(&sparse(), 64, true, 11);
+        // Column 0 has rows [0,3,4,5,17]: strided → runs (0)(3,3)(17) = 3
+        // updates per ftile; GSA → 1 group per ftile.
+        assert!(gw.program.stats().mma < sw.program.stats().mma);
+        assert_eq!(sw.checks[0].expect, gw.checks[0].expect);
+    }
+
+    #[test]
+    fn accumulation_across_columns_is_correct() {
+        // Two columns hitting the same C row must accumulate.
+        let s = Csc::from_triplets(
+            16,
+            4,
+            vec![
+                Triplet { row: 2, col: 0, val: 1.0 },
+                Triplet { row: 2, col: 1, val: 2.0 },
+                Triplet { row: 2, col: 3, val: -1.0 },
+            ],
+        );
+        let w = compile_spmm(&s, 16, true, 5);
+        let mut cfg = SimConfig::for_variant(Variant::DareFull);
+        cfg.max_cycles = 10_000_000;
+        let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+        mpu.run(&w.program);
+        w.verify(&mpu.mem, 1e-4).expect("cross-column accumulation");
+    }
+}

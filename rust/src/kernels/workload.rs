@@ -1,0 +1,84 @@
+//! The unit the coordinator dispatches: a compiled program, the memory
+//! image it executes against, and the expected outputs for functional
+//! verification.
+
+use crate::isa::Program;
+use crate::sim::MemImage;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Gemm,
+    SpMM,
+    Sddmm,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Gemm => "gemm",
+            KernelKind::SpMM => "spmm",
+            KernelKind::Sddmm => "sddmm",
+        }
+    }
+}
+
+/// Expected contiguous f32 values at an address (output region).
+#[derive(Debug, Clone)]
+pub struct RegionCheck {
+    pub name: String,
+    pub addr: u64,
+    pub expect: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct Workload {
+    pub kind: KernelKind,
+    pub program: Program,
+    pub mem: MemImage,
+    pub checks: Vec<RegionCheck>,
+}
+
+impl Workload {
+    /// Verify `mem` (after simulation) against the expected outputs.
+    /// Returns the max abs error, or an error naming the first mismatch.
+    pub fn verify(&self, mem: &MemImage, tol: f32) -> Result<f32, String> {
+        let mut max_err = 0.0f32;
+        for chk in &self.checks {
+            for (i, &want) in chk.expect.iter().enumerate() {
+                let got = mem.read_f32(chk.addr + 4 * i as u64);
+                let err = (got - want).abs();
+                let scale = 1.0f32.max(want.abs());
+                if err > tol * scale {
+                    return Err(format!(
+                        "{}[{}]: got {}, want {} (err {} > tol {})",
+                        chk.name, i, got, want, err, tol
+                    ));
+                }
+                max_err = max_err.max(err / scale);
+            }
+        }
+        Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ProgramBuilder;
+
+    #[test]
+    fn verify_passes_and_fails() {
+        let mut mem = MemImage::new(64);
+        mem.write_f32_slice(0, &[1.0, 2.0, 3.0]);
+        let w = Workload {
+            kind: KernelKind::Gemm,
+            program: ProgramBuilder::new("t").build(),
+            mem: MemImage::new(64),
+            checks: vec![RegionCheck { name: "c".into(), addr: 0, expect: vec![1.0, 2.0, 3.0] }],
+        };
+        assert!(w.verify(&mem, 1e-6).is_ok());
+        mem.write_f32(4, 9.0);
+        let err = w.verify(&mem, 1e-6).unwrap_err();
+        assert!(err.contains("c[1]"), "{err}");
+    }
+}

@@ -1,0 +1,31 @@
+//! # DARE — full-system reproduction
+//!
+//! An irregularity-tolerant Matrix Processing Unit with a **D**ensifying
+//! IS**A** (GSA) and filtered **R**unahead **E**xecution (FRE), rebuilt
+//! from the paper as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the cycle-level DARE simulator and every
+//!   substrate it needs: the DARE ISA ([`isa`]), sparse formats and
+//!   datasets ([`sparse`]), kernel compilers ([`kernels`]), the LLC/DRAM
+//!   hierarchy ([`mem`]), the MPU pipeline with RIQ/DMU/VMR/RFU
+//!   ([`sim`]), energy and hardware-overhead models ([`energy`],
+//!   [`overhead`]), the host coordinator ([`coordinator`]) and the
+//!   figure harnesses ([`harness`]).
+//! * **Layer 2/1 (python, build-time only)** — JAX + Pallas numerics,
+//!   AOT-lowered to HLO text in `artifacts/` and executed from rust via
+//!   the PJRT runtime ([`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod coordinator;
+pub mod energy;
+pub mod harness;
+pub mod isa;
+pub mod kernels;
+pub mod sim;
+pub mod mem;
+pub mod overhead;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,162 @@
+//! The `dare` CLI: regenerate every table/figure of the paper, run
+//! individual workloads, inspect the ISA and configuration.
+//!
+//! ```text
+//! dare fig1a|fig1b|fig1c|fig3a|fig3b|fig5|fig6|fig7|fig8|fig9   figures
+//! dare isa | config | overhead                                  tables
+//! dare all [--scale 0.5]                                        everything
+//! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
+//! dare asm <file.s>                                             assemble + run
+//! ```
+
+use dare::coordinator::{run_one, BenchPoint, RunSpec};
+use dare::harness::{fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
+use dare::isa::asm;
+use dare::kernels::KernelKind;
+use dare::sim::{Mpu, NativeMma, SimConfig, Variant};
+use dare::sparse::DatasetKind;
+use dare::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: dare <command> [options]\n\
+         commands:\n\
+           fig1a fig1b fig1c fig3a fig3b fig5 fig6 fig7 fig8 fig9   regenerate a figure\n\
+           isa config overhead                                      print a table\n\
+           all                                                      every figure + table\n\
+           run      run one benchmark point (--kernel --dataset --block --variant [--xla] [--verify])\n\
+           asm      assemble and simulate a .s file (DARE-full MPU)\n\
+         options:\n\
+           --scale F     dataset scale in (0,1] (default 0.5)\n\
+           --threads N   sweep worker threads (default all cores)\n\
+           --verify      check functional outputs against references"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let opts = HarnessOpts {
+        scale: args.get_parse("scale", 0.5f64),
+        threads: args.get_parse("threads", 0usize),
+        verify: args.flag("verify"),
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| usage());
+    match cmd.as_str() {
+        "fig1a" => {
+            fig1::fig1a(opts);
+        }
+        "fig1b" => {
+            fig1::fig1b(opts);
+        }
+        "fig1c" => {
+            fig1::fig1c(opts);
+        }
+        "fig3a" => {
+            fig3::fig3a(opts);
+        }
+        "fig3b" => {
+            fig3::fig3b(opts);
+        }
+        "fig5" => {
+            fig5::fig5(opts);
+        }
+        "fig6" => {
+            fig5::fig6(opts);
+        }
+        "fig7" => {
+            fig7::fig7(opts);
+        }
+        "fig8" => {
+            fig8::fig8(opts);
+        }
+        "fig9" => {
+            fig9::fig9(opts);
+            for k in [KernelKind::SpMM, KernelKind::Sddmm] {
+                let b = fig9::gsa_disable_threshold(opts, k);
+                println!("offline profiling: disable GSA for {} at B >= {}", k.name(), b);
+            }
+        }
+        "isa" => {
+            tables::table1();
+        }
+        "config" => {
+            tables::table2();
+        }
+        "overhead" => {
+            tables::overhead_report();
+        }
+        "all" => {
+            tables::table1();
+            tables::table2();
+            tables::overhead_report();
+            fig1::fig1a(opts);
+            fig1::fig1b(opts);
+            fig1::fig1c(opts);
+            fig3::fig3a(opts);
+            fig3::fig3b(opts);
+            fig5::fig5(opts);
+            fig5::fig6(opts);
+            fig7::fig7(opts);
+            fig8::fig8(opts);
+            fig9::fig9(opts);
+        }
+        "run" => {
+            let kernel = match args.get_or("kernel", "sddmm").as_str() {
+                "gemm" => KernelKind::Gemm,
+                "spmm" => KernelKind::SpMM,
+                "sddmm" => KernelKind::Sddmm,
+                k => anyhow::bail!("unknown kernel '{k}'"),
+            };
+            let dataset = DatasetKind::from_name(&args.get_or("dataset", "gpt2"))
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+            let variant = Variant::from_name(&args.get_or("variant", "dare-full"))
+                .ok_or_else(|| anyhow::anyhow!("unknown variant"))?;
+            let block: usize = args.get_parse("block", 1);
+            let mut spec =
+                RunSpec::new(BenchPoint::new(kernel, dataset, block, opts.scale), variant);
+            spec.verify = opts.verify || args.flag("xla");
+            let use_xla = args.flag("xla");
+            let t0 = std::time::Instant::now();
+            let r = run_one(&spec, use_xla);
+            println!("{}", r.name);
+            println!("  {}", r.stats.summary());
+            println!(
+                "  energy = {:.2} uJ   wall = {:.2}s   exec = {}",
+                r.energy.total_uj(),
+                t0.elapsed().as_secs_f64(),
+                if use_xla { "XLA/PJRT (AOT Pallas artifact)" } else { "native" }
+            );
+            if let Some(err) = r.verify_err {
+                println!("  verified against reference (max rel err {err:.2e})");
+            }
+        }
+        "asm" => {
+            let path = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("asm requires a file path"))?;
+            let src = std::fs::read_to_string(path)?;
+            let instrs = asm::assemble(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("{} instructions:", instrs.len());
+            print!("{}", asm::disassemble(&instrs));
+            let program = dare::isa::Program {
+                name: path.clone(),
+                instrs,
+                useful_macs: 0,
+                issued_macs: 0,
+                mem_high_water: 0,
+            };
+            let mut cfg = SimConfig::for_variant(Variant::DareFull);
+            cfg.max_cycles = 50_000_000;
+            let mut mpu = Mpu::new(cfg, dare::sim::MemImage::new(1 << 20), Box::new(NativeMma));
+            let stats = mpu.run(&program);
+            println!("{}", stats.summary());
+        }
+        _ => usage(),
+    }
+    if let Err(e) = args.check_unknown() {
+        eprintln!("warning: {e}");
+    }
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Memory hierarchy substrate: the shared LLC the MPU connects to
+//! (Table II: 2 MB, 16-way, 16 banks, 1R/1W port per bank, 20-cycle hit)
+//! and the main memory behind it (45 ns latency, 50 GiB/s bandwidth).
+//!
+//! The model is cycle-driven: the LSU offers requests to bank ports
+//! (which can reject on port contention — this is the "cache bandwidth"
+//! prefetch redundancy saturates in Fig 3), and completions are drained
+//! each cycle. All the counters the paper's figures are built from live
+//! here: demand hits/misses, redundant vs useful prefetches, bank-slot
+//! occupancy, DRAM traffic.
+
+pub mod dram;
+pub mod llc;
+
+pub use dram::{Dram, DramConfig};
+pub use llc::{Completion, Llc, LlcConfig, LlcStats, MemRequest, Rejection};
+
+/// Cache line size in bytes (one matrix-register row = exactly one line).
+pub const LINE_BYTES: u64 = 64;
+
+/// Align an address down to its line.
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr / LINE_BYTES
+}

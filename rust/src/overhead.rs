@@ -1,0 +1,172 @@
+//! Hardware-overhead accounting (§V-B): the storage (flip-flop + SRAM)
+//! and area cost of the DARE additions over a baseline MPU, and the
+//! comparison against NVR's reported 9.72 KB.
+//!
+//! Storage is computed from first principles (bit-level accounting of
+//! each structure at its Table II size); area percentages use per-bit
+//! weights calibrated to the paper's synthesis split (FF-heavy CAM
+//! structures like the RIQ cost more area per bit than SRAM like the
+//! VMR).
+
+use crate::sim::config::SimConfig;
+
+/// NVR's reported hardware state (§II-C / §V-B).
+pub const NVR_STORAGE_BYTES: f64 = 9.72 * 1024.0;
+/// Checkpoint-based runahead register-file cost in an AMX-like design
+/// (§II-C).
+pub const CHECKPOINT_STORAGE_BYTES: f64 = 8.0 * 1024.0;
+
+/// Bit widths of one RIQ entry ("full instruction information and a
+/// decompose counter", §IV-C, plus the RFU flags of §IV-E).
+#[derive(Debug, Clone, Copy)]
+pub struct RiqEntryBits {
+    pub instr_word: u32,
+    pub resolved_scalars: u32,
+    pub shape_snapshot: u32,
+    pub decompose_counter: u32,
+    pub rfu_flags: u32,
+    pub vmr_ptr: u32,
+    pub uop_status_bitmap: u32,
+    pub tentative_latency_tag: u32,
+    pub dmu_link: u32,
+}
+
+impl Default for RiqEntryBits {
+    fn default() -> Self {
+        Self {
+            instr_word: 32,
+            resolved_scalars: 2 * 64, // base + stride, read at dispatch
+            shape_snapshot: 3 * 6,    // matrixM/K/N ≤ 64
+            decompose_counter: 5,     // ≤ 16 row uops + done
+            rfu_flags: 2,             // granted, TentativeSent
+            vmr_ptr: 5,               // 16 entries + valid
+            uop_status_bitmap: 2 * 16, // issued/complete per row
+            tentative_latency_tag: 10,
+            dmu_link: 6,
+        }
+    }
+}
+
+impl RiqEntryBits {
+    pub fn total(&self) -> u32 {
+        self.instr_word
+            + self.resolved_scalars
+            + self.shape_snapshot
+            + self.decompose_counter
+            + self.rfu_flags
+            + self.vmr_ptr
+            + self.uop_status_bitmap
+            + self.tentative_latency_tag
+            + self.dmu_link
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadReport {
+    pub riq_bytes: f64,
+    pub vmr_bytes: f64,
+    pub rfu_bytes: f64,
+    /// Area of each component as a fraction of the baseline MPU.
+    pub riq_area_frac: f64,
+    pub vmr_area_frac: f64,
+    pub rfu_area_frac: f64,
+}
+
+impl OverheadReport {
+    pub fn total_bytes(&self) -> f64 {
+        self.riq_bytes + self.vmr_bytes + self.rfu_bytes
+    }
+
+    pub fn total_kb(&self) -> f64 {
+        self.total_bytes() / 1024.0
+    }
+
+    /// Reduction factor vs NVR's 9.72 KB state.
+    pub fn reduction_vs_nvr(&self) -> f64 {
+        NVR_STORAGE_BYTES / self.total_bytes()
+    }
+
+    pub fn total_area_frac(&self) -> f64 {
+        self.riq_area_frac + self.vmr_area_frac + self.rfu_area_frac
+    }
+}
+
+/// Compute the overhead of a DARE configuration.
+pub fn overhead_of(cfg: &SimConfig) -> OverheadReport {
+    let entry_bits = RiqEntryBits::default().total();
+    let riq_entries = if cfg.riq_entries == usize::MAX { 0 } else { cfg.riq_entries };
+    let vmr_entries = if cfg.vmr_entries == usize::MAX { 0 } else { cfg.vmr_entries };
+    let riq_bits = riq_entries as f64 * entry_bits as f64;
+    // VMR: 16 rows × 48-bit addresses per entry (§IV-D) + free list.
+    let vmr_bits = vmr_entries as f64 * (16.0 * 48.0) + vmr_entries as f64 * 5.0;
+    // RFU: latency window + histogram + threshold registers (§IV-E).
+    let rfu_bits = cfg.rfu.window as f64 * 10.0 // latency entries
+        + 32.0 * 6.0                             // histogram bins
+        + 3.0 * 10.0; // threshold, peaks
+    // Area weights per bit, normalized to the baseline MPU area
+    // (8 KB register file + 256 32-bit PEs + LSU queues). FF/CAM
+    // structures (RIQ) cost ≈ 4× SRAM per bit; the RFU adds comparator
+    // logic on top of its small state.
+    let baseline_area_units = {
+        let regfile_bits = 8.0 * 1024.0 * 8.0;
+        let pe_units = 256.0 * 2200.0; // MAC32 + pipeline regs, in bit-equivalents
+        let lsu_bits = (cfg.lq_entries + cfg.sq_entries) as f64 * 80.0 * 4.0;
+        regfile_bits + pe_units + lsu_bits
+    };
+    let riq_area = riq_bits * 4.0 + riq_entries as f64 * 260.0; // CAM + wake logic
+    let vmr_area = vmr_bits * 1.2 + vmr_entries as f64 * 60.0;
+    let rfu_area = rfu_bits * 4.0 + 8_000.0; // classifier comparators/adders
+
+    OverheadReport {
+        riq_bytes: riq_bits / 8.0,
+        vmr_bytes: vmr_bits / 8.0,
+        rfu_bytes: rfu_bits / 8.0,
+        riq_area_frac: riq_area / baseline_area_units,
+        vmr_area_frac: vmr_area / baseline_area_units,
+        rfu_area_frac: rfu_area / baseline_area_units,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Variant;
+
+    #[test]
+    fn storage_in_paper_ballpark() {
+        let cfg = SimConfig::for_variant(Variant::DareFull);
+        let r = overhead_of(&cfg);
+        // Paper: ~3 KB total (3.05 KB reported), VMR = 1.5 KB exactly.
+        assert!((r.vmr_bytes - 1546.0).abs() < 20.0, "VMR ≈ 1.5 KB, got {}", r.vmr_bytes);
+        assert!(r.total_kb() > 2.0 && r.total_kb() < 3.5, "total {} KB", r.total_kb());
+        // Abstract: 3.91× lower than NVR; body: 3.19×. Accept the band.
+        let red = r.reduction_vs_nvr();
+        assert!(red > 3.0 && red < 4.5, "reduction vs NVR = {red}");
+    }
+
+    #[test]
+    fn area_split_shape_matches_paper() {
+        // Paper: total 9.2 % (VMR 3.8, RIQ 4.1, RFU 1.3): RIQ > VMR > RFU.
+        let cfg = SimConfig::for_variant(Variant::DareFull);
+        let r = overhead_of(&cfg);
+        assert!(r.riq_area_frac > r.vmr_area_frac, "RIQ CAM area dominates");
+        assert!(r.vmr_area_frac > r.rfu_area_frac);
+        let total = r.total_area_frac();
+        assert!(total > 0.05 && total < 0.14, "total area fraction {total}");
+    }
+
+    #[test]
+    fn nvr_emulation_has_no_finite_overhead() {
+        let cfg = SimConfig::for_variant(Variant::Nvr);
+        let r = overhead_of(&cfg);
+        assert_eq!(r.riq_bytes, 0.0);
+        assert_eq!(r.vmr_bytes, 0.0);
+    }
+
+    #[test]
+    fn beats_checkpointing() {
+        let cfg = SimConfig::for_variant(Variant::DareFull);
+        let r = overhead_of(&cfg);
+        assert!(r.total_bytes() < CHECKPOINT_STORAGE_BYTES / 2.0);
+    }
+}

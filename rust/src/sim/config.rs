@@ -1,0 +1,217 @@
+//! Simulator configuration (Table II) and the evaluated design points.
+
+use crate::mem::LlcConfig;
+
+/// Which design the simulated MPU implements (§V-A1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// MPU without RIQ, RFU or VMR: no runahead, strided ISA only.
+    Baseline,
+    /// NVR emulation: runahead with *infinite* RIQ and VMR and no filter
+    /// (every prefetch uop granted), preserving NVR's distant-prefetch
+    /// capability (§V-A1).
+    Nvr,
+    /// Filtered runahead only (RIQ + RFU), strided ISA.
+    DareFre,
+    /// Densifying ISA only (GSA): `mgather`/`mscatter` programs, no
+    /// runahead machinery.
+    DareGsa,
+    /// Both GSA and FRE (RIQ + RFU + VMR + DMU).
+    DareFull,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 5] =
+        [Variant::Baseline, Variant::Nvr, Variant::DareFre, Variant::DareGsa, Variant::DareFull];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Nvr => "nvr",
+            Variant::DareFre => "dare-fre",
+            Variant::DareGsa => "dare-gsa",
+            Variant::DareFull => "dare-full",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Variant::ALL.iter().copied().find(|v| v.name() == s)
+    }
+
+    /// Does this design run ahead (prefetch from stalled RIQ entries)?
+    pub fn has_runahead(self) -> bool {
+        matches!(self, Variant::Nvr | Variant::DareFre | Variant::DareFull)
+    }
+
+    /// Does this design filter prefetch uops through the RFU?
+    pub fn has_rfu(self) -> bool {
+        matches!(self, Variant::DareFre | Variant::DareFull)
+    }
+
+    /// Does this design execute the GSA (`mgather`/`mscatter`) extension?
+    pub fn has_gsa(self) -> bool {
+        matches!(self, Variant::DareGsa | Variant::DareFull)
+    }
+}
+
+/// RFU threshold-classifier configuration (§IV-E).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RfuConfig {
+    /// Dynamic threshold (the paper's classifier) vs a static threshold
+    /// (the Fig 7 baseline RFU).
+    pub dynamic: bool,
+    /// Static threshold in cycles (used when `dynamic == false`;
+    /// Fig 7 uses 64).
+    pub static_threshold: u64,
+    /// Latency-history window (paper: 32).
+    pub window: usize,
+    /// Histogram bin width in cycles (paper: 8).
+    pub bin_cycles: u64,
+    /// Relative frequency for a bin to count as a peak (paper: 20 %).
+    pub peak_frac: f64,
+    /// Minimum peak separation in bins for a threshold update (paper: 4).
+    pub margin_bins: u64,
+    /// Slack added to the minimum-bin latency (paper: 32 cycles).
+    pub slack: u64,
+}
+
+impl Default for RfuConfig {
+    fn default() -> Self {
+        Self {
+            dynamic: true,
+            static_threshold: 64,
+            window: 32,
+            bin_cycles: 8,
+            peak_frac: 0.20,
+            margin_bins: 4,
+            slack: 32,
+        }
+    }
+}
+
+/// Full system configuration (defaults = Table II).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub variant: Variant,
+    /// RIQ capacity (paper: 32; `usize::MAX` = NVR's infinite emulation).
+    pub riq_entries: usize,
+    /// VMR capacity (paper: 16).
+    pub vmr_entries: usize,
+    /// Load-queue / store-queue entries (Table II: 48 each).
+    pub lq_entries: usize,
+    pub sq_entries: usize,
+    /// MPU issue width (Table II: 2-way).
+    pub issue_width: usize,
+    /// Host→MPU dispatch width per cycle.
+    pub dispatch_width: usize,
+    /// Instruction-queue depth for designs without an RIQ (baseline /
+    /// DARE-GSA): a small dispatch buffer.
+    pub plain_queue_depth: usize,
+    /// LSU→LLC uop issue width per cycle.
+    pub lsu_width: usize,
+    /// Prefetch uops the runahead engine may enqueue per cycle.
+    pub prefetch_width: usize,
+    /// Systolic array dimensions (Table II: 16×16).
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    pub rfu: RfuConfig,
+    pub llc: LlcConfig,
+    /// Safety valve for the cycle loop (0 = no limit).
+    pub max_cycles: u64,
+}
+
+impl SimConfig {
+    /// Table II configuration for a given design point.
+    pub fn for_variant(variant: Variant) -> Self {
+        let mut cfg = Self {
+            variant,
+            riq_entries: 32,
+            vmr_entries: 16,
+            lq_entries: 48,
+            sq_entries: 48,
+            issue_width: 2,
+            dispatch_width: 2,
+            plain_queue_depth: 4,
+            lsu_width: 2,
+            prefetch_width: 2,
+            pe_rows: 16,
+            pe_cols: 16,
+            rfu: RfuConfig::default(),
+            llc: LlcConfig::default(),
+            max_cycles: 500_000_000,
+        };
+        if variant == Variant::Nvr {
+            // §V-A1: infinite RIQ/VMR capacity, no filter.
+            cfg.riq_entries = usize::MAX;
+            cfg.vmr_entries = usize::MAX;
+        }
+        cfg
+    }
+
+    pub fn total_pes(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.issue_width == 0 || self.dispatch_width == 0 || self.lsu_width == 0 {
+            return Err("widths must be positive".into());
+        }
+        if self.variant.has_runahead() && self.riq_entries < 2 {
+            return Err("runahead needs at least 2 RIQ entries".into());
+        }
+        if self.pe_rows == 0 || self.pe_cols == 0 {
+            return Err("PE array must be non-empty".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_capabilities() {
+        assert!(!Variant::Baseline.has_runahead());
+        assert!(Variant::Nvr.has_runahead() && !Variant::Nvr.has_rfu());
+        assert!(Variant::DareFre.has_rfu() && !Variant::DareFre.has_gsa());
+        assert!(Variant::DareGsa.has_gsa() && !Variant::DareGsa.has_runahead());
+        assert!(Variant::DareFull.has_gsa() && Variant::DareFull.has_rfu());
+    }
+
+    #[test]
+    fn nvr_is_infinite() {
+        let cfg = SimConfig::for_variant(Variant::Nvr);
+        assert_eq!(cfg.riq_entries, usize::MAX);
+        assert_eq!(cfg.vmr_entries, usize::MAX);
+    }
+
+    #[test]
+    fn table2_defaults() {
+        let cfg = SimConfig::for_variant(Variant::DareFull);
+        assert_eq!(cfg.riq_entries, 32);
+        assert_eq!(cfg.vmr_entries, 16);
+        assert_eq!(cfg.lq_entries, 48);
+        assert_eq!(cfg.issue_width, 2);
+        assert_eq!(cfg.total_pes(), 256);
+        assert_eq!(cfg.llc.hit_latency, 20);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::from_name(v.name()), Some(v));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut cfg = SimConfig::for_variant(Variant::DareFull);
+        cfg.issue_width = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg2 = SimConfig::for_variant(Variant::DareFre);
+        cfg2.riq_entries = 1;
+        assert!(cfg2.validate().is_err());
+    }
+}

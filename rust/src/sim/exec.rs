@@ -1,0 +1,81 @@
+//! Functional execution of `mma` tiles.
+//!
+//! The timing model decides *when* an `mma` completes; this trait decides
+//! *what* it computes. Two implementations exist:
+//!
+//! * [`NativeMma`] — a plain rust triple loop (always available; used by
+//!   unit tests and timing-only sweeps).
+//! * `runtime::XlaMma` — executes the AOT-compiled Pallas/JAX tile
+//!   artifact through PJRT, so simulated results are genuinely produced
+//!   by the L1/L2 numerics (used by the examples and integration tests).
+//!
+//! Semantics (systolic tile, §III-A): `C[M×N] += A[M×Kₑ] × B[N×Kₑ]ᵀ`.
+
+/// Functional tile-MMA executor.
+pub trait MmaExec {
+    /// `acc[M×N] += a[M×Kₑ] · b[N×Kₑ]ᵀ`, all row-major.
+    fn mma(&mut self, acc: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize);
+}
+
+/// Reference rust implementation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeMma;
+
+impl MmaExec for NativeMma {
+    fn mma(&mut self, acc: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(acc.len(), m * n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for e in 0..k {
+                    s += a[i * k + e] * b[j * k + e];
+                }
+                acc[i * n + j] += s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut e = NativeMma;
+        let a = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let b = [1.0, 0.0, 0.0, 1.0]; // 2x2 (identity as Bᵀ too)
+        let mut acc = [10.0, 0.0, 0.0, 10.0];
+        e.mma(&mut acc, &a, &b, 2, 2, 2);
+        // A @ I = A, plus initial acc
+        assert_eq!(acc, [11.0, 2.0, 3.0, 14.0]);
+    }
+
+    #[test]
+    fn b_transposed_semantics() {
+        let mut e = NativeMma;
+        // a = [1 2], b row0=[3 4] → acc[0,0] = 1*3+2*4 = 11
+        let a = [1.0, 2.0];
+        let b = [3.0, 4.0];
+        let mut acc = [0.0];
+        e.mma(&mut acc, &a, &b, 1, 2, 1);
+        assert_eq!(acc, [11.0]);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let mut e = NativeMma;
+        let m = 3;
+        let k = 5;
+        let n = 2;
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n * k).map(|i| (i as f32) * 0.5).collect();
+        let mut acc = vec![0.0; m * n];
+        e.mma(&mut acc, &a, &b, m, k, n);
+        // spot check acc[2,1] = Σ_e a[2,e]*b[1,e]
+        let expect: f32 = (0..k).map(|x| a[2 * k + x] * b[k + x]).sum();
+        assert_eq!(acc[2 * n + 1], expect);
+    }
+}

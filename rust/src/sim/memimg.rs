@@ -1,0 +1,109 @@
+//! Flat byte-addressable memory image the simulated MPU executes
+//! against.
+//!
+//! Kernel compilers lay the operands out in a compact address space (see
+//! `kernels::layout`); the image provides typed accessors for the
+//! functional side of execute-at-issue simulation.
+
+#[derive(Debug, Clone)]
+pub struct MemImage {
+    bytes: Vec<u8>,
+}
+
+impl MemImage {
+    pub fn new(size: usize) -> Self {
+        Self { bytes: vec![0u8; size] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    #[inline]
+    fn check(&self, addr: u64, len: usize) {
+        assert!(
+            (addr as usize).checked_add(len).is_some_and(|end| end <= self.bytes.len()),
+            "memory access OOB: addr=0x{addr:x} len={len} size=0x{:x}",
+            self.bytes.len()
+        );
+    }
+
+    pub fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
+        self.check(addr, len);
+        &self.bytes[addr as usize..addr as usize + len]
+    }
+
+    pub fn write_bytes(&mut self, addr: u64, data: &[u8]) {
+        self.check(addr, data.len());
+        self.bytes[addr as usize..addr as usize + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_f32(&self, addr: u64) -> f32 {
+        f32::from_le_bytes(self.read_bytes(addr, 4).try_into().unwrap())
+    }
+
+    pub fn write_f32(&mut self, addr: u64, v: f32) {
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    /// Read a 48-bit little-endian address (Sv48 — what `mgather` reads
+    /// from the first element of each base-vector row, §IV-D).
+    pub fn read_addr48(&self, addr: u64) -> u64 {
+        let b = self.read_bytes(addr, 8);
+        u64::from_le_bytes(b.try_into().unwrap()) & 0x0000_FFFF_FFFF_FFFF
+    }
+
+    pub fn write_addr48(&mut self, addr: u64, v: u64) {
+        assert!(v <= 0x0000_FFFF_FFFF_FFFF, "address 0x{v:x} exceeds Sv48");
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    pub fn read_f32_slice(&self, addr: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| self.read_f32(addr + 4 * i as u64)).collect()
+    }
+
+    pub fn write_f32_slice(&mut self, addr: u64, vs: &[f32]) {
+        for (i, &v) in vs.iter().enumerate() {
+            self.write_f32(addr + 4 * i as u64, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut m = MemImage::new(64);
+        m.write_f32(4, 3.25);
+        assert_eq!(m.read_f32(4), 3.25);
+        m.write_f32_slice(16, &[1.0, -2.0, 0.5]);
+        assert_eq!(m.read_f32_slice(16, 3), vec![1.0, -2.0, 0.5]);
+    }
+
+    #[test]
+    fn addr48_masks_high_bits() {
+        let mut m = MemImage::new(64);
+        m.write_addr48(0, 0x0000_1234_5678_9ABC);
+        assert_eq!(m.read_addr48(0), 0x0000_1234_5678_9ABC);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds Sv48")]
+    fn addr48_rejects_wide() {
+        let mut m = MemImage::new(64);
+        m.write_addr48(0, 0x0001_0000_0000_0000);
+    }
+
+    #[test]
+    #[should_panic(expected = "OOB")]
+    fn oob_detected() {
+        let m = MemImage::new(8);
+        m.read_f32(6);
+    }
+}

@@ -1,0 +1,39 @@
+//! Cycle-level simulator of the DARE MPU (paper §IV) and its
+//! comparators.
+//!
+//! The MPU is an out-of-order superscalar engine without register
+//! renaming, dispatched to non-speculatively by the host CPU. Incoming
+//! instructions are decoded and inserted into the **Runahead Issue
+//! Queue** (RIQ): the head issues to the execution pipeline once it has
+//! no RAW/WAW/WAR conflicts with in-flight instructions, while the
+//! *stalled* younger entries double as the candidate pool for prefetch
+//! uops — runahead without checkpointing. Prefetch uops are arbitrated by
+//! the **Runahead Filter Unit** (RFU, tentative-uop mechanism + dynamic
+//! latency classifier) and issued through the LSU into the shared LLC.
+//! `mgather` runahead is enabled by the **Dependency Management Unit**
+//! (DMU) waking the producer `mld` of the base-address vector into a
+//! **Vector Matrix Register** (VMR) entry.
+//!
+//! Simulator style: *execute-at-issue* — architectural state (matrix
+//! registers, the flat memory image) is updated in program order at
+//! issue, while the timing model tracks when data would actually move.
+//! This keeps functional results exact (verified against the JAX/Pallas
+//! oracle through the PJRT runtime) regardless of timing-model detail.
+
+pub mod config;
+pub mod exec;
+pub mod memimg;
+pub mod mpu;
+pub mod regfile;
+pub mod rfu;
+pub mod riq;
+pub mod scoreboard;
+pub mod stats;
+pub mod systolic;
+pub mod vmr;
+
+pub use config::{SimConfig, Variant};
+pub use exec::{MmaExec, NativeMma};
+pub use memimg::MemImage;
+pub use mpu::Mpu;
+pub use stats::SimStats;

@@ -1,0 +1,1004 @@
+//! The MPU pipeline model (§IV, Fig 4a): dispatch → RIQ → (RFU-filtered
+//! runahead | in-order issue) → LSU → LLC, plus the systolic array.
+//!
+//! Per-cycle phase order (determinism contract):
+//!
+//! 1. LLC tick — collect completions; route to demand instructions, RFU
+//!    classification, VMR fills.
+//! 2. Systolic tick — retire a finished `mma`.
+//! 3. Issue — up to `issue_width` instructions from the RIQ head,
+//!    hazard-checked against the scoreboard (no renaming). Architectural
+//!    effects execute here (execute-at-issue).
+//! 4. Demand uop generation — in-flight memory instructions trickle row
+//!    uops into the LSU queue under LQ/SQ occupancy limits.
+//! 5. Runahead — stalled RIQ entries (index ≥ 1) emit prefetch uops,
+//!    arbitrated by the RFU (tentative-uop mechanism) and the DMU/VMR
+//!    path for `mgather`.
+//! 6. LSU — issue queued uops to LLC bank ports (FIFO, head-of-line
+//!    blocking: redundant prefetches genuinely contend with demand).
+//! 7. Dispatch — host pushes up to `dispatch_width` instructions into
+//!    the RIQ (decode delay: same-cycle dispatch cannot issue).
+
+use super::config::SimConfig;
+use super::exec::MmaExec;
+use super::memimg::MemImage;
+use super::regfile::RegFile;
+use super::rfu::Rfu;
+use super::riq::{Riq, RiqEntry};
+use super::scoreboard::Scoreboard;
+use super::stats::SimStats;
+use super::systolic::{Systolic, SystolicConfig};
+use super::vmr::{FillResult, Vmr, VmrHandle};
+use crate::isa::{MInstr, MatShape, Program};
+use crate::mem::{Llc, MemRequest};
+use std::collections::VecDeque;
+
+/// Routing tag for an in-flight memory uop.
+#[derive(Debug, Clone, Copy)]
+enum UopKind {
+    /// Row uop of an issued (architectural) memory instruction.
+    Demand { seq: u64 },
+    /// Runahead prefetch for RIQ entry `seq`; `tentative` is the first
+    /// uop of the entry under the RFU mechanism.
+    Prefetch { seq: u64, tentative: bool },
+    /// Base-address-vector fill into the VMR (forced grant).
+    VmrFill { handle: VmrHandle, row: usize, value48: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct UopMeta {
+    kind: UopKind,
+    /// Cycle the uop entered the LSU queue.
+    enq: u64,
+    /// Cycle the LLC accepted it (set at issue to the banks).
+    accept: u64,
+}
+
+/// Free-list slab of in-flight uop metadata. Uop ids are slot indices;
+/// every accepted request completes exactly once (property-tested), so
+/// slots recycle safely. This keeps the per-uop bookkeeping off a
+/// HashMap — the simulator's hottest data structure.
+#[derive(Debug, Default)]
+struct UopSlab {
+    slots: Vec<UopMeta>,
+    free: Vec<u32>,
+}
+
+impl UopSlab {
+    #[inline]
+    fn alloc(&mut self, meta: UopMeta) -> u64 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = meta;
+                u64::from(i)
+            }
+            None => {
+                self.slots.push(meta);
+                (self.slots.len() - 1) as u64
+            }
+        }
+    }
+
+    #[inline]
+    fn take(&mut self, id: u64) -> UopMeta {
+        self.free.push(id as u32);
+        self.slots[id as usize]
+    }
+
+    #[inline]
+    fn get_mut(&mut self, id: u64) -> &mut UopMeta {
+        &mut self.slots[id as usize]
+    }
+}
+
+#[derive(Debug, Clone)]
+struct QueuedUop {
+    id: u64,
+    addr: u64,
+    is_write: bool,
+    is_prefetch: bool,
+}
+
+/// An issued (architectural) memory instruction awaiting its row uops.
+#[derive(Debug)]
+struct InflightMem {
+    seq: u64,
+    instr: MInstr,
+    shape: MatShape,
+    /// Per-row addresses (strided: base + r·stride; gathered: from ms1).
+    row_addrs: Vec<u64>,
+    next_row: usize,
+    outstanding: usize,
+    is_write: bool,
+}
+
+pub struct Mpu {
+    cfg: SimConfig,
+    pub regfile: RegFile,
+    scoreboard: Scoreboard,
+    systolic: Systolic,
+    pub llc: Llc,
+    riq: Riq,
+    vmr: Vmr,
+    rfu: Rfu,
+    pub mem: MemImage,
+    exec: Box<dyn MmaExec>,
+
+    program: Vec<MInstr>,
+    next_dispatch: usize,
+    /// CSR view at the dispatch stage (in-order, so consistent).
+    dispatch_shape: MatShape,
+    seq_counter: u64,
+
+    inflight: Vec<InflightMem>,
+    /// Outstanding mma: (seq, instr) for scoreboard release.
+    mma_inflight: Option<(u64, MInstr)>,
+
+    lsu_queue: VecDeque<QueuedUop>,
+    uop_meta: UopSlab,
+    lq_used: usize,
+    sq_used: usize,
+    /// Seq of the oldest RIQ entry that may still emit prefetch uops.
+    runahead_front: u64,
+
+    now: u64,
+    pub stats: SimStats,
+}
+
+impl Mpu {
+    pub fn new(cfg: SimConfig, mem: MemImage, exec: Box<dyn MmaExec>) -> Self {
+        cfg.validate().expect("invalid SimConfig");
+        let queue_cap =
+            if cfg.variant.has_runahead() { cfg.riq_entries } else { cfg.plain_queue_depth };
+        let systolic = Systolic::new(SystolicConfig {
+            rows: cfg.pe_rows,
+            cols: cfg.pe_cols,
+            ..SystolicConfig::default()
+        });
+        let rfu = Rfu::new(cfg.rfu, cfg.llc.hit_latency);
+        Self {
+            llc: Llc::new(cfg.llc),
+            riq: Riq::new(queue_cap),
+            vmr: Vmr::new(cfg.vmr_entries),
+            rfu,
+            systolic,
+            regfile: RegFile::new(),
+            scoreboard: Scoreboard::new(),
+            mem,
+            exec,
+            program: Vec::new(),
+            next_dispatch: 0,
+            dispatch_shape: MatShape::FULL,
+            seq_counter: 0,
+            inflight: Vec::new(),
+            mma_inflight: None,
+            lsu_queue: VecDeque::new(),
+            uop_meta: UopSlab::default(),
+            lq_used: 0,
+            sq_used: 0,
+            runahead_front: 0,
+            now: 0,
+            stats: SimStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Run `program` to completion; returns the accumulated statistics.
+    pub fn run(&mut self, program: &Program) -> SimStats {
+        assert!(
+            self.cfg.variant.has_gsa()
+                || program.instrs.iter().all(|i| !i.is_gsa()),
+            "variant {:?} lacks the GSA extension required by program '{}'",
+            self.cfg.variant,
+            program.name
+        );
+        self.program = program.instrs.clone();
+        self.next_dispatch = 0;
+        self.stats.useful_macs = program.useful_macs;
+        self.stats.issued_macs = program.issued_macs;
+        while !self.done() {
+            self.step();
+            if self.cfg.max_cycles > 0 && self.now > self.cfg.max_cycles {
+                panic!(
+                    "simulation exceeded max_cycles={} (deadlock?) state: riq={} inflight={} lsu={} next={}/{}",
+                    self.cfg.max_cycles,
+                    self.riq.len(),
+                    self.inflight.len(),
+                    self.lsu_queue.len(),
+                    self.next_dispatch,
+                    self.program.len()
+                );
+            }
+        }
+        self.finalize_stats();
+        self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.next_dispatch >= self.program.len()
+            && self.riq.is_empty()
+            && self.inflight.is_empty()
+            && self.mma_inflight.is_none()
+            && !self.lsu_queue.iter().any(|u| !u.is_prefetch)
+    }
+
+    fn finalize_stats(&mut self) {
+        self.stats.cycles = self.now;
+        self.stats.llc = self.llc.stats;
+        self.stats.dram = self.llc.dram.stats;
+        self.stats.systolic = self.systolic.stats;
+        self.stats.riq = self.riq.stats;
+        self.stats.vmr = self.vmr.stats;
+        self.stats.rfu = self.rfu.stats;
+    }
+
+    /// One simulated cycle.
+    fn step(&mut self) {
+        self.now += 1;
+        let now = self.now;
+        // Phase 1: LLC completions.
+        let completions = self.llc.tick(now);
+        for c in completions {
+            self.route_completion(c.id, c.at);
+        }
+        // Phase 2: systolic retirement.
+        if let Some(seq) = self.systolic.tick(now) {
+            let (s, instr) = self.mma_inflight.take().expect("systolic seq without inflight");
+            debug_assert_eq!(s, seq);
+            self.scoreboard.release(&instr);
+            self.stats.instrs_retired += 1;
+        }
+        // Phase 3: issue.
+        self.issue_stage();
+        // Phase 4: demand uop generation.
+        self.generate_demand_uops();
+        // Phase 5: runahead prefetch generation.
+        if self.cfg.variant.has_runahead() {
+            self.runahead_stage();
+        }
+        // Phase 6: LSU → LLC.
+        self.lsu_stage();
+        // Phase 7: dispatch.
+        self.dispatch_stage();
+    }
+
+    // ----- completion routing -------------------------------------------
+
+    fn route_completion(&mut self, id: u64, at: u64) {
+        let meta = self.uop_meta.take(id);
+        let service_latency = at.saturating_sub(meta.accept);
+        match meta.kind {
+            UopKind::Demand { seq } => {
+                self.stats.demand_uops += 1;
+                self.stats.demand_latency_sum += at.saturating_sub(meta.enq);
+                if self.cfg.variant.has_rfu() {
+                    self.rfu.observe(service_latency);
+                }
+                let idx = self
+                    .inflight
+                    .iter()
+                    .position(|f| f.seq == seq)
+                    .expect("demand uop for unknown instruction");
+                {
+                    let f = &mut self.inflight[idx];
+                    debug_assert!(f.outstanding > 0);
+                    f.outstanding -= 1;
+                    if f.is_write {
+                        self.sq_used -= 1;
+                    } else {
+                        self.lq_used -= 1;
+                    }
+                }
+                let f = &self.inflight[idx];
+                if f.outstanding == 0 && f.next_row >= f.row_addrs.len() {
+                    let instr = f.instr;
+                    // Ordered removal keeps `inflight` seq-sorted for the
+                    // allocation-free oldest-first walk in
+                    // generate_demand_uops (the set is small).
+                    self.inflight.remove(idx);
+                    self.scoreboard.release(&instr);
+                    self.stats.instrs_retired += 1;
+                }
+            }
+            UopKind::Prefetch { seq, tentative } => {
+                if self.cfg.variant.has_rfu() {
+                    self.rfu.observe(service_latency);
+                    if tentative {
+                        if let Some(idx) = self.riq.index_of_seq(seq) {
+                            let miss = self.rfu.classify_miss(service_latency);
+                            let entry = self.riq.get_mut(idx).unwrap();
+                            if miss {
+                                entry.granted = true;
+                            } else {
+                                // Tentative hit: the line set is presumed
+                                // resident; suppress remaining uops.
+                                let remaining = (entry.shape.m as usize)
+                                    .saturating_sub(entry.next_prefetch_row);
+                                entry.prefetch_done = true;
+                                self.rfu.stats.suppressed_uops += remaining as u64;
+                            }
+                        }
+                    }
+                }
+            }
+            UopKind::VmrFill { handle, row, value48 } => {
+                if self.vmr.fill_row(handle, row, value48) == FillResult::Complete {
+                    // Gather prefetching proceeds once its entry is valid
+                    // (checked in runahead_stage).
+                }
+            }
+        }
+    }
+
+    // ----- issue ---------------------------------------------------------
+
+    fn issue_stage(&mut self) {
+        for _ in 0..self.cfg.issue_width {
+            let Some(head) = self.riq.head() else { return };
+            let instr = head.instr;
+            match instr {
+                MInstr::Mcfg { csr, val } => {
+                    self.regfile.write_csr(csr, val);
+                    self.riq.pop_head();
+                    self.stats.instrs_retired += 1;
+                }
+                MInstr::Mma { md, ms1, ms2 } => {
+                    if self.systolic.busy() || !self.scoreboard.can_issue(&instr) {
+                        return;
+                    }
+                    let shape = self.regfile.shape();
+                    // Functional execute-at-issue through the MmaExec
+                    // backend (native rust or the PJRT artifact).
+                    let m = shape.m as usize;
+                    let k = shape.k_elems();
+                    let n = shape.n as usize;
+                    let a = self.regfile.read_tile_f32(ms1);
+                    let b = self.regfile.read_tile_f32_rows(ms2, n);
+                    let mut acc = self.regfile.read_acc_tile(md, m, n);
+                    self.exec.mma(&mut acc, &a, &b, m, k, n);
+                    self.regfile.write_acc_tile(md, m, n, &acc);
+                    self.scoreboard.occupy(&instr);
+                    let head = self.riq.pop_head().unwrap();
+                    self.systolic.start(shape, head.seq, self.now);
+                    self.mma_inflight = Some((head.seq, instr));
+                }
+                mem_instr => {
+                    if !self.scoreboard.can_issue(&mem_instr) {
+                        return;
+                    }
+                    // Structural: at least one LQ/SQ slot must be free.
+                    let is_write = mem_instr.is_store();
+                    if is_write && self.sq_used >= self.cfg.sq_entries {
+                        return;
+                    }
+                    if !is_write && self.lq_used >= self.cfg.lq_entries {
+                        return;
+                    }
+                    let head = self.riq.pop_head().unwrap();
+                    // A VMR entry allocated for this gather is dead now:
+                    // the architectural register supersedes it.
+                    if let Some(h) = head.vmr_slot {
+                        self.vmr.release(h);
+                    }
+                    self.issue_mem(head.seq, mem_instr);
+                }
+            }
+        }
+    }
+
+    /// Resolve addresses, apply the architectural effect, and enter the
+    /// instruction into the in-flight set.
+    fn issue_mem(&mut self, seq: u64, instr: MInstr) {
+        let shape = self.regfile.shape();
+        let m = shape.m as usize;
+        let kb = shape.k as usize;
+        let (row_addrs, is_write): (Vec<u64>, bool) = match instr {
+            MInstr::Mld { base, stride, .. } => {
+                ((0..m).map(|r| base + r as u64 * stride).collect(), false)
+            }
+            MInstr::Mst { base, stride, .. } => {
+                ((0..m).map(|r| base + r as u64 * stride).collect(), true)
+            }
+            MInstr::Mgather { ms1, .. } => {
+                ((0..m).map(|r| self.regfile.row_base_addr(ms1, r)).collect(), false)
+            }
+            MInstr::Mscatter { ms1, .. } => {
+                ((0..m).map(|r| self.regfile.row_base_addr(ms1, r)).collect(), true)
+            }
+            _ => unreachable!("issue_mem on non-memory instruction"),
+        };
+        // Architectural effect (execute-at-issue).
+        match instr {
+            MInstr::Mld { md, .. } | MInstr::Mgather { md, .. } => {
+                for (r, &addr) in row_addrs.iter().enumerate() {
+                    let bytes = self.mem.read_bytes(addr, kb).to_vec();
+                    self.regfile.write_row(md, r, &bytes);
+                }
+            }
+            MInstr::Mst { ms3, .. } => {
+                for (r, &addr) in row_addrs.iter().enumerate() {
+                    let bytes = self.regfile.row(ms3, r)[..kb].to_vec();
+                    self.mem.write_bytes(addr, &bytes);
+                }
+            }
+            MInstr::Mscatter { ms2, .. } => {
+                for (r, &addr) in row_addrs.iter().enumerate() {
+                    let bytes = self.regfile.row(ms2, r)[..kb].to_vec();
+                    self.mem.write_bytes(addr, &bytes);
+                }
+            }
+            _ => unreachable!(),
+        }
+        self.scoreboard.occupy(&instr);
+        self.inflight.push(InflightMem {
+            seq,
+            instr,
+            shape,
+            row_addrs,
+            next_row: 0,
+            outstanding: 0,
+            is_write,
+        });
+    }
+
+    // ----- demand uops ----------------------------------------------------
+
+    fn generate_demand_uops(&mut self) {
+        // `inflight` is kept seq-ordered (in-order issue + ordered
+        // removal), so walking by index is already oldest-first.
+        for i in 0..self.inflight.len() {
+            loop {
+                let f = &self.inflight[i];
+                if f.next_row >= f.row_addrs.len() {
+                    break;
+                }
+                let is_write = f.is_write;
+                if is_write && self.sq_used >= self.cfg.sq_entries {
+                    break;
+                }
+                if !is_write && self.lq_used >= self.cfg.lq_entries {
+                    break;
+                }
+                let addr = f.row_addrs[self.inflight[i].next_row];
+                let seq = f.seq;
+                let id = self.uop_meta.alloc(UopMeta {
+                    kind: UopKind::Demand { seq },
+                    enq: self.now,
+                    accept: self.now,
+                });
+                self.lsu_queue.push_back(QueuedUop { id, addr, is_write, is_prefetch: false });
+                let f = &mut self.inflight[i];
+                f.next_row += 1;
+                f.outstanding += 1;
+                if is_write {
+                    self.sq_used += 1;
+                } else {
+                    self.lq_used += 1;
+                }
+            }
+        }
+    }
+
+    // ----- runahead --------------------------------------------------------
+
+    fn runahead_stage(&mut self) {
+        let mut budget = self.cfg.prefetch_width;
+        let has_rfu = self.cfg.variant.has_rfu();
+        let len = self.riq.len();
+        // Index 0 is the head (about to issue as demand) — skip it.
+        // Start from the maintained front cursor (the oldest entry that
+        // may still emit prefetches) and advance it past completed
+        // entries — without this, NVR's infinite RIQ makes the scan
+        // O(queue length) per cycle. The scan window is also bounded:
+        // real wake-up logic examines a limited number of entries per
+        // cycle.
+        const SCAN_WINDOW: usize = 64;
+        let mut start = self
+            .riq
+            .index_of_seq(self.runahead_front)
+            .map(|i| i.max(1))
+            .unwrap_or(1);
+        while start < len {
+            let e = self.riq.get(start).unwrap();
+            if e.prefetch_done || e.used_as_producer {
+                start += 1;
+            } else {
+                break;
+            }
+        }
+        if start < len {
+            self.runahead_front = self.riq.get(start).unwrap().seq;
+        }
+        for idx in start..(start + SCAN_WINDOW).min(len) {
+            if budget == 0 {
+                break;
+            }
+            let entry = self.riq.get(idx).unwrap();
+            if entry.prefetch_done || entry.used_as_producer {
+                continue;
+            }
+            match entry.instr {
+                MInstr::Mld { base, stride, .. } => {
+                    budget = self.prefetch_strided(idx, base, stride, budget, has_rfu);
+                }
+                MInstr::Mst { .. } | MInstr::Mscatter { .. } => {
+                    // Stores generate no prefetch uops.
+                    self.riq.get_mut(idx).unwrap().prefetch_done = true;
+                }
+                MInstr::Mgather { .. } => {
+                    budget = self.prefetch_gather(idx, budget, has_rfu);
+                }
+                MInstr::Mcfg { .. } | MInstr::Mma { .. } => {}
+            }
+        }
+    }
+
+    /// Emit prefetch uops for a strided load entry. Returns the budget
+    /// left.
+    fn prefetch_strided(
+        &mut self,
+        idx: usize,
+        base: u64,
+        stride: u64,
+        mut budget: usize,
+        has_rfu: bool,
+    ) -> usize {
+        let entry = self.riq.get(idx).unwrap();
+        let m = entry.shape.m as usize;
+        let seq = entry.seq;
+        if has_rfu {
+            if !entry.tentative_sent {
+                // Tentative uop: row 0 only.
+                self.emit_prefetch(seq, base, true);
+                let e = self.riq.get_mut(idx).unwrap();
+                e.tentative_sent = true;
+                e.next_prefetch_row = 1;
+                if m == 1 {
+                    e.prefetch_done = true;
+                }
+                budget -= 1;
+            } else if entry.granted {
+                budget = self.emit_rows(idx, budget, |row| base + row as u64 * stride);
+            }
+            // suppressed: wait for the tentative's classification
+        } else {
+            // NVR: unfiltered — every uop granted from the start.
+            budget = self.emit_rows(idx, budget, |row| base + row as u64 * stride);
+        }
+        budget
+    }
+
+    /// Emit remaining row prefetches for entry `idx` using `addr_of`.
+    fn emit_rows(&mut self, idx: usize, mut budget: usize, addr_of: impl Fn(usize) -> u64) -> usize {
+        loop {
+            if budget == 0 {
+                return 0;
+            }
+            let e = self.riq.get(idx).unwrap();
+            let m = e.shape.m as usize;
+            let row = e.next_prefetch_row;
+            if row >= m {
+                self.riq.get_mut(idx).unwrap().prefetch_done = true;
+                return budget;
+            }
+            let seq = e.seq;
+            self.emit_prefetch(seq, addr_of(row), false);
+            let e = self.riq.get_mut(idx).unwrap();
+            e.next_prefetch_row += 1;
+            budget -= 1;
+        }
+    }
+
+    /// Gather runahead: DMU walk → VMR allocation → producer fills →
+    /// gathered prefetches (tentative mechanism).
+    fn prefetch_gather(&mut self, idx: usize, mut budget: usize, has_rfu: bool) -> usize {
+        debug_assert!(self.cfg.variant.has_gsa(), "gather program on non-GSA variant");
+        let entry = self.riq.get(idx).unwrap();
+        let m = entry.shape.m as usize;
+        let seq = entry.seq;
+        if !entry.dmu_resolved {
+            let Some(p_idx) = self.riq.dmu_find_producer(idx) else {
+                // No producer in the window: the base register is either
+                // architecturally ready (the gather will issue soon) or
+                // unresolvable — skip prefetching this entry.
+                self.riq.get_mut(idx).unwrap().prefetch_done = true;
+                return budget;
+            };
+            let producer = self.riq.get(p_idx).unwrap();
+            let (p_base, p_stride, p_rows) = match producer.instr {
+                MInstr::Mld { base, stride, .. } => (base, stride, producer.shape.m as usize),
+                _ => unreachable!("DMU returns mld producers only"),
+            };
+            let Some(handle) = self.vmr.alloc(m.min(p_rows)) else {
+                return budget; // VMR full: retry next cycle
+            };
+            {
+                let p = self.riq.get_mut(p_idx).unwrap();
+                p.used_as_producer = true;
+                p.prefetch_done = true;
+            }
+            // Emit the chain's VMR-fill uops (forced grants, §IV-E).
+            // Each fill reads the 48-bit base address of one gathered row:
+            // the first element of base-vector row r, at p_base+r·stride.
+            for row in 0..m.min(p_rows) {
+                let addr = p_base + row as u64 * p_stride;
+                let value48 = self.mem.read_addr48(addr);
+                let id = self.uop_meta.alloc(UopMeta {
+                    kind: UopKind::VmrFill { handle, row, value48 },
+                    enq: self.now,
+                    accept: self.now,
+                });
+                self.lsu_queue.push_back(QueuedUop {
+                    id,
+                    addr,
+                    is_write: false,
+                    is_prefetch: true,
+                });
+                self.stats.vmr_fill_uops += 1;
+                self.rfu.stats.forced_grants += 1;
+            }
+            let e = self.riq.get_mut(idx).unwrap();
+            e.dmu_resolved = true;
+            e.vmr_slot = Some(handle);
+            return budget.saturating_sub(1);
+        }
+        // Wait for the VMR entry to fill.
+        let Some(handle) = entry.vmr_slot else { return budget };
+        if !self.vmr.is_valid(handle) {
+            return budget;
+        }
+        // Gathered prefetches under the tentative mechanism.
+        if has_rfu {
+            if !entry.tentative_sent {
+                let addr = self.vmr.addr(handle, 0);
+                self.emit_prefetch(seq, addr, true);
+                let e = self.riq.get_mut(idx).unwrap();
+                e.tentative_sent = true;
+                e.next_prefetch_row = 1;
+                if m == 1 {
+                    e.prefetch_done = true;
+                }
+                budget -= 1;
+            } else if entry.granted {
+                let vmr = &self.vmr;
+                let addrs: Vec<u64> = (0..m).map(|r| vmr.addr(handle, r)).collect();
+                budget = self.emit_rows(idx, budget, move |row| addrs[row]);
+            }
+        } else {
+            let vmr = &self.vmr;
+            let addrs: Vec<u64> = (0..m).map(|r| vmr.addr(handle, r)).collect();
+            budget = self.emit_rows(idx, budget, move |row| addrs[row]);
+        }
+        budget
+    }
+
+    fn emit_prefetch(&mut self, seq: u64, addr: u64, tentative: bool) {
+        let id = self.uop_meta.alloc(UopMeta {
+            kind: UopKind::Prefetch { seq, tentative },
+            enq: self.now,
+            accept: self.now,
+        });
+        self.lsu_queue.push_back(QueuedUop { id, addr, is_write: false, is_prefetch: true });
+        self.stats.prefetch_uops_issued += 1;
+        if tentative {
+            self.stats.tentative_uops += 1;
+        }
+    }
+
+    // ----- LSU -------------------------------------------------------------
+
+    fn lsu_stage(&mut self) {
+        for _ in 0..self.cfg.lsu_width {
+            let Some(uop) = self.lsu_queue.front() else { return };
+            let req = MemRequest {
+                id: uop.id,
+                addr: uop.addr,
+                is_write: uop.is_write,
+                is_prefetch: uop.is_prefetch,
+            };
+            match self.llc.access(req, self.now) {
+                Ok(()) => {
+                    self.uop_meta.get_mut(uop.id).accept = self.now;
+                    self.lsu_queue.pop_front();
+                }
+                Err(_) => return, // head-of-line blocking: retry next cycle
+            }
+        }
+    }
+
+    // ----- dispatch ----------------------------------------------------------
+
+    fn dispatch_stage(&mut self) {
+        for _ in 0..self.cfg.dispatch_width {
+            if self.next_dispatch >= self.program.len() {
+                return;
+            }
+            if !self.riq.has_space() {
+                self.riq.stats.dispatch_stalls += 1;
+                return;
+            }
+            let instr = self.program[self.next_dispatch];
+            // Maintain the dispatch-stage CSR view for uop decomposition.
+            if let MInstr::Mcfg { csr, val } = instr {
+                let mut s = self.dispatch_shape;
+                match csr {
+                    crate::isa::Csr::MatrixM => s.m = val as u16,
+                    crate::isa::Csr::MatrixK => s.k = val as u16,
+                    crate::isa::Csr::MatrixN => s.n = val as u16,
+                }
+                s.validate().expect("dispatching mcfg with invalid shape");
+                self.dispatch_shape = s;
+            }
+            self.seq_counter += 1;
+            let entry = RiqEntry::new(self.seq_counter, instr, self.dispatch_shape);
+            let ok = self.riq.push(entry);
+            debug_assert!(ok, "has_space checked");
+            self.next_dispatch += 1;
+        }
+    }
+
+    /// Test/diagnostic hook: current cycle.
+    pub fn cycle(&self) -> u64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{MReg, MatShape, ProgramBuilder};
+    use crate::sim::config::Variant;
+    use crate::sim::exec::NativeMma;
+
+    fn mk_mpu(variant: Variant, mem: MemImage) -> Mpu {
+        let mut cfg = SimConfig::for_variant(variant);
+        cfg.max_cycles = 5_000_000;
+        Mpu::new(cfg, mem, Box::new(NativeMma))
+    }
+
+    /// A tiny dense program: load A and B tiles, mma, store C.
+    fn tiny_program(shape: MatShape) -> (Program, MemImage) {
+        let mut mem = MemImage::new(0x10000);
+        let ke = shape.k_elems();
+        // A at 0x1000 (m rows), B at 0x4000 (n rows), C at 0x8000.
+        for r in 0..shape.m as usize {
+            for e in 0..ke {
+                mem.write_f32(0x1000 + (r * 64 + e * 4) as u64, (r + e) as f32);
+            }
+        }
+        for r in 0..shape.n as usize {
+            for e in 0..ke {
+                mem.write_f32(0x4000 + (r * 64 + e * 4) as u64, (r * 2 + e) as f32 * 0.5);
+            }
+        }
+        let mut b = ProgramBuilder::new("tiny");
+        b.cfg_shape(shape);
+        b.mld(MReg(0), 0x1000, 64);
+        b.mld(MReg(1), 0x4000, 64);
+        b.mma(MReg(2), MReg(0), MReg(1), None);
+        b.mst(MReg(2), 0x8000, 64);
+        (b.build(), mem)
+    }
+
+    fn expected_c(shape: MatShape) -> Vec<f32> {
+        let m = shape.m as usize;
+        let n = shape.n as usize;
+        let ke = shape.k_elems();
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for e in 0..ke {
+                    c[i * n + j] += (i + e) as f32 * ((j * 2 + e) as f32 * 0.5);
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn dense_program_functional_correctness() {
+        let shape = MatShape::new(4, 32, 4);
+        let (prog, mem) = tiny_program(shape);
+        for variant in [Variant::Baseline, Variant::Nvr, Variant::DareFre] {
+            let mut mpu = mk_mpu(variant, mem.clone());
+            let stats = mpu.run(&prog);
+            assert!(stats.cycles > 0);
+            assert_eq!(stats.instrs_retired as usize, prog.instrs.len());
+            let want = expected_c(shape);
+            let m = shape.m as usize;
+            let n = shape.n as usize;
+            for i in 0..m {
+                for j in 0..n {
+                    let got = mpu.mem.read_f32(0x8000 + (i * 64 + j * 4) as u64);
+                    assert!(
+                        (got - want[i * n + j]).abs() < 1e-4,
+                        "{variant:?} C[{i},{j}] = {got}, want {}",
+                        want[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_program_functional_correctness() {
+        // A rows scattered in memory; gather them via an address table.
+        let mut mem = MemImage::new(0x20000);
+        let shape = MatShape::new(4, 16, 4); // ke = 4
+        let scattered_rows: [u64; 4] = [0x3000, 0x1200, 0x5040, 0x2480];
+        for (r, &addr) in scattered_rows.iter().enumerate() {
+            for e in 0..4 {
+                mem.write_f32(addr + e as u64 * 4, (10 * r + e) as f32);
+            }
+        }
+        // Address table at 0x7000, stride 64 (one address per row start).
+        for (r, &addr) in scattered_rows.iter().enumerate() {
+            mem.write_addr48(0x7000 + r as u64 * 64, addr);
+        }
+        // B at 0x9000.
+        for r in 0..4 {
+            for e in 0..4 {
+                mem.write_f32(0x9000 + (r * 64 + e * 4) as u64, if r == e { 1.0 } else { 0.0 });
+            }
+        }
+        let mut b = ProgramBuilder::new("gather-tiny");
+        b.cfg_shape(shape);
+        b.mld(MReg(0), 0x7000, 64); // base-address vector
+        b.mgather(MReg(1), MReg(0)); // densified A tile
+        b.mld(MReg(2), 0x9000, 64); // B = I
+        b.mma(MReg(3), MReg(1), MReg(2), None);
+        b.mst(MReg(3), 0xA000, 64);
+        let prog = b.build();
+
+        for variant in [Variant::DareGsa, Variant::DareFull] {
+            let mut mpu = mk_mpu(variant, mem.clone());
+            let stats = mpu.run(&prog);
+            assert_eq!(stats.instrs_retired as usize, prog.instrs.len(), "{variant:?}");
+            // C = gathered(A) × Iᵀ = gathered A tile.
+            for r in 0..4 {
+                for e in 0..4 {
+                    let got = mpu.mem.read_f32(0xA000 + (r * 64 + e * 4) as u64);
+                    assert!(
+                        (got - (10 * r + e) as f32).abs() < 1e-5,
+                        "{variant:?} C[{r},{e}] = {got}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lacks the GSA extension")]
+    fn gsa_program_rejected_on_baseline() {
+        let mut b = ProgramBuilder::new("g");
+        b.mgather(MReg(1), MReg(0));
+        let prog = b.build();
+        let mut mpu = mk_mpu(Variant::Baseline, MemImage::new(0x1000));
+        mpu.run(&prog);
+    }
+
+    #[test]
+    fn runahead_prefetches_ahead() {
+        // Latency-bound dependent chain: each mma consumes the preceding
+        // load, so the baseline's tiny window cannot overlap misses; a
+        // runahead MPU prefetches the future loads while the head stalls.
+        let mut b = ProgramBuilder::new("load-mma-chain");
+        b.cfg_shape(MatShape::new(16, 64, 4));
+        b.mld(MReg(1), 0x200000, 64); // B tile, loaded once
+        for i in 0..16 {
+            b.mld(MReg(0), 0x1000 + i as u64 * 0x1000, 64);
+            b.mma(MReg(2), MReg(0), MReg(1), None);
+        }
+        let prog = b.build();
+        let mem = MemImage::new(0x210000);
+
+        let mut base = mk_mpu(Variant::Baseline, mem.clone());
+        let sb = base.run(&prog);
+        assert_eq!(sb.prefetch_uops_issued, 0, "baseline never prefetches");
+
+        let mut nvr = mk_mpu(Variant::Nvr, mem.clone());
+        let sn = nvr.run(&prog);
+        assert!(sn.prefetch_uops_issued > 0, "NVR prefetches");
+
+        let mut fre = mk_mpu(Variant::DareFre, mem.clone());
+        let sf = fre.run(&prog);
+        assert!(sf.tentative_uops > 0, "FRE sends tentative uops");
+        assert!(
+            sn.cycles < sb.cycles,
+            "NVR ({}) should beat baseline ({}) on a latency-bound chain",
+            sn.cycles,
+            sb.cycles
+        );
+        assert!(
+            sf.cycles < sb.cycles,
+            "FRE ({}) should beat baseline ({}) on a latency-bound chain",
+            sf.cycles,
+            sb.cycles
+        );
+    }
+
+    #[test]
+    fn fre_suppresses_redundant_prefetches_on_reuse() {
+        // Loads that all hit the same small set of lines: NVR floods
+        // redundant prefetches, FRE suppresses after the tentative hits.
+        let mut b = ProgramBuilder::new("reuse");
+        for i in 0..32 {
+            // 4 distinct tiles, revisited 8 times each
+            b.mld(MReg((i % 4) as u8), 0x1000 + (i % 4) as u64 * 0x400, 64);
+        }
+        let prog = b.build();
+        let mem = MemImage::new(0x4000);
+        let mut nvr = mk_mpu(Variant::Nvr, mem.clone());
+        let sn = nvr.run(&prog);
+        let mut fre = mk_mpu(Variant::DareFre, mem.clone());
+        let sf = fre.run(&prog);
+        assert!(
+            sf.llc.prefetch_redundant < sn.llc.prefetch_redundant,
+            "FRE ({}) must emit fewer redundant prefetches than NVR ({})",
+            sf.llc.prefetch_redundant,
+            sn.llc.prefetch_redundant
+        );
+    }
+
+    #[test]
+    fn riq_capacity_respected() {
+        let mut cfg = SimConfig::for_variant(Variant::DareFre);
+        cfg.riq_entries = 4;
+        cfg.max_cycles = 1_000_000;
+        let mut b = ProgramBuilder::new("many");
+        for i in 0..40 {
+            // Two-register rotation over cold lines: WAW hazards quickly
+            // back the queue up behind slow misses.
+            b.mld(MReg((i % 2) as u8), 0x1000 + i as u64 * 0x1000, 64);
+        }
+        let prog = b.build();
+        let mut mpu = Mpu::new(cfg, MemImage::new(0x30000), Box::new(NativeMma));
+        let stats = mpu.run(&prog);
+        assert!(stats.riq.peak_occupancy <= 4);
+        assert!(stats.riq.dispatch_stalls > 0, "small RIQ must backpressure dispatch");
+    }
+
+    #[test]
+    fn vmr_used_for_gather_runahead() {
+        // Two gather pairs: DareFull's DMU should allocate VMR entries.
+        let mut mem = MemImage::new(0x40000);
+        let shape = MatShape::new(8, 16, 4);
+        // tables + scattered rows
+        for g in 0..4u64 {
+            for r in 0..8u64 {
+                let row_addr = 0x10000 + g * 0x2000 + ((r * 37) % 61) * 0x80;
+                mem.write_addr48(0x1000 + g * 0x400 + r * 64, row_addr);
+            }
+        }
+        let mut b = ProgramBuilder::new("gathers");
+        b.cfg_shape(shape);
+        for g in 0..4 {
+            b.mld(MReg(0), 0x1000 + g as u64 * 0x400, 64);
+            b.mgather(MReg(1), MReg(0));
+            b.mma(MReg(2), MReg(1), MReg(3), None);
+        }
+        let prog = b.build();
+        let mut mpu = mk_mpu(Variant::DareFull, mem);
+        let stats = mpu.run(&prog);
+        assert!(stats.vmr.allocs > 0, "DMU allocated VMR entries");
+        assert!(stats.vmr_fill_uops > 0, "base vectors fetched into the VMR");
+        assert_eq!(stats.vmr.allocs, stats.vmr.releases, "no VMR leaks");
+    }
+
+    #[test]
+    fn oracle_cache_faster() {
+        let (prog, mem) = tiny_program(MatShape::FULL);
+        let mut cfg = SimConfig::for_variant(Variant::Baseline);
+        cfg.llc.oracle = true;
+        let mut oracle = Mpu::new(cfg, mem.clone(), Box::new(NativeMma));
+        let so = oracle.run(&prog);
+        let mut plain = mk_mpu(Variant::Baseline, mem);
+        let sp = plain.run(&prog);
+        assert!(so.cycles < sp.cycles, "oracle {} < real {}", so.cycles, sp.cycles);
+        assert_eq!(so.llc.demand_misses, 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Architectural matrix register file: eight 1 KB registers of
+//! 16 rows × 64 bytes (§III-A), plus the CSR shape state.
+
+use crate::isa::{Csr, MatShape, MReg, MREG_ROWS, MREG_ROW_BYTES, NUM_MREGS};
+
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    /// Raw register bytes: `NUM_MREGS × MREG_ROWS × MREG_ROW_BYTES`.
+    data: Vec<u8>,
+    shape: MatShape,
+}
+
+impl RegFile {
+    pub fn new() -> Self {
+        Self { data: vec![0u8; NUM_MREGS * MREG_ROWS * MREG_ROW_BYTES], shape: MatShape::FULL }
+    }
+
+    pub fn shape(&self) -> MatShape {
+        self.shape
+    }
+
+    pub fn write_csr(&mut self, csr: Csr, val: u32) {
+        let mut s = self.shape;
+        match csr {
+            Csr::MatrixM => s.m = val as u16,
+            Csr::MatrixK => s.k = val as u16,
+            Csr::MatrixN => s.n = val as u16,
+        }
+        s.validate().unwrap_or_else(|e| panic!("mcfg produced invalid shape: {e}"));
+        self.shape = s;
+    }
+
+    #[inline]
+    fn row_offset(reg: MReg, row: usize) -> usize {
+        debug_assert!(row < MREG_ROWS);
+        reg.index() * MREG_ROWS * MREG_ROW_BYTES + row * MREG_ROW_BYTES
+    }
+
+    pub fn row(&self, reg: MReg, row: usize) -> &[u8] {
+        let off = Self::row_offset(reg, row);
+        &self.data[off..off + MREG_ROW_BYTES]
+    }
+
+    pub fn write_row(&mut self, reg: MReg, row: usize, bytes: &[u8]) {
+        assert!(bytes.len() <= MREG_ROW_BYTES);
+        let off = Self::row_offset(reg, row);
+        self.data[off..off + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Read the current-shape tile of `reg` as f32s, row-major
+    /// (`shape.m × shape.k_elems()`).
+    pub fn read_tile_f32(&self, reg: MReg) -> Vec<f32> {
+        let m = self.shape.m as usize;
+        let ke = self.shape.k_elems();
+        let mut out = Vec::with_capacity(m * ke);
+        for r in 0..m {
+            let row = self.row(reg, r);
+            for e in 0..ke {
+                out.push(f32::from_le_bytes(row[e * 4..e * 4 + 4].try_into().unwrap()));
+            }
+        }
+        out
+    }
+
+    /// Read a tile at an explicit row-count (for `mma`'s N×K source).
+    pub fn read_tile_f32_rows(&self, reg: MReg, rows: usize) -> Vec<f32> {
+        let ke = self.shape.k_elems();
+        let mut out = Vec::with_capacity(rows * ke);
+        for r in 0..rows {
+            let row = self.row(reg, r);
+            for e in 0..ke {
+                out.push(f32::from_le_bytes(row[e * 4..e * 4 + 4].try_into().unwrap()));
+            }
+        }
+        out
+    }
+
+    /// Write an `m × n` f32 tile into `reg` (accumulator layout: N values
+    /// per row, one output row per register row).
+    pub fn write_acc_tile(&mut self, reg: MReg, m: usize, n: usize, vals: &[f32]) {
+        assert_eq!(vals.len(), m * n);
+        for r in 0..m {
+            let mut bytes = [0u8; MREG_ROW_BYTES];
+            for c in 0..n {
+                bytes[c * 4..c * 4 + 4].copy_from_slice(&vals[r * n + c].to_le_bytes());
+            }
+            self.write_row(reg, r, &bytes[..n * 4]);
+        }
+    }
+
+    /// Read an `m × n` accumulator tile.
+    pub fn read_acc_tile(&self, reg: MReg, m: usize, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(m * n);
+        for r in 0..m {
+            let row = self.row(reg, r);
+            for c in 0..n {
+                out.push(f32::from_le_bytes(row[c * 4..c * 4 + 4].try_into().unwrap()));
+            }
+        }
+        out
+    }
+
+    /// The base address held in row `row`'s first element (GSA: "the
+    /// first element of each matrix register row as a base address").
+    pub fn row_base_addr(&self, reg: MReg, row: usize) -> u64 {
+        let b = self.row(reg, row);
+        u64::from_le_bytes(b[..8].try_into().unwrap()) & 0x0000_FFFF_FFFF_FFFF
+    }
+}
+
+impl Default for RegFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_updates_shape() {
+        let mut rf = RegFile::new();
+        rf.write_csr(Csr::MatrixM, 8);
+        rf.write_csr(Csr::MatrixK, 32);
+        rf.write_csr(Csr::MatrixN, 4);
+        assert_eq!(rf.shape(), MatShape { m: 8, k: 32, n: 4 });
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid shape")]
+    fn csr_rejects_invalid() {
+        let mut rf = RegFile::new();
+        rf.write_csr(Csr::MatrixM, 99);
+    }
+
+    #[test]
+    fn tile_roundtrip() {
+        let mut rf = RegFile::new();
+        rf.write_csr(Csr::MatrixK, 16); // 4 elems per row
+        let m = 3usize;
+        let n = 4usize;
+        let vals: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.5).collect();
+        rf.write_acc_tile(MReg(2), m, n, &vals);
+        assert_eq!(rf.read_acc_tile(MReg(2), m, n), vals);
+        // read_tile_f32 at shape m=16 → first rows match
+        rf.write_csr(Csr::MatrixM, 3);
+        let tile = rf.read_tile_f32(MReg(2));
+        assert_eq!(&tile[..4], &vals[..4]);
+    }
+
+    #[test]
+    fn base_addr_from_row() {
+        let mut rf = RegFile::new();
+        let addr = 0x0000_00AB_CDEF_0123u64;
+        let mut row = [0u8; 8];
+        row.copy_from_slice(&addr.to_le_bytes());
+        rf.write_row(MReg(5), 7, &row);
+        assert_eq!(rf.row_base_addr(MReg(5), 7), addr);
+    }
+
+    #[test]
+    fn registers_are_independent() {
+        let mut rf = RegFile::new();
+        rf.write_row(MReg(0), 0, &[1u8; 64]);
+        rf.write_row(MReg(1), 0, &[2u8; 64]);
+        assert_eq!(rf.row(MReg(0), 0)[0], 1);
+        assert_eq!(rf.row(MReg(1), 0)[0], 2);
+        assert_eq!(rf.row(MReg(0), 1)[0], 0);
+    }
+}

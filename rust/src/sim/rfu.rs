@@ -1,0 +1,210 @@
+//! Runahead Filter Unit (§IV-E): suppresses redundant prefetch uops via
+//! the *tentative uop mechanism*, deciding grants with a threshold-based,
+//! unsupervised binary classifier over observed uop latencies.
+//!
+//! The classifier exploits the bimodal shape of memory-latency
+//! distributions (one peak at LLC-hit latency, one at miss latency):
+//!
+//! 1. keep a histogram of the last `window` (32) observed latencies in
+//!    `bin_cycles` (8-cycle) bins;
+//! 2. bins whose relative frequency exceeds `peak_frac` (20 %) are peaks;
+//!    only the smallest and largest peaks are retained;
+//! 3. when the peaks are more than `margin_bins` (4) apart, the threshold
+//!    becomes the latency of the minimum-count bin between them plus a
+//!    fixed `slack` (32 cycles) — the slack prevents misclassifying a
+//!    miss as a hit when hit latency fluctuates.
+//!
+//! A static-threshold variant (Fig 7's baseline RFU) is selected by
+//! `RfuConfig::dynamic = false`.
+
+use super::config::RfuConfig;
+use std::collections::VecDeque;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RfuStats {
+    pub observations: u64,
+    pub threshold_updates: u64,
+    pub classified_miss: u64,
+    pub classified_hit: u64,
+    /// Prefetch uops suppressed by `!granted && TentativeSent`.
+    pub suppressed_uops: u64,
+    /// Grants forced by VMR allocation (base-address-vector loads).
+    pub forced_grants: u64,
+}
+
+#[derive(Debug)]
+pub struct Rfu {
+    cfg: RfuConfig,
+    window: VecDeque<u64>,
+    threshold: u64,
+    pub stats: RfuStats,
+}
+
+impl Rfu {
+    pub fn new(cfg: RfuConfig, hit_latency: u64) -> Self {
+        // Initial dynamic threshold: hit latency + slack (the classifier
+        // refines it as soon as the window fills).
+        let threshold =
+            if cfg.dynamic { hit_latency + cfg.slack } else { cfg.static_threshold };
+        Self { cfg, window: VecDeque::with_capacity(cfg.window), threshold, stats: RfuStats::default() }
+    }
+
+    pub fn threshold(&self) -> u64 {
+        self.threshold
+    }
+
+    /// Feed an observed uop latency into the classifier window.
+    pub fn observe(&mut self, latency: u64) {
+        self.stats.observations += 1;
+        if !self.cfg.dynamic {
+            return;
+        }
+        if self.window.len() == self.cfg.window {
+            self.window.pop_front();
+        }
+        self.window.push_back(latency);
+        self.update_threshold();
+    }
+
+    /// Classify a uop latency: `true` = LLC miss (grants the entry).
+    pub fn classify_miss(&mut self, latency: u64) -> bool {
+        let miss = latency > self.threshold;
+        if miss {
+            self.stats.classified_miss += 1;
+        } else {
+            self.stats.classified_hit += 1;
+        }
+        miss
+    }
+
+    fn update_threshold(&mut self) {
+        if self.window.len() < self.cfg.window {
+            return; // wait for a full window
+        }
+        let bin = self.cfg.bin_cycles;
+        let max_lat = *self.window.iter().max().unwrap();
+        let nbins = (max_lat / bin + 1) as usize;
+        // Histogram (step 1).
+        let mut hist = vec![0u32; nbins];
+        for &l in &self.window {
+            hist[(l / bin) as usize] += 1;
+        }
+        // Peaks (step 2): relative frequency > peak_frac.
+        let need = (self.cfg.peak_frac * self.window.len() as f64).ceil() as u32;
+        let peaks: Vec<usize> =
+            (0..nbins).filter(|&i| hist[i] >= need.max(1)).collect();
+        if peaks.len() < 2 {
+            return;
+        }
+        let lo = *peaks.first().unwrap();
+        let hi = *peaks.last().unwrap();
+        // Margin check (step 3).
+        if (hi - lo) as u64 <= self.cfg.margin_bins {
+            return;
+        }
+        // Minimum-count bin strictly between the peaks.
+        let min_bin = (lo + 1..hi)
+            .min_by_key(|&i| hist[i])
+            .expect("margin > 1 guarantees an interior bin");
+        self.threshold = min_bin as u64 * bin + self.cfg.slack;
+        self.stats.threshold_updates += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dyn_cfg() -> RfuConfig {
+        RfuConfig::default()
+    }
+
+    #[test]
+    fn initial_threshold() {
+        let r = Rfu::new(dyn_cfg(), 20);
+        assert_eq!(r.threshold(), 52);
+        let s = Rfu::new(RfuConfig { dynamic: false, ..dyn_cfg() }, 20);
+        assert_eq!(s.threshold(), 64);
+    }
+
+    #[test]
+    fn bimodal_window_sets_threshold_between_peaks() {
+        let mut r = Rfu::new(dyn_cfg(), 20);
+        // 16 hits near 20 cycles, 16 misses near 130 cycles.
+        for i in 0..16 {
+            r.observe(20 + (i % 3));
+            r.observe(130 + (i % 5));
+        }
+        let t = r.threshold();
+        assert!(r.stats.threshold_updates > 0, "threshold updated");
+        assert!(t > 24 && t < 130, "threshold {t} must separate the modes");
+        // hits classified hit, misses classified miss
+        assert!(!r.classify_miss(22));
+        assert!(r.classify_miss(128));
+    }
+
+    #[test]
+    fn unimodal_window_keeps_old_threshold() {
+        let mut r = Rfu::new(dyn_cfg(), 20);
+        let before = r.threshold();
+        for _ in 0..40 {
+            r.observe(21); // all hits — one peak only
+        }
+        assert_eq!(r.threshold(), before, "no two peaks → no update");
+        assert_eq!(r.stats.threshold_updates, 0);
+    }
+
+    #[test]
+    fn close_peaks_respect_margin() {
+        let mut r = Rfu::new(dyn_cfg(), 20);
+        // Peaks at bins 2 (≈20cy) and 5 (≈40cy): distance 3 ≤ margin 4.
+        for _ in 0..16 {
+            r.observe(20);
+            r.observe(41);
+        }
+        assert_eq!(r.stats.threshold_updates, 0, "peaks inside margin must not update");
+    }
+
+    #[test]
+    fn static_mode_never_updates() {
+        let mut r = Rfu::new(RfuConfig { dynamic: false, ..dyn_cfg() }, 20);
+        for i in 0..64 {
+            r.observe(if i % 2 == 0 { 20 } else { 200 });
+        }
+        assert_eq!(r.threshold(), 64);
+        assert_eq!(r.stats.threshold_updates, 0);
+        // Static RFU fails when LLC latency exceeds its threshold (Fig 7):
+        // a 70-cycle *hit* is classified as a miss.
+        assert!(r.classify_miss(70));
+    }
+
+    #[test]
+    fn adapts_to_memory_environment() {
+        // Slow LLC: hits at 80 cycles, misses at 300. A dynamic RFU must
+        // still separate them (Fig 7's robustness claim).
+        let mut r = Rfu::new(dyn_cfg(), 80);
+        for i in 0..16 {
+            r.observe(80 + (i % 4));
+            r.observe(300 + (i % 7));
+        }
+        assert!(!r.classify_miss(83), "hit at slow-LLC latency");
+        assert!(r.classify_miss(295), "miss still detected");
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut r = Rfu::new(dyn_cfg(), 20);
+        // Fill with an old regime, then shift: classifier follows.
+        for i in 0..16 {
+            r.observe(20 + (i % 3));
+            r.observe(130 + (i % 5));
+        }
+        let t1 = r.threshold();
+        for i in 0..16 {
+            r.observe(60 + (i % 3)); // hits now at 60 (slower LLC)
+            r.observe(400 + (i % 5));
+        }
+        let t2 = r.threshold();
+        assert!(t2 > t1, "threshold follows the regime: {t1} → {t2}");
+    }
+}

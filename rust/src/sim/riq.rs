@@ -1,0 +1,253 @@
+//! Runahead Issue Queue (§IV-C): a circular queue holding dispatched
+//! instructions. The head issues to the execution pipeline; stalled
+//! younger entries are the candidate pool for prefetch uops. The
+//! embedded Dependency Management Unit (DMU) resolves `mgather` base-
+//! vector dependency chains by walking the queue backward.
+
+use super::vmr::VmrHandle;
+use crate::isa::{MInstr, MatShape, MReg};
+use std::collections::VecDeque;
+
+/// Per-entry runahead state (the `granted`/`TentativeSent` fields of
+/// §IV-E plus the decompose counter of §IV-C).
+#[derive(Debug, Clone)]
+pub struct RiqEntry {
+    pub seq: u64,
+    pub instr: MInstr,
+    /// CSR view at dispatch (decides uop count).
+    pub shape: MatShape,
+    /// RFU tentative-uop mechanism state.
+    pub tentative_sent: bool,
+    pub granted: bool,
+    /// Decompose counter: next row uop to emit as a prefetch.
+    pub next_prefetch_row: usize,
+    pub prefetch_done: bool,
+    /// `mgather` runahead: allocated VMR entry, if any.
+    pub vmr_slot: Option<VmrHandle>,
+    /// DMU already walked for this entry.
+    pub dmu_resolved: bool,
+    /// This entry is the producer `mld` of some `mgather`'s base vector;
+    /// its rows are being fetched as VMR fills (forced grant), so the
+    /// plain prefetch path must not re-emit them.
+    pub used_as_producer: bool,
+}
+
+impl RiqEntry {
+    pub fn new(seq: u64, instr: MInstr, shape: MatShape) -> Self {
+        Self {
+            seq,
+            instr,
+            shape,
+            tentative_sent: false,
+            granted: false,
+            next_prefetch_row: 0,
+            prefetch_done: !instr.is_mem(),
+            vmr_slot: None,
+            dmu_resolved: false,
+            used_as_producer: false,
+        }
+    }
+
+    /// §IV-E: suppress when `!granted && TentativeSent`.
+    pub fn suppressed(&self) -> bool {
+        !self.granted && self.tentative_sent
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RiqStats {
+    pub inserts: u64,
+    pub dispatch_stalls: u64,
+    pub peak_occupancy: usize,
+    /// DMU walks that found the producer.
+    pub dmu_hits: u64,
+    pub dmu_misses: u64,
+}
+
+#[derive(Debug)]
+pub struct Riq {
+    entries: VecDeque<RiqEntry>,
+    capacity: usize,
+    pub stats: RiqStats,
+}
+
+impl Riq {
+    pub fn new(capacity: usize) -> Self {
+        let prealloc = if capacity == usize::MAX { 64 } else { capacity };
+        Self { entries: VecDeque::with_capacity(prealloc), capacity, stats: RiqStats::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.entries.len() < self.capacity
+    }
+
+    /// Insert at the tail; `false` (and a stall count) when full.
+    pub fn push(&mut self, entry: RiqEntry) -> bool {
+        if !self.has_space() {
+            self.stats.dispatch_stalls += 1;
+            return false;
+        }
+        self.entries.push_back(entry);
+        self.stats.inserts += 1;
+        self.stats.peak_occupancy = self.stats.peak_occupancy.max(self.entries.len());
+        true
+    }
+
+    pub fn head(&self) -> Option<&RiqEntry> {
+        self.entries.front()
+    }
+
+    pub fn pop_head(&mut self) -> Option<RiqEntry> {
+        self.entries.pop_front()
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&RiqEntry> {
+        self.entries.get(idx)
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> Option<&mut RiqEntry> {
+        self.entries.get_mut(idx)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &RiqEntry> {
+        self.entries.iter()
+    }
+
+    /// Find the entry index with sequence number `seq` (prefetch
+    /// completions are routed by seq because indices shift as the head
+    /// pops).
+    pub fn index_of_seq(&self, seq: u64) -> Option<usize> {
+        // Entries are seq-ordered; binary search.
+        self.entries.binary_search_by(|e| e.seq.cmp(&seq)).ok()
+    }
+
+    /// DMU (§IV-C): starting from the entry at `gather_idx` (an
+    /// `mgather`), traverse the RIQ *backward* to find the dependency
+    /// chain producing its base-address register; the chain terminates at
+    /// an `mld`. Returns the producer's index.
+    pub fn dmu_find_producer(&mut self, gather_idx: usize) -> Option<usize> {
+        let target = match self.entries.get(gather_idx)?.instr {
+            MInstr::Mgather { ms1, .. } => ms1,
+            _ => return None,
+        };
+        let mut want: MReg = target;
+        // Walk backward; follow through intermediate producers (an
+        // mgather producing the base of another mgather) until an mld.
+        for i in (0..gather_idx).rev() {
+            let e = &self.entries[i];
+            if e.instr.dst() == Some(want) {
+                match e.instr {
+                    MInstr::Mld { .. } => {
+                        self.stats.dmu_hits += 1;
+                        return Some(i);
+                    }
+                    MInstr::Mgather { ms1, .. } => {
+                        // chain continues through this gather's own base
+                        want = ms1;
+                    }
+                    _ => {
+                        // produced by mma — not an address chain
+                        self.stats.dmu_misses += 1;
+                        return None;
+                    }
+                }
+            }
+        }
+        self.stats.dmu_misses += 1;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MatShape;
+
+    fn entry(seq: u64, instr: MInstr) -> RiqEntry {
+        RiqEntry::new(seq, instr, MatShape::FULL)
+    }
+
+    fn ld(md: u8, base: u64) -> MInstr {
+        MInstr::Mld { md: MReg(md), base, stride: 64 }
+    }
+
+    #[test]
+    fn capacity_and_fifo() {
+        let mut q = Riq::new(2);
+        assert!(q.push(entry(1, ld(0, 0))));
+        assert!(q.push(entry(2, ld(1, 64))));
+        assert!(!q.push(entry(3, ld(2, 128))), "full");
+        assert_eq!(q.stats.dispatch_stalls, 1);
+        assert_eq!(q.pop_head().unwrap().seq, 1);
+        assert!(q.push(entry(3, ld(2, 128))));
+        assert_eq!(q.stats.peak_occupancy, 2);
+    }
+
+    #[test]
+    fn seq_lookup() {
+        let mut q = Riq::new(8);
+        for s in [5u64, 6, 7, 9] {
+            q.push(entry(s, ld(0, 0)));
+        }
+        q.pop_head();
+        assert_eq!(q.index_of_seq(7), Some(1));
+        assert_eq!(q.index_of_seq(5), None, "popped");
+        assert_eq!(q.index_of_seq(8), None, "never inserted");
+    }
+
+    #[test]
+    fn dmu_finds_direct_producer() {
+        let mut q = Riq::new(8);
+        q.push(entry(1, ld(0, 0x100))); // produces m0 (base vector)
+        q.push(entry(2, MInstr::Mgather { md: MReg(1), ms1: MReg(0) }));
+        assert_eq!(q.dmu_find_producer(1), Some(0));
+        assert_eq!(q.stats.dmu_hits, 1);
+    }
+
+    #[test]
+    fn dmu_skips_unrelated_and_takes_nearest() {
+        let mut q = Riq::new(8);
+        q.push(entry(1, ld(0, 0x100))); // older producer of m0
+        q.push(entry(2, ld(3, 0x300))); // unrelated
+        q.push(entry(3, ld(0, 0x200))); // newest producer of m0
+        q.push(entry(4, MInstr::Mgather { md: MReg(1), ms1: MReg(0) }));
+        assert_eq!(q.dmu_find_producer(3), Some(2), "nearest older writer wins");
+    }
+
+    #[test]
+    fn dmu_follows_gather_chains() {
+        let mut q = Riq::new(8);
+        q.push(entry(1, ld(0, 0x100))); // mld → m0
+        q.push(entry(2, MInstr::Mgather { md: MReg(1), ms1: MReg(0) })); // m1 ← gather(m0)
+        q.push(entry(3, MInstr::Mgather { md: MReg(2), ms1: MReg(1) })); // m2 ← gather(m1)
+        // chain for the second gather terminates at the mld
+        assert_eq!(q.dmu_find_producer(2), Some(0));
+    }
+
+    #[test]
+    fn dmu_rejects_mma_producer() {
+        let mut q = Riq::new(8);
+        q.push(entry(1, MInstr::Mma { md: MReg(0), ms1: MReg(1), ms2: MReg(2) }));
+        q.push(entry(2, MInstr::Mgather { md: MReg(1), ms1: MReg(0) }));
+        assert_eq!(q.dmu_find_producer(1), None);
+        assert_eq!(q.stats.dmu_misses, 1);
+    }
+
+    #[test]
+    fn suppression_rule() {
+        let mut e = entry(1, ld(0, 0));
+        assert!(!e.suppressed(), "nothing sent yet");
+        e.tentative_sent = true;
+        assert!(e.suppressed(), "tentative out, not granted");
+        e.granted = true;
+        assert!(!e.suppressed());
+    }
+}

@@ -1,0 +1,138 @@
+//! Matrix-register scoreboard: hazard tracking for an out-of-order MPU
+//! *without register renaming* (§IV-A) — the RIQ head may only issue
+//! when it has no RAW, WAW or WAR conflict with older in-flight
+//! instructions (§IV-B).
+
+use crate::isa::{MInstr, MReg, NUM_MREGS};
+
+#[derive(Debug, Default, Clone)]
+pub struct Scoreboard {
+    /// In-flight writers per register (0 or 1 writer; WAW blocks a second).
+    writers: [u8; NUM_MREGS],
+    /// In-flight readers per register.
+    readers: [u16; NUM_MREGS],
+}
+
+impl Scoreboard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Can `instr` issue now without violating RAW/WAW/WAR against
+    /// in-flight instructions?
+    pub fn can_issue(&self, instr: &MInstr) -> bool {
+        // RAW: every source must have no in-flight writer.
+        for s in instr.srcs() {
+            if self.writers[s.index()] > 0 {
+                return false;
+            }
+        }
+        if let Some(d) = instr.dst() {
+            // WAW: no in-flight writer of the destination.
+            if self.writers[d.index()] > 0 {
+                return false;
+            }
+            // WAR: no in-flight reader of the destination.
+            if self.readers[d.index()] > 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Mark `instr`'s registers busy (call at issue).
+    pub fn occupy(&mut self, instr: &MInstr) {
+        for s in instr.srcs() {
+            self.readers[s.index()] += 1;
+        }
+        if let Some(d) = instr.dst() {
+            debug_assert_eq!(self.writers[d.index()], 0, "WAW violated at occupy");
+            self.writers[d.index()] += 1;
+        }
+    }
+
+    /// Release `instr`'s registers (call at completion).
+    pub fn release(&mut self, instr: &MInstr) {
+        for s in instr.srcs() {
+            debug_assert!(self.readers[s.index()] > 0, "reader underflow");
+            self.readers[s.index()] -= 1;
+        }
+        if let Some(d) = instr.dst() {
+            debug_assert!(self.writers[d.index()] > 0, "writer underflow");
+            self.writers[d.index()] -= 1;
+        }
+    }
+
+    /// Any instruction in flight touching any register?
+    pub fn quiescent(&self) -> bool {
+        self.writers.iter().all(|&w| w == 0) && self.readers.iter().all(|&r| r == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ld(md: u8) -> MInstr {
+        MInstr::Mld { md: MReg(md), base: 0, stride: 64 }
+    }
+
+    fn mma(md: u8, s1: u8, s2: u8) -> MInstr {
+        MInstr::Mma { md: MReg(md), ms1: MReg(s1), ms2: MReg(s2) }
+    }
+
+    #[test]
+    fn raw_blocks() {
+        let mut sb = Scoreboard::new();
+        let load = ld(0);
+        sb.occupy(&load);
+        // mma reading m0 must wait for the load
+        assert!(!sb.can_issue(&mma(2, 0, 1)));
+        sb.release(&load);
+        assert!(sb.can_issue(&mma(2, 0, 1)));
+    }
+
+    #[test]
+    fn waw_blocks() {
+        let mut sb = Scoreboard::new();
+        sb.occupy(&ld(3));
+        assert!(!sb.can_issue(&ld(3)), "second writer of m3 must wait");
+        assert!(sb.can_issue(&ld(4)), "independent register fine");
+    }
+
+    #[test]
+    fn war_blocks() {
+        let mut sb = Scoreboard::new();
+        let st = MInstr::Mst { ms3: MReg(1), base: 0, stride: 64 };
+        sb.occupy(&st); // m1 being read
+        assert!(!sb.can_issue(&ld(1)), "writing m1 while store reads it");
+        sb.release(&st);
+        assert!(sb.can_issue(&ld(1)));
+    }
+
+    #[test]
+    fn mma_accumulator_self_dependency() {
+        let mut sb = Scoreboard::new();
+        let a = mma(0, 1, 2);
+        sb.occupy(&a);
+        // A second mma accumulating into m0: RAW on m0 (it reads the acc)
+        // and WAW on m0 — must wait.
+        assert!(!sb.can_issue(&mma(0, 1, 2)));
+        // mma into a different acc reading the same sources is fine
+        // (readers don't conflict with readers).
+        assert!(sb.can_issue(&mma(3, 1, 2)));
+        sb.release(&a);
+        assert!(sb.quiescent());
+    }
+
+    #[test]
+    fn gather_dependency() {
+        let mut sb = Scoreboard::new();
+        let base_ld = ld(0);
+        sb.occupy(&base_ld);
+        let gather = MInstr::Mgather { md: MReg(1), ms1: MReg(0) };
+        assert!(!sb.can_issue(&gather), "gather must wait for base vector");
+        sb.release(&base_ld);
+        assert!(sb.can_issue(&gather));
+    }
+}

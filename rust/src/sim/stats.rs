@@ -1,0 +1,101 @@
+//! Aggregated simulation statistics — the raw material of every figure.
+
+use super::rfu::RfuStats;
+use super::riq::RiqStats;
+use super::systolic::SystolicStats;
+use super::vmr::VmrStats;
+use crate::mem::dram::DramStats;
+use crate::mem::LlcStats;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SimStats {
+    /// Total execution cycles.
+    pub cycles: u64,
+    pub instrs_retired: u64,
+    /// Demand memory-uop latency accounting (Fig 3b).
+    pub demand_uops: u64,
+    pub demand_latency_sum: u64,
+    /// Prefetch uops issued by the runahead engine.
+    pub prefetch_uops_issued: u64,
+    /// Tentative uops among them.
+    pub tentative_uops: u64,
+    /// VMR-fill uops (forced grants for base-vector loads).
+    pub vmr_fill_uops: u64,
+    /// Program-level useful/issued MAC counts (from the compiler).
+    pub useful_macs: u64,
+    pub issued_macs: u64,
+    pub llc: LlcStats,
+    pub dram: DramStats,
+    pub systolic: SystolicStats,
+    pub riq: RiqStats,
+    pub vmr: VmrStats,
+    pub rfu: RfuStats,
+}
+
+impl SimStats {
+    /// Average demand memory-access latency in cycles (Fig 3b).
+    pub fn avg_mem_latency(&self) -> f64 {
+        if self.demand_uops == 0 {
+            0.0
+        } else {
+            self.demand_latency_sum as f64 / self.demand_uops as f64
+        }
+    }
+
+    /// PE utilization during execution (Fig 1c).
+    pub fn pe_utilization(&self) -> f64 {
+        self.systolic.utilization()
+    }
+
+    /// Effective useful-MAC throughput (MACs per cycle).
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.useful_macs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Speedup of this run relative to `baseline` (same program
+    /// semantics assumed).
+    pub fn speedup_vs(&self, baseline: &SimStats) -> f64 {
+        baseline.cycles as f64 / self.cycles as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "cycles={} instrs={} missrate={:.3} avg_mem_lat={:.1} pe_util={:.3} \
+             prefetch(issued={} redundant={}) riq_peak={} vmr_peak={}",
+            self.cycles,
+            self.instrs_retired,
+            self.llc.miss_rate(),
+            self.avg_mem_latency(),
+            self.pe_utilization(),
+            self.llc.prefetches,
+            self.llc.prefetch_redundant,
+            self.riq.peak_occupancy,
+            self.vmr.peak_live,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let mut s = SimStats::default();
+        assert_eq!(s.avg_mem_latency(), 0.0);
+        s.demand_uops = 4;
+        s.demand_latency_sum = 100;
+        assert_eq!(s.avg_mem_latency(), 25.0);
+        s.cycles = 1000;
+        s.useful_macs = 4000;
+        assert_eq!(s.macs_per_cycle(), 4.0);
+        let mut base = SimStats::default();
+        base.cycles = 2000;
+        assert_eq!(s.speedup_vs(&base), 2.0);
+        assert!(!s.summary().is_empty());
+    }
+}

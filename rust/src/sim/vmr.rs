@@ -1,0 +1,247 @@
+//! Vector Matrix Register (§IV-D): a reduced matrix register file that
+//! lets runahead execute `mgather` by giving the dependency chain a
+//! temporary destination for base-address vectors.
+//!
+//! Each entry is a 16-element vector of 48-bit addresses (one per matrix
+//! register row under Sv48) — 96 B per entry, 16 entries = 1.5 KB in the
+//! paper's configuration. Entries are managed by a free list implemented
+//! as a circular queue and released once the consumer has read them.
+//!
+//! Handles are generation-tagged: a fill arriving after its entry was
+//! released (the consumer `mgather` issued architecturally first) is
+//! detected as stale and dropped instead of corrupting a reused slot.
+
+use crate::isa::MREG_ROWS;
+use std::collections::VecDeque;
+
+/// A generation-tagged reference to a VMR entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VmrHandle {
+    pub slot: usize,
+    pub gen: u64,
+}
+
+#[derive(Debug, Clone)]
+struct VmrEntry {
+    addrs: [u64; MREG_ROWS],
+    /// Rows still awaiting fill data.
+    pending_rows: u32,
+    /// Entry holds a complete base-address vector.
+    valid: bool,
+    gen: u64,
+    in_use: bool,
+}
+
+impl VmrEntry {
+    fn empty() -> Self {
+        Self { addrs: [0; MREG_ROWS], pending_rows: 0, valid: false, gen: 0, in_use: false }
+    }
+}
+
+/// Outcome of delivering one fill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FillResult {
+    /// Handle no longer refers to a live allocation; fill dropped.
+    Stale,
+    /// Accepted; more rows pending.
+    Partial,
+    /// Accepted; entry is now complete (valid).
+    Complete,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct VmrStats {
+    pub allocs: u64,
+    pub alloc_failures: u64,
+    pub releases: u64,
+    pub stale_fills: u64,
+    pub peak_live: usize,
+}
+
+#[derive(Debug)]
+pub struct Vmr {
+    entries: Vec<VmrEntry>,
+    free: VecDeque<usize>,
+    /// `usize::MAX` = NVR's infinite emulation: grow on demand.
+    capacity: usize,
+    live: usize,
+    next_gen: u64,
+    pub stats: VmrStats,
+}
+
+impl Vmr {
+    pub fn new(capacity: usize) -> Self {
+        let prealloc = if capacity == usize::MAX { 0 } else { capacity };
+        Self {
+            entries: (0..prealloc).map(|_| VmrEntry::empty()).collect(),
+            free: (0..prealloc).collect(),
+            capacity,
+            live: 0,
+            next_gen: 1,
+            stats: VmrStats::default(),
+        }
+    }
+
+    /// Allocate an entry expecting `rows` fill writes; `None` when full.
+    pub fn alloc(&mut self, rows: usize) -> Option<VmrHandle> {
+        debug_assert!(rows >= 1 && rows <= MREG_ROWS);
+        let slot = match self.free.pop_front() {
+            Some(s) => s,
+            None if self.capacity == usize::MAX => {
+                self.entries.push(VmrEntry::empty());
+                self.entries.len() - 1
+            }
+            None => {
+                self.stats.alloc_failures += 1;
+                return None;
+            }
+        };
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let e = &mut self.entries[slot];
+        *e = VmrEntry::empty();
+        e.pending_rows = rows as u32;
+        e.gen = gen;
+        e.in_use = true;
+        self.live += 1;
+        self.stats.allocs += 1;
+        self.stats.peak_live = self.stats.peak_live.max(self.live);
+        Some(VmrHandle { slot, gen })
+    }
+
+    fn entry(&self, h: VmrHandle) -> Option<&VmrEntry> {
+        self.entries.get(h.slot).filter(|e| e.in_use && e.gen == h.gen)
+    }
+
+    /// Deliver fill data for one row.
+    pub fn fill_row(&mut self, h: VmrHandle, row: usize, addr48: u64) -> FillResult {
+        let Some(e) = self.entries.get_mut(h.slot).filter(|e| e.in_use && e.gen == h.gen)
+        else {
+            self.stats.stale_fills += 1;
+            return FillResult::Stale;
+        };
+        debug_assert!(e.pending_rows > 0, "fill on complete entry");
+        e.addrs[row] = addr48 & 0x0000_FFFF_FFFF_FFFF;
+        e.pending_rows -= 1;
+        if e.pending_rows == 0 {
+            e.valid = true;
+            FillResult::Complete
+        } else {
+            FillResult::Partial
+        }
+    }
+
+    pub fn is_valid(&self, h: VmrHandle) -> bool {
+        self.entry(h).map(|e| e.valid).unwrap_or(false)
+    }
+
+    /// Read the gathered base address for `row` (entry must be valid).
+    pub fn addr(&self, h: VmrHandle, row: usize) -> u64 {
+        let e = self.entry(h).expect("reading a stale VMR handle");
+        debug_assert!(e.valid, "reading incomplete VMR entry");
+        e.addrs[row]
+    }
+
+    /// Release the entry back to the free list (consumer finished, or the
+    /// instruction issued architecturally). Stale handles are ignored.
+    pub fn release(&mut self, h: VmrHandle) {
+        if self.entry(h).is_none() {
+            return;
+        }
+        self.entries[h.slot] = VmrEntry::empty();
+        self.free.push_back(h.slot);
+        self.live -= 1;
+        self.stats.releases += 1;
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn free_count(&self) -> usize {
+        if self.capacity == usize::MAX {
+            usize::MAX
+        } else {
+            self.capacity - self.live
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_fill_read_release() {
+        let mut v = Vmr::new(4);
+        let h = v.alloc(3).unwrap();
+        assert!(!v.is_valid(h));
+        assert_eq!(v.fill_row(h, 0, 0x1000), FillResult::Partial);
+        assert_eq!(v.fill_row(h, 1, 0x2000), FillResult::Partial);
+        assert_eq!(v.fill_row(h, 2, 0x3000), FillResult::Complete);
+        assert!(v.is_valid(h));
+        assert_eq!(v.addr(h, 1), 0x2000);
+        v.release(h);
+        assert_eq!(v.live(), 0);
+        assert_eq!(v.free_count(), 4);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut v = Vmr::new(2);
+        let a = v.alloc(1).unwrap();
+        let _b = v.alloc(1).unwrap();
+        assert_eq!(v.alloc(1), None, "full");
+        assert_eq!(v.stats.alloc_failures, 1);
+        v.release(a);
+        assert!(v.alloc(1).is_some(), "released slot reusable");
+    }
+
+    #[test]
+    fn infinite_mode_grows() {
+        let mut v = Vmr::new(usize::MAX);
+        for _ in 0..100 {
+            assert!(v.alloc(1).is_some());
+        }
+        assert_eq!(v.live(), 100);
+        assert_eq!(v.stats.peak_live, 100);
+        assert_eq!(v.stats.alloc_failures, 0);
+    }
+
+    #[test]
+    fn stale_fill_after_release_is_dropped() {
+        let mut v = Vmr::new(1);
+        let h = v.alloc(2).unwrap();
+        v.fill_row(h, 0, 0x1000);
+        v.release(h); // consumer issued architecturally before fills done
+        assert_eq!(v.fill_row(h, 1, 0x2000), FillResult::Stale);
+        assert_eq!(v.stats.stale_fills, 1);
+        // Slot reused by a new allocation: old handle must stay dead.
+        let h2 = v.alloc(1).unwrap();
+        assert_eq!(h2.slot, h.slot, "slot recycled");
+        assert_eq!(v.fill_row(h, 0, 0xBAD), FillResult::Stale);
+        assert!(!v.is_valid(h));
+        assert_eq!(v.fill_row(h2, 0, 0x4000), FillResult::Complete);
+        assert_eq!(v.addr(h2, 0), 0x4000);
+    }
+
+    #[test]
+    fn free_list_is_fifo_circular() {
+        let mut v = Vmr::new(2);
+        let a = v.alloc(1).unwrap();
+        let b = v.alloc(1).unwrap();
+        v.release(b);
+        v.release(a);
+        // FIFO circular queue: b's slot comes back first, then a's.
+        assert_eq!(v.alloc(1).unwrap().slot, b.slot);
+        assert_eq!(v.alloc(1).unwrap().slot, a.slot);
+    }
+
+    #[test]
+    fn addresses_masked_to_48_bits() {
+        let mut v = Vmr::new(1);
+        let h = v.alloc(1).unwrap();
+        v.fill_row(h, 0, 0xFFFF_1234_5678_9ABC);
+        assert_eq!(v.addr(h, 0), 0x0000_1234_5678_9ABC);
+    }
+}

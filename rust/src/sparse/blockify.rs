@@ -1,0 +1,242 @@
+//! Blockification (paper §V-A2: "We further blockify the original
+//! datasets, with the notation B=N indicating the block shape used to
+//! blockify is N×N").
+//!
+//! Blockifying promotes any B×B block containing at least one nonzero to
+//! a *dense* block — this trades redundant computation for regularity
+//! (paper §II-B: "block-wise sparsity can improve utilization but may
+//! introduce redundant computation"). Fig 9 sweeps B ∈ {1,2,4,8,16}.
+
+use super::formats::{Csc, Triplet};
+
+/// The set of nonzero B×B blocks of a sparse matrix, in block-CSC order.
+#[derive(Debug, Clone)]
+pub struct BlockPattern {
+    pub block: usize,
+    /// Matrix shape in blocks.
+    pub brows: usize,
+    pub bcols: usize,
+    /// Block-column pointer (`bcols + 1` entries) over `blk_row_idx`.
+    pub col_ptr: Vec<u32>,
+    /// Block-row indices of nonzero blocks, sorted within each block col.
+    pub row_idx: Vec<u32>,
+    /// nnz of the *original* matrix that falls inside each block
+    /// (same order as `row_idx`) — used for useful-MAC accounting.
+    pub nnz_in_block: Vec<u32>,
+}
+
+impl BlockPattern {
+    pub fn nblocks(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// Block-row indices of block-column `bc`.
+    pub fn col_blocks(&self, bc: usize) -> &[u32] {
+        &self.row_idx[self.col_ptr[bc] as usize..self.col_ptr[bc + 1] as usize]
+    }
+
+    /// Fraction of stored (block) elements that are true nonzeros —
+    /// the redundancy introduced by blockification.
+    pub fn fill_efficiency(&self) -> f64 {
+        if self.nblocks() == 0 {
+            return 1.0;
+        }
+        let useful: u64 = self.nnz_in_block.iter().map(|&n| n as u64).sum();
+        useful as f64 / (self.nblocks() as u64 * (self.block * self.block) as u64) as f64
+    }
+}
+
+/// Compute the nonzero-block pattern of `m` for block size `block`.
+pub fn blockify(m: &Csc, block: usize) -> BlockPattern {
+    assert!(block >= 1, "block size must be >= 1");
+    let brows = m.nrows.div_ceil(block);
+    let bcols = m.ncols.div_ceil(block);
+    // Count nnz per block via a map keyed by (bcol, brow); BTreeMap gives
+    // the block-CSC order for free.
+    let mut counts: std::collections::BTreeMap<(u32, u32), u32> = std::collections::BTreeMap::new();
+    for c in 0..m.ncols {
+        let bc = (c / block) as u32;
+        for &r in m.col_rows(c) {
+            let br = r / block as u32;
+            *counts.entry((bc, br)).or_insert(0) += 1;
+        }
+    }
+    let mut col_ptr = vec![0u32; bcols + 1];
+    let mut row_idx = Vec::with_capacity(counts.len());
+    let mut nnz_in_block = Vec::with_capacity(counts.len());
+    for (&(bc, br), &n) in &counts {
+        col_ptr[bc as usize + 1] += 1;
+        row_idx.push(br);
+        nnz_in_block.push(n);
+    }
+    for c in 0..bcols {
+        col_ptr[c + 1] += col_ptr[c];
+    }
+    BlockPattern { block, brows, bcols, col_ptr, row_idx, nnz_in_block }
+}
+
+/// Materialize the blockified matrix: every nonzero block becomes fully
+/// dense (zeros inside a kept block are stored as explicit zeros with the
+/// original values preserved where present). Returns a CSC with the
+/// block-dense pattern.
+pub fn blockify_materialize(m: &Csc, block: usize) -> Csc {
+    let pat = blockify(m, block);
+    let dense = m.to_dense();
+    let mut ts = Vec::new();
+    for bc in 0..pat.bcols {
+        for &br in pat.col_blocks(bc) {
+            let r0 = br as usize * block;
+            let c0 = bc * block;
+            for r in r0..(r0 + block).min(m.nrows) {
+                for c in c0..(c0 + block).min(m.ncols) {
+                    let v = dense.at(r, c);
+                    // explicit zero uses a tiny sentinel-free representation:
+                    // blockified SDDMM/SpMM treat all positions in a kept
+                    // block as "present"; value 0.0 entries must survive, so
+                    // we store them as-is and from_triplets keeps them.
+                    ts.push(Triplet { row: r as u32, col: c as u32, val: v });
+                }
+            }
+        }
+    }
+    // from_triplets drops nothing (0.0 values are kept as explicit entries).
+    Csc::from_triplets(m.nrows, m.ncols, ts)
+}
+
+/// Blockify a *dataset* the way block-wise pruning does (§V-A2):
+/// restructure the sparsity into dense B×B blocks while keeping the
+/// total nonzero budget ≈ the original nnz. Blocks with the most
+/// original nonzeros are kept (greedy), each materialized fully dense —
+/// original values survive, block positions the original pattern missed
+/// get synthesized values (they represent weights the block-wise pruner
+/// would have retained instead). This keeps the *work* constant across
+/// B while trading irregularity for regularity, which is what makes
+/// Fig 9's performance improve monotonically with B.
+pub fn blockify_structurize(m: &Csc, block: usize, seed: u64) -> Csc {
+    if block <= 1 {
+        return m.clone();
+    }
+    let pat = blockify(m, block);
+    // Order blocks by original-nnz coverage, greedily keep until the
+    // kept dense slots reach the original nnz budget.
+    let mut order: Vec<usize> = (0..pat.nblocks()).collect();
+    // stable tie-break on block position for determinism
+    let pos_of = |i: usize| -> (u32, u32) {
+        // recover (bc, br) of the i-th block
+        let mut bc = 0usize;
+        while pat.col_ptr[bc + 1] as usize <= i {
+            bc += 1;
+        }
+        (bc as u32, pat.row_idx[i])
+    };
+    order.sort_by_key(|&i| (std::cmp::Reverse(pat.nnz_in_block[i]), pos_of(i)));
+    let budget = m.nnz();
+    let slots_per_block = block * block;
+    let mut kept = Vec::new();
+    let mut slots = 0usize;
+    for i in order {
+        if slots >= budget {
+            break;
+        }
+        kept.push(i);
+        slots += slots_per_block;
+    }
+    let dense = m.to_dense();
+    let mut rng = crate::util::prng::Pcg32::new(seed ^ 0xB10C);
+    let mut ts = Vec::with_capacity(slots);
+    for i in kept {
+        let (bc, br) = pos_of(i);
+        let r0 = br as usize * block;
+        let c0 = bc as usize * block;
+        for r in r0..(r0 + block).min(m.nrows) {
+            for c in c0..(c0 + block).min(m.ncols) {
+                let orig = dense.at(r, c);
+                let val = if orig != 0.0 { orig } else { rng.f32() * 0.9 + 0.1 };
+                ts.push(Triplet { row: r as u32, col: c as u32, val });
+            }
+        }
+    }
+    Csc::from_triplets(m.nrows, m.ncols, ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csc {
+        // 4x4 with nonzeros at (0,0), (3,3), (1,2)
+        Csc::from_triplets(
+            4,
+            4,
+            vec![
+                Triplet { row: 0, col: 0, val: 1.0 },
+                Triplet { row: 3, col: 3, val: 2.0 },
+                Triplet { row: 1, col: 2, val: 3.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn b1_pattern_is_identity() {
+        let m = sample();
+        let p = blockify(&m, 1);
+        assert_eq!(p.nblocks(), m.nnz());
+        assert!((p.fill_efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn b2_merges() {
+        let m = sample();
+        let p = blockify(&m, 2);
+        assert_eq!(p.brows, 2);
+        assert_eq!(p.bcols, 2);
+        // blocks: (0,0) from (0,0); (1,1) from (3,3); (0,1) from (1,2)
+        assert_eq!(p.nblocks(), 3);
+        assert_eq!(p.col_blocks(0), &[0]);
+        let mut bc1 = p.col_blocks(1).to_vec();
+        bc1.sort_unstable();
+        assert_eq!(bc1, vec![0, 1]);
+        // 3 nonzeros in 3 blocks of 4 slots
+        assert!((p.fill_efficiency() - 3.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_block_cover() {
+        let m = sample();
+        let p = blockify(&m, 4);
+        assert_eq!(p.nblocks(), 1);
+        assert_eq!(p.nnz_in_block, vec![3]);
+    }
+
+    #[test]
+    fn materialize_preserves_values_and_densifies_blocks() {
+        let m = sample();
+        let bm = blockify_materialize(&m, 2);
+        let d = bm.to_dense();
+        // original values preserved
+        assert_eq!(d.at(0, 0), 1.0);
+        assert_eq!(d.at(3, 3), 2.0);
+        assert_eq!(d.at(1, 2), 3.0);
+        // 3 blocks × 4 slots = 12 stored entries
+        assert_eq!(bm.nnz(), 12);
+        // untouched block (1,0) stays empty
+        assert_eq!(d.at(2, 0), 0.0);
+        assert_eq!(d.at(3, 1), 0.0);
+    }
+
+    #[test]
+    fn non_divisible_dims() {
+        let m = Csc::from_triplets(
+            5,
+            5,
+            vec![Triplet { row: 4, col: 4, val: 1.0 }],
+        );
+        let p = blockify(&m, 2);
+        assert_eq!(p.brows, 3);
+        assert_eq!(p.bcols, 3);
+        assert_eq!(p.nblocks(), 1);
+        let bm = blockify_materialize(&m, 2);
+        // corner block is 1x1 after clamping
+        assert_eq!(bm.nnz(), 1);
+    }
+}

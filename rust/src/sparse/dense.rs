@@ -1,0 +1,137 @@
+//! Row-major dense f32 matrix — the reference arithmetic the simulator's
+//! functional mode and the tests check against.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self × other` (naive triple loop; reference only).
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Dense::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * out.cols + j] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// `self × otherᵀ` — the systolic tile semantics (`mma`).
+    pub fn matmul_bt(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.cols, "matmul_bt inner-dim mismatch");
+        let mut out = Dense::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            for j in 0..other.rows {
+                let mut acc = 0.0;
+                for k in 0..self.cols {
+                    acc += self.at(i, k) * other.at(j, k);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Dense {
+        Dense::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// Max absolute elementwise difference (for allclose-style checks).
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Dense::from_fn(3, 3, |r, c| (r * 3 + c) as f32);
+        let id = Dense::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&id), a);
+        assert_eq!(id.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Dense { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let b = Dense { rows: 2, cols: 2, data: vec![1.0, 1.0, 1.0, 1.0] };
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul_of_transpose() {
+        let a = Dense::from_fn(3, 4, |r, c| (r + c) as f32 * 0.5);
+        let b = Dense::from_fn(2, 4, |r, c| (r * 4 + c) as f32);
+        let via_bt = a.matmul_bt(&b);
+        let via_t = a.matmul(&b.transpose());
+        assert!(via_bt.max_abs_diff(&via_t) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Dense::from_fn(3, 5, |r, c| (r * 31 + c * 7) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let mut a = Dense::zeros(2, 2);
+        assert_eq!(a.nnz(), 0);
+        a.set(0, 1, 2.0);
+        assert_eq!(a.nnz(), 1);
+    }
+}

@@ -1,0 +1,330 @@
+//! Compressed sparse formats (CSC primary, CSR for the SpMM compiler).
+
+use super::dense::Dense;
+
+/// A coordinate-format entry used to construct the compressed formats.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Triplet {
+    pub row: u32,
+    pub col: u32,
+    pub val: f32,
+}
+
+/// Compressed Sparse Column. `col_ptr.len() == ncols + 1`;
+/// `row_idx[col_ptr[c]..col_ptr[c+1]]` are the (sorted) row indices of
+/// column `c`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub col_ptr: Vec<u32>,
+    pub row_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+/// Compressed Sparse Row (transpose-dual of [`Csc`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csc {
+    pub fn from_triplets(nrows: usize, ncols: usize, mut ts: Vec<Triplet>) -> Self {
+        ts.sort_by_key(|t| (t.col, t.row));
+        ts.dedup_by_key(|t| (t.col, t.row));
+        let mut col_ptr = vec![0u32; ncols + 1];
+        for t in &ts {
+            assert!((t.row as usize) < nrows && (t.col as usize) < ncols, "triplet OOB");
+            col_ptr[t.col as usize + 1] += 1;
+        }
+        for c in 0..ncols {
+            col_ptr[c + 1] += col_ptr[c];
+        }
+        Self {
+            nrows,
+            ncols,
+            col_ptr,
+            row_idx: ts.iter().map(|t| t.row).collect(),
+            vals: ts.iter().map(|t| t.val).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows * self.ncols) as f64
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Row indices of column `c`.
+    pub fn col_rows(&self, c: usize) -> &[u32] {
+        let lo = self.col_ptr[c] as usize;
+        let hi = self.col_ptr[c + 1] as usize;
+        &self.row_idx[lo..hi]
+    }
+
+    /// Values of column `c`.
+    pub fn col_vals(&self, c: usize) -> &[f32] {
+        let lo = self.col_ptr[c] as usize;
+        let hi = self.col_ptr[c + 1] as usize;
+        &self.vals[lo..hi]
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for c in 0..self.ncols {
+            for (i, &r) in self.col_rows(c).iter().enumerate() {
+                d.set(r as usize, c, self.col_vals(c)[i]);
+            }
+        }
+        d
+    }
+
+    pub fn from_dense(d: &Dense) -> Self {
+        let mut ts = Vec::new();
+        for r in 0..d.rows {
+            for c in 0..d.cols {
+                let v = d.at(r, c);
+                if v != 0.0 {
+                    ts.push(Triplet { row: r as u32, col: c as u32, val: v });
+                }
+            }
+        }
+        Self::from_triplets(d.rows, d.cols, ts)
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0u32; self.nrows + 1];
+        for &r in &self.row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for r in 0..self.nrows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![0.0f32; self.nnz()];
+        let mut cursor = row_ptr.clone();
+        for c in 0..self.ncols {
+            for (i, &r) in self.col_rows(c).iter().enumerate() {
+                let pos = cursor[r as usize] as usize;
+                col_idx[pos] = c as u32;
+                vals[pos] = self.col_vals(c)[i];
+                cursor[r as usize] += 1;
+            }
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, col_idx, vals }
+    }
+
+    /// Structural invariant check (used by property tests).
+    pub fn check(&self) -> Result<(), String> {
+        if self.col_ptr.len() != self.ncols + 1 {
+            return Err("col_ptr length".into());
+        }
+        if self.col_ptr[0] != 0 || *self.col_ptr.last().unwrap() as usize != self.nnz() {
+            return Err("col_ptr endpoints".into());
+        }
+        if self.vals.len() != self.row_idx.len() {
+            return Err("vals/row_idx length mismatch".into());
+        }
+        for c in 0..self.ncols {
+            if self.col_ptr[c] > self.col_ptr[c + 1] {
+                return Err(format!("col_ptr not monotonic at {c}"));
+            }
+            let rows = self.col_rows(c);
+            for w in rows.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("rows not strictly sorted in col {c}"));
+                }
+            }
+            if let Some(&max) = rows.iter().max() {
+                if max as usize >= self.nrows {
+                    return Err(format!("row index OOB in col {c}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        &self.col_idx[lo..hi]
+    }
+
+    pub fn row_vals(&self, r: usize) -> &[f32] {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        &self.vals[lo..hi]
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            for (i, &c) in self.row_cols(r).iter().enumerate() {
+                d.set(r, c as usize, self.row_vals(r)[i]);
+            }
+        }
+        d
+    }
+
+    pub fn to_csc(&self) -> Csc {
+        let mut ts = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            for (i, &c) in self.row_cols(r).iter().enumerate() {
+                ts.push(Triplet { row: r as u32, col: c, val: self.row_vals(r)[i] });
+            }
+        }
+        Csc::from_triplets(self.nrows, self.ncols, ts)
+    }
+
+    /// SpMM reference: `self × b` (dense output).
+    pub fn spmm(&self, b: &Dense) -> Dense {
+        assert_eq!(self.ncols, b.rows, "spmm shape mismatch");
+        let mut out = Dense::zeros(self.nrows, b.cols);
+        for r in 0..self.nrows {
+            for (i, &c) in self.row_cols(r).iter().enumerate() {
+                let v = self.row_vals(r)[i];
+                let brow = b.row(c as usize);
+                let orow = &mut out.data[r * b.cols..(r + 1) * b.cols];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// SDDMM reference: `C = (A × Bᵀ) ⊙ mask` where `mask` is the sparsity
+/// pattern of `s` (values of `s` scale the sampled products, as in the
+/// standard SDDMM definition).
+pub fn sddmm_ref(a: &Dense, b: &Dense, s: &Csc) -> Csc {
+    assert_eq!(a.rows, s.nrows);
+    assert_eq!(b.rows, s.ncols);
+    assert_eq!(a.cols, b.cols, "feature dims must match");
+    let mut vals = Vec::with_capacity(s.nnz());
+    for c in 0..s.ncols {
+        for (i, &r) in s.col_rows(c).iter().enumerate() {
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                acc += a.at(r as usize, k) * b.at(c, k);
+            }
+            vals.push(acc * s.col_vals(c)[i]);
+        }
+    }
+    Csc { vals, ..s.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csc {
+        // 4x3:
+        // [1 0 4]
+        // [0 2 0]
+        // [0 0 5]
+        // [3 0 0]
+        Csc::from_triplets(
+            4,
+            3,
+            vec![
+                Triplet { row: 0, col: 0, val: 1.0 },
+                Triplet { row: 3, col: 0, val: 3.0 },
+                Triplet { row: 1, col: 1, val: 2.0 },
+                Triplet { row: 0, col: 2, val: 4.0 },
+                Triplet { row: 2, col: 2, val: 5.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn csc_structure() {
+        let m = small();
+        m.check().unwrap();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.col_rows(0), &[0, 3]);
+        assert_eq!(m.col_vals(2), &[4.0, 5.0]);
+        assert!((m.sparsity() - (1.0 - 5.0 / 12.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = small();
+        let d = m.to_dense();
+        assert_eq!(d.at(3, 0), 3.0);
+        assert_eq!(d.at(1, 1), 2.0);
+        assert_eq!(Csc::from_dense(&d), m);
+    }
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let m = small();
+        let csr = m.to_csr();
+        assert_eq!(csr.row_cols(0), &[0, 2]);
+        assert_eq!(csr.row_vals(0), &[1.0, 4.0]);
+        assert_eq!(csr.to_csc(), m);
+        assert_eq!(csr.to_dense().data, m.to_dense().data);
+    }
+
+    #[test]
+    fn duplicate_triplets_deduped() {
+        let m = Csc::from_triplets(
+            2,
+            2,
+            vec![
+                Triplet { row: 0, col: 0, val: 1.0 },
+                Triplet { row: 0, col: 0, val: 9.0 },
+            ],
+        );
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let m = small().to_csr();
+        let b = Dense::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.25);
+        let via_sparse = m.spmm(&b);
+        let via_dense = m.to_dense().matmul(&b);
+        assert!(via_sparse.max_abs_diff(&via_dense) < 1e-5);
+    }
+
+    #[test]
+    fn sddmm_matches_dense() {
+        let s = small();
+        let a = Dense::from_fn(4, 6, |r, c| ((r + 1) * (c + 2)) as f32 * 0.1);
+        let b = Dense::from_fn(3, 6, |r, c| ((r + 2) * (c + 1)) as f32 * 0.05);
+        let out = sddmm_ref(&a, &b, &s);
+        // check one sampled position: (row 2, col 2), val 5.0
+        let mut acc = 0.0;
+        for k in 0..6 {
+            acc += a.at(2, k) * b.at(2, k);
+        }
+        let dense_out = out.to_dense();
+        assert!((dense_out.at(2, 2) - acc * 5.0).abs() < 1e-4);
+        // zero positions stay zero
+        assert_eq!(dense_out.at(1, 0), 0.0);
+    }
+
+    #[test]
+    fn check_catches_corruption() {
+        let mut m = small();
+        m.row_idx[0] = 99;
+        assert!(m.check().is_err());
+    }
+}

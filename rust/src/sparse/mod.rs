@@ -1,0 +1,18 @@
+//! Sparse-matrix substrate: formats, blockification and the datasets of
+//! the paper's evaluation (§V-A2).
+//!
+//! The paper loads sparse operands in Compressed Sparse Column (CSC)
+//! form — the two levels of indirection CSC imposes on loads of matrix A
+//! (Fig 2(a)) are precisely what makes the access pattern irregular — so
+//! CSC is the primary format here, with CSR available for the SpMM
+//! compiler and for tests.
+
+pub mod blockify;
+pub mod datasets;
+pub mod dense;
+pub mod formats;
+
+pub use blockify::{blockify, blockify_structurize, BlockPattern};
+pub use datasets::{Dataset, DatasetKind};
+pub use dense::Dense;
+pub use formats::{Csc, Csr, Triplet};

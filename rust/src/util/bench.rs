@@ -1,0 +1,228 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Used by the `[[bench]] harness = false` targets.
+//!
+//! Protocol per benchmark: warm up for `warmup` iterations, then collect
+//! `samples` timed samples of `iters_per_sample` iterations each and
+//! report median / mean ± stddev and throughput where an element count is
+//! provided. A `--filter substring` CLI argument restricts which
+//! benchmarks run; `--fast` shrinks sample counts for smoke runs.
+
+use super::stats;
+use std::time::Instant;
+
+pub struct BenchConfig {
+    pub warmup_iters: u64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub filter: Option<String>,
+}
+
+impl BenchConfig {
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut filter = None;
+        let mut fast = false;
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--filter" if i + 1 < argv.len() => {
+                    filter = Some(argv[i + 1].clone());
+                    i += 1;
+                }
+                "--fast" => fast = true,
+                // `cargo bench -- --bench` compat: ignore unknown tokens so
+                // libtest-style flags don't break us.
+                _ => {
+                    if !argv[i].starts_with("--") && filter.is_none() {
+                        filter = Some(argv[i].clone());
+                    }
+                }
+            }
+            i += 1;
+        }
+        if fast {
+            Self { warmup_iters: 1, samples: 5, iters_per_sample: 1, filter }
+        } else {
+            Self { warmup_iters: 3, samples: 15, iters_per_sample: 1, filter }
+        }
+    }
+}
+
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / (self.median_ns / 1e9))
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} K/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self { cfg: BenchConfig::from_env(), results: Vec::new() }
+    }
+
+    /// Run one benchmark. `f` is invoked once per iteration; its return
+    /// value is black-boxed to stop the optimizer deleting the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.bench_with_elements(name, None, &mut f)
+    }
+
+    /// Like [`bench`], additionally reporting `elements`/sec throughput
+    /// (e.g. simulated cycles per second).
+    pub fn bench_elems<T>(&mut self, name: &str, elements: u64, mut f: impl FnMut() -> T) {
+        self.bench_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) {
+        if let Some(filt) = &self.cfg.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        for _ in 0..self.cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.cfg.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / self.cfg.iters_per_sample as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: stats::median(&samples_ns),
+            mean_ns: stats::mean(&samples_ns),
+            stddev_ns: stats::stddev(&samples_ns),
+            elements,
+        };
+        let thr = res
+            .throughput_per_sec()
+            .map(|r| format!("  thrpt: {}", fmt_rate(r)))
+            .unwrap_or_default();
+        println!(
+            "{:<48} time: {:>10}  (mean {} ± {}){}",
+            res.name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.stddev_ns),
+            thr
+        );
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as CSV (used to snapshot perf numbers in §Perf).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,median_ns,mean_ns,stddev_ns,throughput_per_sec")?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{:.1},{:.1},{:.1},{}",
+                r.name,
+                r.median_ns,
+                r.mean_ns,
+                r.stddev_ns,
+                r.throughput_per_sec().map(|t| format!("{t:.1}")).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher {
+            cfg: BenchConfig { warmup_iters: 1, samples: 3, iters_per_sample: 2, filter: None },
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench_elems("smoke", 10, || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        let r = &b.results()[0];
+        assert!(r.median_ns >= 0.0);
+        assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher {
+            cfg: BenchConfig {
+                warmup_iters: 0,
+                samples: 1,
+                iters_per_sample: 1,
+                filter: Some("yes".into()),
+            },
+            results: Vec::new(),
+        };
+        b.bench("no_match", || 1);
+        b.bench("yes_match", || 1);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].name, "yes_match");
+    }
+}

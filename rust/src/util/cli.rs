@@ -1,0 +1,177 @@
+//! Minimal command-line argument parser.
+//!
+//! `clap` is unavailable in this offline environment, so the `dare` binary
+//! and the examples use this ~150-line substitute: subcommand + `--flag`,
+//! `--key value` / `--key=value` options with typed accessors and a usage
+//! dump. Unknown options are an error (catches typos in sweep scripts).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Options that were read at least once (for unknown-option detection).
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut command = None;
+        let mut positional = Vec::new();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    opts.insert(stripped.to_string(), v);
+                } else {
+                    flags.push(stripped.to_string());
+                }
+            } else if command.is_none() {
+                command = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Self {
+            command,
+            positional,
+            opts,
+            flags,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} {s}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--sizes 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.trim().parse().unwrap_or_else(|e| panic!("--{key} element {p}: {e}")))
+                .collect(),
+        }
+    }
+
+    /// Boolean flag (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// After all accesses, verify no unknown options/flags remain.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let mut unknown: Vec<&str> = self
+            .opts
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+            .filter(|k| !consumed.iter().any(|c| c == k))
+            .collect();
+        unknown.sort_unstable();
+        unknown.dedup();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): {}", unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args("fig5 --block 8 --dataset=pubmed --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig5"));
+        assert_eq!(a.get_parse("block", 1usize), 8);
+        assert_eq!(a.get("dataset"), Some("pubmed"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let a = args("fig8 --riq 8,16,32");
+        assert_eq!(a.get_list("riq", &[1usize]), vec![8, 16, 32]);
+        assert_eq!(a.get_list("vmr", &[4usize, 8]), vec![4, 8]);
+        assert_eq!(a.get_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = args("run --oops 3");
+        let _ = a.get("fine");
+        assert!(a.check_unknown().is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = args("asm prog.s out.bin");
+        assert_eq!(a.command.as_deref(), Some("asm"));
+        assert_eq!(a.positional, vec!["prog.s", "out.bin"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn malformed_value_panics() {
+        let a = args("x --n abc");
+        let _: usize = a.get_parse("n", 0);
+    }
+}

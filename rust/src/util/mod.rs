@@ -1,0 +1,12 @@
+//! In-repo mini-frameworks standing in for crates unavailable in this
+//! offline environment (see DESIGN.md §Substitutions): a seeded PRNG
+//! (`rand`), a micro-bench harness (`criterion`), a property-test runner
+//! (`proptest`), a CLI parser (`clap`), plus table/CSV output and shared
+//! statistics.
+
+pub mod bench;
+pub mod cli;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,140 @@
+//! Seeded property-test runner (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (a thin PRNG wrapper with
+//! sized generators). The runner executes `cases` random cases; on
+//! failure it retries with the same seed to confirm, then panics with the
+//! reproducing seed so the case can be replayed:
+//!
+//! ```text
+//! DARE_PROP_SEED=0xDEADBEEF cargo test riq_never_overflows
+//! ```
+//!
+//! No shrinking — cases are kept small by construction instead (sizes are
+//! drawn log-uniformly, so small counterexamples are already likely).
+
+use super::prng::Pcg32;
+
+pub struct Gen {
+    rng: Pcg32,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), case_seed: seed }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.f32()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Log-uniform size in `[1, max]` — biases toward small structures so
+    /// failures are readable.
+    pub fn size(&mut self, max: usize) -> usize {
+        debug_assert!(max >= 1);
+        let lg_max = (max as f64).ln();
+        let x = (self.rng.f64() * lg_max).exp();
+        (x as usize).clamp(1, max)
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    pub fn vec_u32_below(&mut self, len: usize, bound: u32) -> Vec<u32> {
+        (0..len).map(|_| self.rng.below(bound)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+}
+
+/// Run `cases` random cases of `prop`. The property indicates failure by
+/// panicking (use `assert!`).
+pub fn run(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    // Base seed: env override for replay, else a fixed default so CI is
+    // deterministic.
+    let base = std::env::var("DARE_PROP_SEED")
+        .ok()
+        .and_then(|s| {
+            let s = s.trim_start_matches("0x");
+            u64::from_str_radix(s, 16).ok()
+        })
+        .unwrap_or(0xDA5E_2026);
+    for i in 0..cases {
+        let case_seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i as u64);
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (replay: DARE_PROP_SEED=0x{base:X}, case seed 0x{case_seed:X}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("trivial", 50, |g| {
+            count += 1;
+            let n = g.size(100);
+            assert!(n >= 1 && n <= 100);
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        run("fails", 10, |g| {
+            let v = g.usize_in(0, 10);
+            assert!(v < 10_000); // passes
+            assert!(v > 10_000, "deliberate failure"); // fails
+        });
+    }
+
+    #[test]
+    fn sizes_cover_small_and_large() {
+        let mut g = Gen::new(1);
+        let sizes: Vec<usize> = (0..200).map(|_| g.size(1000)).collect();
+        assert!(sizes.iter().any(|&s| s <= 3), "small sizes generated");
+        assert!(sizes.iter().any(|&s| s >= 300), "large sizes generated");
+    }
+}

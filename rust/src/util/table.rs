@@ -1,0 +1,152 @@
+//! Aligned-table printing and CSV output for the figure harnesses.
+//!
+//! Every `dare figN` harness builds a [`Table`], prints it (the "same
+//! rows/series the paper reports") and writes a CSV under `results/` for
+//! plotting.
+
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Format a float cell with 2 decimals and a multiplier suffix
+    /// (the paper reports "1.04×"-style numbers).
+    pub fn x(v: f64) -> String {
+        format!("{v:.2}x")
+    }
+
+    pub fn f(v: f64) -> String {
+        format!("{v:.3}")
+    }
+
+    pub fn pct(v: f64) -> String {
+        format!("{:.1}%", v * 100.0)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                let _ = write!(s, "{:<width$}", cells[i], width = widths[i]);
+            }
+            let _ = writeln!(out, "{}", s.trim_end());
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write CSV to `results/<name>.csv` (creates the directory).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all("results")?;
+        let path = format!("results/{name}.csv");
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["short".into(), Table::x(1.0401)]);
+        t.row(vec!["a-much-longer-name".into(), Table::x(4.44)]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("1.04x"));
+        assert!(s.contains("4.44x"));
+        // header and first data row aligned: 'value' column starts at the
+        // same offset in both lines
+        let header = s.lines().find(|l| l.starts_with("name")).unwrap();
+        let row = s.lines().find(|l| l.contains("1.04x")).unwrap();
+        assert_eq!(header.find("value"), row.find("1.04x"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "plain".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\",plain"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(Table::x(2.433), "2.43x");
+        assert_eq!(Table::pct(0.092), "9.2%");
+        assert_eq!(Table::f(0.5), "0.500");
+    }
+}

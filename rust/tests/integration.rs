@@ -1,0 +1,145 @@
+//! Cross-module integration tests: kernel compilers → simulator →
+//! verification, across variants, kernels, datasets and block sizes —
+//! plus the runtime path executing simulated `mma`s through the AOT
+//! Pallas artifact.
+
+use dare::coordinator::{run_many, run_one, BenchPoint, RunSpec};
+use dare::kernels::KernelKind;
+use dare::runtime::artifacts_available;
+use dare::sim::Variant;
+use dare::sparse::DatasetKind;
+
+const SCALE: f64 = 0.05;
+
+fn spec(kernel: KernelKind, dataset: DatasetKind, block: usize, v: Variant) -> RunSpec {
+    let mut s = RunSpec::new(BenchPoint::new(kernel, dataset, block, SCALE), v);
+    s.verify = true;
+    s
+}
+
+#[test]
+fn every_variant_verifies_on_every_kernel_and_dataset() {
+    let mut specs = Vec::new();
+    for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {
+        for dataset in DatasetKind::ALL {
+            for block in [1usize, 8] {
+                for v in Variant::ALL {
+                    specs.push(spec(kernel, dataset, block, v));
+                }
+            }
+        }
+    }
+    // 2 × 4 × 2 × 5 = 80 runs, all functionally verified inside run_one.
+    let results = run_many(&specs, 0);
+    assert_eq!(results.len(), 80);
+    for r in &results {
+        assert!(r.stats.cycles > 0, "{} ran", r.name);
+        assert!(r.verify_err.unwrap() < 1e-3, "{} verified", r.name);
+    }
+}
+
+#[test]
+fn gemm_verifies_on_all_variants() {
+    for v in Variant::ALL {
+        let r = run_one(&spec(KernelKind::Gemm, DatasetKind::PubMed, 1, v), false);
+        assert!(r.verify_err.unwrap() < 1e-3, "{}", r.name);
+    }
+}
+
+#[test]
+fn dare_full_beats_baseline_on_irregular_workloads() {
+    // The headline claim at B=1 (unstructured sparsity).
+    for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {
+        for dataset in [DatasetKind::PubMed, DatasetKind::OgblCollab] {
+            let base = run_one(&spec(kernel, dataset, 1, Variant::Baseline), false);
+            let dare = run_one(&spec(kernel, dataset, 1, Variant::DareFull), false);
+            assert!(
+                dare.stats.cycles < base.stats.cycles,
+                "{}: DARE-full {} !< baseline {}",
+                base.name,
+                dare.stats.cycles,
+                base.stats.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn dare_never_loses_to_baseline() {
+    // DARE = better(FRE, full) must be ≥ 1.0× vs baseline everywhere
+    // (the paper's floor is 1.04×).
+    for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {
+        for block in [1usize, 8] {
+            let d = DatasetKind::Gpt2Attention;
+            let base = run_one(&spec(kernel, d, block, Variant::Baseline), false);
+            let fre = run_one(&spec(kernel, d, block, Variant::DareFre), false);
+            let full = run_one(&spec(kernel, d, block, Variant::DareFull), false);
+            let dare = fre.stats.cycles.min(full.stats.cycles);
+            assert!(
+                dare <= base.stats.cycles,
+                "{} B={block}: DARE {dare} vs baseline {}",
+                kernel.name(),
+                base.stats.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn variants_compute_identical_results() {
+    // All designs must produce bit-comparable outputs for the same
+    // problem (timing differences must never leak into values).
+    let point = BenchPoint::new(KernelKind::SpMM, DatasetKind::OgbnProteins, 1, SCALE);
+    let strided = point.build(false);
+    let gsa = point.build(true);
+    assert_eq!(strided.checks[0].expect, gsa.checks[0].expect);
+}
+
+#[test]
+fn xla_and_native_backends_agree_cycle_for_cycle() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let s = spec(KernelKind::Sddmm, DatasetKind::PubMed, 1, Variant::DareFull);
+    let native = run_one(&s, false);
+    let xla = run_one(&s, true);
+    // The functional backend cannot affect timing...
+    assert_eq!(native.stats.cycles, xla.stats.cycles, "timing must be backend-invariant");
+    // ...and both verify against the same reference.
+    assert!(xla.verify_err.unwrap() < 1e-3);
+}
+
+#[test]
+fn nvr_emulation_has_unbounded_runahead_structures() {
+    let s = spec(KernelKind::Sddmm, DatasetKind::OgbnProteins, 1, Variant::Nvr);
+    let r = run_one(&s, false);
+    // NVR's infinite RIQ must actually be exercised beyond DARE's 32.
+    assert!(
+        r.stats.riq.peak_occupancy > 32,
+        "NVR RIQ peak {} should exceed DARE's 32-entry budget",
+        r.stats.riq.peak_occupancy
+    );
+    assert_eq!(r.stats.riq.dispatch_stalls, 0, "infinite RIQ never stalls dispatch");
+}
+
+#[test]
+fn oracle_cache_bounds_all_designs() {
+    let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, SCALE);
+    let mut oracle = RunSpec::new(p, Variant::Baseline);
+    oracle.oracle_llc = true;
+    let ro = run_one(&oracle, false);
+    for v in Variant::ALL {
+        if v == Variant::DareGsa || v == Variant::DareFull {
+            continue; // different program shape; not directly comparable
+        }
+        let r = run_one(&RunSpec::new(p, v), false);
+        assert!(
+            ro.stats.cycles <= r.stats.cycles,
+            "oracle ({}) must lower-bound {} ({})",
+            ro.stats.cycles,
+            v.name(),
+            r.stats.cycles
+        );
+    }
+}

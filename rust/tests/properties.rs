@@ -1,0 +1,370 @@
+//! Property-based tests on coordinator/simulator invariants, using the
+//! in-repo seeded runner (`dare::util::prop`) — replay any failure with
+//! `DARE_PROP_SEED=0x... cargo test <name>`.
+
+use dare::isa::{asm, encode::ArchInstr, MInstr, MReg, MatShape, Program, ProgramBuilder};
+use dare::kernels::{compile_sddmm, compile_spmm};
+use dare::mem::{Llc, LlcConfig, MemRequest};
+use dare::sim::{Mpu, NativeMma, SimConfig, MemImage, Variant};
+use dare::sparse::{blockify_structurize, Csc, Dense, Triplet};
+use dare::util::prop::{run, Gen};
+
+fn random_csc(g: &mut Gen, max_dim: usize, max_density: f64) -> Csc {
+    let nrows = g.usize_in(1, max_dim);
+    let ncols = g.usize_in(1, max_dim);
+    let density = g.f64() * max_density;
+    let mut ts = Vec::new();
+    for r in 0..nrows {
+        for c in 0..ncols {
+            if g.bool(density) {
+                ts.push(Triplet {
+                    row: r as u32,
+                    col: c as u32,
+                    val: g.f32() * 2.0 - 1.0,
+                });
+            }
+        }
+    }
+    Csc::from_triplets(nrows, ncols, ts)
+}
+
+#[test]
+fn prop_csc_roundtrips_and_invariants() {
+    run("csc_roundtrip", 60, |g| {
+        let m = random_csc(g, 24, 0.4);
+        m.check().expect("structural invariants");
+        let d = m.to_dense();
+        // dense → csc drops explicit zeros, so compare patterns modulo 0
+        let m2 = Csc::from_dense(&d);
+        assert_eq!(m2.to_dense(), d);
+        let csr = m.to_csr();
+        assert_eq!(csr.to_dense(), d, "csr view agrees");
+        assert_eq!(csr.to_csc().to_dense(), d, "csc→csr→csc stable");
+    });
+}
+
+#[test]
+fn prop_blockify_structurize_keeps_budget_and_block_shape() {
+    run("blockify_budget", 40, |g| {
+        let m = random_csc(g, 32, 0.2);
+        if m.nnz() == 0 {
+            return;
+        }
+        let block = *g.pick(&[2usize, 4, 8]);
+        let b = blockify_structurize(&m, block, g.u64());
+        b.check().unwrap();
+        // budget: kept slots overshoot the original nnz by < one block
+        assert!(b.nnz() >= m.nnz().min(1));
+        assert!(
+            b.nnz() < m.nnz() + block * block,
+            "nnz {} vs budget {} (+{})",
+            b.nnz(),
+            m.nnz(),
+            block * block
+        );
+        // every stored entry lies in a fully-dense (or edge-clipped) block
+        let dense = b.to_dense();
+        for c in 0..b.ncols {
+            for &r in b.col_rows(c) {
+                let r0 = (r as usize / block) * block;
+                let c0 = (c / block) * block;
+                for rr in r0..(r0 + block).min(b.nrows) {
+                    for cc in c0..(c0 + block).min(b.ncols) {
+                        assert!(
+                            dense.at(rr, cc) != 0.0,
+                            "block ({r0},{c0}) not dense at ({rr},{cc})"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_isa_encode_decode_roundtrip() {
+    run("isa_roundtrip", 200, |g| {
+        let mr = |g: &mut Gen| MReg(g.usize_in(0, 8) as u8);
+        let gpr = |g: &mut Gen| g.usize_in(0, 32) as u8;
+        let i = match g.usize_in(0, 6) {
+            0 => ArchInstr::Mcfg { rs1: gpr(g), rs2: gpr(g) },
+            1 => ArchInstr::Mld { md: mr(g), rs1: gpr(g), rs2: gpr(g) },
+            2 => ArchInstr::Mst { ms3: mr(g), rs1: gpr(g), rs2: gpr(g) },
+            3 => ArchInstr::Mma { md: mr(g), ms1: mr(g), ms2: mr(g) },
+            4 => ArchInstr::Mgather { md: mr(g), ms1: mr(g) },
+            _ => ArchInstr::Mscatter { ms2: mr(g), ms1: mr(g) },
+        };
+        assert_eq!(ArchInstr::decode(i.encode()), Ok(i));
+    });
+}
+
+#[test]
+fn prop_asm_roundtrip_random_programs() {
+    run("asm_roundtrip", 60, |g| {
+        let mut b = ProgramBuilder::new("rand");
+        for _ in 0..g.size(40) {
+            let md = MReg(g.usize_in(0, 8) as u8);
+            let ms = MReg(g.usize_in(0, 8) as u8);
+            match g.usize_in(0, 5) {
+                0 => b.mld(md, g.u64() & 0xFFFF_FFFF, g.usize_in(4, 512) as u64),
+                1 => b.mst(md, g.u64() & 0xFFFF_FFFF, g.usize_in(4, 512) as u64),
+                2 => b.mma(md, ms, MReg(g.usize_in(0, 8) as u8), None),
+                3 => b.mgather(md, ms),
+                _ => b.mscatter(md, ms),
+            }
+        }
+        let prog = b.build();
+        let text = asm::disassemble(&prog.instrs);
+        let parsed = asm::assemble(&text).expect("disassembly must re-assemble");
+        assert_eq!(parsed, prog.instrs);
+    });
+}
+
+#[test]
+fn prop_llc_conservation_and_inclusion() {
+    run("llc_conservation", 30, |g| {
+        let mut llc = Llc::new(LlcConfig {
+            size_bytes: 16 * 1024,
+            ways: 4,
+            banks: 4,
+            hit_latency: 5,
+            oracle: false,
+            dram: Default::default(),
+        });
+        let n_req = g.size(200);
+        let mut issued = 0u64;
+        let mut completed = 0u64;
+        let mut now = 0u64;
+        let mut id = 0u64;
+        for _ in 0..n_req {
+            now += 1 + g.usize_in(0, 3) as u64;
+            completed += llc.tick(now).len() as u64;
+            let req = MemRequest {
+                id,
+                addr: (g.usize_in(0, 64) * 64) as u64,
+                is_write: g.bool(0.3),
+                is_prefetch: g.bool(0.3),
+            };
+            if llc.access(req, now).is_ok() {
+                issued += 1;
+                id += 1;
+            }
+        }
+        // drain
+        for _ in 0..100_000 {
+            now += 1;
+            completed += llc.tick(now).len() as u64;
+            if llc.inflight() == 0 {
+                break;
+            }
+        }
+        assert_eq!(completed, issued, "every accepted request completes exactly once");
+        let s = llc.stats;
+        assert_eq!(
+            s.demand_hits + s.demand_misses,
+            s.demand_reads + s.demand_writes,
+            "demand accesses partition into hits and misses"
+        );
+        assert!(s.prefetch_redundant + s.prefetch_useful_fills <= s.prefetches + s.mshr_merges);
+    });
+}
+
+#[test]
+fn prop_simulator_functional_equivalence_across_variants() {
+    // The core end-to-end property: whatever the variant and timing
+    // path, the simulated MPU computes exactly the reference result.
+    run("variant_equivalence", 12, |g| {
+        let m = random_csc(g, 28, 0.25);
+        if m.nnz() == 0 {
+            return;
+        }
+        let f = *g.pick(&[16usize, 32, 64]);
+        let gsa = g.bool(0.5);
+        let w = if g.bool(0.5) {
+            compile_spmm(&m, f, gsa, g.u64())
+        } else {
+            compile_sddmm(&m, f, gsa, g.u64())
+        };
+        let variants: &[Variant] = if gsa {
+            &[Variant::DareGsa, Variant::DareFull]
+        } else {
+            &[Variant::Baseline, Variant::Nvr, Variant::DareFre]
+        };
+        for &v in variants {
+            let mut cfg = SimConfig::for_variant(v);
+            cfg.max_cycles = 20_000_000;
+            let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+            let stats = mpu.run(&w.program);
+            assert_eq!(stats.instrs_retired as usize, w.program.instrs.len());
+            w.verify(&mpu.mem, 1e-3)
+                .unwrap_or_else(|e| panic!("{v:?} on {}: {e}", w.program.name));
+        }
+    });
+}
+
+#[test]
+fn prop_riq_vmr_never_leak() {
+    run("no_leaks", 10, |g| {
+        let m = random_csc(g, 24, 0.3);
+        if m.nnz() == 0 {
+            return;
+        }
+        let w = compile_spmm(&m, 32, true, g.u64());
+        let mut cfg = SimConfig::for_variant(Variant::DareFull);
+        cfg.vmr_entries = g.usize_in(2, 16);
+        cfg.riq_entries = g.usize_in(4, 32);
+        cfg.max_cycles = 20_000_000;
+        let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+        let stats = mpu.run(&w.program);
+        assert_eq!(stats.vmr.allocs, stats.vmr.releases, "VMR entries all released");
+        assert!(stats.riq.peak_occupancy <= mpu.config().riq_entries);
+    });
+}
+
+#[test]
+fn prop_dense_matmul_reference_identities() {
+    run("matmul_identities", 40, |g| {
+        let m = g.usize_in(1, 12);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 12);
+        let a = Dense { rows: m, cols: k, data: g.vec_f32(m * k) };
+        let b = Dense { rows: n, cols: k, data: g.vec_f32(n * k) };
+        let via_bt = a.matmul_bt(&b);
+        let via_t = a.matmul(&b.transpose());
+        assert!(via_bt.max_abs_diff(&via_t) < 1e-4);
+        // (A·Bᵀ)ᵀ = B·Aᵀ
+        let lhs = via_bt.transpose();
+        let rhs = b.matmul_bt(&a);
+        assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_program_builder_shapes_always_valid() {
+    run("builder_shapes", 80, |g| {
+        let mut b = ProgramBuilder::new("t");
+        for _ in 0..g.size(20) {
+            let m = g.usize_in(1, 17) as u16;
+            let k = (g.usize_in(1, 17) as u16) * 4;
+            let n = g.usize_in(1, 17) as u16;
+            let shape = MatShape { m, k, n };
+            if shape.validate().is_ok() {
+                b.cfg_shape(shape);
+                b.mma(MReg(0), MReg(1), MReg(2), Some(0));
+            }
+        }
+        let p: Program = b.build();
+        assert!(p.useful_macs <= p.issued_macs);
+        // every emitted program re-assembles
+        let text = asm::disassemble(&p.instrs);
+        assert_eq!(asm::assemble(&text).unwrap(), p.instrs);
+    });
+}
+
+#[test]
+fn prop_rfu_classifier_separates_any_bimodal_regime() {
+    use dare::sim::config::RfuConfig;
+    use dare::sim::rfu::Rfu;
+    run("rfu_bimodal", 50, |g| {
+        let hit = 10 + g.usize_in(0, 100) as u64;
+        // miss mode well past the margin (≥ 6 bins away) with jitter
+        let gap = 64 + g.usize_in(0, 300) as u64;
+        let miss = hit + gap;
+        let mut rfu = Rfu::new(RfuConfig::default(), hit);
+        for i in 0..32u64 {
+            rfu.observe(hit + i % 4);
+            rfu.observe(miss + i % 6);
+        }
+        if rfu.stats.threshold_updates > 0 {
+            // when the classifier commits to a threshold it must separate
+            // the two modes
+            assert!(
+                !rfu.classify_miss(hit),
+                "hit {hit} misclassified (threshold {})",
+                rfu.threshold()
+            );
+            assert!(
+                rfu.classify_miss(miss + 5),
+                "miss {miss} misclassified (threshold {})",
+                rfu.threshold()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_event_counts() {
+    use dare::energy::{energy_of, EnergyModel};
+    use dare::sim::SimStats;
+    run("energy_monotone", 60, |g| {
+        let model = EnergyModel::default();
+        let mut a = SimStats::default();
+        a.cycles = 1 + g.usize_in(0, 100_000) as u64;
+        a.useful_macs = 1 + g.usize_in(0, 1_000_000) as u64;
+        a.demand_uops = g.usize_in(0, 100_000) as u64;
+        a.llc.slots_used = a.demand_uops + g.usize_in(0, 10_000) as u64;
+        a.dram.reads = g.usize_in(0, 50_000) as u64;
+        a.systolic.active_pe_cycles = g.usize_in(0, 1_000_000) as u64;
+        a.systolic.provisioned_pe_cycles = a.systolic.active_pe_cycles * 2;
+        let base = energy_of(&a, &model).total_pj();
+        // adding DRAM traffic can only increase energy
+        let mut b = a;
+        b.dram.reads += 1000;
+        assert!(energy_of(&b, &model).total_pj() > base);
+        // adding cycles can only increase energy (static)
+        let mut c = a;
+        c.cycles += 1000;
+        assert!(energy_of(&c, &model).total_pj() > base);
+    });
+}
+
+#[test]
+fn prop_gather_program_equals_strided_program_output() {
+    // The *same problem* lowered with and without GSA must produce the
+    // same reference expectation AND the same simulated memory contents.
+    run("gsa_strided_agree", 8, |g| {
+        let m = random_csc(g, 20, 0.3);
+        if m.nnz() == 0 {
+            return;
+        }
+        let seed = g.u64();
+        let strided = compile_sddmm(&m, 32, false, seed);
+        let gsa = compile_sddmm(&m, 32, true, seed);
+        assert_eq!(strided.checks[0].expect, gsa.checks[0].expect);
+        let mut cfg_s = SimConfig::for_variant(Variant::Baseline);
+        cfg_s.max_cycles = 20_000_000;
+        let mut mpu_s = Mpu::new(cfg_s, strided.mem.clone(), Box::new(NativeMma));
+        mpu_s.run(&strided.program);
+        let mut cfg_g = SimConfig::for_variant(Variant::DareFull);
+        cfg_g.max_cycles = 20_000_000;
+        let mut mpu_g = Mpu::new(cfg_g, gsa.mem.clone(), Box::new(NativeMma));
+        mpu_g.run(&gsa.program);
+        let addr = strided.checks[0].addr;
+        let n = strided.checks[0].expect.len();
+        let out_s = mpu_s.mem.read_f32_slice(addr, n);
+        let out_g = mpu_g.mem.read_f32_slice(gsa.checks[0].addr, n);
+        for (i, (a, b)) in out_s.iter().zip(&out_g).enumerate() {
+            assert!((a - b).abs() < 1e-4, "output {i}: strided {a} vs gsa {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_memimage_rw_roundtrip() {
+    run("memimage_roundtrip", 60, |g| {
+        let size = g.usize_in(64, 4096);
+        let mut mem = MemImage::new(size);
+        let n_writes = g.size(50);
+        let mut shadow = vec![0u8; size];
+        for _ in 0..n_writes {
+            let len = g.usize_in(1, 17).min(size);
+            let addr = g.usize_in(0, size - len + 1) as u64;
+            let data: Vec<u8> = (0..len).map(|_| g.u32() as u8).collect();
+            mem.write_bytes(addr, &data);
+            shadow[addr as usize..addr as usize + len].copy_from_slice(&data);
+        }
+        let lo = g.usize_in(0, size) as u64;
+        let len = g.usize_in(0, size - lo as usize + 1);
+        assert_eq!(mem.read_bytes(lo, len), &shadow[lo as usize..lo as usize + len]);
+    });
+}
