@@ -5,9 +5,10 @@
 //! Run: `cargo bench --offline` (add `-- --fast` for a smoke pass,
 //! `-- --filter <substr>` to select).
 
-use dare::coordinator::BenchPoint;
+use dare::coordinator::{run_one, BenchPoint, RunSpec};
 use dare::kernels::KernelKind;
 use dare::mem::{Llc, LlcConfig, MemRequest};
+use dare::service::{Service, ServiceConfig};
 use dare::sim::{MmaExec, Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::bench::Bencher;
@@ -92,6 +93,44 @@ fn main() {
     b.bench("datasets/pubmed-full", || {
         dare::sparse::Dataset::load(DatasetKind::PubMed, 1.0).matrix.nnz()
     });
+
+    // Sweep-level service throughput: a 3-variant × 3-dataset sweep
+    // (all strided lowerings) through back-to-back `run_one` calls —
+    // which rebuild every workload — vs one `Service` batch, where the
+    // workload cache builds each dataset once and shares it across the
+    // three variants. Single worker on both sides, so the delta is pure
+    // cache reuse, not parallelism.
+    {
+        let mut specs = Vec::new();
+        for dataset in
+            [DatasetKind::PubMed, DatasetKind::OgblCollab, DatasetKind::Gpt2Attention]
+        {
+            for variant in [Variant::Baseline, Variant::Nvr, Variant::DareFre] {
+                specs.push(RunSpec::new(
+                    BenchPoint::new(KernelKind::Sddmm, dataset, 1, 0.08),
+                    variant,
+                ));
+            }
+        }
+        let total_cycles: u64 =
+            specs.iter().map(|s| run_one(s, false).stats.cycles).sum();
+        let uncached = specs.clone();
+        b.bench_elems("sweep/3x3-run-one-uncached", total_cycles, move || {
+            uncached.iter().map(|s| run_one(s, false).stats.cycles).sum::<u64>()
+        });
+        let cached = specs.clone();
+        b.bench_elems("sweep/3x3-service-batch", total_cycles, move || {
+            let service = Service::start(ServiceConfig::with_workers(1));
+            service.run_batch(&cached).iter().map(|r| r.stats.cycles).sum::<u64>()
+        });
+        // One verbose pass for the cache-hit-rate report (acceptance:
+        // the sweep must show a hit rate > 0).
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let _ = service.run_batch(&specs);
+        let counters = service.metrics().cache;
+        println!("sweep/3x3-service-batch cache: {}", counters.summary());
+        assert!(counters.hit_rate() > 0.0, "sweep must reuse workload builds");
+    }
 
     let _ = b.write_csv("results/bench_sim_hotpath.csv");
 }

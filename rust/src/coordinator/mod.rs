@@ -1,6 +1,8 @@
 //! Host-CPU coordinator: builds workloads, dispatches them to simulated
-//! MPUs, fans parameter sweeps across OS threads, and aggregates the
-//! results the figure harnesses report.
+//! MPUs, and aggregates the results the figure harnesses report. Sweep
+//! fan-out is delegated to [`crate::service`] (bounded job queue +
+//! worker pool + shared workload cache); `run_many` here is the thin
+//! compatibility wrapper.
 //!
 //! This is the Layer-3 process role: the rust binary owns workload
 //! construction (kernel compilation), the simulation loop, metrics and
@@ -9,5 +11,5 @@
 pub mod runner;
 pub mod spec;
 
-pub use runner::{run_many, run_one, RunResult};
+pub use runner::{run_many, run_one, run_prebuilt, RunResult};
 pub use spec::{BenchPoint, RunSpec};

@@ -1,10 +1,14 @@
-//! Execute run specifications, in sequence or fanned across OS threads
-//! (tokio is unavailable offline; simulations are CPU-bound anyway, so a
-//! scoped-thread pool is the right tool).
+//! Execute run specifications. `run_one` builds + simulates inline;
+//! `run_many` is a thin wrapper over a transient [`Service`] — the
+//! bounded queue / worker pool / workload cache live in
+//! [`crate::service`], so every fan-out path (harness grids, `dare
+//! batch`, benches) shares one scheduler and one build-dedup story.
 
 use super::spec::RunSpec;
 use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
+use crate::kernels::Workload;
 use crate::runtime::XlaMma;
+use crate::service::{Service, ServiceConfig};
 use crate::sim::{Mpu, NativeMma, SimStats};
 
 #[derive(Debug, Clone)]
@@ -30,7 +34,15 @@ impl RunResult {
 /// PJRT artifact instead of the native backend (slower; used by the
 /// end-to-end examples and integration tests).
 pub fn run_one(spec: &RunSpec, use_xla: bool) -> RunResult {
-    let workload = spec.point.build(spec.uses_gsa());
+    let workload = spec.workload_key().build();
+    run_prebuilt(spec, &workload, use_xla)
+}
+
+/// Simulate `spec` against an already-built workload — the hot path the
+/// service workers run against cache-shared `Arc<Workload>`s. The
+/// workload is read-only: each run clones the base memory image into its
+/// own MPU, so any number of concurrent runs can share one build.
+pub fn run_prebuilt(spec: &RunSpec, workload: &Workload, use_xla: bool) -> RunResult {
     let cfg = spec.config();
     let exec: Box<dyn crate::sim::MmaExec> = if use_xla {
         Box::new(XlaMma::from_artifacts().expect("artifacts missing: run `make artifacts`"))
@@ -56,34 +68,19 @@ pub fn run_one(spec: &RunSpec, use_xla: bool) -> RunResult {
     }
 }
 
-/// Run many specs across up to `threads` OS threads (0 = all cores),
-/// preserving input order in the results.
+/// Run many specs across up to `threads` service workers (0 = all
+/// cores), **preserving input order in the results** for any thread
+/// count. Identical workloads across the specs (e.g. the strided
+/// lowering shared by baseline/NVR/FRE variants of one bench point) are
+/// built once and shared through the service's workload cache.
 pub fn run_many(specs: &[RunSpec], threads: usize) -> Vec<RunResult> {
-    let n = specs.len();
-    if n == 0 {
+    if specs.is_empty() {
         return Vec::new();
     }
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-    let workers = if threads == 0 { cores } else { threads }.min(n);
-    if workers <= 1 {
-        return specs.iter().map(|s| run_one(s, false)).collect();
-    }
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<RunResult>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = run_one(&specs[i], false);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    results.into_iter().map(|m| m.into_inner().unwrap().expect("worker died")).collect()
+    let workers = if threads == 0 { cores } else { threads }.min(specs.len());
+    let service = Service::start(ServiceConfig::with_workers(workers));
+    service.run_batch(specs)
 }
 
 #[cfg(test)]
@@ -112,6 +109,16 @@ mod tests {
     }
 
     #[test]
+    fn run_prebuilt_matches_run_one() {
+        let spec = tiny(KernelKind::SpMM, Variant::DareFull);
+        let shared = spec.workload_key().build_shared();
+        let direct = run_one(&spec, false);
+        let prebuilt = run_prebuilt(&spec, &shared, false);
+        assert_eq!(direct.stats.cycles, prebuilt.stats.cycles);
+        assert_eq!(direct.name, prebuilt.name);
+    }
+
+    #[test]
     fn run_many_preserves_order_and_is_deterministic() {
         let specs = vec![
             tiny(KernelKind::Sddmm, Variant::Baseline),
@@ -125,6 +132,24 @@ mod tests {
         for (p, s) in par.iter().zip(&seq) {
             assert_eq!(p.name, s.name);
             assert_eq!(p.stats.cycles, s.stats.cycles, "thread count must not change results");
+        }
+    }
+
+    #[test]
+    fn run_many_order_regression_any_thread_count() {
+        // Completion order differs from submission order whenever later
+        // specs finish first; the results must come back in spec order
+        // regardless. Mix kernels and variants so job runtimes vary.
+        let mut specs = Vec::new();
+        for variant in Variant::ALL {
+            specs.push(tiny(KernelKind::Sddmm, variant));
+            specs.push(tiny(KernelKind::SpMM, variant));
+        }
+        let want: Vec<String> = specs.iter().map(|s| s.name()).collect();
+        for threads in [1, 2, 3, 8] {
+            let got: Vec<String> =
+                run_many(&specs, threads).iter().map(|r| r.name.clone()).collect();
+            assert_eq!(got, want, "spec order violated at threads={threads}");
         }
     }
 }

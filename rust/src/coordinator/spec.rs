@@ -1,10 +1,9 @@
 //! Experiment specifications: a benchmark point (kernel × dataset ×
 //! block size) plus the design variant and config overrides to simulate.
 
-use crate::kernels::{compile_gemm, compile_sddmm, compile_spmm, KernelKind, Workload};
+use crate::kernels::{KernelKind, Workload, WorkloadKey};
 use crate::sim::{SimConfig, Variant};
-use crate::sparse::blockify::blockify_structurize;
-use crate::sparse::{Csc, Dataset, DatasetKind};
+use crate::sparse::{Csc, DatasetKind};
 
 /// One benchmark point of the evaluation grid (§V-A2): a kernel, a
 /// dataset, and the blockification size `B`.
@@ -27,33 +26,25 @@ impl BenchPoint {
         format!("{}/{}/B={}", self.kernel.name(), self.dataset.name(), self.block)
     }
 
-    /// The (possibly blockified) sparse operand.
+    /// The (possibly blockified) sparse operand (delegates to
+    /// [`WorkloadKey::operand`] — one materialization path).
     pub fn matrix(&self) -> Csc {
-        let ds = Dataset::load(self.dataset, self.scale);
-        if self.block > 1 {
-            blockify_structurize(&ds.matrix, self.block, 0xB10C * self.block as u64)
-        } else {
-            ds.matrix
-        }
+        self.key(false).operand().0
+    }
+
+    /// The workload cache key for this point under a strided
+    /// (`gsa = false`) or densified (`gsa = true`) lowering.
+    pub fn key(&self, gsa: bool) -> WorkloadKey {
+        WorkloadKey::new(self.kernel, self.dataset, self.block, gsa, self.scale)
     }
 
     /// Compile this point for a strided (`gsa = false`) or densified
     /// (`gsa = true`) lowering. The value seed is fixed so every variant
-    /// computes the identical problem.
+    /// computes the identical problem. (Build logic lives on
+    /// [`WorkloadKey`] so the service's workload cache and this direct
+    /// path stay byte-identical.)
     pub fn build(&self, gsa: bool) -> Workload {
-        let ds = Dataset::load(self.dataset, self.scale);
-        let f = ds.feature_dim;
-        let m = self.matrix();
-        match self.kernel {
-            KernelKind::SpMM => compile_spmm(&m, f, gsa, 0xBEEF),
-            KernelKind::Sddmm => compile_sddmm(&m, f, gsa, 0xBEEF),
-            KernelKind::Gemm => {
-                // Dense GEMM at the dataset's logical shape (Fig 1a
-                // normalizes sparse kernels to this).
-                let dim = (m.nrows / 16).max(1) * 16;
-                compile_gemm(dim, dim, f, 0xBEEF)
-            }
-        }
+        self.key(gsa).build()
     }
 }
 
@@ -98,6 +89,14 @@ impl RunSpec {
     pub fn uses_gsa(&self) -> bool {
         // GEMM has no sparse structure to densify.
         self.variant.has_gsa() && self.point.kernel != KernelKind::Gemm
+    }
+
+    /// The cache key of the workload this spec executes. Config
+    /// overrides (RIQ/VMR sizes, LLC latency, RFU mode) deliberately do
+    /// not appear: they change the *machine*, not the compiled program
+    /// or memory image, so e.g. a Fig 7 latency sweep shares one build.
+    pub fn workload_key(&self) -> WorkloadKey {
+        self.point.key(self.uses_gsa())
     }
 
     pub fn config(&self) -> SimConfig {
@@ -158,6 +157,19 @@ mod tests {
         assert!(s.uses_gsa());
         let s2 = RunSpec::new(p, Variant::DareFre);
         assert!(!s2.uses_gsa());
+    }
+
+    #[test]
+    fn workload_key_ignores_machine_overrides() {
+        let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::Gpt2Attention, 8, 0.05);
+        let mut a = RunSpec::new(p, Variant::DareFre);
+        a.llc_hit_latency = Some(100);
+        a.riq_entries = Some(8);
+        let b = RunSpec::new(p, Variant::Baseline);
+        // Both are strided lowerings of the same point → one cache entry.
+        assert_eq!(a.workload_key(), b.workload_key());
+        let c = RunSpec::new(p, Variant::DareFull);
+        assert_ne!(a.workload_key(), c.workload_key(), "densified differs");
     }
 
     #[test]

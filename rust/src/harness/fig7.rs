@@ -5,9 +5,10 @@
 //! threshold (every hit looks like a miss → every entry granted).
 
 use super::common::{emit, HarnessOpts};
-use crate::coordinator::{run_many, BenchPoint, RunSpec};
+use crate::coordinator::{BenchPoint, RunSpec};
 use crate::energy::{efficiency, EnergyModel};
 use crate::kernels::KernelKind;
+use crate::service::{Service, ServiceConfig};
 use crate::sim::Variant;
 use crate::sparse::DatasetKind;
 use crate::util::table::Table;
@@ -29,7 +30,20 @@ pub fn fig7(opts: HarnessOpts) -> Table {
         static_.rfu_dynamic = Some(false); // 64-cycle static threshold
         specs.push(static_);
     }
-    let results = run_many(&specs, opts.threads);
+    // All 15 specs vary only the machine (LLC latency / RFU mode), so
+    // the whole sweep shares ONE workload build through the service
+    // cache — the config knobs are not part of the cache key.
+    let service = Service::start(ServiceConfig::with_workers(opts.threads));
+    let t0 = std::time::Instant::now();
+    let results = service.run_batch(&specs);
+    let metrics = service.metrics();
+    println!(
+        "[fig7-sweep] {} jobs in {:.2}s ({:.1} jobs/s) — workload cache: {}",
+        specs.len(),
+        t0.elapsed().as_secs_f64(),
+        metrics.jobs_per_sec(),
+        metrics.cache.summary()
+    );
     let model = EnergyModel::default();
     let mut t = Table::new(
         "Fig 7 — energy-efficiency robustness vs LLC latency (SDDMM B=8)",
@@ -77,5 +91,22 @@ mod tests {
         // The dynamic classifier keeps discriminating.
         let dyn_at_100 = parse_pct(&t.rows[4][3]);
         assert!(dyn_at_100 < static_at_100, "dynamic stays selective: {dyn_at_100}%");
+    }
+
+    #[test]
+    fn latency_sweep_shares_one_workload_build() {
+        let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, 0.04);
+        let mut specs = Vec::new();
+        for lat in [20u64, 60, 100] {
+            let mut s = RunSpec::new(p, Variant::DareFre);
+            s.llc_hit_latency = Some(lat);
+            specs.push(s);
+        }
+        let service = Service::start(ServiceConfig::with_workers(3));
+        let results = service.run_batch(&specs);
+        assert_eq!(results.len(), 3);
+        let c = service.metrics().cache;
+        assert_eq!(c.builds(), 1, "machine sweeps must not rebuild the workload");
+        assert_eq!(c.hits + c.coalesced, 2);
     }
 }

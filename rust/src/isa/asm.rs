@@ -17,23 +17,43 @@
 //! a readable trace dump (`Display` on `MInstr` emits the same syntax).
 
 use super::instr::{Csr, MInstr, MReg, NUM_MREGS};
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+// (Display/Error impls are hand-written: `thiserror` is a proc-macro
+// dependency and this crate builds offline with no deps.)
+#[derive(Debug, PartialEq, Eq)]
 pub enum AsmError {
-    #[error("line {line}: unknown mnemonic '{mnemonic}'")]
     UnknownMnemonic { line: usize, mnemonic: String },
-    #[error("line {line}: expected {expected} operands, got {got}")]
     OperandCount { line: usize, expected: usize, got: usize },
-    #[error("line {line}: bad matrix register '{tok}'")]
     BadMReg { line: usize, tok: String },
-    #[error("line {line}: bad CSR name '{tok}' (matrixM/matrixK/matrixN)")]
     BadCsr { line: usize, tok: String },
-    #[error("line {line}: bad integer '{tok}'")]
     BadInt { line: usize, tok: String },
-    #[error("line {line}: expected parenthesized operand, got '{tok}'")]
     ExpectedParen { line: usize, tok: String },
 }
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsmError::UnknownMnemonic { line, mnemonic } => {
+                write!(f, "line {line}: unknown mnemonic '{mnemonic}'")
+            }
+            AsmError::OperandCount { line, expected, got } => {
+                write!(f, "line {line}: expected {expected} operands, got {got}")
+            }
+            AsmError::BadMReg { line, tok } => {
+                write!(f, "line {line}: bad matrix register '{tok}'")
+            }
+            AsmError::BadCsr { line, tok } => {
+                write!(f, "line {line}: bad CSR name '{tok}' (matrixM/matrixK/matrixN)")
+            }
+            AsmError::BadInt { line, tok } => write!(f, "line {line}: bad integer '{tok}'"),
+            AsmError::ExpectedParen { line, tok } => {
+                write!(f, "line {line}: expected parenthesized operand, got '{tok}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AsmError {}
 
 fn parse_mreg(tok: &str, line: usize) -> Result<MReg, AsmError> {
     let t = tok.trim();

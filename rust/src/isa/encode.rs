@@ -21,7 +21,6 @@
 //! decoding round-trip exactly (property-tested in `rust/tests/`).
 
 use super::instr::{MReg, NUM_MREGS};
-use thiserror::Error;
 
 /// The DARE major opcode (RISC-V custom-1).
 pub const OPCODE: u32 = 0b010_1011;
@@ -53,17 +52,32 @@ pub enum ArchInstr {
     Mscatter { ms2: MReg, ms1: MReg },
 }
 
-#[derive(Debug, Error, PartialEq, Eq)]
+// (Display/Error impls are hand-written: `thiserror` is a proc-macro
+// dependency and this crate builds offline with no deps.)
+#[derive(Debug, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("opcode 0x{0:02x} is not the DARE custom-1 opcode")]
     BadOpcode(u32),
-    #[error("funct3 {0:#05b} is not a DARE instruction")]
     BadFunct3(u32),
-    #[error("matrix register index {0} out of range (m0-m7)")]
     BadMReg(u32),
-    #[error("reserved field is non-zero: {0:#x}")]
     ReservedNonZero(u32),
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::BadOpcode(op) => {
+                write!(f, "opcode 0x{op:02x} is not the DARE custom-1 opcode")
+            }
+            DecodeError::BadFunct3(f3) => write!(f, "funct3 {f3:#05b} is not a DARE instruction"),
+            DecodeError::BadMReg(idx) => {
+                write!(f, "matrix register index {idx} out of range (m0-m7)")
+            }
+            DecodeError::ReservedNonZero(v) => write!(f, "reserved field is non-zero: {v:#x}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 #[inline]
 fn field(word: u32, lo: u32, width: u32) -> u32 {

@@ -1,9 +1,18 @@
 //! The unit the coordinator dispatches: a compiled program, the memory
 //! image it executes against, and the expected outputs for functional
-//! verification.
+//! verification — plus [`WorkloadKey`], the canonical description of a
+//! build that `service::WorkloadCache` uses to share one immutable
+//! [`Workload`] (behind an [`Arc`], as [`SharedWorkload`]) across every
+//! job that needs it.
 
+use super::gemm::compile_gemm;
+use super::sddmm::compile_sddmm;
+use super::spmm::compile_spmm;
 use crate::isa::Program;
 use crate::sim::MemImage;
+use crate::sparse::blockify::blockify_structurize;
+use crate::sparse::{Csc, Dataset, DatasetKind};
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
@@ -13,12 +22,114 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
+    pub const ALL: [KernelKind; 3] = [KernelKind::Gemm, KernelKind::SpMM, KernelKind::Sddmm];
+
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::Gemm => "gemm",
             KernelKind::SpMM => "spmm",
             KernelKind::Sddmm => "sddmm",
         }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        KernelKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// A built workload shared immutably across simulations: the program and
+/// base memory image are read-only (every run clones the image into its
+/// own MPU), so one build can back any number of concurrent jobs.
+pub type SharedWorkload = Arc<Workload>;
+
+/// Everything that determines a [`Workload`] build — the cache key of
+/// `service::WorkloadCache`. Two specs with equal keys compile to the
+/// identical program + memory image, so a cached build is exact, not an
+/// approximation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadKey {
+    pub kernel: KernelKind,
+    pub dataset: DatasetKind,
+    /// Blockification size `B` (1 = original unstructured pattern).
+    pub block: usize,
+    /// Densified (GSA `mgather`/`mscatter`) vs strided lowering.
+    pub densify: bool,
+    /// Dataset scale, stored as raw f64 bits so the key is `Eq + Hash`
+    /// without quantizing — the build uses the exact scale the spec
+    /// asked for.
+    scale_bits: u64,
+}
+
+impl WorkloadKey {
+    pub fn new(
+        kernel: KernelKind,
+        dataset: DatasetKind,
+        block: usize,
+        densify: bool,
+        scale: f64,
+    ) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0, "scale in (0,1]");
+        assert!(block >= 1, "block size >= 1");
+        Self {
+            kernel,
+            dataset,
+            block,
+            // GEMM has no sparse structure to densify; canonicalize so
+            // both lowerings share one cache entry.
+            densify: densify && kernel != KernelKind::Gemm,
+            scale_bits: scale.to_bits(),
+        }
+    }
+
+    pub fn scale(&self) -> f64 {
+        f64::from_bits(self.scale_bits)
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "{}/{}/B={}/{}@{}",
+            self.kernel.name(),
+            self.dataset.name(),
+            self.block,
+            if self.densify { "gsa" } else { "strided" },
+            self.scale()
+        )
+    }
+
+    /// The (possibly blockified) sparse operand plus the dense feature
+    /// dimension — the single source of truth for operand
+    /// materialization (`BenchPoint::matrix` delegates here, so cache
+    /// builds and harness-side nnz inspection can never diverge).
+    pub fn operand(&self) -> (Csc, usize) {
+        let ds = Dataset::load(self.dataset, self.scale());
+        let f = ds.feature_dim;
+        let m = if self.block > 1 {
+            blockify_structurize(&ds.matrix, self.block, 0xB10C * self.block as u64)
+        } else {
+            ds.matrix
+        };
+        (m, f)
+    }
+
+    /// Compile the workload this key describes — the slow path the
+    /// workload cache runs once and shares. The value seed is fixed so
+    /// every variant computes the identical problem.
+    pub fn build(&self) -> Workload {
+        let (m, f) = self.operand();
+        match self.kernel {
+            KernelKind::SpMM => compile_spmm(&m, f, self.densify, 0xBEEF),
+            KernelKind::Sddmm => compile_sddmm(&m, f, self.densify, 0xBEEF),
+            KernelKind::Gemm => {
+                // Dense GEMM at the dataset's logical shape (Fig 1a
+                // normalizes sparse kernels to this).
+                let dim = (m.nrows / 16).max(1) * 16;
+                compile_gemm(dim, dim, f, 0xBEEF)
+            }
+        }
+    }
+
+    pub fn build_shared(&self) -> SharedWorkload {
+        Arc::new(self.build())
     }
 }
 
@@ -65,6 +176,40 @@ impl Workload {
 mod tests {
     use super::*;
     use crate::isa::ProgramBuilder;
+
+    #[test]
+    fn kernel_kind_name_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn workload_key_equality_and_canonicalization() {
+        let a = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.05);
+        let b = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.05);
+        assert_eq!(a, b);
+        assert_ne!(a, WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, false, 0.05));
+        assert_ne!(a, WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 1, true, 0.05));
+        assert_ne!(a, WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.06));
+        // GEMM canonicalizes densify away: both lowerings share a key.
+        let g1 = WorkloadKey::new(KernelKind::Gemm, DatasetKind::PubMed, 1, true, 0.05);
+        let g2 = WorkloadKey::new(KernelKind::Gemm, DatasetKind::PubMed, 1, false, 0.05);
+        assert_eq!(g1, g2);
+        // The exact scale survives the bit-packing.
+        assert_eq!(a.scale(), 0.05);
+    }
+
+    #[test]
+    fn workload_key_builds_and_shares() {
+        let key = WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, true, 0.04);
+        let shared = key.build_shared();
+        let alias = shared.clone();
+        assert_eq!(shared.program.instrs.len(), alias.program.instrs.len());
+        assert!(shared.program.stats().mgather > 0, "densified lowering");
+        assert_eq!(std::sync::Arc::strong_count(&shared), 2);
+    }
 
     #[test]
     fn verify_passes_and_fails() {

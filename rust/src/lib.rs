@@ -9,8 +9,10 @@
 //!   datasets ([`sparse`]), kernel compilers ([`kernels`]), the LLC/DRAM
 //!   hierarchy ([`mem`]), the MPU pipeline with RIQ/DMU/VMR/RFU
 //!   ([`sim`]), energy and hardware-overhead models ([`energy`],
-//!   [`overhead`]), the host coordinator ([`coordinator`]) and the
-//!   figure harnesses ([`harness`]).
+//!   [`overhead`]), the host coordinator ([`coordinator`]), the batch
+//!   simulation service ([`service`]: bounded job queue, sharded
+//!   LRU workload cache, worker pool, JSONL protocol) and the figure
+//!   harnesses ([`harness`]).
 //! * **Layer 2/1 (python, build-time only)** — JAX + Pallas numerics,
 //!   AOT-lowered to HLO text in `artifacts/` and executed from rust via
 //!   the PJRT runtime ([`runtime`]).
@@ -27,5 +29,6 @@ pub mod sim;
 pub mod mem;
 pub mod overhead;
 pub mod runtime;
+pub mod service;
 pub mod sparse;
 pub mod util;

@@ -1,11 +1,14 @@
 //! The `dare` CLI: regenerate every table/figure of the paper, run
-//! individual workloads, inspect the ISA and configuration.
+//! individual workloads, drive the batch simulation service, inspect the
+//! ISA and configuration.
 //!
 //! ```text
 //! dare fig1a|fig1b|fig1c|fig3a|fig3b|fig5|fig6|fig7|fig8|fig9   figures
 //! dare isa | config | overhead                                  tables
 //! dare all [--scale 0.5]                                        everything
 //! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
+//! dare batch <jobs.jsonl>                                       service: run a JSONL job file
+//! dare serve                                                    service: JSONL jobs stdin→stdout
 //! dare asm <file.s>                                             assemble + run
 //! ```
 
@@ -13,9 +16,15 @@ use dare::coordinator::{run_one, BenchPoint, RunSpec};
 use dare::harness::{fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
 use dare::isa::asm;
 use dare::kernels::KernelKind;
+use dare::service::{JobOutcome, JobRequest, JobResponse, Service, ServiceConfig};
 use dare::sim::{Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::cli::Args;
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::{mpsc, Arc, Mutex};
+
+type CliError = Box<dyn std::error::Error>;
 
 fn usage() -> ! {
     eprintln!(
@@ -25,16 +34,163 @@ fn usage() -> ! {
            isa config overhead                                      print a table\n\
            all                                                      every figure + table\n\
            run      run one benchmark point (--kernel --dataset --block --variant [--xla] [--verify])\n\
+           batch    run a JSONL job file through the simulation service (results on stdout)\n\
+           serve    long-lived service: JSONL jobs on stdin, results on stdout\n\
            asm      assemble and simulate a .s file (DARE-full MPU)\n\
          options:\n\
            --scale F     dataset scale in (0,1] (default 0.5)\n\
-           --threads N   sweep worker threads (default all cores)\n\
+           --threads N   service worker threads (default all cores)\n\
+           --cache N     service workload-cache capacity (default 32)\n\
            --verify      check functional outputs against references"
     );
     std::process::exit(2)
 }
 
-fn main() -> anyhow::Result<()> {
+/// Service configuration from the shared CLI options.
+fn service_config(args: &Args, opts: &HarnessOpts) -> ServiceConfig {
+    ServiceConfig {
+        workers: opts.threads,
+        cache_capacity: args.get_parse("cache", ServiceConfig::default().cache_capacity),
+        ..ServiceConfig::default()
+    }
+}
+
+/// A parsed, submission-ready job line.
+struct CliJob {
+    id: Option<String>,
+    spec: RunSpec,
+    use_xla: bool,
+}
+
+/// Parse one JSONL job line.
+fn parse_job_line(line: &str, verify: bool) -> Result<CliJob, String> {
+    let req = JobRequest::parse(line)?;
+    let mut spec = req.to_spec();
+    spec.verify = spec.verify || verify;
+    Ok(CliJob { id: req.id, spec, use_xla: req.use_xla })
+}
+
+/// `dare batch <jobs.jsonl>`: parse the whole job file first (a typo on
+/// line 1500 aborts before any simulation runs), then submit everything
+/// and emit one JSONL result line per job — in file order — plus
+/// service metrics on stderr.
+fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
+    let path = args.positional.first().ok_or("batch requires a jobs.jsonl path")?;
+    let text = std::fs::read_to_string(path)?;
+    let mut jobs: Vec<CliJob> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let job = parse_job_line(line, opts.verify)
+            .map_err(|e| format!("{path}:{}: {e}", lineno + 1))?;
+        jobs.push(job);
+    }
+    let service = Service::start(service_config(args, &opts));
+    let t0 = std::time::Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let seqs: Vec<u64> = jobs
+        .iter()
+        .map(|job| service.submit(job.spec.clone(), job.use_xla, tx.clone()))
+        .collect();
+    drop(tx);
+    let mut outcomes: Vec<JobOutcome> = rx.iter().collect();
+    if outcomes.len() != jobs.len() {
+        return Err(format!(
+            "service lost {} of {} jobs (worker died)",
+            jobs.len() - outcomes.len(),
+            jobs.len()
+        )
+        .into());
+    }
+    outcomes.sort_by_key(|o| o.seq);
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let mut failed = 0usize;
+    for ((outcome, job), seq) in outcomes.iter().zip(&jobs).zip(&seqs) {
+        debug_assert_eq!(outcome.seq, *seq);
+        failed += usize::from(outcome.result.is_err());
+        let response = JobResponse::from_outcome(job.id.clone(), &job.spec.name(), outcome);
+        writeln!(out, "{}", response.to_json())?;
+    }
+    out.flush()?;
+    eprintln!("{}", service.metrics());
+    eprintln!(
+        "[service] batch '{path}': {} jobs ({failed} failed) in {:.2}s",
+        jobs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `dare serve`: a long-lived session — one JSONL job per stdin line,
+/// one JSONL result per stdout line. Jobs are submitted as lines arrive
+/// and responses stream back **in completion order** (correlate by
+/// `id`), so `--threads N` workers genuinely overlap. The workload
+/// cache persists for the whole session, so repeated specs (sweep
+/// drivers, dashboards) skip compilation entirely. Malformed lines
+/// produce an `"ok":false` result line (with the `id` echoed when it
+/// can be recovered) instead of killing the session.
+fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
+    let service = Service::start(service_config(args, &opts));
+    let (tx, rx) = mpsc::channel::<JobOutcome>();
+    // seq → (id, spec name), inserted under the lock *around* submit so
+    // the printer can never see an outcome before its context exists.
+    let pending: Arc<Mutex<HashMap<u64, (Option<String>, String)>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let printer = {
+        let pending = pending.clone();
+        std::thread::spawn(move || {
+            let stdout = std::io::stdout();
+            for outcome in rx {
+                let (id, name) = pending
+                    .lock()
+                    .unwrap()
+                    .remove(&outcome.seq)
+                    .expect("outcome for unknown job seq");
+                let mut out = stdout.lock();
+                let _ = writeln!(out, "{}", JobResponse::from_outcome(id, &name, &outcome).to_json());
+                let _ = out.flush();
+            }
+        })
+    };
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        match parse_job_line(trimmed, opts.verify) {
+            Ok(job) => {
+                let name = job.spec.name();
+                let mut map = pending.lock().unwrap();
+                let seq = service.submit(job.spec, job.use_xla, tx.clone());
+                map.insert(seq, (job.id, name));
+            }
+            Err(e) => {
+                // Echo the id if the line was at least valid JSON.
+                let id = dare::service::Json::parse(trimmed)
+                    .ok()
+                    .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)));
+                let response = JobResponse::failure(id, "<invalid job>", e).to_json();
+                let stdout = std::io::stdout();
+                let mut out = stdout.lock();
+                writeln!(out, "{response}")?;
+                out.flush()?;
+            }
+        }
+    }
+    // EOF: drop our sender; in-flight jobs hold clones, so the printer
+    // drains every outstanding response before its channel closes.
+    drop(tx);
+    printer.join().map_err(|_| "serve printer thread panicked")?;
+    eprintln!("{}", service.metrics());
+    Ok(())
+}
+
+fn main() -> Result<(), CliError> {
     let args = Args::from_env();
     let opts = HarnessOpts {
         scale: args.get_parse("scale", 0.5f64),
@@ -102,16 +258,13 @@ fn main() -> anyhow::Result<()> {
             fig9::fig9(opts);
         }
         "run" => {
-            let kernel = match args.get_or("kernel", "sddmm").as_str() {
-                "gemm" => KernelKind::Gemm,
-                "spmm" => KernelKind::SpMM,
-                "sddmm" => KernelKind::Sddmm,
-                k => anyhow::bail!("unknown kernel '{k}'"),
-            };
-            let dataset = DatasetKind::from_name(&args.get_or("dataset", "gpt2"))
-                .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+            let kernel_name = args.get_or("kernel", "sddmm");
+            let kernel = KernelKind::from_name(&kernel_name)
+                .ok_or_else(|| format!("unknown kernel '{kernel_name}'"))?;
+            let dataset =
+                DatasetKind::from_name(&args.get_or("dataset", "gpt2")).ok_or("unknown dataset")?;
             let variant = Variant::from_name(&args.get_or("variant", "dare-full"))
-                .ok_or_else(|| anyhow::anyhow!("unknown variant"))?;
+                .ok_or("unknown variant")?;
             let block: usize = args.get_parse("block", 1);
             let mut spec =
                 RunSpec::new(BenchPoint::new(kernel, dataset, block, opts.scale), variant);
@@ -131,13 +284,16 @@ fn main() -> anyhow::Result<()> {
                 println!("  verified against reference (max rel err {err:.2e})");
             }
         }
+        "batch" => {
+            cmd_batch(&args, opts)?;
+        }
+        "serve" => {
+            cmd_serve(&args, opts)?;
+        }
         "asm" => {
-            let path = args
-                .positional
-                .first()
-                .ok_or_else(|| anyhow::anyhow!("asm requires a file path"))?;
+            let path = args.positional.first().ok_or("asm requires a file path")?;
             let src = std::fs::read_to_string(path)?;
-            let instrs = asm::assemble(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let instrs = asm::assemble(&src).map_err(|e| -> CliError { e.into() })?;
             println!("{} instructions:", instrs.len());
             print!("{}", asm::disassemble(&instrs));
             let program = dare::isa::Program {

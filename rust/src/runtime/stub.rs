@@ -1,0 +1,45 @@
+//! No-op XLA backend for builds without the `xla` cargo feature.
+//!
+//! The real PJRT path (`runtime::pjrt`) needs the `xla` + `anyhow`
+//! crates from the internal toolchain image; a stock offline checkout
+//! doesn't have them, so the default build compiles this stub instead.
+//! Constructing the stub always fails, which makes the native backend
+//! the only reachable execution path — callers that probe
+//! [`super::artifacts_available`] (which reports `false` without the
+//! feature) never get here.
+
+use crate::sim::MmaExec;
+
+/// Stand-in for [`crate::runtime::pjrt::XlaMma`]: carries no state and
+/// cannot be constructed.
+pub struct XlaMma {
+    _private: (),
+}
+
+impl XlaMma {
+    pub fn from_artifacts() -> Result<Self, String> {
+        Err("built without the `xla` cargo feature; XLA/PJRT execution is unavailable".into())
+    }
+}
+
+impl MmaExec for XlaMma {
+    fn mma(&mut self, _acc: &mut [f32], _a: &[f32], _b: &[f32], _m: usize, _k: usize, _n: usize) {
+        unreachable!("stub XlaMma cannot be constructed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_refuses_construction() {
+        let err = XlaMma::from_artifacts().err().unwrap();
+        assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn artifacts_unavailable_without_feature() {
+        assert!(!crate::runtime::artifacts_available());
+    }
+}

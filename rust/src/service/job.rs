@@ -1,0 +1,39 @@
+//! The unit of work the service schedules and the outcome a worker
+//! hands back.
+
+use crate::coordinator::{RunResult, RunSpec};
+use std::sync::mpsc::Sender;
+use std::time::Duration;
+
+/// A scheduled job: a service-assigned sequence number (total order over
+/// submissions — batch collectors sort on it), the run spec, the backend
+/// selector, and the channel the executing worker replies on.
+pub struct Job {
+    pub seq: u64,
+    pub spec: RunSpec,
+    /// Execute `mma` through the AOT PJRT artifact instead of the native
+    /// backend (requires the `xla` feature + artifacts).
+    pub use_xla: bool,
+    pub reply: Sender<JobOutcome>,
+}
+
+/// What a worker delivers for one job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub seq: u64,
+    /// The run result, or the build/simulation failure message (workers
+    /// catch panics so one bad job cannot take the service down).
+    pub result: Result<RunResult, String>,
+    /// Whether the workload came from the cache (a resident hit or a
+    /// coalesced wait on another job's in-flight build).
+    pub cache_hit: bool,
+    /// Worker wall-clock spent on this job (build + simulate + verify).
+    pub wall: Duration,
+}
+
+impl JobOutcome {
+    /// Simulated cycles, 0 for failed jobs (metrics convenience).
+    pub fn cycles(&self) -> u64 {
+        self.result.as_ref().map(|r| r.stats.cycles).unwrap_or(0)
+    }
+}

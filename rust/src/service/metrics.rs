@@ -1,0 +1,164 @@
+//! Service-level metrics: cheap atomic counters the workers bump while
+//! the service runs, snapshotted on demand into a [`MetricsSnapshot`]
+//! (jobs/sec, cache hit rate, per-worker busy time, queue depth).
+
+use super::cache::CacheCounters;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+pub struct ServiceMetrics {
+    started: Instant,
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    /// Simulated cycles aggregated across completed jobs.
+    sim_cycles: AtomicU64,
+    /// Per-worker busy wall-clock, in nanoseconds.
+    worker_busy_ns: Vec<AtomicU64>,
+}
+
+impl ServiceMetrics {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            started: Instant::now(),
+            jobs_submitted: AtomicU64::new(0),
+            jobs_completed: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            worker_busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn job_submitted(&self) {
+        self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_done(&self, worker: usize, busy: Duration, sim_cycles: u64, ok: bool) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sim_cycles.fetch_add(sim_cycles, Ordering::Relaxed);
+        if let Some(cell) = self.worker_busy_ns.get(worker) {
+            cell.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self, queue_depth: usize, cache: CacheCounters) -> MetricsSnapshot {
+        MetricsSnapshot {
+            uptime: self.started.elapsed(),
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            queue_depth,
+            worker_busy: self
+                .worker_busy_ns
+                .iter()
+                .map(|ns| Duration::from_nanos(ns.load(Ordering::Relaxed)))
+                .collect(),
+            cache,
+        }
+    }
+}
+
+/// A point-in-time view of the service, cheap to copy around and print.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub uptime: Duration,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub sim_cycles: u64,
+    pub queue_depth: usize,
+    /// Busy wall-clock per worker since the service started.
+    pub worker_busy: Vec<Duration>,
+    pub cache: CacheCounters,
+}
+
+impl MetricsSnapshot {
+    pub fn jobs_per_sec(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.jobs_completed as f64 / secs
+        }
+    }
+
+    /// Aggregate simulated-cycles throughput (the L3 perf metric).
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.sim_cycles as f64 / secs
+        }
+    }
+
+    /// Mean busy fraction across workers since the service started.
+    pub fn worker_utilization(&self) -> f64 {
+        if self.worker_busy.is_empty() || self.uptime.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.worker_busy.iter().map(|d| d.as_secs_f64()).sum();
+        busy / (self.worker_busy.len() as f64 * self.uptime.as_secs_f64())
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "[service] {} jobs in {:.2}s ({:.1} jobs/s, {:.1} Msim-cycles/s), \
+             {} failed, queue depth {}",
+            self.jobs_completed,
+            self.uptime.as_secs_f64(),
+            self.jobs_per_sec(),
+            self.sim_cycles_per_sec() / 1e6,
+            self.jobs_failed,
+            self.queue_depth
+        )?;
+        writeln!(f, "[service] cache: {}", self.cache.summary())?;
+        write!(
+            f,
+            "[service] workers: {} × {:.0}% mean busy",
+            self.worker_busy.len(),
+            100.0 * self.worker_utilization()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = ServiceMetrics::new(2);
+        m.job_submitted();
+        m.job_submitted();
+        m.job_done(0, Duration::from_millis(10), 1000, true);
+        m.job_done(1, Duration::from_millis(30), 500, false);
+        std::thread::sleep(Duration::from_millis(5));
+        let s = m.snapshot(3, CacheCounters::default());
+        assert_eq!(s.jobs_submitted, 2);
+        assert_eq!(s.jobs_completed, 2);
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.sim_cycles, 1500);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.worker_busy.len(), 2);
+        assert!(s.jobs_per_sec() > 0.0);
+        assert!(s.worker_utilization() > 0.0);
+        assert!(!format!("{s}").is_empty());
+    }
+
+    #[test]
+    fn out_of_range_worker_is_ignored() {
+        let m = ServiceMetrics::new(1);
+        m.job_done(7, Duration::from_millis(1), 1, true);
+        let s = m.snapshot(0, CacheCounters::default());
+        assert_eq!(s.worker_busy[0], Duration::ZERO);
+        assert_eq!(s.jobs_completed, 1);
+    }
+}

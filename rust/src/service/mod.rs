@@ -1,0 +1,63 @@
+//! The batch simulation service — the long-lived layer between the
+//! kernels and every harness, bench, and CLI sweep.
+//!
+//! The one-shot coordinator rebuilt identical workloads (program +
+//! memory image) from scratch per run; DARE-vs-NVR comparison sweeps of
+//! the kind the paper's evaluation requires redo the same compilation
+//! and dataset materialization dozens of times. This subsystem turns
+//! that into a service:
+//!
+//! ```text
+//!  harness / CLI / bench                      dare::service
+//!  ─────────────────────     ┌──────────────────────────────────────┐
+//!  RunSpec, RunSpec, …  ──▶  │ JobQueue (bounded MPMC)              │
+//!                            │   │ pop                              │
+//!                            │   ▼                                  │
+//!                            │ worker pool ──▶ WorkloadCache        │
+//!                            │   │   get_or_build (sharded LRU,     │
+//!                            │   │    in-flight dedup, Arc-shared)  │
+//!                            │   ▼                                  │
+//!                            │ Mpu::run (sim) ──▶ JobOutcome ──────▶│──▶ results,
+//!                            │                                      │    in spec order
+//!                            │ ServiceMetrics (jobs/s, hit rate,    │
+//!                            │   per-worker busy, queue depth)      │
+//!                            └──────────────────────────────────────┘
+//! ```
+//!
+//! * [`queue`] — the bounded MPMC job queue (backpressure for producers).
+//! * [`cache`] — the sharded, LRU-bounded workload cache; identical
+//!   in-flight specs coalesce onto one build.
+//! * [`workers`] — the worker pool and the [`Service`] facade.
+//! * [`job`] — the scheduled unit and its outcome.
+//! * [`protocol`] — the JSONL job/result wire format of `dare batch`
+//!   and `dare serve`.
+//! * [`metrics`] — atomic counters + the printable snapshot.
+//!
+//! `coordinator::run_many` is a thin wrapper over a transient [`Service`]
+//! now; harnesses that want cross-batch reuse (fig 5/6 share a grid, a
+//! `dare serve` session shares everything) hold a service of their own.
+
+pub mod cache;
+pub mod job;
+pub mod metrics;
+pub mod protocol;
+pub mod queue;
+pub mod workers;
+
+pub use cache::{CacheCounters, Fetch, WorkloadCache};
+pub use job::{Job, JobOutcome};
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use protocol::{JobRequest, JobResponse, Json};
+pub use queue::JobQueue;
+pub use workers::{Service, ServiceConfig};
+
+/// Render a `catch_unwind` payload as the human-readable panic message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}

@@ -1,0 +1,722 @@
+//! Line-delimited JSON (JSONL) job/result protocol for `dare batch` and
+//! `dare serve`.
+//!
+//! One job per line in, one result per line out:
+//!
+//! ```text
+//! {"id":"j0","kernel":"spmm","dataset":"pubmed","block":8,"variant":"dare-full","scale":0.25}
+//! {"id":"j0","name":"spmm/pubmed/B=8/dare-full","ok":true,"cycles":123456,...}
+//! ```
+//!
+//! Optional job fields: `id` (echoed back), `block` (default 1), `scale`
+//! (default 0.5), `verify` (default false), `riq`, `vmr`,
+//! `llc_hit_latency`, `rfu_dynamic`, `oracle_llc`, `xla`. Unknown
+//! fields are rejected (typo protection). Blank lines and lines
+//! starting with `#` are skipped by the CLI.
+//!
+//! Ordering: `dare batch` emits results in job-file order; `dare serve`
+//! pipelines and emits results in **completion** order — correlate
+//! responses to requests by `id`.
+//!
+//! serde is unavailable offline, so this module carries a small
+//! recursive-descent JSON scanner ([`Json::parse`]) for the flat objects
+//! the protocol uses, plus the encoders. Numbers ride as f64 (exact for
+//! integers below 2^53 — comfortably beyond any cycle count a 500M-cycle
+//! safety valve allows).
+
+use super::job::JobOutcome;
+use crate::coordinator::{BenchPoint, RunSpec};
+use crate::kernels::KernelKind;
+use crate::sim::Variant;
+use crate::sparse::DatasetKind;
+
+/// A parsed JSON value. Object fields keep insertion order; duplicate
+/// keys resolve to the first occurrence (lookup by linear scan).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing bytes at offset {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, byte: u8) -> Result<(), String> {
+        if self.peek() == Some(byte) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at offset {}", byte as char, self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at offset {}", self.pos)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(format!("malformed literal at offset {}", self.pos))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.pos)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            let c = self.peek().ok_or_else(|| "unterminated string".to_string())?;
+            self.pos += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(buf).map_err(|_| "invalid UTF-8".to_string());
+                }
+                b'\\' => {
+                    let esc =
+                        self.peek().ok_or_else(|| "unterminated escape".to_string())?;
+                    self.pos += 1;
+                    let decoded: char = match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'n' => '\n',
+                        b'r' => '\r',
+                        b't' => '\t',
+                        b'u' => self.unicode_escape()?,
+                        other => {
+                            return Err(format!("bad escape '\\{}'", other as char));
+                        }
+                    };
+                    let mut enc = [0u8; 4];
+                    buf.extend_from_slice(decoded.encode_utf8(&mut enc).as_bytes());
+                }
+                // Raw UTF-8 passes through byte-for-byte (input is &str).
+                _ => buf.push(c),
+            }
+        }
+    }
+
+    /// Decode the code point of a `\u` escape whose `\u` has already
+    /// been consumed — including UTF-16 surrogate pairs, which
+    /// standard-compliant encoders (e.g. Python's `json.dumps` with its
+    /// default `ensure_ascii=True`) emit for every non-BMP character.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            return Err(format!("unpaired low surrogate \\u{hi:04x}"));
+        }
+        let cp = if (0xD800..=0xDBFF).contains(&hi) {
+            if self.peek() != Some(b'\\') {
+                return Err(format!("unpaired high surrogate \\u{hi:04x}"));
+            }
+            self.pos += 1;
+            if self.peek() != Some(b'u') {
+                return Err(format!("unpaired high surrogate \\u{hi:04x}"));
+            }
+            self.pos += 1;
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                return Err(format!("invalid low surrogate \\u{lo:04x}"));
+            }
+            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+        } else {
+            hi
+        };
+        char::from_u32(cp).ok_or_else(|| format!("invalid code point U+{cp:04X}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut cp = 0u32;
+        for _ in 0..4 {
+            let c = self.peek().ok_or_else(|| "truncated \\u escape".to_string())?;
+            self.pos += 1;
+            let digit = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| format!("bad hex digit '{}' in \\u escape", c as char))?;
+            cp = cp * 16 + digit;
+        }
+        Ok(cp)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{text}' at offset {start}"))
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One line of a `jobs.jsonl` file: everything needed to build a
+/// [`RunSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRequest {
+    /// Caller-chosen id, echoed into the matching [`JobResponse`].
+    pub id: Option<String>,
+    pub kernel: KernelKind,
+    pub dataset: DatasetKind,
+    pub variant: Variant,
+    pub block: usize,
+    pub scale: f64,
+    pub verify: bool,
+    pub riq_entries: Option<usize>,
+    pub vmr_entries: Option<usize>,
+    pub llc_hit_latency: Option<u64>,
+    pub rfu_dynamic: Option<bool>,
+    pub oracle_llc: bool,
+    /// Execute `mma` through the AOT PJRT artifact (needs the `xla`
+    /// feature + artifacts; jobs fail gracefully otherwise).
+    pub use_xla: bool,
+}
+
+/// Every key a job line may carry. Unknown keys are rejected at parse
+/// time: a typoed optional field (`"bloc":8`) would otherwise silently
+/// run a different experiment than the one requested.
+const JOB_KEYS: [&str; 13] = [
+    "id",
+    "kernel",
+    "dataset",
+    "variant",
+    "block",
+    "scale",
+    "verify",
+    "riq",
+    "vmr",
+    "llc_hit_latency",
+    "rfu_dynamic",
+    "oracle_llc",
+    "xla",
+];
+
+impl JobRequest {
+    pub fn new(kernel: KernelKind, dataset: DatasetKind, variant: Variant) -> Self {
+        Self {
+            id: None,
+            kernel,
+            dataset,
+            variant,
+            block: 1,
+            scale: 0.5,
+            verify: false,
+            riq_entries: None,
+            vmr_entries: None,
+            llc_hit_latency: None,
+            rfu_dynamic: None,
+            oracle_llc: false,
+            use_xla: false,
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Self, String> {
+        let obj = Json::parse(line)?;
+        match &obj {
+            Json::Obj(fields) => {
+                for (key, _) in fields {
+                    if !JOB_KEYS.contains(&key.as_str()) {
+                        return Err(format!(
+                            "unknown job field '{key}' (expected one of: {})",
+                            JOB_KEYS.join(", ")
+                        ));
+                    }
+                }
+            }
+            _ => return Err("job line must be a JSON object".into()),
+        }
+        let str_field = |key: &str| obj.get(key).and_then(Json::as_str);
+        let kernel_name = str_field("kernel").ok_or("missing string field 'kernel'")?;
+        let kernel = KernelKind::from_name(kernel_name)
+            .ok_or_else(|| format!("unknown kernel '{kernel_name}'"))?;
+        let dataset_name = str_field("dataset").ok_or("missing string field 'dataset'")?;
+        let dataset = DatasetKind::from_name(dataset_name)
+            .ok_or_else(|| format!("unknown dataset '{dataset_name}'"))?;
+        let variant_name = str_field("variant").ok_or("missing string field 'variant'")?;
+        let variant = Variant::from_name(variant_name)
+            .ok_or_else(|| format!("unknown variant '{variant_name}'"))?;
+        let block = match obj.get("block") {
+            None => 1,
+            Some(v) => v.as_usize().ok_or("'block' must be a non-negative integer")?,
+        };
+        if block < 1 {
+            return Err("'block' must be >= 1".into());
+        }
+        let scale = match obj.get("scale") {
+            None => 0.5,
+            Some(v) => v.as_f64().ok_or("'scale' must be a number")?,
+        };
+        if !(scale > 0.0 && scale <= 1.0) {
+            return Err(format!("'scale' must be in (0, 1], got {scale}"));
+        }
+        let opt_bool = |key: &str| -> Result<Option<bool>, String> {
+            match obj.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => {
+                    v.as_bool().map(Some).ok_or_else(|| format!("'{key}' must be a bool"))
+                }
+            }
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>, String> {
+            match obj.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => {
+                    v.as_usize().map(Some).ok_or_else(|| format!("'{key}' must be an integer"))
+                }
+            }
+        };
+        Ok(Self {
+            id: str_field("id").map(String::from),
+            kernel,
+            dataset,
+            variant,
+            block,
+            scale,
+            verify: opt_bool("verify")?.unwrap_or(false),
+            riq_entries: opt_usize("riq")?,
+            vmr_entries: opt_usize("vmr")?,
+            llc_hit_latency: opt_usize("llc_hit_latency")?.map(|v| v as u64),
+            rfu_dynamic: opt_bool("rfu_dynamic")?,
+            oracle_llc: opt_bool("oracle_llc")?.unwrap_or(false),
+            use_xla: opt_bool("xla")?.unwrap_or(false),
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        if let Some(id) = &self.id {
+            s.push_str(&format!("\"id\":\"{}\",", escape(id)));
+        }
+        s.push_str(&format!(
+            "\"kernel\":\"{}\",\"dataset\":\"{}\",\"variant\":\"{}\",\"block\":{},\"scale\":{}",
+            self.kernel.name(),
+            self.dataset.name(),
+            self.variant.name(),
+            self.block,
+            self.scale
+        ));
+        if self.verify {
+            s.push_str(",\"verify\":true");
+        }
+        if let Some(riq) = self.riq_entries {
+            s.push_str(&format!(",\"riq\":{riq}"));
+        }
+        if let Some(vmr) = self.vmr_entries {
+            s.push_str(&format!(",\"vmr\":{vmr}"));
+        }
+        if let Some(lat) = self.llc_hit_latency {
+            s.push_str(&format!(",\"llc_hit_latency\":{lat}"));
+        }
+        if let Some(dynamic) = self.rfu_dynamic {
+            s.push_str(&format!(",\"rfu_dynamic\":{dynamic}"));
+        }
+        if self.oracle_llc {
+            s.push_str(",\"oracle_llc\":true");
+        }
+        if self.use_xla {
+            s.push_str(",\"xla\":true");
+        }
+        s.push('}');
+        s
+    }
+
+    /// The [`RunSpec`] this request describes.
+    pub fn to_spec(&self) -> RunSpec {
+        let point = BenchPoint::new(self.kernel, self.dataset, self.block, self.scale);
+        let mut spec = RunSpec::new(point, self.variant);
+        spec.verify = self.verify;
+        spec.riq_entries = self.riq_entries;
+        spec.vmr_entries = self.vmr_entries;
+        spec.llc_hit_latency = self.llc_hit_latency;
+        spec.rfu_dynamic = self.rfu_dynamic;
+        spec.oracle_llc = self.oracle_llc;
+        spec
+    }
+}
+
+/// One line of result output: the job id echoed back, the run name, and
+/// either the headline stats or the failure message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResponse {
+    pub id: Option<String>,
+    pub name: String,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub cycles: u64,
+    pub instrs: u64,
+    pub energy_pj: f64,
+    pub verify_err: Option<f64>,
+    pub cache_hit: bool,
+    pub wall_ms: f64,
+}
+
+impl JobResponse {
+    /// Package a worker outcome for the wire. `name` falls back to the
+    /// spec name for failed jobs, which the caller supplies.
+    pub fn from_outcome(id: Option<String>, spec_name: &str, outcome: &JobOutcome) -> Self {
+        let wall_ms = outcome.wall.as_secs_f64() * 1e3;
+        match &outcome.result {
+            Ok(r) => Self {
+                id,
+                name: r.name.clone(),
+                ok: true,
+                error: None,
+                cycles: r.stats.cycles,
+                instrs: r.stats.instrs_retired,
+                energy_pj: r.energy.total_pj(),
+                verify_err: r.verify_err.map(|e| e as f64),
+                cache_hit: outcome.cache_hit,
+                wall_ms,
+            },
+            Err(e) => Self {
+                id,
+                name: spec_name.to_string(),
+                ok: false,
+                error: Some(e.clone()),
+                cycles: 0,
+                instrs: 0,
+                energy_pj: 0.0,
+                verify_err: None,
+                cache_hit: outcome.cache_hit,
+                wall_ms,
+            },
+        }
+    }
+
+    /// A failure line for a job that never produced an outcome (e.g. a
+    /// line that didn't parse) — still protocol-conformant, with the
+    /// caller's `id` echoed when it could be recovered.
+    pub fn failure(id: Option<String>, name: &str, error: String) -> Self {
+        Self {
+            id,
+            name: name.to_string(),
+            ok: false,
+            error: Some(error),
+            cycles: 0,
+            instrs: 0,
+            energy_pj: 0.0,
+            verify_err: None,
+            cache_hit: false,
+            wall_ms: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        if let Some(id) = &self.id {
+            s.push_str(&format!("\"id\":\"{}\",", escape(id)));
+        }
+        s.push_str(&format!("\"name\":\"{}\",\"ok\":{}", escape(&self.name), self.ok));
+        if let Some(e) = &self.error {
+            s.push_str(&format!(",\"error\":\"{}\"", escape(e)));
+        } else {
+            s.push_str(&format!(
+                ",\"cycles\":{},\"instrs\":{},\"energy_pj\":{}",
+                self.cycles, self.instrs, self.energy_pj
+            ));
+            if let Some(err) = self.verify_err {
+                s.push_str(&format!(",\"verify_err\":{err}"));
+            }
+        }
+        s.push_str(&format!(",\"cache_hit\":{},\"wall_ms\":{}", self.cache_hit, self.wall_ms));
+        s.push('}');
+        s
+    }
+
+    pub fn parse(line: &str) -> Result<Self, String> {
+        let obj = Json::parse(line)?;
+        let name =
+            obj.get("name").and_then(Json::as_str).ok_or("missing string field 'name'")?;
+        let ok = obj.get("ok").and_then(Json::as_bool).ok_or("missing bool field 'ok'")?;
+        Ok(Self {
+            id: obj.get("id").and_then(Json::as_str).map(String::from),
+            name: name.to_string(),
+            ok,
+            error: obj.get("error").and_then(Json::as_str).map(String::from),
+            cycles: obj.get("cycles").and_then(Json::as_u64).unwrap_or(0),
+            instrs: obj.get("instrs").and_then(Json::as_u64).unwrap_or(0),
+            energy_pj: obj.get("energy_pj").and_then(Json::as_f64).unwrap_or(0.0),
+            verify_err: obj.get("verify_err").and_then(Json::as_f64),
+            cache_hit: obj.get("cache_hit").and_then(Json::as_bool).unwrap_or(false),
+            wall_ms: obj.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_scalar_and_nesting() {
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse(" null ").unwrap(), Json::Null);
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        let v = Json::parse(r#"{"a":[1,2,{"b":"c"}],"d":{}}"#).unwrap();
+        let arr = v.get("a").unwrap();
+        match arr {
+            Json::Arr(items) => {
+                assert_eq!(items[1], Json::Num(2.0));
+                assert_eq!(items[2].get("b").unwrap().as_str(), Some("c"));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        assert_eq!(v.get("d"), Some(&Json::Obj(vec![])));
+    }
+
+    #[test]
+    fn json_string_escapes_round_trip() {
+        let original = "a\"b\\c\nd\te\u{1F600}é";
+        let encoded = format!("\"{}\"", escape(original));
+        assert_eq!(Json::parse(&encoded).unwrap().as_str(), Some(original));
+        // \u escapes decode too.
+        assert_eq!(Json::parse(r#""Aé""#).unwrap().as_str(), Some("Aé"));
+        // UTF-16 surrogate pairs (Python json.dumps default output).
+        let pair = "\"\\ud83d\\udcc8\"";
+        assert_eq!(Json::parse(pair).unwrap().as_str(), Some("\u{1F4C8}"));
+        for bad in ["\"\\ud83d\"", "\"\\ud83dx\"", "\"\\udcc8\"", "\"\\ud83dA\""] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        for bad in ["", "{", "{\"a\":}", "[1,]", "tru", "\"unterminated", "{} extra"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn job_request_round_trip() {
+        let mut req = JobRequest::new(
+            KernelKind::Sddmm,
+            DatasetKind::Gpt2Attention,
+            Variant::DareFull,
+        );
+        req.id = Some("sweep/7".into());
+        req.block = 8;
+        req.scale = 0.25;
+        req.verify = true;
+        req.riq_entries = Some(16);
+        req.llc_hit_latency = Some(40);
+        req.rfu_dynamic = Some(false);
+        req.use_xla = true;
+        let line = req.to_json();
+        let parsed = JobRequest::parse(&line).unwrap();
+        assert_eq!(parsed, req);
+        // And the derived spec carries the overrides into the machine.
+        let spec = parsed.to_spec();
+        assert_eq!(spec.config().riq_entries, 16);
+        assert_eq!(spec.config().llc.hit_latency, 40);
+        assert!(spec.verify);
+    }
+
+    #[test]
+    fn job_request_defaults_and_errors() {
+        let req =
+            JobRequest::parse(r#"{"kernel":"spmm","dataset":"pubmed","variant":"nvr"}"#).unwrap();
+        assert_eq!(req.block, 1);
+        assert_eq!(req.scale, 0.5);
+        assert!(!req.verify);
+        assert_eq!(req.riq_entries, None);
+        for bad in [
+            r#"{"dataset":"pubmed","variant":"nvr"}"#,
+            r#"{"kernel":"nope","dataset":"pubmed","variant":"nvr"}"#,
+            r#"{"kernel":"spmm","dataset":"pubmed","variant":"nvr","scale":0}"#,
+            r#"{"kernel":"spmm","dataset":"pubmed","variant":"nvr","block":0}"#,
+            r#"[1,2,3]"#,
+        ] {
+            assert!(JobRequest::parse(bad).is_err(), "accepted {bad}");
+        }
+        // Typoed optional fields must fail loudly, not run the wrong
+        // experiment at the defaults.
+        let typo = r#"{"kernel":"spmm","dataset":"pubmed","variant":"nvr","bloc":8}"#;
+        let err = JobRequest::parse(typo).unwrap_err();
+        assert!(err.contains("unknown job field 'bloc'"), "{err}");
+    }
+
+    #[test]
+    fn job_response_round_trip() {
+        let ok = JobResponse {
+            id: Some("j1".into()),
+            name: "sddmm/pubmed/B=1/dare-full".into(),
+            ok: true,
+            error: None,
+            cycles: 123_456_789,
+            instrs: 4242,
+            energy_pj: 98765.5,
+            verify_err: Some(1.5e-4),
+            cache_hit: true,
+            wall_ms: 12.25,
+        };
+        assert_eq!(JobResponse::parse(&ok.to_json()).unwrap(), ok);
+        let failed = JobResponse {
+            id: None,
+            name: "spmm/pubmed/B=1/nvr".into(),
+            ok: false,
+            error: Some("verification failed: c[1] mismatch \"quoted\"".into()),
+            cycles: 0,
+            instrs: 0,
+            energy_pj: 0.0,
+            verify_err: None,
+            cache_hit: false,
+            wall_ms: 0.5,
+        };
+        assert_eq!(JobResponse::parse(&failed.to_json()).unwrap(), failed);
+    }
+}

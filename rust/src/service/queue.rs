@@ -1,0 +1,181 @@
+//! Bounded MPMC job queue: a mutexed deque with two condvars (not-empty
+//! / not-full). `crossbeam` is unavailable offline, and for a handful of
+//! worker threads popping multi-millisecond simulation jobs a mutexed
+//! `VecDeque` is nowhere near the bottleneck — the bound is what
+//! matters, so a million-line `dare batch` file cannot balloon resident
+//! memory by materializing every job at once.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Returned by [`JobQueue::push`] after [`JobQueue::close`]; hands the
+/// rejected item back to the caller.
+#[derive(Debug)]
+pub struct Closed<T>(pub T);
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue, blocking while the queue is at capacity. Fails only
+    /// after [`close`](Self::close), returning the item to the caller.
+    pub fn push(&self, item: T) -> Result<(), Closed<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.items.len() >= self.capacity && !inner.closed {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return Err(Closed(item));
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while empty. After [`close`](Self::close) the
+    /// remaining items drain in FIFO order, then every caller gets
+    /// `None` — the worker-pool shutdown signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Items currently queued (a racy snapshot, for metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop accepting new items and wake every blocked producer and
+    /// consumer. Queued items still drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = JobQueue::bounded(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = JobQueue::bounded(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).is_err(), "push after close is rejected");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_pop() {
+        let q = Arc::new(JobQueue::bounded(1));
+        q.push(0usize).unwrap();
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let (q2, p2) = (q.clone(), pushed.clone());
+        let producer = std::thread::spawn(move || {
+            q2.push(1).unwrap();
+            p2.store(1, Ordering::SeqCst);
+        });
+        // The producer must be blocked: the queue is full.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "push returned while full");
+        assert_eq!(q.pop(), Some(0));
+        producer.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn mpmc_many_producers_many_consumers() {
+        let q = Arc::new(JobQueue::bounded(4));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    q.push(p * 25 + i).unwrap();
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let (q, sum) = (q.clone(), sum.clone());
+            handles.push(std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    sum.fetch_add(v, Ordering::SeqCst);
+                }
+            }));
+        }
+        // Wait for producers, then close so consumers exit.
+        for h in handles.drain(..4) {
+            h.join().unwrap();
+        }
+        q.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), (0..100).sum::<usize>());
+    }
+}

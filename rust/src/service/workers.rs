@@ -1,0 +1,261 @@
+//! The worker pool and the public [`Service`] facade: a long-lived pool
+//! of OS threads draining the bounded job queue through the shared
+//! workload cache. (tokio is unavailable offline; simulations are
+//! CPU-bound, so dedicated threads are the right tool anyway.)
+
+use super::cache::{Fetch, WorkloadCache};
+use super::job::{Job, JobOutcome};
+use super::metrics::{MetricsSnapshot, ServiceMetrics};
+use super::panic_message;
+use super::queue::JobQueue;
+use crate::coordinator::{run_prebuilt, RunResult, RunSpec};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Worker threads (0 = one per core).
+    pub workers: usize,
+    /// Bounded job-queue capacity (backpressure bound for producers).
+    pub queue_capacity: usize,
+    /// Total workload-cache capacity, in built workloads.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { workers: 0, queue_capacity: 1024, cache_capacity: 32 }
+    }
+}
+
+impl ServiceConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Self::default() }
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// The batch simulation service: submit [`RunSpec`]s, get results back
+/// over a channel (streaming) or as an ordered batch. Lives until
+/// dropped or [`shutdown`](Service::shutdown); the workload cache
+/// persists across batches, which is where sweep-level reuse comes from.
+pub struct Service {
+    queue: Arc<JobQueue<Job>>,
+    cache: Arc<WorkloadCache>,
+    metrics: Arc<ServiceMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_seq: AtomicU64,
+}
+
+impl Service {
+    pub fn start(cfg: ServiceConfig) -> Self {
+        let n = cfg.resolved_workers();
+        let queue = Arc::new(JobQueue::bounded(cfg.queue_capacity));
+        let cache = Arc::new(WorkloadCache::new(cfg.cache_capacity));
+        let metrics = Arc::new(ServiceMetrics::new(n));
+        let workers = (0..n)
+            .map(|wid| {
+                let queue = queue.clone();
+                let cache = cache.clone();
+                let metrics = metrics.clone();
+                std::thread::Builder::new()
+                    .name(format!("dare-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, &queue, &cache, &metrics))
+                    .expect("spawning service worker")
+            })
+            .collect();
+        Self { queue, cache, metrics, workers, next_seq: AtomicU64::new(0) }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one spec; the outcome arrives on `reply`. Returns the
+    /// job's sequence number (monotonic in submission order).
+    pub fn submit(&self, spec: RunSpec, use_xla: bool, reply: mpsc::Sender<JobOutcome>) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        self.metrics.job_submitted();
+        if self.queue.push(Job { seq, spec, use_xla, reply }).is_err() {
+            panic!("submit on a shut-down service");
+        }
+        seq
+    }
+
+    /// Run a batch to completion, results in spec order. Panics if any
+    /// job fails, mirroring `run_one`'s failure behavior — harnesses get
+    /// the same semantics they had before the service existed.
+    pub fn run_batch(&self, specs: &[RunSpec]) -> Vec<RunResult> {
+        self.try_run_batch(specs)
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|e| panic!("service job failed: {e}")))
+            .collect()
+    }
+
+    /// Run a batch to completion, returning each job's outcome in spec
+    /// order (failed jobs carry their error instead of poisoning the
+    /// whole batch — the `dare batch` CLI path).
+    pub fn try_run_batch(&self, specs: &[RunSpec]) -> Vec<Result<RunResult, String>> {
+        self.run_batch_outcomes(specs).into_iter().map(|o| o.result).collect()
+    }
+
+    /// Run a batch and return the full outcomes (result + cache/wall
+    /// info), in spec order.
+    pub fn run_batch_outcomes(&self, specs: &[RunSpec]) -> Vec<JobOutcome> {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        let (tx, rx) = mpsc::channel();
+        for spec in specs {
+            self.submit(spec.clone(), false, tx.clone());
+        }
+        drop(tx);
+        // Each job owns one Sender clone; the iterator ends when the
+        // last outcome has been delivered and its sender dropped.
+        let mut outcomes: Vec<JobOutcome> = rx.iter().collect();
+        assert_eq!(
+            outcomes.len(),
+            specs.len(),
+            "a service worker died without replying (bug in worker_loop)"
+        );
+        // Sequence numbers are assigned in submission order, so sorting
+        // restores spec order even with interleaved foreign batches.
+        outcomes.sort_by_key(|o| o.seq);
+        outcomes
+    }
+
+    /// Point-in-time service metrics (jobs/sec, cache hit rate,
+    /// per-worker busy time, queue depth).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot(self.queue.len(), self.cache.counters())
+    }
+
+    pub fn cache(&self) -> &WorkloadCache {
+        &self.cache
+    }
+
+    /// Drain outstanding jobs and stop the workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.queue.close();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    queue: &JobQueue<Job>,
+    cache: &WorkloadCache,
+    metrics: &ServiceMetrics,
+) {
+    while let Some(job) = queue.pop() {
+        let Job { seq, spec, use_xla, reply } = job;
+        let t0 = Instant::now();
+        // Key derivation can assert on malformed specs (e.g. scale out
+        // of range); catch it so the worker survives any job.
+        let key = std::panic::catch_unwind(AssertUnwindSafe(|| spec.workload_key()))
+            .map_err(|p| format!("invalid spec '{}': {}", spec.name(), panic_message(p.as_ref())));
+        let fetched = key.and_then(|k| {
+            cache
+                .get_or_build(&k)
+                .map_err(|e| format!("workload build failed for {}: {e}", spec.name()))
+        });
+        let (result, cache_hit) = match fetched {
+            Err(e) => (Err(e), false),
+            Ok((workload, fetch)) => {
+                let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    run_prebuilt(&spec, &workload, use_xla)
+                }))
+                .map_err(|p| {
+                    format!("job '{}' panicked: {}", spec.name(), panic_message(p.as_ref()))
+                });
+                (run, fetch != Fetch::Built)
+            }
+        };
+        let wall = t0.elapsed();
+        let cycles = result.as_ref().map(|r| r.stats.cycles).unwrap_or(0);
+        metrics.job_done(wid, wall, cycles, result.is_ok());
+        // A dropped receiver (caller gave up on the batch) is not an
+        // error the worker can act on.
+        let _ = reply.send(JobOutcome { seq, result, cache_hit, wall });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BenchPoint;
+    use crate::kernels::KernelKind;
+    use crate::sim::Variant;
+    use crate::sparse::DatasetKind;
+
+    fn tiny(kernel: KernelKind, variant: Variant) -> RunSpec {
+        RunSpec::new(BenchPoint::new(kernel, DatasetKind::PubMed, 1, 0.04), variant)
+    }
+
+    #[test]
+    fn batch_preserves_spec_order_and_reuses_builds() {
+        let service = Service::start(ServiceConfig::with_workers(3));
+        let specs = vec![
+            tiny(KernelKind::Sddmm, Variant::Baseline),
+            tiny(KernelKind::SpMM, Variant::Baseline),
+            tiny(KernelKind::Sddmm, Variant::Nvr),
+            tiny(KernelKind::SpMM, Variant::DareFre),
+        ];
+        let results = service.run_batch(&specs);
+        assert_eq!(results.len(), specs.len());
+        for (r, s) in results.iter().zip(&specs) {
+            assert_eq!(r.name, s.name(), "results in spec order");
+            assert!(r.stats.cycles > 0);
+        }
+        // Baseline/Nvr/DareFre all use the strided lowering → one build
+        // per kernel, two hits across the four jobs.
+        let m = service.metrics();
+        assert_eq!(m.cache.builds(), 2);
+        assert_eq!(m.cache.hits + m.cache.coalesced, 2);
+        assert_eq!(m.jobs_completed, 4);
+    }
+
+    #[test]
+    fn failing_job_reports_instead_of_hanging() {
+        let service = Service::start(ServiceConfig::with_workers(2));
+        let mut bad = tiny(KernelKind::Sddmm, Variant::Baseline);
+        // An impossible machine: zero issue width panics inside the MPU
+        // construction/validation path.
+        bad.config_override = Some(|cfg| cfg.issue_width = 0);
+        let good = tiny(KernelKind::Sddmm, Variant::DareFre);
+        let out = service.try_run_batch(&[bad, good.clone()]);
+        assert!(out[0].is_err(), "bad machine surfaces as Err: {:?}", out[0]);
+        let good_result = out[1].as_ref().expect("good job unaffected");
+        assert_eq!(good_result.name, good.name());
+        assert_eq!(service.metrics().jobs_failed, 1);
+    }
+
+    #[test]
+    fn service_survives_shutdown_with_empty_queue() {
+        let service = Service::start(ServiceConfig::with_workers(2));
+        assert_eq!(service.worker_count(), 2);
+        service.shutdown(); // must not hang
+    }
+}

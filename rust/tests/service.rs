@@ -1,0 +1,151 @@
+//! Integration tests for the `dare::service` subsystem: cache-key
+//! properties, JSONL protocol round-trips, in-flight build dedup, and
+//! spec-order result delivery.
+
+use dare::coordinator::{run_one, BenchPoint, RunSpec};
+use dare::kernels::{KernelKind, WorkloadKey};
+use dare::service::{JobRequest, JobResponse, Service, ServiceConfig};
+use dare::sim::Variant;
+use dare::sparse::DatasetKind;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+fn tiny(kernel: KernelKind, dataset: DatasetKind, variant: Variant) -> RunSpec {
+    RunSpec::new(BenchPoint::new(kernel, dataset, 1, 0.04), variant)
+}
+
+fn hash_of(key: &WorkloadKey) -> u64 {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    h.finish()
+}
+
+#[test]
+fn cache_key_equality_and_hash_properties() {
+    let base = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.25);
+    let same = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.25);
+    assert_eq!(base, same);
+    assert_eq!(hash_of(&base), hash_of(&same), "equal keys must hash equally");
+
+    // Every single-field perturbation must change the key.
+    let perturbed = [
+        WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, 8, true, 0.25),
+        WorkloadKey::new(KernelKind::SpMM, DatasetKind::Gpt2Attention, 8, true, 0.25),
+        WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 1, true, 0.25),
+        WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, false, 0.25),
+        WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.26),
+    ];
+    for other in &perturbed {
+        assert_ne!(base, *other);
+    }
+
+    // Keys work as HashMap keys: insert-then-lookup with a fresh equal
+    // key, no collisions among the perturbations.
+    let mut map = std::collections::HashMap::new();
+    map.insert(base, "base");
+    for (i, other) in perturbed.iter().enumerate() {
+        map.insert(*other, "other");
+        assert_eq!(map.len(), i + 2);
+    }
+    let fresh = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.25);
+    assert_eq!(map.get(&fresh), Some(&"base"));
+}
+
+#[test]
+fn cache_key_derives_from_spec_variant() {
+    let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, 0.04);
+    // Strided variants share a key; densified variants share the other.
+    let strided: Vec<WorkloadKey> = [Variant::Baseline, Variant::Nvr, Variant::DareFre]
+        .iter()
+        .map(|&v| RunSpec::new(p, v).workload_key())
+        .collect();
+    let densified: Vec<WorkloadKey> = [Variant::DareGsa, Variant::DareFull]
+        .iter()
+        .map(|&v| RunSpec::new(p, v).workload_key())
+        .collect();
+    assert!(strided.windows(2).all(|w| w[0] == w[1]));
+    assert!(densified.windows(2).all(|w| w[0] == w[1]));
+    assert_ne!(strided[0], densified[0]);
+}
+
+#[test]
+fn jsonl_protocol_round_trip_job_to_result() {
+    // job line → spec → (simulated) → outcome → result line → parse.
+    let mut req = JobRequest::new(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFull);
+    req.id = Some("rt/0".into());
+    req.scale = 0.04;
+    req.verify = true;
+    let parsed = JobRequest::parse(&req.to_json()).expect("request round-trip");
+    assert_eq!(parsed, req);
+
+    let spec = parsed.to_spec();
+    let service = Service::start(ServiceConfig::with_workers(1));
+    let outcomes = service.run_batch_outcomes(std::slice::from_ref(&spec));
+    let response = JobResponse::from_outcome(parsed.id.clone(), &spec.name(), &outcomes[0]);
+    let line = response.to_json();
+    let reparsed = JobResponse::parse(&line).expect("response round-trip");
+    assert_eq!(reparsed, response);
+    assert!(reparsed.ok, "{line}");
+    assert_eq!(reparsed.id.as_deref(), Some("rt/0"));
+    assert_eq!(reparsed.name, spec.name());
+    assert!(reparsed.cycles > 0);
+    assert!(reparsed.verify_err.unwrap() < 1e-3);
+}
+
+#[test]
+fn n_identical_specs_build_once() {
+    let service = Service::start(ServiceConfig::with_workers(4));
+    let specs: Vec<RunSpec> =
+        (0..8).map(|_| tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre)).collect();
+    let results = service.run_batch(&specs);
+    assert_eq!(results.len(), 8);
+    // Deterministic simulator + shared build → identical cycle counts.
+    assert!(results.windows(2).all(|w| w[0].stats.cycles == w[1].stats.cycles));
+    let counters = service.metrics().cache;
+    assert_eq!(counters.builds(), 1, "8 identical queued specs must build exactly once");
+    assert_eq!(counters.hits + counters.coalesced, 7);
+    assert!(counters.hit_rate() > 0.8);
+}
+
+#[test]
+fn service_results_match_run_one_in_spec_order() {
+    let specs = vec![
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::Baseline),
+        tiny(KernelKind::SpMM, DatasetKind::PubMed, Variant::DareFull),
+        tiny(KernelKind::Sddmm, DatasetKind::Gpt2Attention, Variant::Nvr),
+    ];
+    let service = Service::start(ServiceConfig::with_workers(3));
+    let batch = service.run_batch(&specs);
+    for (spec, from_service) in specs.iter().zip(&batch) {
+        let direct = run_one(spec, false);
+        assert_eq!(from_service.name, direct.name, "spec order preserved");
+        assert_eq!(
+            from_service.stats.cycles, direct.stats.cycles,
+            "cache-shared build must not change results for {}",
+            direct.name
+        );
+    }
+}
+
+#[test]
+fn metrics_snapshot_reflects_batch() {
+    let service = Service::start(ServiceConfig::with_workers(2));
+    let specs: Vec<RunSpec> = vec![
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::Baseline),
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre),
+    ];
+    let _ = service.run_batch(&specs);
+    let m = service.metrics();
+    assert_eq!(m.jobs_submitted, 2);
+    assert_eq!(m.jobs_completed, 2);
+    assert_eq!(m.jobs_failed, 0);
+    assert_eq!(m.queue_depth, 0, "batch drained");
+    assert_eq!(m.worker_busy.len(), 2);
+    assert!(m.sim_cycles > 0);
+    assert!(m.jobs_per_sec() > 0.0);
+    assert!(m.worker_utilization() > 0.0);
+    // The printable form carries the headline numbers.
+    let text = format!("{m}");
+    assert!(text.contains("2 jobs"), "{text}");
+    assert!(text.contains("hit rate"), "{text}");
+}
