@@ -1,8 +1,11 @@
-//! Shared harness plumbing: run options, direct workload execution, and
-//! the uniform-random patterns used by Fig 1a.
+//! Shared harness plumbing: run options, the per-process shared service
+//! every figure sweeps through, direct workload execution, and the
+//! uniform-random patterns used by Fig 1a.
 
+use crate::coordinator::{RunResult, RunSpec};
 use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
 use crate::kernels::Workload;
+use crate::service::{Service, ServiceConfig};
 use crate::sim::{Mpu, NativeMma, SimConfig, SimStats};
 use crate::sparse::{Csc, Triplet};
 use crate::util::prng::Pcg32;
@@ -23,6 +26,30 @@ impl Default for HarnessOpts {
     fn default() -> Self {
         Self { scale: 0.5, threads: 0, verify: false }
     }
+}
+
+/// Workload-cache capacity of the shared harness service. `dare all`
+/// sweeps ~50 distinct workloads across fig1–fig9; sized so cross-figure
+/// reuse (fig5's grid re-used by fig6, fig9's B∈{1,8} points shared with
+/// fig5/fig8) survives without evictions.
+const SHARED_CACHE_CAPACITY: usize = 128;
+
+/// The per-process service every figure harness runs through, so `dare
+/// all` builds each workload exactly once across figures. First caller
+/// fixes the worker count (later `opts.threads` values are ignored —
+/// the CLI passes one value for the whole run).
+pub fn shared_service(opts: HarnessOpts) -> &'static Service {
+    crate::service::shared(ServiceConfig {
+        workers: opts.threads,
+        cache_capacity: SHARED_CACHE_CAPACITY,
+        ..ServiceConfig::default()
+    })
+}
+
+/// Run a spec batch on the shared harness service, results in spec
+/// order. The figure harnesses' sweep entry point.
+pub fn run_shared(specs: &[RunSpec], opts: HarnessOpts) -> Vec<RunResult> {
+    shared_service(opts).run_batch(specs)
 }
 
 /// Run one pre-built workload under `cfg` (native functional backend).
@@ -77,6 +104,31 @@ mod tests {
         p.check().unwrap();
         let got = p.sparsity();
         assert!((got - 0.9).abs() < 0.01, "sparsity {got}");
+    }
+
+    #[test]
+    fn shared_service_reuses_builds_across_batches() {
+        use crate::coordinator::BenchPoint;
+        use crate::kernels::KernelKind;
+        use crate::sim::Variant;
+        use crate::sparse::DatasetKind;
+        let opts = HarnessOpts { scale: 0.04, threads: 2, verify: false };
+        let spec = RunSpec::new(
+            BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, opts.scale),
+            Variant::DareFre,
+        );
+        let first = run_shared(std::slice::from_ref(&spec), opts);
+        let before = shared_service(opts).metrics().cache;
+        let second = run_shared(std::slice::from_ref(&spec), opts);
+        let after = shared_service(opts).metrics().cache;
+        // Same build served both batches: identical results, and the
+        // second lookup reused the resident workload. (Counters are
+        // process-global, so compare deltas, not absolutes.)
+        assert_eq!(first[0].stats.cycles, second[0].stats.cycles);
+        assert!(
+            after.hits + after.coalesced > before.hits + before.coalesced,
+            "second batch must reuse the first batch's build: {before:?} → {after:?}"
+        );
     }
 
     #[test]

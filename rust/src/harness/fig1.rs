@@ -6,8 +6,8 @@
 //!     workloads degrade.
 //! (c) PE utilization across workloads on the systolic array.
 
-use super::common::{emit, run_workload, HarnessOpts};
-use crate::coordinator::{run_many, BenchPoint, RunSpec};
+use super::common::{emit, run_shared, run_workload, HarnessOpts};
+use crate::coordinator::{BenchPoint, RunSpec};
 use crate::kernels::{compile_gemm, compile_sddmm, KernelKind};
 use crate::sim::{SimConfig, Variant};
 use crate::sparse::datasets::attention_map;
@@ -63,7 +63,7 @@ pub fn fig1b(opts: HarnessOpts) -> Table {
         specs.push(RunSpec::new(p, Variant::Baseline));
         specs.push(RunSpec::new(p, Variant::Nvr));
     }
-    let results = run_many(&specs, opts.threads);
+    let results = run_shared(&specs, opts);
     let mut t = Table::new(
         "Fig 1b — NVR performance normalized to baseline MPU (gpt2-attn)",
         &["workload", "baseline cycles", "nvr cycles", "nvr speedup"],

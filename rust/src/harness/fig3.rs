@@ -4,8 +4,8 @@
 //!     of NVR across datasets.
 //! (b) Average demand memory-access latency: baseline vs NVR.
 
-use super::common::{emit, HarnessOpts};
-use crate::coordinator::{run_many, BenchPoint, RunSpec};
+use super::common::{emit, run_shared, HarnessOpts};
+use crate::coordinator::{BenchPoint, RunSpec};
 use crate::kernels::KernelKind;
 use crate::sim::Variant;
 use crate::sparse::DatasetKind;
@@ -26,7 +26,7 @@ fn specs_for(opts: HarnessOpts, block: usize) -> (Vec<RunSpec>, Vec<DatasetKind>
 pub fn fig3a(opts: HarnessOpts) -> Table {
     // B=8 is where reuse makes redundancy bite (paper §II-C).
     let (specs, datasets) = specs_for(opts, 8);
-    let results = run_many(&specs, opts.threads);
+    let results = run_shared(&specs, opts);
     let mut t = Table::new(
         "Fig 3a — NVR on SDDMM (B=8): redundancy vs miss rate",
         &["dataset", "miss rate", "prefetch redundancy", "bw occupancy (nvr)", "bw occupancy (base)"],
@@ -48,8 +48,10 @@ pub fn fig3a(opts: HarnessOpts) -> Table {
 
 /// Fig 3b: average demand memory latency, baseline vs NVR.
 pub fn fig3b(opts: HarnessOpts) -> Table {
+    // The same specs as fig3a: when `dare all` runs both, the shared
+    // service serves fig3b's builds straight from the cache.
     let (specs, datasets) = specs_for(opts, 8);
-    let results = run_many(&specs, opts.threads);
+    let results = run_shared(&specs, opts);
     let mut t = Table::new(
         "Fig 3b — average memory access latency (cycles), SDDMM B=8",
         &["dataset", "baseline", "nvr", "nvr/baseline"],

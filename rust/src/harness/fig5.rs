@@ -5,11 +5,10 @@
 //! DARE-full per benchmark (GSA is disabled by offline profiling,
 //! §V-A1/§V-G).
 
-use super::common::{emit, HarnessOpts};
+use super::common::{emit, shared_service, HarnessOpts};
 use crate::coordinator::{BenchPoint, RunResult, RunSpec};
 use crate::energy::{efficiency, EnergyModel};
 use crate::kernels::KernelKind;
-use crate::service::{Service, ServiceConfig};
 use crate::sim::Variant;
 use crate::sparse::DatasetKind;
 use crate::util::stats::geomean;
@@ -44,18 +43,18 @@ pub fn run_grid(opts: HarnessOpts, blocks: &[usize]) -> GridResults {
             specs.push(s);
         }
     }
-    // One service per grid: the five variants of each point share two
-    // workload builds (strided + densified) through the cache.
-    let service = Service::start(ServiceConfig::with_workers(opts.threads));
+    // The shared per-process service: the five variants of each point
+    // share two workload builds (strided + densified), and under `dare
+    // all` the fig6 grid (identical specs) is served entirely from the
+    // cache warmed here.
+    let service = shared_service(opts);
     let t0 = std::time::Instant::now();
     let flat = service.run_batch(&specs);
-    let metrics = service.metrics();
     println!(
-        "[fig5-grid] {} jobs in {:.2}s ({:.1} jobs/s) — workload cache: {}",
+        "[fig5-grid] {} jobs in {:.2}s — shared workload cache: {}",
         specs.len(),
         t0.elapsed().as_secs_f64(),
-        metrics.jobs_per_sec(),
-        metrics.cache.summary()
+        service.metrics().cache.summary()
     );
     let per = 1 + VARIANTS.len();
     let runs = flat.chunks(per).map(|c| c.to_vec()).collect();
@@ -134,6 +133,7 @@ pub fn fig6(opts: HarnessOpts) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::service::{Service, ServiceConfig};
 
     #[test]
     fn grid_runs_all_points_tiny() {

@@ -4,11 +4,10 @@
 //! The static classifier collapses once LLC latency crosses its
 //! threshold (every hit looks like a miss → every entry granted).
 
-use super::common::{emit, HarnessOpts};
+use super::common::{emit, shared_service, HarnessOpts};
 use crate::coordinator::{BenchPoint, RunSpec};
 use crate::energy::{efficiency, EnergyModel};
 use crate::kernels::KernelKind;
-use crate::service::{Service, ServiceConfig};
 use crate::sim::Variant;
 use crate::sparse::DatasetKind;
 use crate::util::table::Table;
@@ -31,18 +30,16 @@ pub fn fig7(opts: HarnessOpts) -> Table {
         specs.push(static_);
     }
     // All 15 specs vary only the machine (LLC latency / RFU mode), so
-    // the whole sweep shares ONE workload build through the service
-    // cache — the config knobs are not part of the cache key.
-    let service = Service::start(ServiceConfig::with_workers(opts.threads));
+    // the whole sweep shares ONE workload build through the shared
+    // service cache — the config knobs are not part of the cache key.
+    let service = shared_service(opts);
     let t0 = std::time::Instant::now();
     let results = service.run_batch(&specs);
-    let metrics = service.metrics();
     println!(
-        "[fig7-sweep] {} jobs in {:.2}s ({:.1} jobs/s) — workload cache: {}",
+        "[fig7-sweep] {} jobs in {:.2}s — shared workload cache: {}",
         specs.len(),
         t0.elapsed().as_secs_f64(),
-        metrics.jobs_per_sec(),
-        metrics.cache.summary()
+        service.metrics().cache.summary()
     );
     let model = EnergyModel::default();
     let mut t = Table::new(
@@ -77,6 +74,7 @@ pub fn fig7(opts: HarnessOpts) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::service::{Service, ServiceConfig};
 
     #[test]
     fn static_rfu_grants_everything_past_its_threshold() {

@@ -3,8 +3,8 @@
 //! baseline at B=1. Shows the GSA↔FRE crossover that motivates the
 //! offline profiling switch of §V-G.
 
-use super::common::{emit, HarnessOpts};
-use crate::coordinator::{run_many, BenchPoint, RunSpec};
+use super::common::{emit, run_shared, HarnessOpts};
+use crate::coordinator::{BenchPoint, RunSpec};
 use crate::kernels::KernelKind;
 use crate::sim::Variant;
 use crate::sparse::DatasetKind;
@@ -27,7 +27,7 @@ pub fn fig9(opts: HarnessOpts) -> Table {
                 specs.push(RunSpec::new(p, v));
             }
         }
-        let results = run_many(&specs, opts.threads);
+        let results = run_shared(&specs, opts);
         // normalizer: baseline at B=1
         let base_b1 = results[0].stats.cycles as f64;
         for (bi, &b) in BLOCKS.iter().enumerate() {
@@ -53,7 +53,9 @@ pub fn gsa_disable_threshold(opts: HarnessOpts, kernel: KernelKind) -> usize {
         specs.push(RunSpec::new(p, Variant::DareFre));
         specs.push(RunSpec::new(p, Variant::DareFull));
     }
-    let results = run_many(&specs, opts.threads);
+    // Under `dare all` these specs are a subset of the fig9 sweep just
+    // run: every build comes from the shared cache.
+    let results = run_shared(&specs, opts);
     for (bi, &b) in BLOCKS.iter().enumerate() {
         let fre = results[2 * bi].stats.cycles;
         let full = results[2 * bi + 1].stats.cycles;

@@ -7,8 +7,9 @@
 //! dare isa | config | overhead                                  tables
 //! dare all [--scale 0.5]                                        everything
 //! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
-//! dare batch <jobs.jsonl>                                       service: run a JSONL job file
-//! dare serve                                                    service: JSONL jobs stdin→stdout
+//! dare batch <jobs.jsonl> [--stream]                            service: run a JSONL job file
+//! dare serve [--socket P | --tcp H:P]                           service: JSONL jobs, stdio or socket
+//! dare client (--socket P | --tcp H:P) [jobs.jsonl] [--shutdown]   drive a running server
 //! dare asm <file.s>                                             assemble + run
 //! ```
 
@@ -16,33 +17,47 @@ use dare::coordinator::{run_one, BenchPoint, RunSpec};
 use dare::harness::{fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
 use dare::isa::asm;
 use dare::kernels::KernelKind;
-use dare::service::{JobOutcome, JobRequest, JobResponse, Service, ServiceConfig};
+use dare::service::transport::{self, Listener, SessionOpts, Stream};
+use dare::service::{JobOutcome, JobResponse, Json, Service, ServiceConfig};
 use dare::sim::{Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::cli::Args;
-use std::collections::HashMap;
-use std::io::{BufRead, Write};
-use std::sync::{mpsc, Arc, Mutex};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
 
 type CliError = Box<dyn std::error::Error>;
 
+const HELP: &str = "usage: dare <command> [options]\n\
+commands:\n\
+  fig1a fig1b fig1c fig3a fig3b fig5 fig6 fig7 fig8 fig9   regenerate a figure\n\
+  isa config overhead                                      print a table\n\
+  all            every figure + table (one shared workload cache across figures)\n\
+  run            run one benchmark point (--kernel --dataset --block --variant [--xla] [--verify])\n\
+  batch          run a JSONL job file through the simulation service (results on stdout;\n\
+                 file order by default, completion-order events with --stream)\n\
+  serve          long-lived service: JSONL jobs on stdin (default) or over --socket/--tcp;\n\
+                 responses stream as {\"event\":\"result\",…} lines in completion order,\n\
+                 each batch terminated by a {\"event\":\"done\",\"metrics\":…} summary;\n\
+                 control lines: {\"cmd\":\"done\"} barrier, {\"cmd\":\"shutdown\"} drain+exit\n\
+                 (socket mode also drains on SIGTERM/SIGINT; stdio drains at EOF)\n\
+  client         connect to a serve socket, submit a job file (if given), print the\n\
+                 streamed responses; --shutdown asks the server to drain and exit\n\
+  asm            assemble and simulate a .s file (DARE-full MPU)\n\
+  help           print this help\n\
+options:\n\
+  --scale F          dataset scale in (0,1] (default 0.5)\n\
+  --threads N        service worker threads (default all cores)\n\
+  --cache N          service workload-cache capacity (default 32)\n\
+  --verify           check functional outputs against references\n\
+  --socket PATH      serve/client: unix socket path\n\
+  --tcp HOST:PORT    serve/client: TCP endpoint\n\
+  --stream           batch: emit streaming result/done events in completion order\n\
+  --metrics-json P   batch/serve: write the final service MetricsSnapshot as JSON to P\n\
+  --shutdown         client: send {\"cmd\":\"shutdown\"} after the jobs (if any)";
+
 fn usage() -> ! {
-    eprintln!(
-        "usage: dare <command> [options]\n\
-         commands:\n\
-           fig1a fig1b fig1c fig3a fig3b fig5 fig6 fig7 fig8 fig9   regenerate a figure\n\
-           isa config overhead                                      print a table\n\
-           all                                                      every figure + table\n\
-           run      run one benchmark point (--kernel --dataset --block --variant [--xla] [--verify])\n\
-           batch    run a JSONL job file through the simulation service (results on stdout)\n\
-           serve    long-lived service: JSONL jobs on stdin, results on stdout\n\
-           asm      assemble and simulate a .s file (DARE-full MPU)\n\
-         options:\n\
-           --scale F     dataset scale in (0,1] (default 0.5)\n\
-           --threads N   service worker threads (default all cores)\n\
-           --cache N     service workload-cache capacity (default 32)\n\
-           --verify      check functional outputs against references"
-    );
+    eprintln!("{HELP}");
     std::process::exit(2)
 }
 
@@ -55,39 +70,59 @@ fn service_config(args: &Args, opts: &HarnessOpts) -> ServiceConfig {
     }
 }
 
-/// A parsed, submission-ready job line.
-struct CliJob {
-    id: Option<String>,
-    spec: RunSpec,
-    use_xla: bool,
+/// Honor `--metrics-json PATH`: dump the service snapshot (jobs/s, cache
+/// hit rate, …) as one JSON object — the `BENCH_service.json` artifact
+/// the CI smoke job archives.
+fn write_metrics_json(args: &Args, service: &Service) -> Result<(), CliError> {
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(path, format!("{}\n", service.metrics().to_json()))?;
+        eprintln!("[service] metrics written to {path}");
+    }
+    Ok(())
 }
 
-/// Parse one JSONL job line.
-fn parse_job_line(line: &str, verify: bool) -> Result<CliJob, String> {
-    let req = JobRequest::parse(line)?;
-    let mut spec = req.to_spec();
-    spec.verify = spec.verify || verify;
-    Ok(CliJob { id: req.id, spec, use_xla: req.use_xla })
-}
-
-/// `dare batch <jobs.jsonl>`: parse the whole job file first (a typo on
-/// line 1500 aborts before any simulation runs), then submit everything
-/// and emit one JSONL result line per job — in file order — plus
-/// service metrics on stderr.
+/// `dare batch <jobs.jsonl>`: run a job file through the service.
+///
+/// Default mode parses the whole file first (a typo on line 1500 aborts
+/// before any simulation runs), then emits one plain JSONL result line
+/// per job in **file order**. `--stream` runs the file through the same
+/// pipelined session loop as `dare serve`, emitting `result` events in
+/// **completion order** plus the terminal `done` summary — malformed
+/// lines become `"ok":false` events instead of aborting. Metrics go to
+/// stderr either way.
 fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     let path = args.positional.first().ok_or("batch requires a jobs.jsonl path")?;
+    let service = Service::start(service_config(args, &opts));
+    if args.flag("stream") {
+        let file = std::fs::File::open(path)?;
+        let summary = transport::run_session(
+            &service,
+            BufReader::new(file),
+            Box::new(std::io::stdout()),
+            &SessionOpts { verify: opts.verify },
+            None,
+        )?;
+        eprintln!("{}", service.metrics());
+        write_metrics_json(args, &service)?;
+        if summary.failed > 0 {
+            return Err(
+                format!("{} of {} jobs failed (see result events)", summary.failed, summary.jobs)
+                    .into(),
+            );
+        }
+        return Ok(());
+    }
     let text = std::fs::read_to_string(path)?;
-    let mut jobs: Vec<CliJob> = Vec::new();
+    let mut jobs: Vec<transport::ParsedJob> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let job = parse_job_line(line, opts.verify)
+        let job = transport::parse_job_line(line, opts.verify)
             .map_err(|e| format!("{path}:{}: {e}", lineno + 1))?;
         jobs.push(job);
     }
-    let service = Service::start(service_config(args, &opts));
     let t0 = std::time::Instant::now();
     let (tx, rx) = mpsc::channel();
     let seqs: Vec<u64> = jobs
@@ -121,73 +156,136 @@ fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
         jobs.len(),
         t0.elapsed().as_secs_f64()
     );
+    write_metrics_json(args, &service)?;
     Ok(())
 }
 
-/// `dare serve`: a long-lived session — one JSONL job per stdin line,
-/// one JSONL result per stdout line. Jobs are submitted as lines arrive
-/// and responses stream back **in completion order** (correlate by
-/// `id`), so `--threads N` workers genuinely overlap. The workload
-/// cache persists for the whole session, so repeated specs (sweep
-/// drivers, dashboards) skip compilation entirely. Malformed lines
-/// produce an `"ok":false` result line (with the `id` echoed when it
-/// can be recovered) instead of killing the session.
+/// `dare serve`: a long-lived JSONL session over stdio (default) or a
+/// unix/TCP socket (`--socket` / `--tcp`). All transports run the same
+/// pipelined loop: jobs are submitted as lines arrive, `--threads N`
+/// workers genuinely overlap, responses stream back as completion-order
+/// `result` events (correlate by `id`), and the workload cache persists
+/// for the whole session — across *all* clients in socket mode.
 fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
-    let service = Service::start(service_config(args, &opts));
-    let (tx, rx) = mpsc::channel::<JobOutcome>();
-    // seq → (id, spec name), inserted under the lock *around* submit so
-    // the printer can never see an outcome before its context exists.
-    let pending: Arc<Mutex<HashMap<u64, (Option<String>, String)>>> =
-        Arc::new(Mutex::new(HashMap::new()));
-    let printer = {
-        let pending = pending.clone();
-        std::thread::spawn(move || {
-            let stdout = std::io::stdout();
-            for outcome in rx {
-                let (id, name) = pending
-                    .lock()
-                    .unwrap()
-                    .remove(&outcome.seq)
-                    .expect("outcome for unknown job seq");
+    let socket = args.get("socket").map(String::from);
+    let tcp = args.get("tcp").map(String::from);
+    let service = Arc::new(Service::start(service_config(args, &opts)));
+    let session_opts = SessionOpts { verify: opts.verify };
+    if socket.is_some() || tcp.is_some() {
+        let listener = match (&socket, &tcp) {
+            (Some(_), Some(_)) => return Err("pass --socket or --tcp, not both".into()),
+            (Some(path), None) => Listener::bind_unix(path)?,
+            (None, Some(addr)) => Listener::bind_tcp(addr)?,
+            (None, None) => unreachable!(),
+        };
+        transport::install_signal_handlers();
+        eprintln!("[serve] listening on {}", listener.local_label());
+        let server = transport::spawn(
+            listener,
+            service.clone(),
+            session_opts,
+            Arc::new(AtomicBool::new(false)),
+        );
+        server.join(); // runs until {"cmd":"shutdown"} or SIGTERM/SIGINT
+        if let Some(path) = &socket {
+            let _ = std::fs::remove_file(path);
+        }
+        eprintln!("[serve] drained");
+        eprintln!("{}", service.metrics());
+        write_metrics_json(args, &service)?;
+        return Ok(());
+    }
+    // stdio: the same pipelined session loop the socket transport runs.
+    let stdin = std::io::stdin();
+    transport::run_session(
+        &service,
+        stdin.lock(),
+        Box::new(std::io::stdout()),
+        &session_opts,
+        None,
+    )?;
+    eprintln!("{}", service.metrics());
+    write_metrics_json(args, &service)?;
+    Ok(())
+}
+
+/// `dare client`: connect to a running `dare serve` socket, pipeline a
+/// job file at it (if given), print the streamed responses, and exit
+/// when the server's `done` summary arrives. `--shutdown` sends
+/// `{"cmd":"shutdown"}` instead of the `{"cmd":"done"}` barrier, asking
+/// the whole server to drain and exit (it still answers with the
+/// session's results + summary first).
+fn cmd_client(args: &Args, _opts: HarnessOpts) -> Result<(), CliError> {
+    let stream = if let Some(path) = args.get("socket") {
+        Stream::connect_unix(path)?
+    } else if let Some(addr) = args.get("tcp") {
+        Stream::connect_tcp(addr)?
+    } else {
+        return Err("client requires --socket PATH or --tcp HOST:PORT".into());
+    };
+    let shutdown = args.flag("shutdown");
+    let reader_half = stream.try_clone()?;
+    // Printer: echo every server line to stdout, stop at the done event.
+    let (done_tx, done_rx) = mpsc::channel::<Option<Json>>();
+    let printer = std::thread::spawn(move || {
+        let reader = BufReader::new(reader_half);
+        let stdout = std::io::stdout();
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            {
                 let mut out = stdout.lock();
-                let _ = writeln!(out, "{}", JobResponse::from_outcome(id, &name, &outcome).to_json());
+                let _ = writeln!(out, "{line}");
                 let _ = out.flush();
             }
-        })
-    };
-    let stdin = std::io::stdin();
-    for line in stdin.lock().lines() {
-        let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() || trimmed.starts_with('#') {
-            continue;
+            if let Ok(v) = Json::parse(&line) {
+                if v.get("event").and_then(Json::as_str) == Some("done") {
+                    let _ = done_tx.send(v.get("metrics").cloned());
+                    return;
+                }
+            }
         }
-        match parse_job_line(trimmed, opts.verify) {
-            Ok(job) => {
-                let name = job.spec.name();
-                let mut map = pending.lock().unwrap();
-                let seq = service.submit(job.spec, job.use_xla, tx.clone());
-                map.insert(seq, (job.id, name));
+        let _ = done_tx.send(None);
+    });
+    let mut writer = stream.try_clone()?;
+    let mut sent = 0u64;
+    if let Some(path) = args.positional.first() {
+        let text = std::fs::read_to_string(path)?;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
             }
-            Err(e) => {
-                // Echo the id if the line was at least valid JSON.
-                let id = dare::service::Json::parse(trimmed)
-                    .ok()
-                    .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)));
-                let response = JobResponse::failure(id, "<invalid job>", e).to_json();
-                let stdout = std::io::stdout();
-                let mut out = stdout.lock();
-                writeln!(out, "{response}")?;
-                out.flush()?;
+            // The client owns the session protocol: a control frame in
+            // a jobs file would end the response stream early (done) or
+            // kill the whole shared server (shutdown). Skip them.
+            if Json::parse(line).ok().is_some_and(|v| v.get("cmd").is_some()) {
+                eprintln!("[client] skipping control line in jobs file: {line}");
+                continue;
             }
+            writeln!(writer, "{line}")?;
+            sent += 1;
         }
     }
-    // EOF: drop our sender; in-flight jobs hold clones, so the printer
-    // drains every outstanding response before its channel closes.
-    drop(tx);
-    printer.join().map_err(|_| "serve printer thread panicked")?;
-    eprintln!("{}", service.metrics());
-    Ok(())
+    writeln!(writer, "{}", if shutdown { r#"{"cmd":"shutdown"}"# } else { r#"{"cmd":"done"}"# })?;
+    writer.flush()?;
+    let metrics = done_rx.recv().map_err(|_| "client printer thread died")?;
+    let _ = printer.join();
+    stream.shutdown_write();
+    match metrics {
+        Some(m) => {
+            let jobs = m.get("jobs").and_then(Json::as_u64).unwrap_or(0);
+            let failed = m.get("failed").and_then(Json::as_u64).unwrap_or(0);
+            eprintln!("[client] {sent} submitted, {jobs} acknowledged, {failed} failed");
+            if failed > 0 {
+                return Err(format!("{failed} job(s) failed on the server").into());
+            }
+            Ok(())
+        }
+        None => Err("connection closed before a done event arrived".into()),
+    }
 }
 
 fn main() -> Result<(), CliError> {
@@ -199,6 +297,9 @@ fn main() -> Result<(), CliError> {
     };
     let cmd = args.command.clone().unwrap_or_else(|| usage());
     match cmd.as_str() {
+        "help" | "--help" => {
+            println!("{HELP}");
+        }
         "fig1a" => {
             fig1::fig1a(opts);
         }
@@ -256,6 +357,16 @@ fn main() -> Result<(), CliError> {
             fig7::fig7(opts);
             fig8::fig8(opts);
             fig9::fig9(opts);
+            // Every figure ran through the per-process shared service:
+            // report the cross-figure build reuse it bought us.
+            if let Some(service) = dare::service::shared_handle() {
+                let m = service.metrics();
+                println!(
+                    "[all] shared service: {} jobs across figures — workload cache: {}",
+                    m.jobs_completed,
+                    m.cache.summary()
+                );
+            }
         }
         "run" => {
             let kernel_name = args.get_or("kernel", "sddmm");
@@ -289,6 +400,9 @@ fn main() -> Result<(), CliError> {
         }
         "serve" => {
             cmd_serve(&args, opts)?;
+        }
+        "client" => {
+            cmd_client(&args, opts)?;
         }
         "asm" => {
             let path = args.positional.first().ok_or("asm requires a file path")?;

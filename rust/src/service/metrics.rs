@@ -96,6 +96,39 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Machine-readable snapshot: the payload of the streaming `done`
+    /// event's `service` field and of `--metrics-json` files (e.g. the
+    /// `BENCH_service.json` the CI smoke job archives).
+    pub fn to_json(&self) -> String {
+        let c = &self.cache;
+        format!(
+            "{{\"uptime_s\":{:.3},\"jobs_submitted\":{},\"jobs_completed\":{},\
+             \"jobs_failed\":{},\"jobs_per_sec\":{:.3},\"sim_cycles\":{},\
+             \"sim_cycles_per_sec\":{:.1},\"queue_depth\":{},\"workers\":{},\
+             \"worker_utilization\":{:.4},\"cache\":{{\"lookups\":{},\"hits\":{},\
+             \"coalesced\":{},\"builds\":{},\"evictions\":{},\"build_failures\":{},\
+             \"resident\":{},\"hit_rate\":{:.4}}}}}",
+            self.uptime.as_secs_f64(),
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.jobs_failed,
+            self.jobs_per_sec(),
+            self.sim_cycles,
+            self.sim_cycles_per_sec(),
+            self.queue_depth,
+            self.worker_busy.len(),
+            self.worker_utilization(),
+            c.lookups(),
+            c.hits,
+            c.coalesced,
+            c.builds(),
+            c.evictions,
+            c.build_failures,
+            c.resident,
+            c.hit_rate(),
+        )
+    }
+
     /// Mean busy fraction across workers since the service started.
     pub fn worker_utilization(&self) -> f64 {
         if self.worker_busy.is_empty() || self.uptime.as_secs_f64() == 0.0 {
@@ -151,6 +184,28 @@ mod tests {
         assert!(s.jobs_per_sec() > 0.0);
         assert!(s.worker_utilization() > 0.0);
         assert!(!format!("{s}").is_empty());
+    }
+
+    #[test]
+    fn snapshot_json_is_valid_and_complete() {
+        use crate::service::Json;
+        let m = ServiceMetrics::new(2);
+        m.job_submitted();
+        m.job_done(0, Duration::from_millis(10), 1000, true);
+        std::thread::sleep(Duration::from_millis(2));
+        let cache = CacheCounters { hits: 3, misses: 1, ..Default::default() };
+        let s = m.snapshot(1, cache);
+        let v = Json::parse(&s.to_json()).expect("snapshot JSON parses");
+        assert_eq!(v.get("jobs_submitted").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("jobs_completed").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("queue_depth").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("workers").and_then(Json::as_u64), Some(2));
+        assert!(v.get("jobs_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        let c = v.get("cache").expect("cache object");
+        assert_eq!(c.get("hits").and_then(Json::as_u64), Some(3));
+        assert_eq!(c.get("builds").and_then(Json::as_u64), Some(1));
+        assert_eq!(c.get("lookups").and_then(Json::as_u64), Some(4));
+        assert!((c.get("hit_rate").and_then(Json::as_f64).unwrap() - 0.75).abs() < 1e-9);
     }
 
     #[test]

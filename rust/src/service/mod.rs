@@ -30,18 +30,24 @@
 //! * [`workers`] — the worker pool and the [`Service`] facade.
 //! * [`job`] — the scheduled unit and its outcome.
 //! * [`protocol`] — the JSONL job/result wire format of `dare batch`
-//!   and `dare serve`.
-//! * [`metrics`] — atomic counters + the printable snapshot.
+//!   and `dare serve`, including the streaming `result`/`done` events.
+//! * [`transport`] — the socket server (`dare serve --socket/--tcp`):
+//!   one accept loop, per-connection pipelined sessions, streaming
+//!   responses, graceful shutdown/drain.
+//! * [`metrics`] — atomic counters + the printable/JSON snapshot.
 //!
-//! `coordinator::run_many` is a thin wrapper over a transient [`Service`]
-//! now; harnesses that want cross-batch reuse (fig 5/6 share a grid, a
-//! `dare serve` session shares everything) hold a service of their own.
+//! `coordinator::run_many` is a thin wrapper over a transient [`Service`];
+//! the figure harnesses run through the per-process [`shared`] service
+//! instead, so `dare all` builds each workload exactly once across all
+//! figures, and a `dare serve` server shares one cache across every
+//! connected client.
 
 pub mod cache;
 pub mod job;
 pub mod metrics;
 pub mod protocol;
 pub mod queue;
+pub mod transport;
 pub mod workers;
 
 pub use cache::{CacheCounters, Fetch, WorkloadCache};
@@ -49,7 +55,7 @@ pub use job::{Job, JobOutcome};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use protocol::{JobRequest, JobResponse, Json};
 pub use queue::JobQueue;
-pub use workers::{Service, ServiceConfig};
+pub use workers::{shared, shared_handle, Service, ServiceConfig};
 
 /// Render a `catch_unwind` payload as the human-readable panic message.
 pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {

@@ -578,6 +578,16 @@ impl JobResponse {
         s
     }
 
+    /// The streaming form of [`to_json`](Self::to_json): the same
+    /// response wrapped as a `{"event":"result",…}` line, as emitted by
+    /// the socket transport, `dare serve`, and `dare batch --stream`.
+    pub fn to_event_json(&self) -> String {
+        let body = self.to_json();
+        // `to_json` always opens with `{"name"…` or `{"id"…`, so the
+        // event tag can be spliced in front of the first field.
+        format!("{{\"event\":\"result\",{}", &body[1..])
+    }
+
     pub fn parse(line: &str) -> Result<Self, String> {
         let obj = Json::parse(line)?;
         let name =
@@ -596,6 +606,25 @@ impl JobResponse {
             wall_ms: obj.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
+}
+
+/// The terminal summary line of a streaming session: emitted after every
+/// result of the batch has been written, at a `{"cmd":"done"}` barrier
+/// or at end-of-input. `jobs`/`failed`/`cache_hits`/`wall_ms` are
+/// session-scoped (cumulative within one connection); `service_json` is
+/// the whole-service [`MetricsSnapshot`](super::MetricsSnapshot) in its
+/// JSON form, shared across all concurrent clients.
+pub fn done_event(
+    jobs: u64,
+    failed: u64,
+    cache_hits: u64,
+    wall_ms: f64,
+    service_json: &str,
+) -> String {
+    format!(
+        "{{\"event\":\"done\",\"metrics\":{{\"jobs\":{jobs},\"failed\":{failed},\
+         \"cache_hits\":{cache_hits},\"wall_ms\":{wall_ms:.3},\"service\":{service_json}}}}}"
+    )
 }
 
 #[cfg(test)]
@@ -718,5 +747,43 @@ mod tests {
             wall_ms: 0.5,
         };
         assert_eq!(JobResponse::parse(&failed.to_json()).unwrap(), failed);
+    }
+
+    #[test]
+    fn event_lines_parse_and_tag_first() {
+        let ok = JobResponse {
+            id: Some("e0".into()),
+            name: "spmm/pubmed/B=1/nvr".into(),
+            ok: true,
+            error: None,
+            cycles: 77,
+            instrs: 9,
+            energy_pj: 1.25,
+            verify_err: None,
+            cache_hit: false,
+            wall_ms: 0.5,
+        };
+        let line = ok.to_event_json();
+        assert!(line.starts_with("{\"event\":\"result\","), "{line}");
+        // An event line is a superset of the plain response line: the
+        // legacy parser still round-trips it (unknown fields ignored).
+        assert_eq!(JobResponse::parse(&line).unwrap(), ok);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("event").and_then(Json::as_str), Some("result"));
+        assert_eq!(v.get("id").and_then(Json::as_str), Some("e0"));
+    }
+
+    #[test]
+    fn done_event_shape() {
+        let line = done_event(12, 1, 8, 42.5, "{\"jobs_per_sec\":3.0}");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("event").and_then(Json::as_str), Some("done"));
+        let m = v.get("metrics").expect("metrics object");
+        assert_eq!(m.get("jobs").and_then(Json::as_u64), Some(12));
+        assert_eq!(m.get("failed").and_then(Json::as_u64), Some(1));
+        assert_eq!(m.get("cache_hits").and_then(Json::as_u64), Some(8));
+        assert_eq!(m.get("wall_ms").and_then(Json::as_f64), Some(42.5));
+        let svc = m.get("service").expect("service snapshot");
+        assert_eq!(svc.get("jobs_per_sec").and_then(Json::as_f64), Some(3.0));
     }
 }

@@ -1,0 +1,697 @@
+//! Socket transport for the JSONL job protocol: `dare serve --socket
+//! /path.sock` / `--tcp host:port` turn the one-process service into a
+//! long-lived, multi-client sweep server.
+//!
+//! One accept loop feeds every connection into the *shared* [`Service`]
+//! (one worker pool, one workload cache — concurrent clients keep the
+//! same warm cache busy). Each connection runs a [`run_session`] loop:
+//!
+//! * **Pipelined submissions** — the reader submits job N and
+//!   immediately parses N+1; it never waits for results except at an
+//!   explicit barrier, so the worker pool is never idle while input is
+//!   pending. The stdio `dare serve` and `dare batch --stream` paths
+//!   run the exact same loop.
+//! * **Streaming responses** — a per-connection writer thread emits
+//!   `{"event":"result",…}` lines in **completion** order (correlate by
+//!   `id`), and a `{"event":"done","metrics":…}` summary at each
+//!   barrier: a `{"cmd":"done"}` control line or end-of-input.
+//! * **Isolation** — a malformed frame produces an `"ok":false` result
+//!   event on that connection only; the server and every other client
+//!   keep running.
+//! * **Graceful shutdown/drain** — SIGTERM/SIGINT or a
+//!   `{"cmd":"shutdown"}` control line stop the accept loop, unblock
+//!   every connected reader, let in-flight jobs finish, emit each
+//!   session's `done` summary, and join every thread before the server
+//!   returns.
+//!
+//! Zero external crates: `std::os::unix::net` + `std::net` only, and the
+//! SIGTERM hook is a direct `signal(2)` registration against libc.
+
+use super::protocol::{done_event, Json};
+use super::workers::Service;
+use super::{JobOutcome, JobRequest, JobResponse};
+use crate::coordinator::RunSpec;
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-session behavior knobs (shared by socket, stdio and batch-stream
+/// sessions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionOpts {
+    /// Force functional verification on every job of the session.
+    pub verify: bool,
+}
+
+/// What a finished session did.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionSummary {
+    /// Result events emitted (submitted jobs + malformed frames).
+    pub jobs: u64,
+    /// Failed jobs, including malformed frames.
+    pub failed: u64,
+    /// The session asked the whole server to shut down.
+    pub shutdown_requested: bool,
+}
+
+/// A parsed, submission-ready job line.
+pub struct ParsedJob {
+    pub id: Option<String>,
+    pub spec: RunSpec,
+    pub use_xla: bool,
+}
+
+/// Parse one JSONL job line into a submission (shared by `dare batch`
+/// and every session loop). `verify` forces verification on.
+pub fn parse_job_line(line: &str, verify: bool) -> Result<ParsedJob, String> {
+    let req = JobRequest::parse(line)?;
+    let mut spec = req.to_spec();
+    spec.verify = spec.verify || verify;
+    Ok(ParsedJob { id: req.id, spec, use_xla: req.use_xla })
+}
+
+enum Control {
+    Done,
+    Shutdown,
+}
+
+fn parse_control(line: &str) -> Option<Control> {
+    let v = Json::parse(line).ok()?;
+    match v.get("cmd")?.as_str()? {
+        "done" => Some(Control::Done),
+        "shutdown" => Some(Control::Shutdown),
+        _ => None,
+    }
+}
+
+/// State shared between a session's reader loop and its writer thread.
+struct SessionShared {
+    out: Mutex<Box<dyn Write + Send>>,
+    /// First output-write failure, surfaced from [`run_session`] so the
+    /// stdio/batch paths can't exit 0 after silently dropping results.
+    /// (Socket sessions ignore it: a vanished peer is routine there.)
+    write_error: Mutex<Option<io::Error>>,
+    /// Outcomes written so far; the condvar wakes the reader's barrier.
+    completed: Mutex<u64>,
+    completed_cv: Condvar,
+    failed: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
+impl SessionShared {
+    /// Write one line + flush under the output lock, recording the first
+    /// failure (a dropped peer mid-stream is not something the writer
+    /// thread can act on, but the session must report it at the end).
+    fn write_line(&self, line: &str) {
+        let mut out = self.out.lock().unwrap();
+        let result = writeln!(out, "{line}").and_then(|_| out.flush());
+        if let Err(e) = result {
+            let mut slot = self.write_error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+    }
+
+    /// Block until `submitted` outcomes have been written.
+    fn drain(&self, submitted: u64) {
+        let mut completed = self.completed.lock().unwrap();
+        while *completed < submitted {
+            completed = self.completed_cv.wait(completed).unwrap();
+        }
+    }
+}
+
+/// Run one protocol session: read JSONL jobs from `reader`, submit them
+/// to `service` as they arrive (pipelined), stream result events to
+/// `writer` in completion order, and emit a `done` summary at each
+/// `{"cmd":"done"}` barrier and at end-of-input. A `{"cmd":"shutdown"}`
+/// line drains the session, emits its summary, then (for socket servers)
+/// flips `server_shutdown` so the accept loop winds the server down.
+///
+/// Errors: reader I/O failures abort the session immediately; output
+/// writes never block the pipeline mid-session, but the first write
+/// failure is returned as `Err` at the end so `dare batch --stream` /
+/// stdio `dare serve` cannot exit 0 after dropping output (the socket
+/// server ignores it — a vanished peer is routine there).
+pub fn run_session<R: BufRead>(
+    service: &Service,
+    reader: R,
+    writer: Box<dyn Write + Send>,
+    opts: &SessionOpts,
+    server_shutdown: Option<&AtomicBool>,
+) -> io::Result<SessionSummary> {
+    let t0 = Instant::now();
+    let shared = Arc::new(SessionShared {
+        out: Mutex::new(writer),
+        write_error: Mutex::new(None),
+        completed: Mutex::new(0),
+        completed_cv: Condvar::new(),
+        failed: AtomicU64::new(0),
+        cache_hits: AtomicU64::new(0),
+    });
+    // seq → (id, spec name), inserted under the lock *around* submit so
+    // the writer can never see an outcome before its context exists.
+    let pending: Arc<Mutex<HashMap<u64, (Option<String>, String)>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let (tx, rx) = mpsc::channel::<JobOutcome>();
+    let writer_thread = {
+        let shared = shared.clone();
+        let pending = pending.clone();
+        std::thread::spawn(move || {
+            for outcome in rx {
+                let (id, name) = pending
+                    .lock()
+                    .unwrap()
+                    .remove(&outcome.seq)
+                    .expect("outcome for unknown job seq");
+                if outcome.result.is_err() {
+                    shared.failed.fetch_add(1, Ordering::Relaxed);
+                }
+                if outcome.cache_hit {
+                    shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                let line = JobResponse::from_outcome(id, &name, &outcome).to_event_json();
+                shared.write_line(&line);
+                let mut completed = shared.completed.lock().unwrap();
+                *completed += 1;
+                shared.completed_cv.notify_all();
+            }
+        })
+    };
+
+    let mut submitted: u64 = 0; // jobs handed to the service
+    let mut errored: u64 = 0; // malformed frames answered inline
+    let mut dirty = false; // work since the last done event
+    let mut emitted_done = false;
+    let mut shutdown_requested = false;
+
+    let emit_done = |shared: &SessionShared, submitted: u64, errored: u64| {
+        shared.drain(submitted);
+        let failed = shared.failed.load(Ordering::Relaxed) + errored;
+        let hits = shared.cache_hits.load(Ordering::Relaxed);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let line =
+            done_event(submitted + errored, failed, hits, wall_ms, &service.metrics().to_json());
+        shared.write_line(&line);
+    };
+
+    for line in reader.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        if let Some(cmd) = parse_control(trimmed) {
+            match cmd {
+                Control::Done => {
+                    emit_done(&shared, submitted, errored);
+                    emitted_done = true;
+                    dirty = false;
+                }
+                Control::Shutdown => {
+                    shutdown_requested = true;
+                    break;
+                }
+            }
+            continue;
+        }
+        match parse_job_line(trimmed, opts.verify) {
+            Ok(job) => {
+                let name = job.spec.name();
+                let mut map = pending.lock().unwrap();
+                let seq = service.submit(job.spec, job.use_xla, tx.clone());
+                map.insert(seq, (job.id, name));
+                drop(map);
+                submitted += 1;
+                dirty = true;
+            }
+            Err(e) => {
+                // Echo the id if the frame was at least valid JSON.
+                let id = Json::parse(trimmed)
+                    .ok()
+                    .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)));
+                shared.write_line(&JobResponse::failure(id, "<invalid job>", e).to_event_json());
+                errored += 1;
+                dirty = true;
+            }
+        }
+    }
+
+    // End of input (EOF or shutdown): drain in-flight jobs and emit the
+    // final summary — unless an explicit `done` barrier already covered
+    // everything this session did.
+    if dirty || !emitted_done {
+        emit_done(&shared, submitted, errored);
+    } else {
+        shared.drain(submitted);
+    }
+    drop(tx);
+    let _ = writer_thread.join();
+    if shutdown_requested {
+        if let Some(flag) = server_shutdown {
+            flag.store(true, Ordering::SeqCst);
+        }
+    }
+    if let Some(e) = shared.write_error.lock().unwrap().take() {
+        return Err(e);
+    }
+    Ok(SessionSummary {
+        jobs: submitted + errored,
+        failed: shared.failed.load(Ordering::Relaxed) + errored,
+        shutdown_requested,
+    })
+}
+
+/// A connected byte stream, unix or TCP.
+pub enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub fn connect_unix(path: &str) -> io::Result<Stream> {
+        Ok(Stream::Unix(UnixStream::connect(path)?))
+    }
+
+    pub fn connect_tcp(addr: &str) -> io::Result<Stream> {
+        Ok(Stream::Tcp(TcpStream::connect(addr)?))
+    }
+
+    pub fn try_clone(&self) -> io::Result<Stream> {
+        Ok(match self {
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn set_blocking(&self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(false),
+            Stream::Tcp(s) => s.set_nonblocking(false),
+        }
+    }
+
+    /// Unblock a reader parked on this stream (drain path). Errors are
+    /// ignored: the peer may already be gone.
+    pub fn shutdown_read(&self) {
+        let _ = match self {
+            Stream::Unix(s) => s.shutdown(Shutdown::Read),
+            Stream::Tcp(s) => s.shutdown(Shutdown::Read),
+        };
+    }
+
+    /// Signal end-of-jobs to the peer while keeping the read half open.
+    pub fn shutdown_write(&self) {
+        let _ = match self {
+            Stream::Unix(s) => s.shutdown(Shutdown::Write),
+            Stream::Tcp(s) => s.shutdown(Shutdown::Write),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listening endpoint, unix or TCP. Listeners are non-blocking:
+/// the accept loop polls so it can notice shutdown requests promptly.
+pub enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind a unix socket, replacing a stale socket file left by a
+    /// previous run. Anything else at the path (a regular file, a
+    /// directory — e.g. a mistyped `--socket results.json`) is refused,
+    /// never deleted.
+    pub fn bind_unix(path: &str) -> io::Result<Listener> {
+        if let Ok(meta) = std::fs::symlink_metadata(path) {
+            use std::os::unix::fs::FileTypeExt;
+            if meta.file_type().is_socket() {
+                let _ = std::fs::remove_file(path);
+            } else {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    format!("'{path}' exists and is not a socket; refusing to replace it"),
+                ));
+            }
+        }
+        let l = UnixListener::bind(path)?;
+        l.set_nonblocking(true)?;
+        Ok(Listener::Unix(l))
+    }
+
+    pub fn bind_tcp(addr: &str) -> io::Result<Listener> {
+        let l = TcpListener::bind(addr)?;
+        l.set_nonblocking(true)?;
+        Ok(Listener::Tcp(l))
+    }
+
+    /// Where this listener is bound, for log lines.
+    pub fn local_label(&self) -> String {
+        match self {
+            Listener::Unix(l) => l
+                .local_addr()
+                .ok()
+                .and_then(|a| a.as_pathname().map(|p| p.display().to_string()))
+                .unwrap_or_else(|| "<unix>".into()),
+            Listener::Tcp(l) => {
+                l.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| "<tcp>".into())
+            }
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when no connection is pending.
+    fn poll_accept(&self) -> io::Result<Option<Stream>> {
+        let accepted = match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        };
+        match accepted {
+            Ok(s) => Ok(Some(s)),
+            // Transient conditions (no pending connection, or a peer
+            // that vanished between connect and accept) must not kill
+            // the server; only persistent listener failures propagate.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::Interrupted
+                        | io::ErrorKind::ConnectionAborted
+                        | io::ErrorKind::ConnectionReset
+                ) =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// How often the accept loop checks for pending connections / shutdown.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// A running socket server. [`Server::join`] blocks until the server has
+/// fully drained: accept loop stopped, every session's in-flight jobs
+/// finished and its `done` summary written, every thread joined.
+pub struct Server {
+    accept_thread: JoinHandle<()>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// The flag that winds the server down (shared with every session).
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    pub fn join(self) {
+        let _ = self.accept_thread.join();
+    }
+}
+
+/// Start serving `listener` connections against `service`. One accept
+/// loop; one reader + one writer thread per connection; all connections
+/// share the service's worker pool and workload cache. The server stops
+/// when `shutdown` is set (by any session's `{"cmd":"shutdown"}`, by
+/// [`Server::shutdown_handle`], or by SIGTERM/SIGINT after
+/// [`install_signal_handlers`]).
+pub fn spawn(
+    listener: Listener,
+    service: Arc<Service>,
+    opts: SessionOpts,
+    shutdown: Arc<AtomicBool>,
+) -> Server {
+    let flag = shutdown.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("dare-accept".into())
+        .spawn(move || {
+            // One (session thread, read-half clone) pair per live
+            // connection. The clone lets the drain path unblock a
+            // parked reader; finished sessions are reaped every loop
+            // iteration so a long-lived server doesn't accumulate one
+            // open fd per past connection.
+            let mut sessions: Vec<(JoinHandle<()>, Stream)> = Vec::new();
+            while !flag.load(Ordering::SeqCst) && !sigterm_received() {
+                let mut i = 0;
+                while i < sessions.len() {
+                    if sessions[i].0.is_finished() {
+                        let (handle, _conn) = sessions.swap_remove(i);
+                        let _ = handle.join();
+                    } else {
+                        i += 1;
+                    }
+                }
+                match listener.poll_accept() {
+                    Ok(Some(stream)) => {
+                        let _ = stream.set_blocking();
+                        let (write_half, watch) = match (stream.try_clone(), stream.try_clone()) {
+                            (Ok(w), Ok(c)) => (w, c),
+                            _ => continue, // peer vanished between accept and clone
+                        };
+                        let service = service.clone();
+                        let flag = flag.clone();
+                        let handle = std::thread::spawn(move || {
+                            let reader = BufReader::new(stream);
+                            let _ = run_session(
+                                &service,
+                                reader,
+                                Box::new(write_half),
+                                &opts,
+                                Some(&*flag),
+                            );
+                        });
+                        sessions.push((handle, watch));
+                    }
+                    Ok(None) => std::thread::sleep(ACCEPT_POLL),
+                    Err(_) => break, // persistent listener failure
+                }
+            }
+            // Drain: stop accepting, unblock every connected reader;
+            // sessions finish in-flight jobs and emit their summaries.
+            flag.store(true, Ordering::SeqCst);
+            for (_, conn) in &sessions {
+                conn.shutdown_read();
+            }
+            for (handle, _) in sessions {
+                let _ = handle.join();
+            }
+        })
+        .expect("spawning accept thread");
+    Server { accept_thread, shutdown }
+}
+
+static SIGTERM_RECEIVED: AtomicBool = AtomicBool::new(false);
+
+/// Whether SIGTERM/SIGINT arrived (after [`install_signal_handlers`]).
+pub fn sigterm_received() -> bool {
+    SIGTERM_RECEIVED.load(Ordering::SeqCst)
+}
+
+extern "C" fn on_terminate_signal(_sig: i32) {
+    SIGTERM_RECEIVED.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM/SIGINT into a flag the accept loop polls, so `kill`
+/// and Ctrl-C drain the server instead of dropping in-flight jobs.
+/// (Direct `signal(2)` registration: no signal-handling crates offline.)
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler: extern "C" fn(i32) = on_terminate_signal;
+    unsafe {
+        signal(SIGTERM, handler as usize);
+        signal(SIGINT, handler as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::ServiceConfig;
+
+    /// An in-memory `Write` the test can read back.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl SharedBuf {
+        fn take_lines(&self) -> Vec<String> {
+            let bytes = self.0.lock().unwrap();
+            String::from_utf8(bytes.clone())
+                .unwrap()
+                .lines()
+                .map(String::from)
+                .collect()
+        }
+    }
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn job(id: &str, variant: &str) -> String {
+        format!(
+            "{{\"id\":\"{id}\",\"kernel\":\"sddmm\",\"dataset\":\"pubmed\",\
+             \"variant\":\"{variant}\",\"scale\":0.04}}"
+        )
+    }
+
+    #[test]
+    fn session_streams_results_then_done() {
+        let service = Service::start(ServiceConfig::with_workers(2));
+        let input =
+            format!("{}\n{}\n{}\n", job("a", "baseline"), job("b", "nvr"), job("c", "dare-fre"));
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 3);
+        assert_eq!(summary.failed, 0);
+        assert!(!summary.shutdown_requested);
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 4, "{lines:?}");
+        // Every result event precedes the done summary.
+        for line in &lines[..3] {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("event").and_then(Json::as_str), Some("result"), "{line}");
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+        }
+        let done = Json::parse(&lines[3]).unwrap();
+        assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
+        let metrics = done.get("metrics").expect("done carries metrics");
+        assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(3));
+        assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(0));
+        assert!(metrics.get("service").is_some(), "service snapshot attached");
+    }
+
+    #[test]
+    fn session_malformed_frame_answers_inline_and_continues() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!(
+            "this is not json\n{}\n{{\"id\":\"typo\",\"kernell\":\"spmm\"}}\n",
+            job("ok", "baseline")
+        );
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 3);
+        assert_eq!(summary.failed, 2);
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 4);
+        let done = Json::parse(lines.last().unwrap()).unwrap();
+        let metrics = done.get("metrics").unwrap();
+        assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(3));
+        assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(2));
+        // The typo'd frame still echoes its id.
+        let echoed = lines[..3].iter().any(|l| {
+            Json::parse(l)
+                .ok()
+                .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)))
+                .as_deref()
+                == Some("typo")
+        });
+        assert!(echoed, "{lines:?}");
+    }
+
+    #[test]
+    fn done_barrier_mid_session_then_eof_stays_single() {
+        // done cmd → summary; EOF with nothing new → no duplicate done.
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!("{}\n{{\"cmd\":\"done\"}}\n", job("only", "baseline"));
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 1);
+        let lines = buf.take_lines();
+        let dones = lines
+            .iter()
+            .filter(|l| {
+                Json::parse(l).unwrap().get("event").and_then(Json::as_str) == Some("done")
+            })
+            .count();
+        assert_eq!(dones, 1, "{lines:?}");
+    }
+
+    #[test]
+    fn shutdown_cmd_drains_and_flips_server_flag() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!("{}\n{{\"cmd\":\"shutdown\"}}\n", job("last", "baseline"));
+        let buf = SharedBuf::default();
+        let flag = AtomicBool::new(false);
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            Some(&flag),
+        )
+        .unwrap();
+        assert!(summary.shutdown_requested);
+        assert!(flag.load(Ordering::SeqCst));
+        let lines = buf.take_lines();
+        // The in-flight job still completed and the summary was emitted.
+        assert_eq!(lines.len(), 2, "{lines:?}");
+        let done = Json::parse(&lines[1]).unwrap();
+        assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
+        assert_eq!(done.get("metrics").unwrap().get("jobs").and_then(Json::as_u64), Some(1));
+    }
+}

@@ -11,9 +11,28 @@ use super::queue::JobQueue;
 use crate::coordinator::{run_prebuilt, RunResult, RunSpec};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// The per-process shared service (see [`shared`]).
+static SHARED: OnceLock<Service> = OnceLock::new();
+
+/// The per-process shared [`Service`]: one worker pool and one workload
+/// cache for every harness in the process, so `dare all` builds each
+/// `(kernel, dataset, block, densify, scale)` workload exactly once
+/// across *all* figures. The first caller's `cfg` wins; later calls
+/// return the existing instance unchanged. The instance lives for the
+/// rest of the process (its workers park on the queue at idle).
+pub fn shared(cfg: ServiceConfig) -> &'static Service {
+    SHARED.get_or_init(|| Service::start(cfg))
+}
+
+/// The shared service, if [`shared`] has been called — for end-of-run
+/// reporting that must not spin up a pool as a side effect.
+pub fn shared_handle() -> Option<&'static Service> {
+    SHARED.get()
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceConfig {

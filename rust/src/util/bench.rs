@@ -5,7 +5,8 @@
 //! `samples` timed samples of `iters_per_sample` iterations each and
 //! report median / mean ± stddev and throughput where an element count is
 //! provided. A `--filter substring` CLI argument restricts which
-//! benchmarks run; `--fast` shrinks sample counts for smoke runs.
+//! benchmarks run; `--fast` (alias `--smoke`, as CI invokes it) shrinks
+//! sample counts for smoke runs that only guard against bench-target rot.
 
 use super::stats;
 use std::time::Instant;
@@ -29,7 +30,7 @@ impl BenchConfig {
                     filter = Some(argv[i + 1].clone());
                     i += 1;
                 }
-                "--fast" => fast = true,
+                "--fast" | "--smoke" => fast = true,
                 // `cargo bench -- --bench` compat: ignore unknown tokens so
                 // libtest-style flags don't break us.
                 _ => {

@@ -1,0 +1,217 @@
+//! Integration tests for the socket transport: concurrent multi-client
+//! sessions, streaming event order, malformed-frame isolation, and
+//! graceful shutdown/drain.
+
+use dare::service::transport::{spawn, Listener, Server, SessionOpts, Stream};
+use dare::service::{Json, Service, ServiceConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A server on a fresh unix socket in the temp dir, plus the handles the
+/// tests need to drive and drain it.
+struct Harness {
+    path: PathBuf,
+    server: Server,
+    shutdown: Arc<AtomicBool>,
+    service: Arc<Service>,
+}
+
+impl Harness {
+    fn start(tag: &str) -> Harness {
+        let path = std::env::temp_dir()
+            .join(format!("dare-transport-{tag}-{}.sock", std::process::id()));
+        let listener = Listener::bind_unix(path.to_str().unwrap()).expect("bind unix socket");
+        let service = Arc::new(Service::start(ServiceConfig::with_workers(2)));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let server = spawn(
+            listener,
+            service.clone(),
+            SessionOpts { verify: false },
+            shutdown.clone(),
+        );
+        Harness { path, server, shutdown, service }
+    }
+
+    fn connect(&self) -> Stream {
+        Stream::connect_unix(self.path.to_str().unwrap()).expect("connect")
+    }
+
+    /// Flag-initiated drain; must terminate promptly.
+    fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.server.join();
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+fn job_line(id: &str, variant: &str) -> String {
+    format!(
+        "{{\"id\":\"{id}\",\"kernel\":\"sddmm\",\"dataset\":\"pubmed\",\
+         \"variant\":\"{variant}\",\"scale\":0.04}}"
+    )
+}
+
+/// Read events until (and including) the first `done`; panics on a
+/// non-event line or a closed connection.
+fn read_until_done(reader: &mut impl BufRead) -> (Vec<Json>, Json) {
+    let mut results = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read event line");
+        assert!(n > 0, "connection closed before done event");
+        let v = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        match v.get("event").and_then(Json::as_str) {
+            Some("result") => results.push(v),
+            Some("done") => {
+                let metrics = v.get("metrics").expect("done carries metrics").clone();
+                return (results, metrics);
+            }
+            other => panic!("unexpected event {other:?} in {line:?}"),
+        }
+    }
+}
+
+const VARIANTS: [&str; 4] = ["baseline", "nvr", "dare-fre", "dare-full"];
+
+#[test]
+fn two_clients_pipeline_jobs_and_correlate_by_id() {
+    let h = Harness::start("multi");
+    let clients: Vec<_> = ["a", "b"]
+        .into_iter()
+        .map(|tag| {
+            let path = h.path.clone();
+            std::thread::spawn(move || {
+                let mut stream = Stream::connect_unix(path.to_str().unwrap()).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                // Pipelined: all four jobs go out before any read.
+                for (i, variant) in VARIANTS.iter().enumerate() {
+                    writeln!(stream, "{}", job_line(&format!("{tag}/{i}"), variant)).unwrap();
+                }
+                writeln!(stream, "{{\"cmd\":\"done\"}}").unwrap();
+                stream.flush().unwrap();
+                read_until_done(&mut reader)
+            })
+        })
+        .collect();
+    let outputs: Vec<_> = clients.into_iter().map(|c| c.join().expect("client")).collect();
+    for (tag, (results, metrics)) in ["a", "b"].iter().zip(&outputs) {
+        assert_eq!(results.len(), 4, "client {tag}");
+        // Responses stream in completion order — correlate by id: each
+        // client sees exactly its own ids, each exactly once.
+        let mut ids: Vec<String> = results
+            .iter()
+            .map(|v| v.get("id").and_then(Json::as_str).expect("id echoed").to_string())
+            .collect();
+        ids.sort();
+        let want: Vec<String> = (0..4).map(|i| format!("{tag}/{i}")).collect();
+        assert_eq!(ids, want);
+        for v in results {
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "client {tag}");
+            assert!(v.get("cycles").and_then(Json::as_u64).unwrap() > 0);
+        }
+        assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(4));
+        assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(0));
+    }
+    // Both clients drew on ONE service: 8 jobs total, and the identical
+    // sddmm/pubmed workloads were shared across connections.
+    let m = h.service.metrics();
+    assert_eq!(m.jobs_completed, 8);
+    assert!(m.cache.hit_rate() > 0.0, "cross-client reuse: {}", m.cache.summary());
+    h.stop();
+}
+
+#[test]
+fn streaming_results_precede_done_and_counts_match() {
+    let h = Harness::start("stream");
+    let mut stream = h.connect();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let n = 6;
+    for i in 0..n {
+        writeln!(stream, "{}", job_line(&format!("s/{i}"), VARIANTS[i % VARIANTS.len()]))
+            .unwrap();
+    }
+    writeln!(stream, "{{\"cmd\":\"done\"}}").unwrap();
+    stream.flush().unwrap();
+    // read_until_done asserts the ordering property itself: it panics on
+    // any non-result event before done, so reaching here means every
+    // result preceded the done summary.
+    let (results, metrics) = read_until_done(&mut reader);
+    assert_eq!(results.len(), n);
+    assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(n as u64));
+    // The done summary carries the whole-service snapshot too.
+    let service = metrics.get("service").expect("service snapshot");
+    assert_eq!(service.get("jobs_completed").and_then(Json::as_u64), Some(n as u64));
+    h.stop();
+}
+
+#[test]
+fn malformed_frame_is_isolated_to_its_connection() {
+    let h = Harness::start("malformed");
+
+    // Client A: garbage frame + a valid job.
+    let mut a = h.connect();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    writeln!(a, "this is not json at all").unwrap();
+    writeln!(a, "{}", job_line("a/ok", "baseline")).unwrap();
+    writeln!(a, "{{\"cmd\":\"done\"}}").unwrap();
+    a.flush().unwrap();
+    let (a_results, a_metrics) = read_until_done(&mut a_reader);
+    assert_eq!(a_results.len(), 2);
+    let bad = a_results
+        .iter()
+        .find(|v| v.get("ok").and_then(Json::as_bool) == Some(false))
+        .expect("malformed frame answered with ok:false");
+    assert!(bad.get("error").is_some());
+    let good = a_results
+        .iter()
+        .find(|v| v.get("ok").and_then(Json::as_bool) == Some(true))
+        .expect("valid job still ran");
+    assert_eq!(good.get("id").and_then(Json::as_str), Some("a/ok"));
+    assert_eq!(a_metrics.get("jobs").and_then(Json::as_u64), Some(2));
+    assert_eq!(a_metrics.get("failed").and_then(Json::as_u64), Some(1));
+
+    // The server survived: a second client connects and runs cleanly.
+    let mut b = h.connect();
+    let mut b_reader = BufReader::new(b.try_clone().unwrap());
+    writeln!(b, "{}", job_line("b/0", "nvr")).unwrap();
+    writeln!(b, "{{\"cmd\":\"done\"}}").unwrap();
+    b.flush().unwrap();
+    let (b_results, b_metrics) = read_until_done(&mut b_reader);
+    assert_eq!(b_results.len(), 1);
+    assert_eq!(b_results[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(b_metrics.get("failed").and_then(Json::as_u64), Some(0));
+    h.stop();
+}
+
+#[test]
+fn bind_unix_refuses_to_replace_non_socket_files() {
+    let path = std::env::temp_dir().join(format!("dare-notsocket-{}.txt", std::process::id()));
+    std::fs::write(&path, "precious").unwrap();
+    let err = Listener::bind_unix(path.to_str().unwrap()).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::AlreadyExists);
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), "precious", "file untouched");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn shutdown_cmd_drains_server_and_join_returns() {
+    let h = Harness::start("shutdown");
+    let mut stream = h.connect();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{}", job_line("final", "dare-full")).unwrap();
+    writeln!(stream, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    stream.flush().unwrap();
+    // The in-flight job completes and the summary still arrives before
+    // the server exits (graceful drain, not a dropped connection).
+    let (results, metrics) = read_until_done(&mut reader);
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].get("id").and_then(Json::as_str), Some("final"));
+    assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(1));
+    // join() must return on its own — no flag poke from the test.
+    h.server.join();
+    assert!(h.shutdown.load(Ordering::SeqCst), "session propagated the shutdown");
+    let _ = std::fs::remove_file(&h.path);
+}
