@@ -5,7 +5,7 @@
 use crate::coordinator::{RunResult, RunSpec};
 use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
 use crate::kernels::Workload;
-use crate::service::{Service, ServiceConfig};
+use crate::service::{DiskConfig, Service, ServiceConfig};
 use crate::sim::{Mpu, NativeMma, SimConfig, SimStats};
 use crate::sparse::{Csc, Triplet};
 use crate::util::prng::Pcg32;
@@ -34,16 +34,25 @@ impl Default for HarnessOpts {
 /// fig5/fig8) survives without evictions.
 const SHARED_CACHE_CAPACITY: usize = 128;
 
+/// Initialize the per-process shared service explicitly, optionally
+/// attaching the on-disk workload tier — `dare all --cache-dir D` calls
+/// this *before* any figure harness implicitly starts the service
+/// without one. First caller wins (see `service::shared`).
+pub fn init_shared_service(opts: HarnessOpts, disk: Option<DiskConfig>) -> &'static Service {
+    crate::service::shared(ServiceConfig {
+        workers: opts.threads,
+        cache_capacity: SHARED_CACHE_CAPACITY,
+        disk,
+        ..ServiceConfig::default()
+    })
+}
+
 /// The per-process service every figure harness runs through, so `dare
 /// all` builds each workload exactly once across figures. First caller
 /// fixes the worker count (later `opts.threads` values are ignored —
 /// the CLI passes one value for the whole run).
 pub fn shared_service(opts: HarnessOpts) -> &'static Service {
-    crate::service::shared(ServiceConfig {
-        workers: opts.threads,
-        cache_capacity: SHARED_CACHE_CAPACITY,
-        ..ServiceConfig::default()
-    })
+    init_shared_service(opts, None)
 }
 
 /// Run a spec batch on the shared harness service, results in spec

@@ -38,4 +38,4 @@ pub use gemm::compile_gemm;
 pub use layout::Layout;
 pub use sddmm::compile_sddmm;
 pub use spmm::compile_spmm;
-pub use workload::{KernelKind, SharedWorkload, Workload, WorkloadKey};
+pub use workload::{KernelKind, RegionCheck, SharedWorkload, Workload, WorkloadKey};

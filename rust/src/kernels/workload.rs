@@ -85,6 +85,37 @@ impl WorkloadKey {
         f64::from_bits(self.scale_bits)
     }
 
+    /// A process-independent content hash of the key. The on-disk
+    /// workload cache (`service::disk`) names entries by it, so it must
+    /// be identical across processes, platforms and compiler releases —
+    /// hence hand-rolled FNV-1a over the canonical field encoding, not
+    /// `DefaultHasher` (whose output is unspecified).
+    pub fn stable_hash(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv64::new();
+        h.update(self.kernel.name().as_bytes());
+        h.update(&[0xFF]);
+        h.update(self.dataset.name().as_bytes());
+        h.update(&[0xFF]);
+        h.update_u64(self.block as u64);
+        h.update(&[self.densify as u8]);
+        h.update_u64(self.scale_bits);
+        h.finish()
+    }
+
+    /// Filename stem of this key's on-disk cache entry: human-readable
+    /// prefix for debuggability, stable hash suffix for uniqueness
+    /// (the scale, an arbitrary f64, rides in the hash).
+    pub fn cache_file_stem(&self) -> String {
+        format!(
+            "{}-{}-b{}-{}-{:016x}",
+            self.kernel.name(),
+            self.dataset.name(),
+            self.block,
+            if self.densify { "gsa" } else { "strided" },
+            self.stable_hash()
+        )
+    }
+
     pub fn name(&self) -> String {
         format!(
             "{}/{}/B={}/{}@{}",
@@ -199,6 +230,25 @@ mod tests {
         assert_eq!(g1, g2);
         // The exact scale survives the bit-packing.
         assert_eq!(a.scale(), 0.05);
+    }
+
+    #[test]
+    fn stable_hash_distinguishes_and_is_deterministic() {
+        let a = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.05);
+        let b = WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.05);
+        assert_eq!(a.stable_hash(), b.stable_hash());
+        assert_eq!(a.cache_file_stem(), b.cache_file_stem());
+        for other in [
+            WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, false, 0.05),
+            WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 4, true, 0.05),
+            WorkloadKey::new(KernelKind::SpMM, DatasetKind::PubMed, 8, true, 0.06),
+            WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, 8, true, 0.05),
+        ] {
+            assert_ne!(a.stable_hash(), other.stable_hash(), "{}", other.name());
+        }
+        // Filename-safe: no separators or shell-special characters.
+        let stem = a.cache_file_stem();
+        assert!(stem.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'), "{stem}");
     }
 
     #[test]

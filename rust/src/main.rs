@@ -7,18 +7,20 @@
 //! dare isa | config | overhead                                  tables
 //! dare all [--scale 0.5]                                        everything
 //! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
-//! dare batch <jobs.jsonl> [--stream]                            service: run a JSONL job file
-//! dare serve [--socket P | --tcp H:P]                           service: JSONL jobs, stdio or socket
+//! dare batch <jobs.jsonl> [--stream] [--cache-dir D]            service: run a JSONL job file
+//! dare serve [--socket P | --tcp H:P] [--cache-dir D]           service: JSONL jobs, stdio or socket
 //! dare client (--socket P | --tcp H:P) [jobs.jsonl] [--shutdown]   drive a running server
+//! dare cache stats|clear --cache-dir D                          inspect/wipe an on-disk cache
 //! dare asm <file.s>                                             assemble + run
 //! ```
 
 use dare::coordinator::{run_one, BenchPoint, RunSpec};
-use dare::harness::{fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
+use dare::harness::{common, fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
 use dare::isa::asm;
 use dare::kernels::KernelKind;
+use dare::service::disk;
 use dare::service::transport::{self, Listener, SessionOpts, Stream};
-use dare::service::{JobOutcome, JobResponse, Json, Service, ServiceConfig};
+use dare::service::{DiskConfig, DiskStore, JobOutcome, JobResponse, Json, Service, ServiceConfig};
 use dare::sim::{Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::cli::Args;
@@ -39,21 +41,29 @@ commands:\n\
   serve          long-lived service: JSONL jobs on stdin (default) or over --socket/--tcp;\n\
                  responses stream as {\"event\":\"result\",…} lines in completion order,\n\
                  each batch terminated by a {\"event\":\"done\",\"metrics\":…} summary;\n\
-                 control lines: {\"cmd\":\"done\"} barrier, {\"cmd\":\"shutdown\"} drain+exit\n\
+                 control lines: {\"cmd\":\"done\"} barrier, {\"cmd\":\"metrics\"} live\n\
+                 snapshot, {\"cmd\":\"shutdown\"} drain+exit; a full job queue answers\n\
+                 {\"event\":\"busy\",\"queue_depth\":…} instead of silently blocking\n\
                  (socket mode also drains on SIGTERM/SIGINT; stdio drains at EOF)\n\
   client         connect to a serve socket, submit a job file (if given), print the\n\
                  streamed responses; --shutdown asks the server to drain and exit\n\
+  cache          on-disk workload cache maintenance: `dare cache stats --cache-dir D`\n\
+                 (entries, bytes, codec-version histogram) or `dare cache clear …`\n\
   asm            assemble and simulate a .s file (DARE-full MPU)\n\
   help           print this help\n\
 options:\n\
   --scale F          dataset scale in (0,1] (default 0.5)\n\
   --threads N        service worker threads (default all cores)\n\
   --cache N          service workload-cache capacity (default 32)\n\
+  --cache-dir D      batch/serve/all: also persist built workloads in directory D, shared\n\
+                     across processes and serve restarts (corrupt/stale entries rebuild)\n\
+  --cache-max-mb N   size bound for --cache-dir; GC evicts oldest entries (default 512)\n\
   --verify           check functional outputs against references\n\
   --socket PATH      serve/client: unix socket path\n\
   --tcp HOST:PORT    serve/client: TCP endpoint\n\
   --stream           batch: emit streaming result/done events in completion order\n\
   --metrics-json P   batch/serve: write the final service MetricsSnapshot as JSON to P\n\
+  --poll-metrics     client: also send {\"cmd\":\"metrics\"} and print the live snapshot\n\
   --shutdown         client: send {\"cmd\":\"shutdown\"} after the jobs (if any)";
 
 fn usage() -> ! {
@@ -66,8 +76,55 @@ fn service_config(args: &Args, opts: &HarnessOpts) -> ServiceConfig {
     ServiceConfig {
         workers: opts.threads,
         cache_capacity: args.get_parse("cache", ServiceConfig::default().cache_capacity),
+        disk: disk_config(args),
         ..ServiceConfig::default()
     }
+}
+
+/// `--cache-dir DIR [--cache-max-mb N]`: the on-disk workload tier
+/// shared across processes and serve restarts. Off unless requested.
+fn disk_config(args: &Args) -> Option<DiskConfig> {
+    // Read the bound first so the option always counts as consumed.
+    let max_mb: u64 = args.get_parse("cache-max-mb", disk::DEFAULT_MAX_BYTES / (1024 * 1024));
+    let dir = args.get("cache-dir")?;
+    Some(DiskConfig {
+        dir: std::path::PathBuf::from(dir),
+        max_bytes: max_mb.saturating_mul(1024 * 1024),
+    })
+}
+
+/// `dare cache <stats|clear> --cache-dir DIR`: inspect or wipe an
+/// on-disk workload cache, over the same store code the service runs.
+fn cmd_cache(args: &Args) -> Result<(), CliError> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("stats");
+    let cfg = disk_config(args).ok_or("cache requires --cache-dir DIR")?;
+    let dir = cfg.dir.display().to_string();
+    let store = DiskStore::open(cfg)?;
+    match action {
+        "stats" => {
+            let s = store.stats();
+            println!(
+                "[cache] {dir}: {} entries, {} bytes on disk (bound {} MiB)",
+                s.entries,
+                s.bytes,
+                store.max_bytes() / (1024 * 1024)
+            );
+            for (version, count) in &s.versions {
+                println!("[cache]   codec v{version}: {count} entries");
+            }
+            if s.unreadable > 0 {
+                println!("[cache]   unreadable/foreign: {} (rebuilt on next use)", s.unreadable);
+            }
+        }
+        "clear" => {
+            let removed = store.clear()?;
+            println!("[cache] {dir}: removed {removed} entries");
+        }
+        other => {
+            return Err(format!("unknown cache action '{other}' (expected stats|clear)").into())
+        }
+    }
+    Ok(())
 }
 
 /// Honor `--metrics-json PATH`: dump the service snapshot (jobs/s, cache
@@ -269,6 +326,11 @@ fn cmd_client(args: &Args, _opts: HarnessOpts) -> Result<(), CliError> {
             sent += 1;
         }
     }
+    if args.flag("poll-metrics") {
+        // Answered immediately (no barrier); the event is printed by
+        // the reader thread along with the streamed results.
+        writeln!(writer, "{}", r#"{"cmd":"metrics"}"#)?;
+    }
     writeln!(writer, "{}", if shutdown { r#"{"cmd":"shutdown"}"# } else { r#"{"cmd":"done"}"# })?;
     writer.flush()?;
     let metrics = done_rx.recv().map_err(|_| "client printer thread died")?;
@@ -344,6 +406,13 @@ fn main() -> Result<(), CliError> {
             tables::overhead_report();
         }
         "all" => {
+            // Attach the on-disk tier (if requested) before any figure
+            // harness implicitly starts the shared service without it —
+            // `dare all --cache-dir D` then reuses builds from previous
+            // runs and leaves a warm cache for the next one.
+            if let Some(disk_cfg) = disk_config(&args) {
+                common::init_shared_service(opts, Some(disk_cfg));
+            }
             tables::table1();
             tables::table2();
             tables::overhead_report();
@@ -403,6 +472,9 @@ fn main() -> Result<(), CliError> {
         }
         "client" => {
             cmd_client(&args, opts)?;
+        }
+        "cache" => {
+            cmd_cache(&args)?;
         }
         "asm" => {
             let path = args.positional.first().ok_or("asm requires a file path")?;

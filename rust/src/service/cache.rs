@@ -13,12 +13,21 @@
 //! shard lock is dropped during the (expensive) compile, and any thread
 //! that arrives meanwhile waits on the entry's condvar instead of
 //! building a duplicate. N identical queued specs → exactly one build.
+//!
+//! Disk tier: with [`with_disk`](WorkloadCache::with_disk), a memory
+//! miss probes the on-disk store ([`DiskStore`]) under that key's
+//! cross-process build lock before compiling — memory → disk → build.
+//! Disk hits are promoted into memory (so the next lookup is a memory
+//! hit), and fresh builds are written back for other processes and
+//! future restarts.
 
+use super::disk::DiskStore;
 use super::panic_message;
 use crate::kernels::{SharedWorkload, WorkloadKey};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -29,6 +38,8 @@ pub enum Fetch {
     Hit,
     /// Another thread was mid-build; we waited and shared its result.
     Coalesced,
+    /// Missed in memory, loaded from the on-disk tier (and promoted).
+    DiskHit,
     /// We were the builder.
     Built,
 }
@@ -69,6 +80,8 @@ struct Counters {
     misses: AtomicU64,
     evictions: AtomicU64,
     build_failures: AtomicU64,
+    disk_hits: AtomicU64,
+    disk_misses: AtomicU64,
 }
 
 /// A point-in-time copy of the cache counters.
@@ -77,12 +90,20 @@ pub struct CacheCounters {
     pub hits: u64,
     /// Lookups that waited on another thread's in-flight build.
     pub coalesced: u64,
-    /// Lookups that became the builder (== successful + failed builds).
+    /// Memory misses — lookups that became the builder (each one is
+    /// then either a disk hit or an actual compile).
     pub misses: u64,
     pub evictions: u64,
     pub build_failures: u64,
+    /// Memory misses satisfied by the on-disk tier.
+    pub disk_hits: u64,
+    /// Memory misses that reached the compiler (0 disk lookups happen
+    /// when no disk tier is configured, so then `misses == builds`).
+    pub disk_misses: u64,
     /// Entries currently resident (gauge).
     pub resident: u64,
+    /// Bytes held by the on-disk tier (gauge; 0 without a disk tier).
+    pub bytes_on_disk: u64,
 }
 
 impl CacheCounters {
@@ -100,22 +121,48 @@ impl CacheCounters {
         }
     }
 
-    /// Workload compiles actually executed.
+    /// Fraction of disk-tier probes that hit (the warm-restart CI
+    /// metric). 0 when the disk tier is off or was never probed.
+    pub fn disk_hit_rate(&self) -> f64 {
+        let probes = self.disk_hits + self.disk_misses;
+        if probes == 0 {
+            0.0
+        } else {
+            self.disk_hits as f64 / probes as f64
+        }
+    }
+
+    /// Workload compiles actually executed. Saturating: a live snapshot
+    /// can tear between a builder's `misses` and `disk_hits` bumps, and
+    /// a momentary 0 beats an underflow panic / u64::MAX in metrics.
     pub fn builds(&self) -> u64 {
-        self.misses
+        self.misses.saturating_sub(self.disk_hits)
     }
 
     pub fn summary(&self) -> String {
+        let disk = if self.disk_hits + self.disk_misses > 0 || self.bytes_on_disk > 0 {
+            format!(
+                "; disk: {} hits / {} probes ({:.0}%), {} B resident",
+                self.disk_hits,
+                self.disk_hits + self.disk_misses,
+                100.0 * self.disk_hit_rate(),
+                self.bytes_on_disk
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{} lookups = {} hits + {} coalesced + {} builds ({:.0}% hit rate), \
-             {} evictions, {} resident",
+            "{} lookups = {} hits + {} coalesced + {} disk hits + {} builds \
+             ({:.0}% hit rate), {} evictions, {} resident{}",
             self.lookups(),
             self.hits,
             self.coalesced,
-            self.misses,
+            self.disk_hits,
+            self.builds(),
             100.0 * self.hit_rate(),
             self.evictions,
-            self.resident
+            self.resident,
+            disk
         )
     }
 }
@@ -124,6 +171,8 @@ pub struct WorkloadCache {
     shards: Vec<Mutex<Shard>>,
     per_shard_capacity: usize,
     counters: Counters,
+    /// Optional on-disk tier probed on memory misses.
+    disk: Option<Arc<DiskStore>>,
 }
 
 const DEFAULT_SHARDS: usize = 8;
@@ -148,7 +197,20 @@ impl WorkloadCache {
                 .collect(),
             per_shard_capacity,
             counters: Counters::default(),
+            disk: None,
         }
+    }
+
+    /// Layer an on-disk tier under this cache: memory miss → disk probe
+    /// (under the key's cross-process build lock) → compile + store.
+    pub fn with_disk(mut self, disk: Arc<DiskStore>) -> Self {
+        self.disk = Some(disk);
+        self
+    }
+
+    /// The on-disk tier, if configured.
+    pub fn disk(&self) -> Option<&Arc<DiskStore>> {
+        self.disk.as_ref()
     }
 
     fn shard_of(&self, key: &WorkloadKey) -> usize {
@@ -167,13 +229,21 @@ impl WorkloadCache {
     }
 
     pub fn counters(&self) -> CacheCounters {
+        // Read disk_hits before misses: a builder bumps misses first and
+        // disk_hits later, so this order can only under-count disk_hits
+        // relative to misses — never leave disk_hits > misses.
+        let disk_hits = self.counters.disk_hits.load(Ordering::Relaxed);
+        let disk_misses = self.counters.disk_misses.load(Ordering::Relaxed);
         CacheCounters {
             hits: self.counters.hits.load(Ordering::Relaxed),
             coalesced: self.counters.coalesced.load(Ordering::Relaxed),
             misses: self.counters.misses.load(Ordering::Relaxed),
             evictions: self.counters.evictions.load(Ordering::Relaxed),
             build_failures: self.counters.build_failures.load(Ordering::Relaxed),
+            disk_hits,
+            disk_misses,
             resident: self.len() as u64,
+            bytes_on_disk: self.disk.as_ref().map(|d| d.bytes_on_disk()).unwrap_or(0),
         }
     }
 
@@ -198,18 +268,16 @@ impl WorkloadCache {
 
         if is_builder {
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
-            // Build with the shard lock released so other keys proceed.
-            let built =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| key.build_shared()));
-            match built {
-                Ok(workload) => {
+            // Probe disk / build with the shard lock released so other
+            // keys proceed.
+            match self.disk_or_build(key) {
+                Ok((workload, fetch)) => {
                     *slot.state.lock().unwrap() = BuildState::Ready(workload.clone());
                     slot.ready.notify_all();
                     self.trim(shard_idx);
-                    Ok((workload, Fetch::Built))
+                    Ok((workload, fetch))
                 }
-                Err(payload) => {
-                    let msg = panic_message(payload.as_ref());
+                Err(msg) => {
                     *slot.state.lock().unwrap() = BuildState::Failed(msg.clone());
                     slot.ready.notify_all();
                     self.counters.build_failures.fetch_add(1, Ordering::Relaxed);
@@ -241,6 +309,39 @@ impl WorkloadCache {
                 BuildState::Building => unreachable!("woken while still building"),
             }
         }
+    }
+
+    /// The two lower tiers behind a memory miss: probe the on-disk
+    /// store (under the key's cross-process build lock), else compile —
+    /// writing fresh builds back to disk for other processes and future
+    /// restarts. Without a disk tier this is just the compile.
+    fn disk_or_build(&self, key: &WorkloadKey) -> Result<(SharedWorkload, Fetch), String> {
+        let disk = match &self.disk {
+            Some(disk) => disk,
+            None => return Ok((Self::build(key)?, Fetch::Built)),
+        };
+        // Exclusive across processes for this key: the first builder
+        // compiles while the others block here, then load its entry.
+        let _guard = disk.lock(key);
+        if let Some(w) = disk.load(key) {
+            self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((w, Fetch::DiskHit));
+        }
+        self.counters.disk_misses.fetch_add(1, Ordering::Relaxed);
+        let w = Self::build(key)?;
+        if let Err(e) = disk.store(key, &w) {
+            // Failing to persist never fails the job; the next process
+            // simply rebuilds.
+            eprintln!("[cache] warn: could not persist {}: {e}", key.name());
+        }
+        Ok((w, Fetch::Built))
+    }
+
+    /// Compile `key`, converting panics into `Err` (failed builds are
+    /// cached in neither tier).
+    fn build(key: &WorkloadKey) -> Result<SharedWorkload, String> {
+        std::panic::catch_unwind(AssertUnwindSafe(|| key.build_shared()))
+            .map_err(|p| panic_message(p.as_ref()))
     }
 
     /// Evict least-recently-used *ready* entries until the shard is back
@@ -321,6 +422,41 @@ mod tests {
         assert_eq!(c.misses, 1, "exactly one build for 8 identical lookups");
         assert_eq!(c.hits + c.coalesced, 7);
         assert_eq!(fetches.iter().filter(|f| **f == Fetch::Built).count(), 1);
+    }
+
+    #[test]
+    fn disk_tier_shares_builds_across_cache_instances() {
+        use crate::service::disk::{DiskConfig, DiskStore};
+        let dir = std::env::temp_dir().join(format!("dare-cache-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = WorkloadCache::new(4)
+            .with_disk(Arc::new(DiskStore::open(DiskConfig::new(&dir)).unwrap()));
+        let (w1, f1) = a.get_or_build(&key(1)).unwrap();
+        assert_eq!(f1, Fetch::Built);
+        // A "restarted process": fresh memory cache, same directory.
+        let b = WorkloadCache::new(4)
+            .with_disk(Arc::new(DiskStore::open(DiskConfig::new(&dir)).unwrap()));
+        let (w2, f2) = b.get_or_build(&key(1)).unwrap();
+        assert_eq!(f2, Fetch::DiskHit, "warm restart loads from disk");
+        assert_eq!(w1.program.instrs.len(), w2.program.instrs.len());
+        // Promotion: the next lookup is a plain memory hit.
+        assert_eq!(b.get_or_build(&key(1)).unwrap().1, Fetch::Hit);
+        let ca = a.counters();
+        assert_eq!((ca.disk_hits, ca.disk_misses, ca.builds()), (0, 1, 1));
+        let cb = b.counters();
+        assert_eq!((cb.disk_hits, cb.disk_misses, cb.builds()), (1, 0, 0));
+        assert!(cb.bytes_on_disk > 0, "gauge sees the stored entry");
+        assert!((cb.disk_hit_rate() - 1.0).abs() < 1e-9);
+        assert!(cb.summary().contains("disk"), "{}", cb.summary());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_snapshot_never_underflows_builds() {
+        // A live snapshot can race a builder between its misses and
+        // disk_hits bumps; builds() must clamp, not wrap.
+        let c = CacheCounters { misses: 1, disk_hits: 2, ..Default::default() };
+        assert_eq!(c.builds(), 0);
     }
 
     #[test]

@@ -1,0 +1,774 @@
+//! The on-disk workload tier: a versioned, content-addressed,
+//! cross-process store for built [`Workload`]s.
+//!
+//! The in-memory [`WorkloadCache`](super::WorkloadCache) amortizes
+//! builds within one process; this module amortizes them across
+//! processes, `dare serve` restarts, and CI runs. Layout of a cache
+//! directory (`--cache-dir`):
+//!
+//! ```text
+//! <dir>/
+//!   sddmm-pubmed-b1-strided-9f2c….dwl    one entry per WorkloadKey
+//!   sddmm-pubmed-b1-strided-9f2c….lock   advisory flock for that key
+//!   <stem>.tmp.<pid>                     in-flight writes (renamed on
+//!                                        completion, swept by GC)
+//! ```
+//!
+//! Entry file format (all integers little-endian):
+//!
+//! ```text
+//! offset size field
+//!  0     4    magic  b"DARE"
+//!  4     2    codec version (CODEC_VERSION)
+//!  6     2    reserved (zero)
+//!  8     8    FNV-1a64 checksum of the body
+//! 16     8    body length in bytes
+//! 24     …    body: key hash echo, kernel kind, program
+//!             (name/macs/instrs), memory image, region checks
+//! ```
+//!
+//! Trust model: **nothing on disk is trusted**. A bad magic, foreign
+//! version, length mismatch, checksum mismatch, malformed body, or an
+//! entry whose echoed key hash differs from the requested key all make
+//! [`DiskStore::load`] delete the file and report a miss — the caller
+//! rebuilds and re-stores. Bumping [`CODEC_VERSION`] therefore
+//! invalidates every existing entry in place, no migration needed.
+//!
+//! Concurrency: writes go to a `.tmp.<pid>` file first and are
+//! `rename(2)`d into place, so readers never observe a half-written
+//! entry. Builders additionally hold an exclusive `flock(2)` on the
+//! entry's `.lock` file across probe→build→store, so N concurrent
+//! `dare` processes build a missing key exactly once (the losers block,
+//! then load the winner's entry). Locks are advisory and crash-safe:
+//! the kernel drops them with the owning process.
+//!
+//! GC: the store is size-bounded (`max_bytes`). After each write,
+//! entries are evicted oldest-recency-first until the directory is back
+//! under the bound. Recency is the entry's mtime, which `load` bumps on
+//! every hit (`futimens`), so a hot entry survives sweeps that evict
+//! cold ones. Entries whose lock is currently held are skipped.
+
+use crate::isa::{Csr, MInstr, MReg, Program, NUM_MREGS};
+use crate::kernels::{KernelKind, RegionCheck, SharedWorkload, Workload, WorkloadKey};
+use crate::sim::MemImage;
+use crate::util::fnv::fnv1a64;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, SystemTime};
+
+/// First four bytes of every entry file.
+pub const MAGIC: [u8; 4] = *b"DARE";
+
+/// Bump on any change to the body encoding; old entries are then
+/// detected as stale and rebuilt rather than misdecoded.
+pub const CODEC_VERSION: u16 = 1;
+
+const HEADER_LEN: usize = 24;
+
+/// Default size bound of a cache directory (bytes).
+pub const DEFAULT_MAX_BYTES: u64 = 512 * 1024 * 1024;
+
+/// Stale `.tmp.<pid>` files older than this are swept by GC (a crashed
+/// writer's leftovers; live writers rename within milliseconds).
+const TMP_SWEEP_AGE: Duration = Duration::from_secs(3600);
+
+/// Where and how large the on-disk tier is.
+#[derive(Debug, Clone)]
+pub struct DiskConfig {
+    pub dir: PathBuf,
+    /// GC bound for the directory, in bytes.
+    pub max_bytes: u64,
+}
+
+impl DiskConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), max_bytes: DEFAULT_MAX_BYTES }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_instr(out: &mut Vec<u8>, i: &MInstr) {
+    match *i {
+        MInstr::Mcfg { csr, val } => {
+            out.push(0);
+            out.push(csr.index() as u8);
+            put_u32(out, val);
+        }
+        MInstr::Mld { md, base, stride } => {
+            out.push(1);
+            out.push(md.0);
+            put_u64(out, base);
+            put_u64(out, stride);
+        }
+        MInstr::Mst { ms3, base, stride } => {
+            out.push(2);
+            out.push(ms3.0);
+            put_u64(out, base);
+            put_u64(out, stride);
+        }
+        MInstr::Mma { md, ms1, ms2 } => {
+            out.push(3);
+            out.push(md.0);
+            out.push(ms1.0);
+            out.push(ms2.0);
+        }
+        MInstr::Mgather { md, ms1 } => {
+            out.push(4);
+            out.push(md.0);
+            out.push(ms1.0);
+        }
+        MInstr::Mscatter { ms2, ms1 } => {
+            out.push(5);
+            out.push(ms2.0);
+            out.push(ms1.0);
+        }
+    }
+}
+
+/// Serialize `w` as a complete entry file (header + body) for `key`.
+pub fn encode(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
+    let mut body = Vec::with_capacity(w.mem.len() + 1024);
+    put_u64(&mut body, key.stable_hash());
+    put_str(&mut body, w.kind.name());
+    put_str(&mut body, &w.program.name);
+    put_u64(&mut body, w.program.useful_macs);
+    put_u64(&mut body, w.program.issued_macs);
+    put_u64(&mut body, w.program.mem_high_water);
+    put_u32(&mut body, w.program.instrs.len() as u32);
+    for i in &w.program.instrs {
+        put_instr(&mut body, i);
+    }
+    put_u64(&mut body, w.mem.len() as u64);
+    body.extend_from_slice(w.mem.read_bytes(0, w.mem.len()));
+    put_u32(&mut body, w.checks.len() as u32);
+    for c in &w.checks {
+        put_str(&mut body, &c.name);
+        put_u64(&mut body, c.addr);
+        put_u32(&mut body, c.expect.len() as u32);
+        for &v in &c.expect {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// A bounds-checked little-endian reader over the body bytes.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .p
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("body truncated at offset {}", self.p))?;
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid UTF-8 in string".to_string())
+    }
+
+    /// A capacity hint that cannot exceed what the remaining bytes could
+    /// possibly hold (`elem_min` = minimum encoded size per element).
+    fn cap(&self, count: usize, elem_min: usize) -> usize {
+        count.min((self.b.len() - self.p) / elem_min.max(1))
+    }
+}
+
+fn mreg(bits: u8) -> Result<MReg, String> {
+    if (bits as usize) < NUM_MREGS {
+        Ok(MReg(bits))
+    } else {
+        Err(format!("matrix register index {bits} out of range"))
+    }
+}
+
+fn take_instr(cur: &mut Cur) -> Result<MInstr, String> {
+    match cur.u8()? {
+        0 => {
+            let idx = cur.u8()? as u32;
+            let csr = Csr::from_index(idx).ok_or_else(|| format!("bad CSR index {idx}"))?;
+            Ok(MInstr::Mcfg { csr, val: cur.u32()? })
+        }
+        1 => Ok(MInstr::Mld { md: mreg(cur.u8()?)?, base: cur.u64()?, stride: cur.u64()? }),
+        2 => Ok(MInstr::Mst { ms3: mreg(cur.u8()?)?, base: cur.u64()?, stride: cur.u64()? }),
+        3 => Ok(MInstr::Mma {
+            md: mreg(cur.u8()?)?,
+            ms1: mreg(cur.u8()?)?,
+            ms2: mreg(cur.u8()?)?,
+        }),
+        4 => Ok(MInstr::Mgather { md: mreg(cur.u8()?)?, ms1: mreg(cur.u8()?)? }),
+        5 => Ok(MInstr::Mscatter { ms2: mreg(cur.u8()?)?, ms1: mreg(cur.u8()?)? }),
+        tag => Err(format!("unknown instruction tag {tag}")),
+    }
+}
+
+/// Decode a complete entry file back into the [`Workload`] it stores,
+/// validating magic, version, length, checksum, and that the entry
+/// actually belongs to `key`. Any failure means "rebuild", never panic.
+pub fn decode(key: &WorkloadKey, bytes: &[u8]) -> Result<Workload, String> {
+    if bytes.len() < HEADER_LEN {
+        return Err(format!("file too short ({} bytes) for a header", bytes.len()));
+    }
+    if bytes[..4] != MAGIC {
+        return Err("bad magic (not a DARE workload cache entry)".to_string());
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != CODEC_VERSION {
+        return Err(format!("codec version {version}, expected {CODEC_VERSION}"));
+    }
+    let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let body_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let body = &bytes[HEADER_LEN..];
+    if body.len() as u64 != body_len {
+        return Err(format!(
+            "body length mismatch: header says {body_len}, file has {}",
+            body.len()
+        ));
+    }
+    if fnv1a64(body) != checksum {
+        return Err("checksum mismatch (corrupt body)".to_string());
+    }
+    let mut cur = Cur { b: body, p: 0 };
+    let echo = cur.u64()?;
+    if echo != key.stable_hash() {
+        return Err("entry belongs to a different workload key".to_string());
+    }
+    let kind_name = cur.string()?;
+    let kind = KernelKind::from_name(&kind_name)
+        .ok_or_else(|| format!("unknown kernel kind '{kind_name}'"))?;
+    let name = cur.string()?;
+    let useful_macs = cur.u64()?;
+    let issued_macs = cur.u64()?;
+    let mem_high_water = cur.u64()?;
+    let n_instrs = cur.u32()? as usize;
+    let mut instrs = Vec::with_capacity(cur.cap(n_instrs, 2));
+    for _ in 0..n_instrs {
+        instrs.push(take_instr(&mut cur)?);
+    }
+    let mem_len = cur.u64()? as usize;
+    let mem_bytes = cur.take(mem_len)?;
+    let mut mem = MemImage::new(mem_len);
+    mem.write_bytes(0, mem_bytes);
+    let n_checks = cur.u32()? as usize;
+    let mut checks = Vec::with_capacity(cur.cap(n_checks, 16));
+    for _ in 0..n_checks {
+        let name = cur.string()?;
+        let addr = cur.u64()?;
+        let n = cur.u32()? as usize;
+        let mut expect = Vec::with_capacity(cur.cap(n, 4));
+        for _ in 0..n {
+            expect.push(cur.f32()?);
+        }
+        checks.push(RegionCheck { name, addr, expect });
+    }
+    if cur.p != body.len() {
+        return Err(format!("{} trailing bytes in body", body.len() - cur.p));
+    }
+    Ok(Workload {
+        kind,
+        program: Program { name, instrs, useful_macs, issued_macs, mem_high_water },
+        mem,
+        checks,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Platform shims: flock(2) + futimens(2), declared directly (no libc
+// crate offline; same idiom as transport's signal(2) registration).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const LOCK_EX: i32 = 2;
+    const LOCK_NB: i32 = 4;
+    const LOCK_UN: i32 = 8;
+
+    extern "C" {
+        fn flock(fd: i32, operation: i32) -> i32;
+        fn futimens(fd: i32, times: *const u8) -> i32;
+    }
+
+    /// Block until the exclusive lock is held. Retries on EINTR so a
+    /// stray signal mid-wait can't silently break the single-builder
+    /// protocol.
+    pub fn lock_exclusive(f: &File) -> bool {
+        loop {
+            if unsafe { flock(f.as_raw_fd(), LOCK_EX) } == 0 {
+                return true;
+            }
+            if std::io::Error::last_os_error().kind() != std::io::ErrorKind::Interrupted {
+                return false;
+            }
+        }
+    }
+
+    pub fn try_lock_exclusive(f: &File) -> bool {
+        unsafe { flock(f.as_raw_fd(), LOCK_EX | LOCK_NB) == 0 }
+    }
+
+    pub fn unlock(f: &File) {
+        let _ = unsafe { flock(f.as_raw_fd(), LOCK_UN) };
+    }
+
+    /// Bump atime+mtime to now (NULL times): marks recency for GC.
+    pub fn touch(f: &File) {
+        let _ = unsafe { futimens(f.as_raw_fd(), std::ptr::null()) };
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use std::fs::File;
+
+    // Locking degrades to a no-op off unix: single-process correctness
+    // is unaffected (the in-memory cache already dedups in-flight
+    // builds); concurrent processes may duplicate work, never corrupt
+    // (writes are still atomic via rename).
+    pub fn lock_exclusive(_f: &File) -> bool {
+        true
+    }
+
+    pub fn try_lock_exclusive(_f: &File) -> bool {
+        true
+    }
+
+    pub fn unlock(_f: &File) {}
+
+    pub fn touch(_f: &File) {}
+}
+
+/// An exclusive per-key build lock, released on drop (or process death).
+pub struct BuildLock {
+    file: File,
+}
+
+impl Drop for BuildLock {
+    fn drop(&mut self) {
+        sys::unlock(&self.file);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Store
+// ---------------------------------------------------------------------
+
+/// Aggregate stats for `dare cache stats`.
+#[derive(Debug, Clone, Default)]
+pub struct DiskStats {
+    /// `.dwl` entries present.
+    pub entries: u64,
+    /// Total bytes across entries.
+    pub bytes: u64,
+    /// `(codec_version, count)` histogram, ascending by version.
+    pub versions: Vec<(u16, u64)>,
+    /// Entries whose header is unreadable or has a foreign magic.
+    pub unreadable: u64,
+}
+
+/// The content-addressed on-disk workload store. Cheap to construct;
+/// all state lives in the directory, so any number of `DiskStore`
+/// handles (across threads or processes) may point at the same dir.
+pub struct DiskStore {
+    dir: PathBuf,
+    max_bytes: u64,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) the cache directory.
+    pub fn open(cfg: DiskConfig) -> io::Result<DiskStore> {
+        fs::create_dir_all(&cfg.dir)?;
+        Ok(DiskStore { dir: cfg.dir, max_bytes: cfg.max_bytes })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes
+    }
+
+    fn entry_path(&self, key: &WorkloadKey) -> PathBuf {
+        self.dir.join(format!("{}.dwl", key.cache_file_stem()))
+    }
+
+    fn lock_file_path(&self, key: &WorkloadKey) -> PathBuf {
+        self.dir.join(format!("{}.lock", key.cache_file_stem()))
+    }
+
+    /// Take the exclusive build lock for `key`, blocking until granted.
+    /// `None` means locking is unavailable (lock file not creatable);
+    /// callers proceed unlocked — worst case is a duplicated build,
+    /// never corruption.
+    pub fn lock(&self, key: &WorkloadKey) -> Option<BuildLock> {
+        let file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(self.lock_file_path(key))
+            .ok()?;
+        if sys::lock_exclusive(&file) {
+            Some(BuildLock { file })
+        } else {
+            None
+        }
+    }
+
+    /// Fetch `key`'s entry. Any validation failure (truncation, bad
+    /// checksum, foreign version, key mismatch) deletes the entry and
+    /// returns `None` so the caller rebuilds. A hit bumps the entry's
+    /// recency so GC prefers colder victims.
+    pub fn load(&self, key: &WorkloadKey) -> Option<SharedWorkload> {
+        let path = self.entry_path(key);
+        let mut file = File::open(&path).ok()?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes).ok()?;
+        match decode(key, &bytes) {
+            Ok(w) => {
+                sys::touch(&file);
+                Some(Arc::new(w))
+            }
+            Err(_) => {
+                drop(file);
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist `w` as `key`'s entry: write to a `.tmp.<pid>` sibling,
+    /// fsync, rename into place (readers never see partial writes),
+    /// then GC the directory back under its size bound. Returns the
+    /// entry size in bytes.
+    pub fn store(&self, key: &WorkloadKey, w: &Workload) -> io::Result<u64> {
+        let bytes = encode(key, w);
+        let tmp = self.dir.join(format!("{}.tmp.{}", key.cache_file_stem(), std::process::id()));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            let _ = f.sync_all();
+        }
+        fs::rename(&tmp, self.entry_path(key))?;
+        self.gc();
+        Ok(bytes.len() as u64)
+    }
+
+    /// `(path, size, recency)` of every `.dwl` entry.
+    fn scan(&self) -> Vec<(PathBuf, u64, SystemTime)> {
+        let mut out = Vec::new();
+        let rd = match fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(_) => return out,
+        };
+        for e in rd.flatten() {
+            let path = e.path();
+            if path.extension().and_then(|s| s.to_str()) != Some("dwl") {
+                continue;
+            }
+            if let Ok(md) = e.metadata() {
+                let recency = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                out.push((path, md.len(), recency));
+            }
+        }
+        out
+    }
+
+    /// Total bytes of resident entries (the `bytes_on_disk` gauge).
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.scan().iter().map(|(_, len, _)| *len).sum()
+    }
+
+    /// Evict oldest-recency entries until the directory is under
+    /// `max_bytes`, skipping entries whose build lock is currently held
+    /// elsewhere. Also sweeps crashed writers' stale `.tmp.` files.
+    /// Returns bytes evicted.
+    pub fn gc(&self) -> u64 {
+        self.sweep_stale_tmp();
+        let mut entries = self.scan();
+        let mut total: u64 = entries.iter().map(|(_, len, _)| *len).sum();
+        if total <= self.max_bytes {
+            return 0;
+        }
+        entries.sort_by_key(|(_, _, recency)| *recency);
+        let mut evicted = 0u64;
+        for (path, len, _) in entries {
+            if total <= self.max_bytes {
+                break;
+            }
+            // A held lock marks an entry another process is actively
+            // using/rebuilding; leave it for the next sweep.
+            let lock_path = path.with_extension("lock");
+            if let Ok(lock) =
+                OpenOptions::new().create(true).read(true).write(true).open(&lock_path)
+            {
+                if !sys::try_lock_exclusive(&lock) {
+                    continue;
+                }
+                if fs::remove_file(&path).is_ok() {
+                    total -= len;
+                    evicted += len;
+                    // Reap the lock file with its entry (while still
+                    // holding it), or a size-bounded cache over an
+                    // unbounded key space leaks one inode per evicted
+                    // key forever.
+                    let _ = fs::remove_file(&lock_path);
+                }
+                sys::unlock(&lock);
+            } else if fs::remove_file(&path).is_ok() {
+                total -= len;
+                evicted += len;
+            }
+        }
+        evicted
+    }
+
+    fn sweep_stale_tmp(&self) {
+        let rd = match fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(_) => return,
+        };
+        for e in rd.flatten() {
+            let path = e.path();
+            let is_tmp = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.contains(".tmp."));
+            if !is_tmp {
+                continue;
+            }
+            let stale = e
+                .metadata()
+                .and_then(|md| md.modified())
+                .ok()
+                .and_then(|m| SystemTime::now().duration_since(m).ok())
+                .is_some_and(|age| age > TMP_SWEEP_AGE);
+            if stale {
+                let _ = fs::remove_file(&path);
+            }
+        }
+    }
+
+    /// Entry count, bytes, and per-version histogram (reads only the
+    /// 8-byte header prefix of each entry).
+    pub fn stats(&self) -> DiskStats {
+        let mut s = DiskStats::default();
+        let mut versions: Vec<(u16, u64)> = Vec::new();
+        for (path, len, _) in self.scan() {
+            s.entries += 1;
+            s.bytes += len;
+            let mut hdr = [0u8; 8];
+            let read = File::open(&path).and_then(|mut f| f.read_exact(&mut hdr));
+            if read.is_ok() && hdr[..4] == MAGIC {
+                let v = u16::from_le_bytes([hdr[4], hdr[5]]);
+                match versions.iter_mut().find(|(ver, _)| *ver == v) {
+                    Some((_, n)) => *n += 1,
+                    None => versions.push((v, 1)),
+                }
+            } else {
+                s.unreadable += 1;
+            }
+        }
+        versions.sort_unstable_by_key(|(v, _)| *v);
+        s.versions = versions;
+        s
+    }
+
+    /// Remove every entry, lock and tmp file. Returns entries removed.
+    pub fn clear(&self) -> io::Result<u64> {
+        let mut removed = 0u64;
+        for e in fs::read_dir(&self.dir)?.flatten() {
+            let path = e.path();
+            let name = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n,
+                None => continue,
+            };
+            let is_ours =
+                name.ends_with(".dwl") || name.ends_with(".lock") || name.contains(".tmp.");
+            if is_ours && fs::remove_file(&path).is_ok() && name.ends_with(".dwl") {
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::DatasetKind;
+
+    fn key(block: usize) -> WorkloadKey {
+        WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, block, true, 0.04)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dare-disk-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn assert_same_workload(a: &Workload, b: &Workload) {
+        assert_eq!(a.kind.name(), b.kind.name());
+        assert_eq!(a.program.name, b.program.name);
+        assert_eq!(a.program.instrs, b.program.instrs);
+        assert_eq!(a.program.useful_macs, b.program.useful_macs);
+        assert_eq!(a.program.issued_macs, b.program.issued_macs);
+        assert_eq!(a.program.mem_high_water, b.program.mem_high_water);
+        assert_eq!(a.mem.len(), b.mem.len());
+        assert_eq!(a.mem.read_bytes(0, a.mem.len()), b.mem.read_bytes(0, b.mem.len()));
+        assert_eq!(a.checks.len(), b.checks.len());
+        for (ca, cb) in a.checks.iter().zip(&b.checks) {
+            assert_eq!(ca.name, cb.name);
+            assert_eq!(ca.addr, cb.addr);
+            assert_eq!(ca.expect, cb.expect);
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_a_real_workload() {
+        let k = key(1);
+        let w = k.build();
+        let bytes = encode(&k, &w);
+        let back = decode(&k, &bytes).expect("decode");
+        assert_same_workload(&w, &back);
+    }
+
+    #[test]
+    fn codec_rejects_every_corruption_class() {
+        let k = key(1);
+        let bytes = encode(&k, &k.build());
+        // Truncated file (header alone, and mid-body).
+        assert!(decode(&k, &bytes[..10]).is_err());
+        assert!(decode(&k, &bytes[..bytes.len() / 2]).is_err());
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&k, &bad).unwrap_err().contains("magic"));
+        // Foreign version.
+        let mut bad = bytes.clone();
+        bad[4] = bad[4].wrapping_add(1);
+        assert!(decode(&k, &bad).unwrap_err().contains("version"));
+        // Flipped body byte → checksum mismatch.
+        let mut bad = bytes.clone();
+        let mid = HEADER_LEN + (bad.len() - HEADER_LEN) / 2;
+        bad[mid] ^= 0x01;
+        assert!(decode(&k, &bad).unwrap_err().contains("checksum"));
+        // Entry for a different key.
+        assert!(decode(&key(2), &bytes).unwrap_err().contains("different"));
+        // Trailing garbage after the declared body.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode(&k, &bad).is_err());
+    }
+
+    #[test]
+    fn store_load_round_trip_and_stats() {
+        let dir = tmp_dir("roundtrip");
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        let k = key(1);
+        assert!(store.load(&k).is_none(), "cold store misses");
+        let w = k.build();
+        let size = store.store(&k, &w).unwrap();
+        assert!(size > 0);
+        assert_eq!(store.bytes_on_disk(), size);
+        let loaded = store.load(&k).expect("warm store hits");
+        assert_same_workload(&w, &loaded);
+        let s = store.stats();
+        assert_eq!((s.entries, s.bytes, s.unreadable), (1, size, 0));
+        assert_eq!(s.versions, vec![(CODEC_VERSION, 1)]);
+        assert_eq!(store.clear().unwrap(), 1);
+        assert_eq!(store.bytes_on_disk(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entry_is_deleted_and_misses() {
+        let dir = tmp_dir("corrupt");
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        let k = key(1);
+        store.store(&k, &k.build()).unwrap();
+        let path = store.entry_path(&k);
+        // Truncate the body in place.
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(store.load(&k).is_none(), "corrupt entry must miss");
+        assert!(!path.exists(), "corrupt entry must be quarantined");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lock_is_exclusive_across_handles() {
+        let dir = tmp_dir("lock");
+        let a = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        let b = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        let k = key(1);
+        let guard = a.lock(&k).expect("first lock");
+        // A second handle (≈ second process) must not get the lock
+        // while the first holds it.
+        let file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(b.lock_file_path(&k))
+            .unwrap();
+        assert!(!sys::try_lock_exclusive(&file) || cfg!(not(unix)));
+        drop(guard);
+        assert!(sys::try_lock_exclusive(&file));
+        sys::unlock(&file);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

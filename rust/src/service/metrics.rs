@@ -107,7 +107,8 @@ impl MetricsSnapshot {
              \"sim_cycles_per_sec\":{:.1},\"queue_depth\":{},\"workers\":{},\
              \"worker_utilization\":{:.4},\"cache\":{{\"lookups\":{},\"hits\":{},\
              \"coalesced\":{},\"builds\":{},\"evictions\":{},\"build_failures\":{},\
-             \"resident\":{},\"hit_rate\":{:.4}}}}}",
+             \"resident\":{},\"hit_rate\":{:.4},\"disk_hits\":{},\"disk_misses\":{},\
+             \"disk_hit_rate\":{:.4},\"bytes_on_disk\":{}}}}}",
             self.uptime.as_secs_f64(),
             self.jobs_submitted,
             self.jobs_completed,
@@ -126,6 +127,10 @@ impl MetricsSnapshot {
             c.build_failures,
             c.resident,
             c.hit_rate(),
+            c.disk_hits,
+            c.disk_misses,
+            c.disk_hit_rate(),
+            c.bytes_on_disk,
         )
     }
 
@@ -193,7 +198,14 @@ mod tests {
         m.job_submitted();
         m.job_done(0, Duration::from_millis(10), 1000, true);
         std::thread::sleep(Duration::from_millis(2));
-        let cache = CacheCounters { hits: 3, misses: 1, ..Default::default() };
+        let cache = CacheCounters {
+            hits: 3,
+            misses: 2,
+            disk_hits: 1,
+            disk_misses: 1,
+            bytes_on_disk: 4096,
+            ..Default::default()
+        };
         let s = m.snapshot(1, cache);
         let v = Json::parse(&s.to_json()).expect("snapshot JSON parses");
         assert_eq!(v.get("jobs_submitted").and_then(Json::as_u64), Some(1));
@@ -203,9 +215,13 @@ mod tests {
         assert!(v.get("jobs_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
         let c = v.get("cache").expect("cache object");
         assert_eq!(c.get("hits").and_then(Json::as_u64), Some(3));
-        assert_eq!(c.get("builds").and_then(Json::as_u64), Some(1));
-        assert_eq!(c.get("lookups").and_then(Json::as_u64), Some(4));
-        assert!((c.get("hit_rate").and_then(Json::as_f64).unwrap() - 0.75).abs() < 1e-9);
+        assert_eq!(c.get("builds").and_then(Json::as_u64), Some(1), "misses - disk_hits");
+        assert_eq!(c.get("lookups").and_then(Json::as_u64), Some(5));
+        assert!((c.get("hit_rate").and_then(Json::as_f64).unwrap() - 0.6).abs() < 1e-9);
+        assert_eq!(c.get("disk_hits").and_then(Json::as_u64), Some(1));
+        assert_eq!(c.get("disk_misses").and_then(Json::as_u64), Some(1));
+        assert!((c.get("disk_hit_rate").and_then(Json::as_f64).unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(c.get("bytes_on_disk").and_then(Json::as_u64), Some(4096));
     }
 
     #[test]

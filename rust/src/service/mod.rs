@@ -27,6 +27,10 @@
 //! * [`queue`] — the bounded MPMC job queue (backpressure for producers).
 //! * [`cache`] — the sharded, LRU-bounded workload cache; identical
 //!   in-flight specs coalesce onto one build.
+//! * [`disk`] — the optional on-disk workload tier (`--cache-dir`):
+//!   memory → disk → build, with a versioned checksummed codec,
+//!   cross-process build locks, and size-bounded GC, so builds persist
+//!   across processes and serve restarts.
 //! * [`workers`] — the worker pool and the [`Service`] facade.
 //! * [`job`] — the scheduled unit and its outcome.
 //! * [`protocol`] — the JSONL job/result wire format of `dare batch`
@@ -43,6 +47,7 @@
 //! connected client.
 
 pub mod cache;
+pub mod disk;
 pub mod job;
 pub mod metrics;
 pub mod protocol;
@@ -51,6 +56,7 @@ pub mod transport;
 pub mod workers;
 
 pub use cache::{CacheCounters, Fetch, WorkloadCache};
+pub use disk::{DiskConfig, DiskStats, DiskStore};
 pub use job::{Job, JobOutcome};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use protocol::{JobRequest, JobResponse, Json};

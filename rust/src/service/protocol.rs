@@ -627,6 +627,21 @@ pub fn done_event(
     )
 }
 
+/// The answer to a `{"cmd":"metrics"}` control line: the whole-service
+/// [`MetricsSnapshot`](super::MetricsSnapshot) (its JSON form), live,
+/// without a barrier — any session on any transport can poll it.
+pub fn metrics_event(service_json: &str) -> String {
+    format!("{{\"event\":\"metrics\",\"service\":{service_json}}}")
+}
+
+/// Explicit backpressure: emitted once per stall when a session's
+/// submission finds the job queue full, instead of silently blocking
+/// the session's reader. Clients may keep writing (the session still
+/// accepts and queues frames as space frees up) or throttle.
+pub fn busy_event(queue_depth: usize) -> String {
+    format!("{{\"event\":\"busy\",\"queue_depth\":{queue_depth}}}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -771,6 +786,19 @@ mod tests {
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("event").and_then(Json::as_str), Some("result"));
         assert_eq!(v.get("id").and_then(Json::as_str), Some("e0"));
+    }
+
+    #[test]
+    fn metrics_and_busy_event_shapes() {
+        let m = metrics_event("{\"jobs_per_sec\":2.5}");
+        let v = Json::parse(&m).unwrap();
+        assert_eq!(v.get("event").and_then(Json::as_str), Some("metrics"));
+        let svc = v.get("service").expect("service snapshot");
+        assert_eq!(svc.get("jobs_per_sec").and_then(Json::as_f64), Some(2.5));
+        let b = busy_event(17);
+        let v = Json::parse(&b).unwrap();
+        assert_eq!(v.get("event").and_then(Json::as_str), Some("busy"));
+        assert_eq!(v.get("queue_depth").and_then(Json::as_u64), Some(17));
     }
 
     #[test]

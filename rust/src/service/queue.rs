@@ -7,11 +7,22 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Returned by [`JobQueue::push`] after [`JobQueue::close`]; hands the
 /// rejected item back to the caller.
 #[derive(Debug)]
 pub struct Closed<T>(pub T);
+
+/// Why a non-blocking / bounded-wait push didn't enqueue. Both variants
+/// hand the item back so the caller can retry or signal backpressure.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue was at capacity for the whole attempt.
+    Full(T),
+    /// The queue is closed; the item will never be accepted.
+    Closed(T),
+}
 
 struct Inner<T> {
     items: VecDeque<T>,
@@ -49,6 +60,46 @@ impl<T> JobQueue<T> {
         }
         if inner.closed {
             return Err(Closed(item));
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue without blocking: `Err(Full)` when at capacity, so the
+    /// caller can signal backpressure instead of stalling (the
+    /// transport's `busy` event path).
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue, blocking at most `timeout` for space. `Err(Full)` hands
+    /// the item back after the deadline so the caller can re-signal
+    /// backpressure and retry.
+    pub fn push_timeout(&self, item: T, timeout: Duration) -> Result<(), PushError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        while inner.items.len() >= self.capacity && !inner.closed {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(PushError::Full(item));
+            }
+            let (guard, _timed_out) = self.not_full.wait_timeout(inner, left).unwrap();
+            inner = guard;
+        }
+        if inner.closed {
+            return Err(PushError::Closed(item));
         }
         inner.items.push_back(item);
         drop(inner);
@@ -144,6 +195,44 @@ mod tests {
         assert_eq!(q.pop(), Some(0));
         producer.join().unwrap();
         assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn try_push_signals_full_and_closed() {
+        let q = JobQueue::bounded(1);
+        assert!(q.try_push(1).is_ok());
+        match q.try_push(2) {
+            Err(PushError::Full(v)) => assert_eq!(v, 2, "item handed back"),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        q.close();
+        match q.try_push(4) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn push_timeout_expires_then_succeeds_after_pop() {
+        let q = Arc::new(JobQueue::bounded(1));
+        q.push(0usize).unwrap();
+        let t0 = std::time::Instant::now();
+        match q.push_timeout(1, Duration::from_millis(30)) {
+            Err(PushError::Full(v)) => assert_eq!(v, 1),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(25), "waited for the deadline");
+        // With a consumer draining, the bounded wait succeeds.
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.pop()
+        });
+        q.push_timeout(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(0));
         assert_eq!(q.pop(), Some(1));
     }
 

@@ -18,6 +18,11 @@
 //! * **Isolation** — a malformed frame produces an `"ok":false` result
 //!   event on that connection only; the server and every other client
 //!   keep running.
+//! * **Control plane** — `{"cmd":"metrics"}` answers immediately with a
+//!   live `{"event":"metrics","service":…}` snapshot (no barrier), and
+//!   a submission that finds the job queue full emits
+//!   `{"event":"busy","queue_depth":…}` once per stall instead of
+//!   silently blocking the session's reader.
 //! * **Graceful shutdown/drain** — SIGTERM/SIGINT or a
 //!   `{"cmd":"shutdown"}` control line stop the accept loop, unblock
 //!   every connected reader, let in-flight jobs finish, emit each
@@ -27,7 +32,7 @@
 //! Zero external crates: `std::os::unix::net` + `std::net` only, and the
 //! SIGTERM hook is a direct `signal(2)` registration against libc.
 
-use super::protocol::{done_event, Json};
+use super::protocol::{busy_event, done_event, metrics_event, Json};
 use super::workers::Service;
 use super::{JobOutcome, JobRequest, JobResponse};
 use crate::coordinator::RunSpec;
@@ -78,6 +83,8 @@ pub fn parse_job_line(line: &str, verify: bool) -> Result<ParsedJob, String> {
 enum Control {
     Done,
     Shutdown,
+    /// Answer with a live whole-service `MetricsSnapshot`, no barrier.
+    Metrics,
 }
 
 fn parse_control(line: &str) -> Option<Control> {
@@ -85,6 +92,7 @@ fn parse_control(line: &str) -> Option<Control> {
     match v.get("cmd")?.as_str()? {
         "done" => Some(Control::Done),
         "shutdown" => Some(Control::Shutdown),
+        "metrics" => Some(Control::Metrics),
         _ => None,
     }
 }
@@ -155,8 +163,9 @@ pub fn run_session<R: BufRead>(
         failed: AtomicU64::new(0),
         cache_hits: AtomicU64::new(0),
     });
-    // seq → (id, spec name), inserted under the lock *around* submit so
-    // the writer can never see an outcome before its context exists.
+    // seq → (id, spec name), registered under a pre-reserved seq
+    // *before* the submit, so the writer can never see an outcome
+    // before its context exists.
     let pending: Arc<Mutex<HashMap<u64, (Option<String>, String)>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let (tx, rx) = mpsc::channel::<JobOutcome>();
@@ -218,16 +227,26 @@ pub fn run_session<R: BufRead>(
                     shutdown_requested = true;
                     break;
                 }
+                Control::Metrics => {
+                    // Live snapshot, no barrier: answered immediately
+                    // even with jobs in flight.
+                    shared.write_line(&metrics_event(&service.metrics().to_json()));
+                }
             }
             continue;
         }
         match parse_job_line(trimmed, opts.verify) {
             Ok(job) => {
                 let name = job.spec.name();
-                let mut map = pending.lock().unwrap();
-                let seq = service.submit(job.spec, job.use_xla, tx.clone());
-                map.insert(seq, (job.id, name));
-                drop(map);
+                // Reserve the seq and register its context *before*
+                // submitting, so the writer can never see an outcome
+                // for an unknown seq — and no lock is held while a
+                // backpressured submit waits for queue space.
+                let seq = service.reserve_seq();
+                pending.lock().unwrap().insert(seq, (job.id, name));
+                service.submit_reserved(seq, job.spec, job.use_xla, tx.clone(), |depth| {
+                    shared.write_line(&busy_event(depth));
+                });
                 submitted += 1;
                 dirty = true;
             }
@@ -669,6 +688,74 @@ mod tests {
             })
             .count();
         assert_eq!(dones, 1, "{lines:?}");
+    }
+
+    #[test]
+    fn metrics_cmd_answers_live_snapshot_inline() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!("{}\n{{\"cmd\":\"metrics\"}}\n", job("m0", "baseline"));
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 1, "a metrics poll is not a job");
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 3, "result + metrics + done: {lines:?}");
+        let metrics_line = lines
+            .iter()
+            .find(|l| {
+                Json::parse(l).unwrap().get("event").and_then(Json::as_str) == Some("metrics")
+            })
+            .expect("metrics event emitted");
+        let v = Json::parse(metrics_line).unwrap();
+        let svc = v.get("service").expect("live service snapshot");
+        assert!(svc.get("jobs_submitted").and_then(Json::as_u64).unwrap() >= 1);
+        let cache = svc.get("cache").expect("cache counters");
+        assert!(cache.get("disk_hits").and_then(Json::as_u64).is_some());
+        assert!(cache.get("bytes_on_disk").and_then(Json::as_u64).is_some());
+    }
+
+    #[test]
+    fn full_queue_emits_busy_and_still_serves_every_job() {
+        // One worker draining a one-slot queue: the reader (µs per
+        // line) outruns the worker (ms per job), so the session must
+        // signal busy at least once — and still answer every job.
+        let cfg = ServiceConfig { workers: 1, queue_capacity: 1, ..ServiceConfig::default() };
+        let service = Service::start(cfg);
+        let n = 6;
+        let input: String =
+            (0..n).map(|i| format!("{}\n", job(&format!("j{i}"), "baseline"))).collect();
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, n as u64);
+        assert_eq!(summary.failed, 0);
+        let lines = buf.take_lines();
+        let (mut results, mut busy) = (0, 0);
+        for l in &lines {
+            let v = Json::parse(l).unwrap();
+            match v.get("event").and_then(Json::as_str) {
+                Some("result") => results += 1,
+                Some("busy") => {
+                    busy += 1;
+                    assert!(v.get("queue_depth").and_then(Json::as_u64).is_some(), "{l}");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(results, n, "{lines:?}");
+        assert!(busy >= 1, "no busy event despite a saturated queue: {lines:?}");
     }
 
     #[test]

@@ -4,19 +4,25 @@
 //! CPU-bound, so dedicated threads are the right tool anyway.)
 
 use super::cache::{Fetch, WorkloadCache};
+use super::disk::{DiskConfig, DiskStore};
 use super::job::{Job, JobOutcome};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::panic_message;
-use super::queue::JobQueue;
+use super::queue::{JobQueue, PushError};
 use crate::coordinator::{run_prebuilt, RunResult, RunSpec};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The per-process shared service (see [`shared`]).
 static SHARED: OnceLock<Service> = OnceLock::new();
+
+/// Retry granularity for a backpressured submit (between retries the
+/// submitter re-checks for space; the `busy` signal has already been
+/// sent).
+const BUSY_RETRY: Duration = Duration::from_millis(100);
 
 /// The per-process shared [`Service`]: one worker pool and one workload
 /// cache for every harness in the process, so `dare all` builds each
@@ -34,7 +40,7 @@ pub fn shared_handle() -> Option<&'static Service> {
     SHARED.get()
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Worker threads (0 = one per core).
     pub workers: usize,
@@ -42,11 +48,14 @@ pub struct ServiceConfig {
     pub queue_capacity: usize,
     /// Total workload-cache capacity, in built workloads.
     pub cache_capacity: usize,
+    /// Optional on-disk workload tier (`--cache-dir`): builds persist
+    /// across processes and serve restarts. Default off.
+    pub disk: Option<DiskConfig>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 0, queue_capacity: 1024, cache_capacity: 32 }
+        Self { workers: 0, queue_capacity: 1024, cache_capacity: 32, disk: None }
     }
 }
 
@@ -80,7 +89,14 @@ impl Service {
     pub fn start(cfg: ServiceConfig) -> Self {
         let n = cfg.resolved_workers();
         let queue = Arc::new(JobQueue::bounded(cfg.queue_capacity));
-        let cache = Arc::new(WorkloadCache::new(cfg.cache_capacity));
+        let mut cache = WorkloadCache::new(cfg.cache_capacity);
+        if let Some(disk_cfg) = cfg.disk.clone() {
+            let dir = disk_cfg.dir.display().to_string();
+            let store = DiskStore::open(disk_cfg)
+                .unwrap_or_else(|e| panic!("cannot open workload cache dir '{dir}': {e}"));
+            cache = cache.with_disk(Arc::new(store));
+        }
+        let cache = Arc::new(cache);
         let metrics = Arc::new(ServiceMetrics::new(n));
         let workers = (0..n)
             .map(|wid| {
@@ -100,15 +116,59 @@ impl Service {
         self.workers.len()
     }
 
+    /// The job queue's capacity (the backpressure bound).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
     /// Enqueue one spec; the outcome arrives on `reply`. Returns the
-    /// job's sequence number (monotonic in submission order).
+    /// job's sequence number (monotonic in submission order). Blocks
+    /// silently while the queue is full — backpressure-aware callers
+    /// use [`reserve_seq`](Self::reserve_seq) +
+    /// [`submit_reserved`](Self::submit_reserved) instead.
     pub fn submit(&self, spec: RunSpec, use_xla: bool, reply: mpsc::Sender<JobOutcome>) -> u64 {
-        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        self.metrics.job_submitted();
-        if self.queue.push(Job { seq, spec, use_xla, reply }).is_err() {
-            panic!("submit on a shut-down service");
-        }
+        let seq = self.reserve_seq();
+        self.submit_reserved(seq, spec, use_xla, reply, |_| {});
         seq
+    }
+
+    /// Allocate the next sequence number *before* submitting, so a
+    /// caller can register outcome context (e.g. a session's
+    /// `seq → id` map) with no risk of the outcome racing ahead of it,
+    /// and without holding any lock across a potentially blocking
+    /// submit.
+    pub fn reserve_seq(&self) -> u64 {
+        self.next_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Enqueue a job under a pre-reserved sequence number. When the
+    /// queue is full, `on_busy(queue_depth)` fires once — the
+    /// transport turns it into a `{"event":"busy",…}` line so clients
+    /// see backpressure instead of a silent stall — and the push then
+    /// retries in bounded waits until accepted.
+    pub fn submit_reserved(
+        &self,
+        seq: u64,
+        spec: RunSpec,
+        use_xla: bool,
+        reply: mpsc::Sender<JobOutcome>,
+        mut on_busy: impl FnMut(usize),
+    ) {
+        self.metrics.job_submitted();
+        let mut job = Job { seq, spec, use_xla, reply };
+        job = match self.queue.try_push(job) {
+            Ok(()) => return,
+            Err(PushError::Closed(_)) => panic!("submit on a shut-down service"),
+            Err(PushError::Full(job)) => job,
+        };
+        on_busy(self.queue.len());
+        loop {
+            job = match self.queue.push_timeout(job, BUSY_RETRY) {
+                Ok(()) => return,
+                Err(PushError::Closed(_)) => panic!("submit on a shut-down service"),
+                Err(PushError::Full(job)) => job,
+            };
+        }
     }
 
     /// Run a batch to completion, results in spec order. Panics if any
@@ -269,6 +329,29 @@ mod tests {
         let good_result = out[1].as_ref().expect("good job unaffected");
         assert_eq!(good_result.name, good.name());
         assert_eq!(service.metrics().jobs_failed, 1);
+    }
+
+    #[test]
+    fn backpressured_submit_signals_busy_and_still_completes() {
+        // One worker, queue of one: the submitter outruns the worker
+        // (parsing is µs, a simulation is ms), so at least one of six
+        // submissions must find the queue full and signal busy.
+        let cfg = ServiceConfig { workers: 1, queue_capacity: 1, ..ServiceConfig::default() };
+        let service = Service::start(cfg);
+        assert_eq!(service.queue_capacity(), 1);
+        let (tx, rx) = mpsc::channel();
+        let mut busy = 0usize;
+        for _ in 0..6 {
+            let seq = service.reserve_seq();
+            let spec = tiny(KernelKind::Sddmm, Variant::Baseline);
+            service.submit_reserved(seq, spec, false, tx.clone(), |_| busy += 1);
+        }
+        drop(tx);
+        let outcomes: Vec<JobOutcome> = rx.iter().collect();
+        assert_eq!(outcomes.len(), 6, "backpressure loses no jobs");
+        assert!(outcomes.iter().all(|o| o.result.is_ok()));
+        assert!(busy >= 1, "a full queue must signal busy");
+        assert_eq!(service.metrics().jobs_completed, 6);
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Integration tests for the on-disk workload tier (`service::disk`):
+//! warm-restart reuse through a whole `Service`, corrupt-entry
+//! recovery, cross-"process" build coordination via the per-key file
+//! lock, and the size-bounded GC.
+
+use dare::coordinator::{BenchPoint, RunSpec};
+use dare::kernels::{KernelKind, WorkloadKey};
+use dare::service::disk::CODEC_VERSION;
+use dare::service::{DiskConfig, DiskStore, Fetch, Service, ServiceConfig, WorkloadCache};
+use dare::sim::Variant;
+use dare::sparse::DatasetKind;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dare-e2e-disk-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn key(block: usize) -> WorkloadKey {
+    WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, block, false, 0.04)
+}
+
+fn store_at(dir: &Path) -> Arc<DiskStore> {
+    Arc::new(DiskStore::open(DiskConfig::new(dir)).unwrap())
+}
+
+fn entry_files(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("dwl"))
+        .collect();
+    v.sort();
+    v
+}
+
+/// The acceptance-criteria path end-to-end: a second *service* (≈ a
+/// second `dare` process / a restarted `dare serve`) over the same
+/// cache directory serves every unique workload from disk.
+#[test]
+fn warm_service_restart_hits_disk_for_every_unique_workload() {
+    let dir = tmp_dir("warm-restart");
+    let specs: Vec<RunSpec> = [Variant::Baseline, Variant::Nvr, Variant::DareFre]
+        .into_iter()
+        .flat_map(|v| {
+            [DatasetKind::PubMed, DatasetKind::Gpt2Attention]
+                .into_iter()
+                .map(move |d| RunSpec::new(BenchPoint::new(KernelKind::Sddmm, d, 1, 0.04), v))
+        })
+        .collect();
+
+    let cold_cfg = ServiceConfig {
+        workers: 2,
+        disk: Some(DiskConfig::new(&dir)),
+        ..ServiceConfig::default()
+    };
+    let cold = Service::start(cold_cfg.clone());
+    let cold_results = cold.run_batch(&specs);
+    let c = cold.metrics().cache;
+    assert_eq!(c.disk_hits, 0, "first run has nothing to reuse");
+    assert_eq!(c.disk_misses, 2, "one probe per unique workload");
+    assert!(c.bytes_on_disk > 0);
+    drop(cold);
+
+    // "Restart": a brand-new service, empty memory cache, same dir.
+    let warm = Service::start(cold_cfg);
+    let warm_results = warm.run_batch(&specs);
+    let c = warm.metrics().cache;
+    assert_eq!(c.disk_hits, 2, "every unique workload loads from disk");
+    assert_eq!(c.disk_misses, 0);
+    assert_eq!(c.builds(), 0, "the warm run compiles nothing");
+    assert!(
+        c.disk_hit_rate() >= 0.9,
+        "warm-restart disk hit rate {} below the CI bar",
+        c.disk_hit_rate()
+    );
+    // Disk-served builds are exact: identical simulation results.
+    for (a, b) in cold_results.iter().zip(&warm_results) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.stats.cycles, b.stats.cycles, "{}", a.name);
+        assert_eq!(a.stats.instrs_retired, b.stats.instrs_retired, "{}", a.name);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_corruption_class_rebuilds_instead_of_panicking() {
+    let dir = tmp_dir("corruption");
+    let k = key(1);
+    store_at(&dir).store(&k, &k.build()).unwrap();
+    let pristine = std::fs::read(&entry_files(&dir)[0]).unwrap();
+
+    // (tag, mutate) pairs covering: truncated body, flipped body byte
+    // (checksum), foreign codec version, garbage header.
+    type Mutate = fn(&[u8]) -> Vec<u8>;
+    let cases: [(&str, Mutate); 4] = [
+        ("truncated", |b| b[..b.len() - 9].to_vec()),
+        ("bit-flip", |b| {
+            let mut v = b.to_vec();
+            let mid = 24 + (v.len() - 24) / 2;
+            v[mid] ^= 0x40;
+            v
+        }),
+        ("future-version", |b| {
+            let mut v = b.to_vec();
+            let bumped = (CODEC_VERSION + 1).to_le_bytes();
+            v[4] = bumped[0];
+            v[5] = bumped[1];
+            v
+        }),
+        ("garbage", |b| vec![0x5A; b.len().min(64)]),
+    ];
+    for (tag, mutate) in cases {
+        let files = entry_files(&dir);
+        std::fs::write(&files[0], mutate(&pristine)).unwrap();
+        let cache = WorkloadCache::new(4).with_disk(store_at(&dir));
+        let (_, fetch) = cache.get_or_build(&k).unwrap_or_else(|e| {
+            panic!("{tag}: corrupt entry must rebuild, not fail: {e}")
+        });
+        assert_eq!(fetch, Fetch::Built, "{tag}: must rebuild, not trust the corpse");
+        let c = cache.counters();
+        assert_eq!((c.disk_hits, c.disk_misses), (0, 1), "{tag}");
+        // The rebuild re-persisted a valid entry.
+        let files = entry_files(&dir);
+        let healed = std::fs::read(&files[0]).unwrap();
+        assert_eq!(healed, pristine, "{tag}: deterministic build re-persists identically");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two caches over two stores (≈ two processes) racing on one key: the
+/// per-key flock serializes them, so exactly one compiles and the other
+/// loads the winner's entry.
+#[test]
+fn concurrent_processes_build_a_key_exactly_once() {
+    let dir = tmp_dir("two-procs");
+    let caches: Vec<Arc<WorkloadCache>> = (0..2)
+        .map(|_| Arc::new(WorkloadCache::new(4).with_disk(store_at(&dir))))
+        .collect();
+    let barrier = Arc::new(std::sync::Barrier::new(caches.len()));
+    let handles: Vec<_> = caches
+        .iter()
+        .map(|cache| {
+            let cache = cache.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                cache.get_or_build(&key(1)).unwrap().1
+            })
+        })
+        .collect();
+    let fetches: Vec<Fetch> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(fetches.iter().filter(|f| **f == Fetch::Built).count(), 1, "{fetches:?}");
+    assert_eq!(fetches.iter().filter(|f| **f == Fetch::DiskHit).count(), 1, "{fetches:?}");
+    let total_builds: u64 = caches.iter().map(|c| c.counters().builds()).sum();
+    let total_disk_hits: u64 = caches.iter().map(|c| c.counters().disk_hits).sum();
+    assert_eq!((total_builds, total_disk_hits), (1, 1));
+    assert_eq!(entry_files(&dir).len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_respects_the_size_bound_and_evicts_oldest_first() {
+    let dir = tmp_dir("gc");
+    let unbounded = store_at(&dir);
+    let keys = [key(1), key(2), key(4)];
+    let mut sizes = Vec::new();
+    for k in &keys {
+        sizes.push(unbounded.store(k, &k.build()).unwrap());
+        // Distinct mtimes so eviction order is well-defined.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+    }
+    let total: u64 = sizes.iter().sum();
+    assert_eq!(unbounded.bytes_on_disk(), total);
+    assert_eq!(entry_files(&dir).len(), 3);
+
+    // A bound just below the total must evict exactly the oldest entry.
+    let bound = total - 1;
+    let bounded_cfg = DiskConfig { dir: dir.clone(), max_bytes: bound };
+    let bounded = Arc::new(DiskStore::open(bounded_cfg).unwrap());
+    let evicted = bounded.gc();
+    assert_eq!(evicted, sizes[0], "oldest entry evicted first");
+    assert!(bounded.bytes_on_disk() <= bound);
+    let survivors = entry_files(&dir);
+    assert_eq!(survivors.len(), 2);
+    let cache = WorkloadCache::new(4).with_disk(bounded.clone());
+    assert_eq!(cache.get_or_build(&keys[0]).unwrap().1, Fetch::Built, "victim rebuilds");
+    assert_eq!(cache.get_or_build(&keys[2]).unwrap().1, Fetch::DiskHit, "newest survived");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stats_and_clear_see_the_same_entries_the_service_wrote() {
+    let dir = tmp_dir("stats");
+    let cfg = ServiceConfig {
+        workers: 1,
+        disk: Some(DiskConfig::new(&dir)),
+        ..ServiceConfig::default()
+    };
+    let service = Service::start(cfg);
+    let spec = RunSpec::new(
+        BenchPoint::new(KernelKind::Sddmm, DatasetKind::PubMed, 1, 0.04),
+        Variant::Baseline,
+    );
+    let _ = service.run_batch(std::slice::from_ref(&spec));
+    drop(service);
+    let store = store_at(&dir);
+    let s = store.stats();
+    assert_eq!(s.entries, 1);
+    assert!(s.bytes > 0);
+    assert_eq!(s.versions, vec![(CODEC_VERSION, 1)]);
+    assert_eq!(s.unreadable, 0);
+    assert_eq!(store.clear().unwrap(), 1);
+    assert_eq!(store.stats().entries, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -187,6 +187,41 @@ fn malformed_frame_is_isolated_to_its_connection() {
 }
 
 #[test]
+fn metrics_cmd_over_socket_returns_live_snapshot() {
+    let h = Harness::start("metrics");
+    let mut stream = h.connect();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{}", job_line("m/0", "baseline")).unwrap();
+    writeln!(stream, "{{\"cmd\":\"metrics\"}}").unwrap();
+    writeln!(stream, "{{\"cmd\":\"done\"}}").unwrap();
+    stream.flush().unwrap();
+    let (mut results, mut saw_metrics) = (0, false);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read line");
+        assert!(n > 0, "connection closed before done event");
+        let v = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        match v.get("event").and_then(Json::as_str) {
+            Some("result") => results += 1,
+            Some("metrics") => {
+                saw_metrics = true;
+                let svc = v.get("service").expect("metrics carries a live snapshot");
+                assert!(svc.get("jobs_submitted").and_then(Json::as_u64).unwrap() >= 1);
+                let cache = svc.get("cache").expect("cache counters");
+                assert!(cache.get("disk_hits").and_then(Json::as_u64).is_some());
+                assert!(cache.get("bytes_on_disk").and_then(Json::as_u64).is_some());
+            }
+            Some("done") => break,
+            other => panic!("unexpected event {other:?} in {line:?}"),
+        }
+    }
+    assert_eq!(results, 1);
+    assert!(saw_metrics, "a socket session must answer {{\"cmd\":\"metrics\"}}");
+    h.stop();
+}
+
+#[test]
 fn bind_unix_refuses_to_replace_non_socket_files() {
     let path = std::env::temp_dir().join(format!("dare-notsocket-{}.txt", std::process::id()));
     std::fs::write(&path, "precious").unwrap();
