@@ -6,8 +6,9 @@
 //! `-- --filter <substr>` to select).
 
 use dare::coordinator::{run_one, BenchPoint, RunSpec};
-use dare::kernels::KernelKind;
+use dare::kernels::{KernelKind, WorkloadKey};
 use dare::mem::{Llc, LlcConfig, MemRequest};
+use dare::service::disk;
 use dare::service::{Service, ServiceConfig};
 use dare::sim::{MmaExec, Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
@@ -93,6 +94,29 @@ fn main() {
     b.bench("datasets/pubmed-full", || {
         dare::sparse::Dataset::load(DatasetKind::PubMed, 1.0).matrix.nnz()
     });
+
+    // Disk-tier codec: v2 (RLE-compressed) encode/decode throughput on
+    // a real zero-heavy workload, in raw-body bytes/s, plus the realized
+    // compression ratio (the disk/IO saving every cache store enjoys).
+    {
+        let k = WorkloadKey::new(KernelKind::Sddmm, DatasetKind::Gpt2Attention, 1, false, 0.25);
+        let w = k.build();
+        let raw = disk::encode_v1(&k, &w).len() as u64;
+        let packed = disk::encode(&k, &w);
+        println!(
+            "codec/v2 entry: {} B compressed vs {raw} B raw ({:.1}x)",
+            packed.len(),
+            raw as f64 / packed.len() as f64
+        );
+        assert!(
+            (packed.len() as u64) < raw,
+            "the v2 codec must shrink a sparse workload entry"
+        );
+        b.bench_elems("codec/encode-v2", raw, || disk::encode(&k, &w).len());
+        b.bench_elems("codec/decode-v2", raw, || {
+            disk::decode(&k, &packed).expect("bench entry decodes").mem.len()
+        });
+    }
 
     // Sweep-level service throughput: a 3-variant × 3-dataset sweep
     // (all strided lowerings) through back-to-back `run_one` calls —

@@ -7,10 +7,10 @@
 //! dare isa | config | overhead                                  tables
 //! dare all [--scale 0.5]                                        everything
 //! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
-//! dare batch <jobs.jsonl> [--stream] [--cache-dir D]            service: run a JSONL job file
+//! dare batch <jobs.jsonl> [--stream] [--cache-dir D [--cache-seed S]]   service: run a JSONL job file
 //! dare serve [--socket P | --tcp H:P] [--cache-dir D]           service: JSONL jobs, stdio or socket
 //! dare client (--socket P | --tcp H:P) [jobs.jsonl] [--shutdown]   drive a running server
-//! dare cache stats|clear --cache-dir D                          inspect/wipe an on-disk cache
+//! dare cache stats|clear|gc --cache-dir D                       inspect/wipe/sweep an on-disk cache
 //! dare asm <file.s>                                             assemble + run
 //! ```
 
@@ -48,7 +48,9 @@ commands:\n\
   client         connect to a serve socket, submit a job file (if given), print the\n\
                  streamed responses; --shutdown asks the server to drain and exit\n\
   cache          on-disk workload cache maintenance: `dare cache stats --cache-dir D`\n\
-                 (entries, bytes, codec-version histogram) or `dare cache clear …`\n\
+                 (entries, bytes, codec-version histogram), `dare cache clear …`, or\n\
+                 `dare cache gc --cache-dir D [--max-mb N] [--dry-run]` (explicit\n\
+                 size-bound sweep; dry-run lists victims without deleting)\n\
   asm            assemble and simulate a .s file (DARE-full MPU)\n\
   help           print this help\n\
 options:\n\
@@ -58,6 +60,10 @@ options:\n\
   --cache-dir D      batch/serve/all: also persist built workloads in directory D, shared\n\
                      across processes and serve restarts (corrupt/stale entries rebuild)\n\
   --cache-max-mb N   size bound for --cache-dir; GC evicts oldest entries (default 512)\n\
+  --cache-seed S     read-only seed cache directory, probed after --cache-dir misses;\n\
+                     hits are promoted into --cache-dir, the seed is never written or GC'd\n\
+  --max-mb N         cache gc: override the sweep bound (alias of --cache-max-mb)\n\
+  --dry-run          cache gc: report would-be victims without deleting anything\n\
   --verify           check functional outputs against references\n\
   --socket PATH      serve/client: unix socket path\n\
   --tcp HOST:PORT    serve/client: TCP endpoint\n\
@@ -72,56 +78,121 @@ fn usage() -> ! {
 }
 
 /// Service configuration from the shared CLI options.
-fn service_config(args: &Args, opts: &HarnessOpts) -> ServiceConfig {
-    ServiceConfig {
+fn service_config(args: &Args, opts: &HarnessOpts) -> Result<ServiceConfig, CliError> {
+    Ok(ServiceConfig {
         workers: opts.threads,
         cache_capacity: args.get_parse("cache", ServiceConfig::default().cache_capacity),
-        disk: disk_config(args),
+        disk: disk_config(args)?,
         ..ServiceConfig::default()
-    }
-}
-
-/// `--cache-dir DIR [--cache-max-mb N]`: the on-disk workload tier
-/// shared across processes and serve restarts. Off unless requested.
-fn disk_config(args: &Args) -> Option<DiskConfig> {
-    // Read the bound first so the option always counts as consumed.
-    let max_mb: u64 = args.get_parse("cache-max-mb", disk::DEFAULT_MAX_BYTES / (1024 * 1024));
-    let dir = args.get("cache-dir")?;
-    Some(DiskConfig {
-        dir: std::path::PathBuf::from(dir),
-        max_bytes: max_mb.saturating_mul(1024 * 1024),
     })
 }
 
-/// `dare cache <stats|clear> --cache-dir DIR`: inspect or wipe an
-/// on-disk workload cache, over the same store code the service runs.
+/// `--cache-dir DIR [--cache-max-mb N] [--cache-seed SEED]`: the
+/// on-disk workload tiers shared across processes and serve restarts.
+/// Off unless requested; the read-only seed tier needs a writable tier
+/// to promote into, so `--cache-seed` without `--cache-dir` is an error.
+fn disk_config(args: &Args) -> Result<Option<DiskConfig>, CliError> {
+    // Read every option first so they always count as consumed.
+    let max_mb: u64 = args.get_parse("cache-max-mb", disk::DEFAULT_MAX_BYTES / (1024 * 1024));
+    let seed = args.get("cache-seed").map(std::path::PathBuf::from);
+    if let Some(seed) = &seed {
+        // The seed invariant is "never created, never written": a
+        // missing directory is an operator error (typo, unmounted
+        // volume), not a dir to silently mkdir or serve 0 hits from.
+        if !seed.is_dir() {
+            return Err(format!("--cache-seed {}: not a directory", seed.display()).into());
+        }
+    }
+    let dir = match args.get("cache-dir") {
+        Some(dir) => dir,
+        None if seed.is_some() => {
+            return Err("--cache-seed requires --cache-dir (the writable tier seed hits \
+                        are promoted into)"
+                .into())
+        }
+        None => return Ok(None),
+    };
+    Ok(Some(DiskConfig {
+        dir: std::path::PathBuf::from(dir),
+        max_bytes: max_mb.saturating_mul(1024 * 1024),
+        seed,
+    }))
+}
+
+/// Print one store's `stats` block under a label. `bound` is the GC
+/// bound to report — `None` for the seed tier, which has none.
+fn print_cache_stats(label: &str, dir: &str, store: &DiskStore, bound: Option<u64>) {
+    let s = store.stats();
+    let bound = match bound {
+        Some(b) => format!(" (bound {} MiB)", b / (1024 * 1024)),
+        None => " (read-only seed, never GC'd)".to_string(),
+    };
+    println!("[{label}] {dir}: {} entries, {} bytes on disk{bound}", s.entries, s.bytes);
+    for (version, count) in &s.versions {
+        println!("[{label}]   codec v{version}: {count} entries");
+    }
+    if s.unreadable > 0 {
+        println!("[{label}]   unreadable/foreign: {} (rebuilt on next use)", s.unreadable);
+    }
+}
+
+/// `dare cache <stats|clear|gc> --cache-dir DIR`: inspect, wipe, or
+/// sweep an on-disk workload cache, over the same store code the
+/// service runs.
 fn cmd_cache(args: &Args) -> Result<(), CliError> {
     let action = args.positional.first().map(String::as_str).unwrap_or("stats");
-    let cfg = disk_config(args).ok_or("cache requires --cache-dir DIR")?;
+    let cfg = disk_config(args)?.ok_or("cache requires --cache-dir DIR")?;
     let dir = cfg.dir.display().to_string();
+    let seed = cfg.seed.clone();
     let store = DiskStore::open(cfg)?;
     match action {
         "stats" => {
-            let s = store.stats();
-            println!(
-                "[cache] {dir}: {} entries, {} bytes on disk (bound {} MiB)",
-                s.entries,
-                s.bytes,
-                store.max_bytes() / (1024 * 1024)
-            );
-            for (version, count) in &s.versions {
-                println!("[cache]   codec v{version}: {count} entries");
-            }
-            if s.unreadable > 0 {
-                println!("[cache]   unreadable/foreign: {} (rebuilt on next use)", s.unreadable);
+            print_cache_stats("cache", &dir, &store, Some(store.max_bytes()));
+            if let Some(seed) = seed {
+                // disk_config validated the dir exists, so open is a
+                // no-op mkdir and stats only reads — the seed stays
+                // untouched.
+                let seed_dir = seed.display().to_string();
+                let seed_store = DiskStore::open(DiskConfig::new(seed))?;
+                print_cache_stats("seed", &seed_dir, &seed_store, None);
             }
         }
         "clear" => {
             let removed = store.clear()?;
             println!("[cache] {dir}: removed {removed} entries");
         }
+        "gc" => {
+            // `--max-mb` overrides the sweep bound (`--cache-max-mb`
+            // spelled the way a one-off maintenance command expects).
+            let max_bytes = args
+                .get_parse("max-mb", store.max_bytes() / (1024 * 1024))
+                .saturating_mul(1024 * 1024);
+            let dry_run = args.flag("dry-run");
+            let report = store.gc_with(max_bytes, dry_run);
+            let mode = if dry_run { " (dry-run: nothing deleted)" } else { "" };
+            println!(
+                "[cache] {dir}: {} -> {} bytes (bound {} MiB), {} victim(s){mode}",
+                report.bytes_before,
+                report.bytes_after,
+                max_bytes / (1024 * 1024),
+                report.victims.len(),
+            );
+            for (path, len) in &report.victims {
+                let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("?");
+                println!("[cache]   evict {name} ({len} B)");
+            }
+            if report.skipped_locked > 0 {
+                println!(
+                    "[cache]   {} over-bound entr{} skipped (build lock held)",
+                    report.skipped_locked,
+                    if report.skipped_locked == 1 { "y" } else { "ies" }
+                );
+            }
+        }
         other => {
-            return Err(format!("unknown cache action '{other}' (expected stats|clear)").into())
+            return Err(
+                format!("unknown cache action '{other}' (expected stats|clear|gc)").into()
+            )
         }
     }
     Ok(())
@@ -149,7 +220,7 @@ fn write_metrics_json(args: &Args, service: &Service) -> Result<(), CliError> {
 /// stderr either way.
 fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     let path = args.positional.first().ok_or("batch requires a jobs.jsonl path")?;
-    let service = Service::start(service_config(args, &opts));
+    let service = Service::start(service_config(args, &opts)?);
     if args.flag("stream") {
         let file = std::fs::File::open(path)?;
         let summary = transport::run_session(
@@ -226,7 +297,7 @@ fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
 fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     let socket = args.get("socket").map(String::from);
     let tcp = args.get("tcp").map(String::from);
-    let service = Arc::new(Service::start(service_config(args, &opts)));
+    let service = Arc::new(Service::start(service_config(args, &opts)?));
     let session_opts = SessionOpts { verify: opts.verify };
     if socket.is_some() || tcp.is_some() {
         let listener = match (&socket, &tcp) {
@@ -410,7 +481,7 @@ fn main() -> Result<(), CliError> {
             // harness implicitly starts the shared service without it —
             // `dare all --cache-dir D` then reuses builds from previous
             // runs and leaves a warm cache for the next one.
-            if let Some(disk_cfg) = disk_config(&args) {
+            if let Some(disk_cfg) = disk_config(&args)? {
                 common::init_shared_service(opts, Some(disk_cfg));
             }
             tables::table1();

@@ -14,12 +14,17 @@
 //! that arrives meanwhile waits on the entry's condvar instead of
 //! building a duplicate. N identical queued specs → exactly one build.
 //!
-//! Disk tier: with [`with_disk`](WorkloadCache::with_disk), a memory
+//! Disk tiers: with [`with_disk`](WorkloadCache::with_disk), a memory
 //! miss probes the on-disk store ([`DiskStore`]) under that key's
-//! cross-process build lock before compiling — memory → disk → build.
-//! Disk hits are promoted into memory (so the next lookup is a memory
-//! hit), and fresh builds are written back for other processes and
-//! future restarts.
+//! cross-process build lock before compiling — **memory → writable dir
+//! → read-only seed dir → build**. Disk and seed hits are promoted into
+//! memory (so the next lookup is a memory hit); a seed hit is also
+//! promoted into the writable directory (the seed itself is never
+//! written), and fresh builds are written back to the writable tier for
+//! other processes and future restarts. The v2 entry codec is
+//! RLE-compressed; the `compressed_bytes`/`uncompressed_bytes` counters
+//! accumulate both sides of every entry encoded or decoded, so
+//! [`CacheCounters::compression_ratio`] reports the realized saving.
 
 use super::disk::DiskStore;
 use super::panic_message;
@@ -38,8 +43,12 @@ pub enum Fetch {
     Hit,
     /// Another thread was mid-build; we waited and shared its result.
     Coalesced,
-    /// Missed in memory, loaded from the on-disk tier (and promoted).
+    /// Missed in memory, loaded from the writable on-disk tier (and
+    /// promoted into memory).
     DiskHit,
+    /// Missed in memory and the writable tier, loaded from the
+    /// read-only seed directory (and promoted into both upper tiers).
+    SeedHit,
     /// We were the builder.
     Built,
 }
@@ -82,6 +91,9 @@ struct Counters {
     build_failures: AtomicU64,
     disk_hits: AtomicU64,
     disk_misses: AtomicU64,
+    seed_hits: AtomicU64,
+    compressed_bytes: AtomicU64,
+    uncompressed_bytes: AtomicU64,
 }
 
 /// A point-in-time copy of the cache counters.
@@ -95,11 +107,19 @@ pub struct CacheCounters {
     pub misses: u64,
     pub evictions: u64,
     pub build_failures: u64,
-    /// Memory misses satisfied by the on-disk tier.
+    /// Memory misses satisfied by the writable on-disk tier.
     pub disk_hits: u64,
     /// Memory misses that reached the compiler (0 disk lookups happen
     /// when no disk tier is configured, so then `misses == builds`).
     pub disk_misses: u64,
+    /// Memory misses satisfied by the read-only seed directory (the
+    /// `--cache-seed` tier); always promoted, never written back.
+    pub seed_hits: u64,
+    /// On-disk (RLE-compressed, header included) bytes of every entry
+    /// this cache encoded or decoded.
+    pub compressed_bytes: u64,
+    /// Uncompressed body bytes of those same entries.
+    pub uncompressed_bytes: u64,
     /// Entries currently resident (gauge).
     pub resident: u64,
     /// Bytes held by the on-disk tier (gauge; 0 without a disk tier).
@@ -121,30 +141,54 @@ impl CacheCounters {
         }
     }
 
-    /// Fraction of disk-tier probes that hit (the warm-restart CI
-    /// metric). 0 when the disk tier is off or was never probed.
+    /// Fraction of disk-tier probes that hit either on-disk tier
+    /// (writable or seed) — the warm-restart CI metric. 0 when the disk
+    /// tier is off or was never probed.
     pub fn disk_hit_rate(&self) -> f64 {
-        let probes = self.disk_hits + self.disk_misses;
+        let served = self.disk_hits + self.seed_hits;
+        let probes = served + self.disk_misses;
         if probes == 0 {
             0.0
         } else {
-            self.disk_hits as f64 / probes as f64
+            served as f64 / probes as f64
+        }
+    }
+
+    /// Uncompressed-to-compressed ratio of every entry encoded or
+    /// decoded (≥ 1.0 once the RLE codec is earning its keep; 0 before
+    /// any disk traffic).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            0.0
+        } else {
+            self.uncompressed_bytes as f64 / self.compressed_bytes as f64
         }
     }
 
     /// Workload compiles actually executed. Saturating: a live snapshot
-    /// can tear between a builder's `misses` and `disk_hits` bumps, and
-    /// a momentary 0 beats an underflow panic / u64::MAX in metrics.
+    /// can tear between a builder's `misses` and `disk_hits`/`seed_hits`
+    /// bumps, and a momentary 0 beats an underflow panic / u64::MAX in
+    /// metrics.
     pub fn builds(&self) -> u64 {
-        self.misses.saturating_sub(self.disk_hits)
+        self.misses.saturating_sub(self.disk_hits + self.seed_hits)
     }
 
     pub fn summary(&self) -> String {
-        let disk = if self.disk_hits + self.disk_misses > 0 || self.bytes_on_disk > 0 {
+        let probes = self.disk_hits + self.seed_hits + self.disk_misses;
+        let disk = if probes > 0 || self.bytes_on_disk > 0 {
+            let seed = if self.seed_hits > 0 {
+                format!(" ({} from seed)", self.seed_hits)
+            } else {
+                String::new()
+            };
+            let ratio = if self.compressed_bytes > 0 {
+                format!(", {:.1}x compression", self.compression_ratio())
+            } else {
+                String::new()
+            };
             format!(
-                "; disk: {} hits / {} probes ({:.0}%), {} B resident",
-                self.disk_hits,
-                self.disk_hits + self.disk_misses,
+                "; disk: {} hits{seed} / {probes} probes ({:.0}%), {} B resident{ratio}",
+                self.disk_hits + self.seed_hits,
                 100.0 * self.disk_hit_rate(),
                 self.bytes_on_disk
             )
@@ -229,10 +273,12 @@ impl WorkloadCache {
     }
 
     pub fn counters(&self) -> CacheCounters {
-        // Read disk_hits before misses: a builder bumps misses first and
-        // disk_hits later, so this order can only under-count disk_hits
-        // relative to misses — never leave disk_hits > misses.
+        // Read disk_hits/seed_hits before misses: a builder bumps misses
+        // first and the hit counters later, so this order can only
+        // under-count hits relative to misses — never leave
+        // disk_hits + seed_hits > misses.
         let disk_hits = self.counters.disk_hits.load(Ordering::Relaxed);
+        let seed_hits = self.counters.seed_hits.load(Ordering::Relaxed);
         let disk_misses = self.counters.disk_misses.load(Ordering::Relaxed);
         CacheCounters {
             hits: self.counters.hits.load(Ordering::Relaxed),
@@ -242,6 +288,9 @@ impl WorkloadCache {
             build_failures: self.counters.build_failures.load(Ordering::Relaxed),
             disk_hits,
             disk_misses,
+            seed_hits,
+            compressed_bytes: self.counters.compressed_bytes.load(Ordering::Relaxed),
+            uncompressed_bytes: self.counters.uncompressed_bytes.load(Ordering::Relaxed),
             resident: self.len() as u64,
             bytes_on_disk: self.disk.as_ref().map(|d| d.bytes_on_disk()).unwrap_or(0),
         }
@@ -311,10 +360,11 @@ impl WorkloadCache {
         }
     }
 
-    /// The two lower tiers behind a memory miss: probe the on-disk
-    /// store (under the key's cross-process build lock), else compile —
-    /// writing fresh builds back to disk for other processes and future
-    /// restarts. Without a disk tier this is just the compile.
+    /// The lower tiers behind a memory miss: probe the on-disk store —
+    /// writable directory, then read-only seed — under the key's
+    /// cross-process build lock, else compile, writing fresh builds back
+    /// to the writable tier for other processes and future restarts.
+    /// Without a disk tier this is just the compile.
     fn disk_or_build(&self, key: &WorkloadKey) -> Result<(SharedWorkload, Fetch), String> {
         let disk = match &self.disk {
             Some(disk) => disk,
@@ -323,16 +373,28 @@ impl WorkloadCache {
         // Exclusive across processes for this key: the first builder
         // compiles while the others block here, then load its entry.
         let _guard = disk.lock(key);
-        if let Some(w) = disk.load(key) {
+        if let Some(loaded) = disk.load(key) {
+            self.counters.compressed_bytes.fetch_add(loaded.stored_bytes, Ordering::Relaxed);
+            self.counters.uncompressed_bytes.fetch_add(loaded.body_bytes, Ordering::Relaxed);
+            if loaded.from_seed {
+                self.counters.seed_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((loaded.workload, Fetch::SeedHit));
+            }
             self.counters.disk_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((w, Fetch::DiskHit));
+            return Ok((loaded.workload, Fetch::DiskHit));
         }
         self.counters.disk_misses.fetch_add(1, Ordering::Relaxed);
         let w = Self::build(key)?;
-        if let Err(e) = disk.store(key, &w) {
+        match disk.store(key, &w) {
+            Ok(stored) => {
+                self.counters.compressed_bytes.fetch_add(stored.stored_bytes, Ordering::Relaxed);
+                self.counters
+                    .uncompressed_bytes
+                    .fetch_add(stored.body_bytes, Ordering::Relaxed);
+            }
             // Failing to persist never fails the job; the next process
             // simply rebuilds.
-            eprintln!("[cache] warn: could not persist {}: {e}", key.name());
+            Err(e) => eprintln!("[cache] warn: could not persist {}: {e}", key.name()),
         }
         Ok((w, Fetch::Built))
     }
@@ -449,6 +511,23 @@ mod tests {
         assert!((cb.disk_hit_rate() - 1.0).abs() < 1e-9);
         assert!(cb.summary().contains("disk"), "{}", cb.summary());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn counters_fold_seed_hits_into_builds_rate_and_ratio() {
+        let c = CacheCounters {
+            misses: 3,
+            disk_hits: 1,
+            seed_hits: 2,
+            compressed_bytes: 100,
+            uncompressed_bytes: 500,
+            ..Default::default()
+        };
+        assert_eq!(c.builds(), 0, "seed hits are not compiles");
+        assert!((c.disk_hit_rate() - 1.0).abs() < 1e-9);
+        assert!((c.compression_ratio() - 5.0).abs() < 1e-9);
+        assert!(c.summary().contains("from seed"), "{}", c.summary());
+        assert!(c.summary().contains("compression"), "{}", c.summary());
     }
 
     #[test]

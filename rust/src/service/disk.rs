@@ -19,20 +19,52 @@
 //! ```text
 //! offset size field
 //!  0     4    magic  b"DARE"
-//!  4     2    codec version (CODEC_VERSION)
+//!  4     2    codec version (1 = raw body, 2 = RLE-compressed body)
 //!  6     2    reserved (zero)
-//!  8     8    FNV-1a64 checksum of the body
-//! 16     8    body length in bytes
-//! 24     …    body: key hash echo, kernel kind, program
-//!             (name/macs/instrs), memory image, region checks
+//!  8     8    FNV-1a64 checksum of the UNCOMPRESSED body
+//! 16     8    UNCOMPRESSED body length in bytes
+//! 24     …    v1: body as-is; v2: RLE stream (see below)
 //! ```
 //!
-//! Trust model: **nothing on disk is trusted**. A bad magic, foreign
-//! version, length mismatch, checksum mismatch, malformed body, or an
-//! entry whose echoed key hash differs from the requested key all make
-//! [`DiskStore::load`] delete the file and report a miss — the caller
-//! rebuilds and re-stores. Bumping [`CODEC_VERSION`] therefore
-//! invalidates every existing entry in place, no migration needed.
+//! Body layout (after inflation, identical for both versions): key hash
+//! echo, kernel kind, program (name/macs/instrs), memory image, region
+//! checks.
+//!
+//! v2 RLE stream — DARE workloads are zero-heavy by construction (the
+//! paper's premise), so the dominant memory-image bytes compress with a
+//! zero-run/literal-run encoding:
+//!
+//! ```text
+//! op := 0x00 len:u16le              len zero bytes
+//!     | 0x01 len:u16le byte[len]    len literal bytes
+//! ```
+//!
+//! Runs longer than [`MAX_RUN`] split into multiple ops (the "chunk
+//! boundary" the property tests straddle). The checksum and declared
+//! length cover the *uncompressed* body, so corruption anywhere in the
+//! compressed payload is caught after inflation even when the damaged
+//! stream still parses.
+//!
+//! Trust model: **nothing on disk is trusted**. A bad magic, unknown
+//! version, length mismatch, checksum mismatch, malformed body, a run
+//! overflowing the declared body length, a declared length beyond the
+//! [`MAX_BODY_LEN`] sanity bound (reject, don't allocate), or an entry
+//! whose echoed key hash differs from the requested key all make
+//! [`DiskStore::load`] report a miss — writable-tier corpses are
+//! deleted so the caller rebuilds; seed-tier corpses are left alone
+//! (the seed is read-only) and simply fall through.
+//!
+//! Writes are always v2; v1 entries remain readable and are lazily
+//! migrated — a writable-tier v1 hit is rewritten as v2 in place, so an
+//! existing cache upgrades itself as it is used.
+//!
+//! Seed tier: with [`DiskConfig::seed`] (`--cache-seed`), a second,
+//! **read-only** directory sits under the writable one. Lookup order is
+//! writable → seed; a seed hit is *promoted* (stored into the writable
+//! tier) so later lookups — including other processes' — hit the
+//! writable tier. Invariants: the seed is never written, never touched
+//! (no recency bump), never GC'd, and a corrupt seed entry is never
+//! deleted.
 //!
 //! Concurrency: writes go to a `.tmp.<pid>` file first and are
 //! `rename(2)`d into place, so readers never observe a half-written
@@ -44,9 +76,12 @@
 //!
 //! GC: the store is size-bounded (`max_bytes`). After each write,
 //! entries are evicted oldest-recency-first until the directory is back
-//! under the bound. Recency is the entry's mtime, which `load` bumps on
-//! every hit (`futimens`), so a hot entry survives sweeps that evict
-//! cold ones. Entries whose lock is currently held are skipped.
+//! under the bound (`dare cache gc` runs the same sweep explicitly,
+//! with `--dry-run` reporting victims without deleting). Recency is the
+//! entry's mtime, which `load` bumps on every writable hit (`futimens`),
+//! so a hot entry survives sweeps that evict cold ones. Entries whose
+//! lock is currently held are skipped. GC only ever scans the writable
+//! directory — the seed tier is structurally out of its reach.
 
 use crate::isa::{Csr, MInstr, MReg, Program, NUM_MREGS};
 use crate::kernels::{KernelKind, RegionCheck, SharedWorkload, Workload, WorkloadKey};
@@ -61,11 +96,29 @@ use std::time::{Duration, SystemTime};
 /// First four bytes of every entry file.
 pub const MAGIC: [u8; 4] = *b"DARE";
 
-/// Bump on any change to the body encoding; old entries are then
-/// detected as stale and rebuilt rather than misdecoded.
-pub const CODEC_VERSION: u16 = 1;
+/// The legacy raw-body codec. Still decoded; never written.
+pub const CODEC_V1: u16 = 1;
 
-const HEADER_LEN: usize = 24;
+/// The current codec: RLE-compressed body, checksummed uncompressed.
+pub const CODEC_VERSION: u16 = 2;
+
+/// Fixed header size shared by both codec versions.
+pub const HEADER_LEN: usize = 24;
+
+/// Longest single RLE run (u16 length field); longer runs split into
+/// multiple ops at this chunk boundary.
+pub const MAX_RUN: usize = u16::MAX as usize;
+
+/// A zero run shorter than this is cheaper inside a literal than as its
+/// own 3-byte op.
+const ZERO_RUN_MIN: usize = 4;
+
+/// Sanity bound on the declared (uncompressed) body length: a hostile
+/// header cannot make the decoder allocate unboundedly.
+pub const MAX_BODY_LEN: u64 = 1 << 30;
+
+const OP_ZEROS: u8 = 0;
+const OP_LITERAL: u8 = 1;
 
 /// Default size bound of a cache directory (bytes).
 pub const DEFAULT_MAX_BYTES: u64 = 512 * 1024 * 1024;
@@ -78,14 +131,114 @@ const TMP_SWEEP_AGE: Duration = Duration::from_secs(3600);
 #[derive(Debug, Clone)]
 pub struct DiskConfig {
     pub dir: PathBuf,
-    /// GC bound for the directory, in bytes.
+    /// GC bound for the writable directory, in bytes.
     pub max_bytes: u64,
+    /// Optional read-only seed directory (`--cache-seed`): probed after
+    /// the writable tier; hits are promoted, the seed itself is never
+    /// written, touched, or GC'd.
+    pub seed: Option<PathBuf>,
 }
 
 impl DiskConfig {
     pub fn new(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: dir.into(), max_bytes: DEFAULT_MAX_BYTES }
+        Self { dir: dir.into(), max_bytes: DEFAULT_MAX_BYTES, seed: None }
     }
+
+    pub fn with_seed(mut self, seed: impl Into<PathBuf>) -> Self {
+        self.seed = Some(seed.into());
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// RLE layer (v2 payload)
+// ---------------------------------------------------------------------
+
+fn zero_run_len(b: &[u8], at: usize) -> usize {
+    b[at..].iter().take_while(|&&x| x == 0).count()
+}
+
+/// Compress `body` into the v2 zero-run/literal-run stream.
+pub fn rle_compress(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() / 4 + 16);
+    let mut i = 0;
+    while i < body.len() {
+        let zeros = zero_run_len(body, i);
+        if zeros >= ZERO_RUN_MIN {
+            let mut rem = zeros;
+            while rem > 0 {
+                let n = rem.min(MAX_RUN);
+                out.push(OP_ZEROS);
+                out.extend_from_slice(&(n as u16).to_le_bytes());
+                rem -= n;
+            }
+            i += zeros;
+            continue;
+        }
+        // Literal run: up to the next worthwhile zero run or MAX_RUN.
+        let start = i;
+        while i < body.len() && i - start < MAX_RUN {
+            if body[i] == 0 {
+                let z = zero_run_len(body, i);
+                if z >= ZERO_RUN_MIN {
+                    break;
+                }
+                i = (i + z).min(start + MAX_RUN);
+            } else {
+                i += 1;
+            }
+        }
+        out.push(OP_LITERAL);
+        out.extend_from_slice(&((i - start) as u16).to_le_bytes());
+        out.extend_from_slice(&body[start..i]);
+    }
+    out
+}
+
+/// Inflate a v2 payload back into the body it encodes. Every run is
+/// bounds-checked against `body_len` *before* any bytes are produced, so
+/// a hostile run length errors instead of allocating.
+pub fn rle_decompress(payload: &[u8], body_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(body_len.min(1 << 20));
+    let mut p = 0usize;
+    while p < payload.len() {
+        if p + 3 > payload.len() {
+            return Err(format!("compressed stream truncated mid-op at offset {p}"));
+        }
+        let tag = payload[p];
+        let n = u16::from_le_bytes([payload[p + 1], payload[p + 2]]) as usize;
+        p += 3;
+        if n == 0 {
+            // The encoder never emits empty runs; accepting them would
+            // let arbitrary trailing garbage (e.g. 0x00 0x00 0x00) ride
+            // on an otherwise-valid frame.
+            return Err(format!("zero-length RLE op at offset {}", p - 3));
+        }
+        if out.len() + n > body_len {
+            return Err(format!(
+                "run of {n} bytes at offset {} overflows the declared body length {body_len}",
+                p - 3
+            ));
+        }
+        match tag {
+            OP_ZEROS => out.resize(out.len() + n, 0),
+            OP_LITERAL => {
+                if p + n > payload.len() {
+                    return Err(format!("literal run truncated at offset {p}"));
+                }
+                out.extend_from_slice(&payload[p..p + n]);
+                p += n;
+            }
+            t => return Err(format!("unknown RLE op tag {t}")),
+        }
+    }
+    if out.len() != body_len {
+        return Err(format!(
+            "inflated body is {} bytes, header declared {body_len}",
+            out.len()
+        ));
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------
@@ -143,8 +296,8 @@ fn put_instr(out: &mut Vec<u8>, i: &MInstr) {
     }
 }
 
-/// Serialize `w` as a complete entry file (header + body) for `key`.
-pub fn encode(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
+/// Serialize the uncompressed body shared by both codec versions.
+fn encode_body(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
     let mut body = Vec::with_capacity(w.mem.len() + 1024);
     put_u64(&mut body, key.stable_hash());
     put_str(&mut body, w.kind.name());
@@ -167,14 +320,37 @@ pub fn encode(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
             body.extend_from_slice(&v.to_le_bytes());
         }
     }
-    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    body
+}
+
+/// Assemble a raw entry frame from explicit header fields. Public so
+/// fault-injection tests can forge hostile headers without duplicating
+/// the layout; production code always goes through [`encode`].
+pub fn frame(version: u16, body_checksum: u64, body_len: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&[0u8; 2]);
-    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
-    out.extend_from_slice(&(body.len() as u64).to_le_bytes());
-    out.extend_from_slice(&body);
+    out.extend_from_slice(&body_checksum.to_le_bytes());
+    out.extend_from_slice(&body_len.to_le_bytes());
+    out.extend_from_slice(payload);
     out
+}
+
+/// Serialize `w` as a complete current-generation (v2) entry file:
+/// header + RLE-compressed body, checksum over the uncompressed bytes.
+pub fn encode(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
+    let body = encode_body(key, w);
+    let payload = rle_compress(&body);
+    frame(CODEC_VERSION, fnv1a64(&body), body.len() as u64, &payload)
+}
+
+/// Serialize `w` as a legacy v1 (raw-body) entry. Production writes are
+/// always v2; this is kept as the reference encoder for the
+/// mixed-generation store tests and the lazy-migration path's provenance.
+pub fn encode_v1(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
+    let body = encode_body(key, w);
+    frame(CODEC_V1, fnv1a64(&body), body.len() as u64, &body)
 }
 
 /// A bounds-checked little-endian reader over the body bytes.
@@ -252,32 +428,7 @@ fn take_instr(cur: &mut Cur) -> Result<MInstr, String> {
     }
 }
 
-/// Decode a complete entry file back into the [`Workload`] it stores,
-/// validating magic, version, length, checksum, and that the entry
-/// actually belongs to `key`. Any failure means "rebuild", never panic.
-pub fn decode(key: &WorkloadKey, bytes: &[u8]) -> Result<Workload, String> {
-    if bytes.len() < HEADER_LEN {
-        return Err(format!("file too short ({} bytes) for a header", bytes.len()));
-    }
-    if bytes[..4] != MAGIC {
-        return Err("bad magic (not a DARE workload cache entry)".to_string());
-    }
-    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
-    if version != CODEC_VERSION {
-        return Err(format!("codec version {version}, expected {CODEC_VERSION}"));
-    }
-    let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
-    let body_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
-    let body = &bytes[HEADER_LEN..];
-    if body.len() as u64 != body_len {
-        return Err(format!(
-            "body length mismatch: header says {body_len}, file has {}",
-            body.len()
-        ));
-    }
-    if fnv1a64(body) != checksum {
-        return Err("checksum mismatch (corrupt body)".to_string());
-    }
+fn parse_body(key: &WorkloadKey, body: &[u8]) -> Result<Workload, String> {
     let mut cur = Cur { b: body, p: 0 };
     let echo = cur.u64()?;
     if echo != key.stable_hash() {
@@ -320,6 +471,56 @@ pub fn decode(key: &WorkloadKey, bytes: &[u8]) -> Result<Workload, String> {
         mem,
         checks,
     })
+}
+
+/// Decode a complete entry file (either codec generation) back into the
+/// [`Workload`] it stores plus the codec version it was written with,
+/// validating magic, version, length, checksum, and that the entry
+/// actually belongs to `key`. Any failure means "rebuild", never panic.
+pub fn decode_versioned(key: &WorkloadKey, bytes: &[u8]) -> Result<(Workload, u16), String> {
+    if bytes.len() < HEADER_LEN {
+        return Err(format!("file too short ({} bytes) for a header", bytes.len()));
+    }
+    if bytes[..4] != MAGIC {
+        return Err("bad magic (not a DARE workload cache entry)".to_string());
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != CODEC_V1 && version != CODEC_VERSION {
+        return Err(format!("codec version {version}, expected {CODEC_V1} or {CODEC_VERSION}"));
+    }
+    let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let body_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    if body_len > MAX_BODY_LEN {
+        return Err(format!(
+            "declared body length {body_len} exceeds the {MAX_BODY_LEN}-byte sanity bound"
+        ));
+    }
+    let payload = &bytes[HEADER_LEN..];
+    let inflated;
+    let body: &[u8] = match version {
+        CODEC_V1 => {
+            if payload.len() as u64 != body_len {
+                return Err(format!(
+                    "body length mismatch: header says {body_len}, file has {}",
+                    payload.len()
+                ));
+            }
+            payload
+        }
+        _ => {
+            inflated = rle_decompress(payload, body_len as usize)?;
+            &inflated
+        }
+    };
+    if fnv1a64(body) != checksum {
+        return Err("checksum mismatch (corrupt body)".to_string());
+    }
+    parse_body(key, body).map(|w| (w, version))
+}
+
+/// [`decode_versioned`] without the provenance — the common caller shape.
+pub fn decode(key: &WorkloadKey, bytes: &[u8]) -> Result<Workload, String> {
+    decode_versioned(key, bytes).map(|(w, _)| w)
 }
 
 // ---------------------------------------------------------------------
@@ -390,6 +591,32 @@ mod sys {
     pub fn touch(_f: &File) {}
 }
 
+/// Does `file` still reference the inode at `path`? Guards the
+/// open→flock window: if the lock file was unlinked (by `clear` or GC)
+/// between our open and the grant, the flock we hold is on an orphaned
+/// inode and a fresh builder could lock a new file at the same path —
+/// the caller must reopen and retry. Off unix (no inodes, no flock)
+/// this is vacuously true.
+#[cfg(unix)]
+fn same_inode(file: &File, path: &Path) -> bool {
+    use std::os::unix::fs::MetadataExt;
+    match (file.metadata(), fs::metadata(path)) {
+        (Ok(held), Ok(on_disk)) => held.ino() == on_disk.ino() && held.dev() == on_disk.dev(),
+        _ => false,
+    }
+}
+
+#[cfg(not(unix))]
+fn same_inode(_file: &File, _path: &Path) -> bool {
+    true
+}
+
+/// The one place lock files are opened (`lock`, `try_lock`, GC probes,
+/// `clear`), so every path agrees on the mode.
+fn open_lock_file(path: &Path, create: bool) -> Option<File> {
+    OpenOptions::new().create(create).read(true).write(true).open(path).ok()
+}
+
 /// An exclusive per-key build lock, released on drop (or process death).
 pub struct BuildLock {
     file: File,
@@ -418,19 +645,65 @@ pub struct DiskStats {
     pub unreadable: u64,
 }
 
+/// A successful [`DiskStore::load`]: the workload plus where it came
+/// from and how well it compressed (for the cache's gauges).
+pub struct DiskLoad {
+    pub workload: SharedWorkload,
+    /// True when the writable tier missed and the read-only seed served.
+    pub from_seed: bool,
+    /// On-disk entry size (header + compressed payload).
+    pub stored_bytes: u64,
+    /// Uncompressed body size (the header's declared length).
+    pub body_bytes: u64,
+}
+
+/// A successful [`DiskStore::store`]: entry size on disk vs. the
+/// uncompressed body it encodes.
+#[derive(Debug, Clone, Copy)]
+pub struct StoredEntry {
+    pub stored_bytes: u64,
+    pub body_bytes: u64,
+}
+
+/// One GC sweep's outcome (`dare cache gc`, and the post-store sweep).
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    /// Entry bytes resident before the sweep.
+    pub bytes_before: u64,
+    /// Entry bytes resident after (projected, under `--dry-run`).
+    pub bytes_after: u64,
+    /// `(path, size)` of each evicted (or, dry-run, would-be-evicted)
+    /// entry, oldest first.
+    pub victims: Vec<(PathBuf, u64)>,
+    /// Over-bound entries skipped because their build lock was held.
+    pub skipped_locked: u64,
+    /// True when nothing was actually deleted.
+    pub dry_run: bool,
+}
+
+impl GcReport {
+    pub fn evicted_bytes(&self) -> u64 {
+        self.victims.iter().map(|(_, len)| *len).sum()
+    }
+}
+
 /// The content-addressed on-disk workload store. Cheap to construct;
 /// all state lives in the directory, so any number of `DiskStore`
 /// handles (across threads or processes) may point at the same dir.
 pub struct DiskStore {
     dir: PathBuf,
     max_bytes: u64,
+    /// Read-only fallback tier; see the module docs for its invariants.
+    seed: Option<PathBuf>,
 }
 
 impl DiskStore {
-    /// Open (creating if needed) the cache directory.
+    /// Open (creating if needed) the cache directory. The seed directory
+    /// (if any) is never created or written — a missing seed just never
+    /// hits.
     pub fn open(cfg: DiskConfig) -> io::Result<DiskStore> {
         fs::create_dir_all(&cfg.dir)?;
-        Ok(DiskStore { dir: cfg.dir, max_bytes: cfg.max_bytes })
+        Ok(DiskStore { dir: cfg.dir, max_bytes: cfg.max_bytes, seed: cfg.seed })
     }
 
     pub fn dir(&self) -> &Path {
@@ -441,8 +714,17 @@ impl DiskStore {
         self.max_bytes
     }
 
+    /// The read-only seed directory, if configured.
+    pub fn seed_dir(&self) -> Option<&Path> {
+        self.seed.as_deref()
+    }
+
     fn entry_path(&self, key: &WorkloadKey) -> PathBuf {
         self.dir.join(format!("{}.dwl", key.cache_file_stem()))
+    }
+
+    fn seed_entry_path(&self, key: &WorkloadKey) -> Option<PathBuf> {
+        Some(self.seed.as_ref()?.join(format!("{}.dwl", key.cache_file_stem())))
     }
 
     fn lock_file_path(&self, key: &WorkloadKey) -> PathBuf {
@@ -452,34 +734,77 @@ impl DiskStore {
     /// Take the exclusive build lock for `key`, blocking until granted.
     /// `None` means locking is unavailable (lock file not creatable);
     /// callers proceed unlocked — worst case is a duplicated build,
-    /// never corruption.
+    /// never corruption. Lock files live in the writable directory only.
+    ///
+    /// A grant is only returned if the locked fd still matches the
+    /// path's inode: `clear`/GC may unlink a lock file in our
+    /// open→flock window, and holding an orphaned inode would let a
+    /// second builder lock the path's fresh file — two "exclusive"
+    /// builders. On a mismatch we reopen and retry.
     pub fn lock(&self, key: &WorkloadKey) -> Option<BuildLock> {
-        let file = OpenOptions::new()
-            .create(true)
-            .read(true)
-            .write(true)
-            .open(self.lock_file_path(key))
-            .ok()?;
-        if sys::lock_exclusive(&file) {
-            Some(BuildLock { file })
-        } else {
-            None
+        let path = self.lock_file_path(key);
+        loop {
+            let file = open_lock_file(&path, true)?;
+            if !sys::lock_exclusive(&file) {
+                return None;
+            }
+            if same_inode(&file, &path) {
+                return Some(BuildLock { file });
+            }
+            // Orphaned inode: drop it (unlocks) and take the fresh file.
         }
     }
 
-    /// Fetch `key`'s entry. Any validation failure (truncation, bad
-    /// checksum, foreign version, key mismatch) deletes the entry and
-    /// returns `None` so the caller rebuilds. A hit bumps the entry's
-    /// recency so GC prefers colder victims.
-    pub fn load(&self, key: &WorkloadKey) -> Option<SharedWorkload> {
+    /// Non-blocking variant of [`lock`](Self::lock): `None` when
+    /// another holder (any process) has the key locked, or when the
+    /// lock file is not creatable. Same orphaned-inode retry as `lock`.
+    pub fn try_lock(&self, key: &WorkloadKey) -> Option<BuildLock> {
+        let path = self.lock_file_path(key);
+        loop {
+            let file = open_lock_file(&path, true)?;
+            if !sys::try_lock_exclusive(&file) {
+                return None;
+            }
+            if same_inode(&file, &path) {
+                return Some(BuildLock { file });
+            }
+        }
+    }
+
+    /// Fetch `key`'s entry: writable tier first, then the read-only
+    /// seed. A writable hit bumps recency; a writable validation failure
+    /// deletes the corpse and falls through. A seed hit is promoted into
+    /// the writable tier; a seed validation failure falls through to a
+    /// miss without modifying the seed in any way.
+    pub fn load(&self, key: &WorkloadKey) -> Option<DiskLoad> {
+        if let Some(l) = self.load_writable(key) {
+            return Some(l);
+        }
+        self.load_seed(key)
+    }
+
+    fn load_writable(&self, key: &WorkloadKey) -> Option<DiskLoad> {
         let path = self.entry_path(key);
         let mut file = File::open(&path).ok()?;
         let mut bytes = Vec::new();
         file.read_to_end(&mut bytes).ok()?;
-        match decode(key, &bytes) {
-            Ok(w) => {
+        match decode_versioned(key, &bytes) {
+            Ok((w, version)) => {
                 sys::touch(&file);
-                Some(Arc::new(w))
+                let body_bytes = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+                let workload = Arc::new(w);
+                let mut stored_bytes = bytes.len() as u64;
+                if version != CODEC_VERSION {
+                    // Lazy migration: rewrite the legacy entry in the
+                    // current compressed format (the caller holds the
+                    // key's build lock, so this races nobody). Report
+                    // the rewritten size so the compression gauges see
+                    // the entry as it now exists, not the raw corpse.
+                    if let Ok(stored) = self.store(key, &workload) {
+                        stored_bytes = stored.stored_bytes;
+                    }
+                }
+                Some(DiskLoad { workload, from_seed: false, stored_bytes, body_bytes })
             }
             Err(_) => {
                 drop(file);
@@ -489,12 +814,38 @@ impl DiskStore {
         }
     }
 
+    fn load_seed(&self, key: &WorkloadKey) -> Option<DiskLoad> {
+        let path = self.seed_entry_path(key)?;
+        let bytes = fs::read(&path).ok()?;
+        match decode_versioned(key, &bytes) {
+            Ok((w, _)) => {
+                let body_bytes = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+                let workload = Arc::new(w);
+                // Promote into the writable tier so the next lookup (any
+                // process) stops short of the seed. Failure to promote
+                // is not failure to serve.
+                if let Err(e) = self.store(key, &workload) {
+                    eprintln!("[cache] warn: could not promote seed entry {}: {e}", key.name());
+                }
+                Some(DiskLoad {
+                    workload,
+                    from_seed: true,
+                    stored_bytes: bytes.len() as u64,
+                    body_bytes,
+                })
+            }
+            // Read-only tier: never delete or rewrite a corrupt seed
+            // entry; just fall through to a build.
+            Err(_) => None,
+        }
+    }
+
     /// Persist `w` as `key`'s entry: write to a `.tmp.<pid>` sibling,
     /// fsync, rename into place (readers never see partial writes),
-    /// then GC the directory back under its size bound. Returns the
-    /// entry size in bytes.
-    pub fn store(&self, key: &WorkloadKey, w: &Workload) -> io::Result<u64> {
+    /// then GC the writable directory back under its size bound.
+    pub fn store(&self, key: &WorkloadKey, w: &Workload) -> io::Result<StoredEntry> {
         let bytes = encode(key, w);
+        let body_bytes = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
         let tmp = self.dir.join(format!("{}.tmp.{}", key.cache_file_stem(), std::process::id()));
         {
             let mut f = File::create(&tmp)?;
@@ -503,10 +854,11 @@ impl DiskStore {
         }
         fs::rename(&tmp, self.entry_path(key))?;
         self.gc();
-        Ok(bytes.len() as u64)
+        Ok(StoredEntry { stored_bytes: bytes.len() as u64, body_bytes })
     }
 
-    /// `(path, size, recency)` of every `.dwl` entry.
+    /// `(path, size, recency)` of every `.dwl` entry in the writable
+    /// directory (the seed is never scanned).
     fn scan(&self) -> Vec<(PathBuf, u64, SystemTime)> {
         let mut out = Vec::new();
         let rd = match fs::read_dir(&self.dir) {
@@ -531,48 +883,80 @@ impl DiskStore {
         self.scan().iter().map(|(_, len, _)| *len).sum()
     }
 
-    /// Evict oldest-recency entries until the directory is under
+    /// Evict oldest-recency entries until the writable directory is
+    /// under `max_bytes` (see [`gc_with`](Self::gc_with)). Returns bytes
+    /// evicted.
+    pub fn gc(&self) -> u64 {
+        self.gc_with(self.max_bytes, false).evicted_bytes()
+    }
+
+    /// The GC sweep behind [`gc`](Self::gc) and `dare cache gc`: evict
+    /// oldest-recency entries until the writable directory is under
     /// `max_bytes`, skipping entries whose build lock is currently held
     /// elsewhere. Also sweeps crashed writers' stale `.tmp.` files.
-    /// Returns bytes evicted.
-    pub fn gc(&self) -> u64 {
-        self.sweep_stale_tmp();
+    /// Under `dry_run`, nothing is deleted (and no lock files are
+    /// created by the probe) — the report lists what a live run would
+    /// evict. The seed directory is structurally out of reach: only the
+    /// writable directory is ever scanned.
+    pub fn gc_with(&self, max_bytes: u64, dry_run: bool) -> GcReport {
+        if !dry_run {
+            self.sweep_stale_tmp();
+        }
         let mut entries = self.scan();
         let mut total: u64 = entries.iter().map(|(_, len, _)| *len).sum();
-        if total <= self.max_bytes {
-            return 0;
+        let mut report = GcReport {
+            bytes_before: total,
+            bytes_after: total,
+            dry_run,
+            ..Default::default()
+        };
+        if total <= max_bytes {
+            return report;
         }
         entries.sort_by_key(|(_, _, recency)| *recency);
-        let mut evicted = 0u64;
         for (path, len, _) in entries {
-            if total <= self.max_bytes {
+            if total <= max_bytes {
                 break;
+            }
+            let lock_path = path.with_extension("lock");
+            if dry_run {
+                // Probe without creating lock files: a missing lock file
+                // means nobody holds it.
+                if let Some(lock) = open_lock_file(&lock_path, false) {
+                    if !sys::try_lock_exclusive(&lock) {
+                        report.skipped_locked += 1;
+                        continue;
+                    }
+                    sys::unlock(&lock);
+                }
+                total -= len;
+                report.victims.push((path, len));
+                continue;
             }
             // A held lock marks an entry another process is actively
             // using/rebuilding; leave it for the next sweep.
-            let lock_path = path.with_extension("lock");
-            if let Ok(lock) =
-                OpenOptions::new().create(true).read(true).write(true).open(&lock_path)
-            {
+            if let Some(lock) = open_lock_file(&lock_path, true) {
                 if !sys::try_lock_exclusive(&lock) {
+                    report.skipped_locked += 1;
                     continue;
                 }
                 if fs::remove_file(&path).is_ok() {
                     total -= len;
-                    evicted += len;
                     // Reap the lock file with its entry (while still
                     // holding it), or a size-bounded cache over an
                     // unbounded key space leaks one inode per evicted
                     // key forever.
                     let _ = fs::remove_file(&lock_path);
+                    report.victims.push((path, len));
                 }
                 sys::unlock(&lock);
             } else if fs::remove_file(&path).is_ok() {
                 total -= len;
-                evicted += len;
+                report.victims.push((path, len));
             }
         }
-        evicted
+        report.bytes_after = total;
+        report
     }
 
     fn sweep_stale_tmp(&self) {
@@ -601,8 +985,8 @@ impl DiskStore {
         }
     }
 
-    /// Entry count, bytes, and per-version histogram (reads only the
-    /// 8-byte header prefix of each entry).
+    /// Entry count, bytes, and per-version histogram of the writable
+    /// directory (reads only the 8-byte header prefix of each entry).
     pub fn stats(&self) -> DiskStats {
         let mut s = DiskStats::default();
         let mut versions: Vec<(u16, u64)> = Vec::new();
@@ -626,7 +1010,11 @@ impl DiskStore {
         s
     }
 
-    /// Remove every entry, lock and tmp file. Returns entries removed.
+    /// Remove every entry, tmp file, and *unheld* lock file. Lock files
+    /// whose flock is currently held by a live builder are skipped:
+    /// unlinking one would let the next process lock a fresh inode while
+    /// the builder still holds the old one, silently breaking the
+    /// single-builder guarantee. Returns entries removed.
     pub fn clear(&self) -> io::Result<u64> {
         let mut removed = 0u64;
         for e in fs::read_dir(&self.dir)?.flatten() {
@@ -635,8 +1023,20 @@ impl DiskStore {
                 Some(n) => n,
                 None => continue,
             };
-            let is_ours =
-                name.ends_with(".dwl") || name.ends_with(".lock") || name.contains(".tmp.");
+            if name.ends_with(".lock") {
+                if let Some(lock) = open_lock_file(&path, false) {
+                    if sys::try_lock_exclusive(&lock) {
+                        // Unlink while holding, so no builder can grab
+                        // the inode between the probe and the unlink.
+                        // (A builder mid-open still re-checks inodes in
+                        // `lock()`, so even this window is safe.)
+                        let _ = fs::remove_file(&path);
+                        sys::unlock(&lock);
+                    }
+                }
+                continue;
+            }
+            let is_ours = name.ends_with(".dwl") || name.contains(".tmp.");
             if is_ours && fs::remove_file(&path).is_ok() && name.ends_with(".dwl") {
                 removed += 1;
             }
@@ -679,12 +1079,85 @@ mod tests {
     }
 
     #[test]
+    fn rle_round_trips_and_splits_long_runs() {
+        for body in [
+            Vec::new(),
+            vec![0u8; 5],
+            vec![7u8; 5],
+            vec![0u8; MAX_RUN - 1],
+            vec![0u8; MAX_RUN],
+            vec![0u8; MAX_RUN + 1],
+            vec![0u8; 3 * MAX_RUN + 17],
+            {
+                let mut v = vec![1u8; MAX_RUN + 5];
+                v.extend_from_slice(&[0u8; 1000]);
+                v.push(9);
+                v
+            },
+            (0..1000u32).map(|i| (i % 7) as u8).collect(),
+        ] {
+            let packed = rle_compress(&body);
+            let back = rle_decompress(&packed, body.len()).expect("round trip");
+            assert_eq!(back, body, "len {}", body.len());
+        }
+    }
+
+    #[test]
+    fn rle_rejects_hostile_streams() {
+        // Run overflowing the declared body length: must error before
+        // producing bytes.
+        let stream = [OP_ZEROS, 0xFF, 0xFF];
+        let err = rle_decompress(&stream, 64).unwrap_err();
+        assert!(err.contains("overflows"), "{err}");
+        // Truncated mid-op and mid-literal.
+        assert!(rle_decompress(&[OP_ZEROS, 0xFF], 64).is_err());
+        assert!(rle_decompress(&[OP_LITERAL, 4, 0, 1, 2], 64).is_err());
+        // Unknown op tag.
+        assert!(rle_decompress(&[9, 1, 0, 0], 64).unwrap_err().contains("tag"));
+        // Short inflation (stream ends before the declared length).
+        assert!(rle_decompress(&[OP_ZEROS, 4, 0], 64).unwrap_err().contains("declared"));
+        // Zero-length ops are non-canonical: without this check, a run
+        // of 0x00/0x01+len-0 ops would ride as undetected trailing
+        // garbage on a frame that inflates and checksums cleanly.
+        assert!(rle_decompress(&[OP_ZEROS, 0, 0], 0).unwrap_err().contains("zero-length"));
+        let mut padded = rle_compress(&[7u8; 32]);
+        padded.extend_from_slice(&[OP_ZEROS, 0, 0]);
+        assert!(rle_decompress(&padded, 32).unwrap_err().contains("zero-length"));
+    }
+
+    #[test]
     fn codec_round_trips_a_real_workload() {
         let k = key(1);
         let w = k.build();
         let bytes = encode(&k, &w);
         let back = decode(&k, &bytes).expect("decode");
         assert_same_workload(&w, &back);
+    }
+
+    #[test]
+    fn v1_entries_decode_and_report_their_generation() {
+        let k = key(1);
+        let w = k.build();
+        let v1 = encode_v1(&k, &w);
+        let (back, version) = decode_versioned(&k, &v1).expect("v1 decodes");
+        assert_eq!(version, CODEC_V1);
+        assert_same_workload(&w, &back);
+        let (_, version) = decode_versioned(&k, &encode(&k, &w)).expect("v2 decodes");
+        assert_eq!(version, CODEC_VERSION);
+    }
+
+    #[test]
+    fn v2_compresses_the_zero_heavy_real_workload() {
+        let k = key(1);
+        let w = k.build();
+        let v1 = encode_v1(&k, &w);
+        let v2 = encode(&k, &w);
+        assert!(
+            v2.len() < v1.len(),
+            "compressed entry ({}) must beat raw ({})",
+            v2.len(),
+            v1.len()
+        );
     }
 
     #[test]
@@ -698,21 +1171,25 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] ^= 0xFF;
         assert!(decode(&k, &bad).unwrap_err().contains("magic"));
-        // Foreign version.
+        // Unknown version.
         let mut bad = bytes.clone();
-        bad[4] = bad[4].wrapping_add(1);
+        bad[4] = 0x7F;
         assert!(decode(&k, &bad).unwrap_err().contains("version"));
-        // Flipped body byte → checksum mismatch.
+        // Flipped byte in the compressed payload → caught (checksum over
+        // the uncompressed body, or a structural RLE error).
         let mut bad = bytes.clone();
         let mid = HEADER_LEN + (bad.len() - HEADER_LEN) / 2;
         bad[mid] ^= 0x01;
-        assert!(decode(&k, &bad).unwrap_err().contains("checksum"));
+        assert!(decode(&k, &bad).is_err());
         // Entry for a different key.
         assert!(decode(&key(2), &bytes).unwrap_err().contains("different"));
-        // Trailing garbage after the declared body.
+        // Trailing garbage after the compressed payload.
         let mut bad = bytes.clone();
         bad.push(0);
         assert!(decode(&k, &bad).is_err());
+        // Hostile declared body length: reject without allocating.
+        let huge = frame(CODEC_VERSION, 0, u64::MAX, &[]);
+        assert!(decode(&k, &huge).unwrap_err().contains("sanity"));
     }
 
     #[test]
@@ -722,13 +1199,17 @@ mod tests {
         let k = key(1);
         assert!(store.load(&k).is_none(), "cold store misses");
         let w = k.build();
-        let size = store.store(&k, &w).unwrap();
-        assert!(size > 0);
-        assert_eq!(store.bytes_on_disk(), size);
+        let stored = store.store(&k, &w).unwrap();
+        assert!(stored.stored_bytes > 0);
+        assert!(stored.body_bytes >= stored.stored_bytes - HEADER_LEN as u64);
+        assert_eq!(store.bytes_on_disk(), stored.stored_bytes);
         let loaded = store.load(&k).expect("warm store hits");
-        assert_same_workload(&w, &loaded);
+        assert!(!loaded.from_seed);
+        assert_eq!(loaded.stored_bytes, stored.stored_bytes);
+        assert_eq!(loaded.body_bytes, stored.body_bytes);
+        assert_same_workload(&w, &loaded.workload);
         let s = store.stats();
-        assert_eq!((s.entries, s.bytes, s.unreadable), (1, size, 0));
+        assert_eq!((s.entries, s.bytes, s.unreadable), (1, stored.stored_bytes, 0));
         assert_eq!(s.versions, vec![(CODEC_VERSION, 1)]);
         assert_eq!(store.clear().unwrap(), 1);
         assert_eq!(store.bytes_on_disk(), 0);
@@ -751,6 +1232,20 @@ mod tests {
     }
 
     #[test]
+    fn writable_v1_entry_is_lazily_migrated_to_v2() {
+        let dir = tmp_dir("migrate");
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        let k = key(1);
+        let w = k.build();
+        fs::write(store.entry_path(&k), encode_v1(&k, &w)).unwrap();
+        assert_eq!(store.stats().versions, vec![(CODEC_V1, 1)]);
+        let loaded = store.load(&k).expect("v1 entry serves");
+        assert_same_workload(&w, &loaded.workload);
+        assert_eq!(store.stats().versions, vec![(CODEC_VERSION, 1)], "rewritten as v2 on read");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn lock_is_exclusive_across_handles() {
         let dir = tmp_dir("lock");
         let a = DiskStore::open(DiskConfig::new(&dir)).unwrap();
@@ -769,6 +1264,25 @@ mod tests {
         drop(guard);
         assert!(sys::try_lock_exclusive(&file));
         sys::unlock(&file);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_dry_run_reports_without_deleting() {
+        let dir = tmp_dir("gc-dry");
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        for b in [1usize, 2] {
+            store.store(&key(b), &key(b).build()).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let report = store.gc_with(0, true);
+        assert!(report.dry_run);
+        assert_eq!(report.victims.len(), 2, "{report:?}");
+        assert_eq!(report.bytes_after, 0);
+        assert_eq!(store.stats().entries, 2, "dry run deletes nothing");
+        let live = store.gc_with(0, false);
+        assert_eq!(live.victims.len(), 2);
+        assert_eq!(store.stats().entries, 0);
         let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -108,7 +108,9 @@ impl MetricsSnapshot {
              \"worker_utilization\":{:.4},\"cache\":{{\"lookups\":{},\"hits\":{},\
              \"coalesced\":{},\"builds\":{},\"evictions\":{},\"build_failures\":{},\
              \"resident\":{},\"hit_rate\":{:.4},\"disk_hits\":{},\"disk_misses\":{},\
-             \"disk_hit_rate\":{:.4},\"bytes_on_disk\":{}}}}}",
+             \"seed_hits\":{},\"disk_hit_rate\":{:.4},\"bytes_on_disk\":{},\
+             \"compressed_bytes\":{},\"uncompressed_bytes\":{},\
+             \"compression_ratio\":{:.4}}}}}",
             self.uptime.as_secs_f64(),
             self.jobs_submitted,
             self.jobs_completed,
@@ -129,8 +131,12 @@ impl MetricsSnapshot {
             c.hit_rate(),
             c.disk_hits,
             c.disk_misses,
+            c.seed_hits,
             c.disk_hit_rate(),
             c.bytes_on_disk,
+            c.compressed_bytes,
+            c.uncompressed_bytes,
+            c.compression_ratio(),
         )
     }
 
@@ -203,6 +209,9 @@ mod tests {
             misses: 2,
             disk_hits: 1,
             disk_misses: 1,
+            seed_hits: 1,
+            compressed_bytes: 1024,
+            uncompressed_bytes: 8192,
             bytes_on_disk: 4096,
             ..Default::default()
         };
@@ -215,13 +224,23 @@ mod tests {
         assert!(v.get("jobs_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
         let c = v.get("cache").expect("cache object");
         assert_eq!(c.get("hits").and_then(Json::as_u64), Some(3));
-        assert_eq!(c.get("builds").and_then(Json::as_u64), Some(1), "misses - disk_hits");
+        assert_eq!(
+            c.get("builds").and_then(Json::as_u64),
+            Some(0),
+            "misses - (disk_hits + seed_hits)"
+        );
         assert_eq!(c.get("lookups").and_then(Json::as_u64), Some(5));
         assert!((c.get("hit_rate").and_then(Json::as_f64).unwrap() - 0.6).abs() < 1e-9);
         assert_eq!(c.get("disk_hits").and_then(Json::as_u64), Some(1));
         assert_eq!(c.get("disk_misses").and_then(Json::as_u64), Some(1));
-        assert!((c.get("disk_hit_rate").and_then(Json::as_f64).unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(c.get("seed_hits").and_then(Json::as_u64), Some(1));
+        let rate = c.get("disk_hit_rate").and_then(Json::as_f64).unwrap();
+        assert!((rate - 2.0 / 3.0).abs() < 1e-3, "{rate}");
         assert_eq!(c.get("bytes_on_disk").and_then(Json::as_u64), Some(4096));
+        assert_eq!(c.get("compressed_bytes").and_then(Json::as_u64), Some(1024));
+        assert_eq!(c.get("uncompressed_bytes").and_then(Json::as_u64), Some(8192));
+        let ratio = c.get("compression_ratio").and_then(Json::as_f64).unwrap();
+        assert!((ratio - 8.0).abs() < 1e-9, "{ratio}");
     }
 
     #[test]

@@ -27,10 +27,12 @@
 //! * [`queue`] — the bounded MPMC job queue (backpressure for producers).
 //! * [`cache`] — the sharded, LRU-bounded workload cache; identical
 //!   in-flight specs coalesce onto one build.
-//! * [`disk`] — the optional on-disk workload tier (`--cache-dir`):
-//!   memory → disk → build, with a versioned checksummed codec,
-//!   cross-process build locks, and size-bounded GC, so builds persist
-//!   across processes and serve restarts.
+//! * [`disk`] — the optional on-disk workload tiers (`--cache-dir` +
+//!   read-only `--cache-seed`): memory → writable dir → seed dir →
+//!   build, with a versioned, checksummed, RLE-compressed codec (v2;
+//!   v1 entries decode and lazily migrate), cross-process build locks,
+//!   and size-bounded GC (`dare cache gc`), so builds persist across
+//!   processes, serve restarts, and CI runs.
 //! * [`workers`] — the worker pool and the [`Service`] facade.
 //! * [`job`] — the scheduled unit and its outcome.
 //! * [`protocol`] — the JSONL job/result wire format of `dare batch`
@@ -56,7 +58,7 @@ pub mod transport;
 pub mod workers;
 
 pub use cache::{CacheCounters, Fetch, WorkloadCache};
-pub use disk::{DiskConfig, DiskStats, DiskStore};
+pub use disk::{DiskConfig, DiskLoad, DiskStats, DiskStore, GcReport, StoredEntry};
 pub use job::{Job, JobOutcome};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use protocol::{JobRequest, JobResponse, Json};

@@ -72,6 +72,43 @@ impl Gen {
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         self.rng.shuffle(xs)
     }
+
+    /// A size near `pivot` (within `±slack`, floored at 0) — for
+    /// exercising off-by-one behavior around codec chunk boundaries,
+    /// capacity limits, and similar cliffs.
+    pub fn near(&mut self, pivot: usize, slack: usize) -> usize {
+        let lo = pivot.saturating_sub(slack);
+        self.rng.range(lo, pivot + slack + 1)
+    }
+
+    /// A short ASCII identifier (1..=max_len chars), e.g. for names that
+    /// must survive a serialization round trip.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_/";
+        let len = self.size(max_len.max(1));
+        (0..len).map(|_| ALPHABET[self.rng.range(0, ALPHABET.len())] as char).collect()
+    }
+
+    /// A byte buffer of exactly `len` bytes built from alternating runs:
+    /// with probability `zero_fraction` a run is all zeros, otherwise
+    /// random literals (which may themselves contain short zero runs).
+    /// Run lengths are log-uniform up to 4 KiB, so the output mixes long
+    /// zero stretches with dense stretches — the shape a run-length
+    /// codec has to handle, and (at high `zero_fraction`) the shape of a
+    /// sparse workload's memory image.
+    pub fn sparse_bytes(&mut self, len: usize, zero_fraction: f64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len);
+        while out.len() < len {
+            let run = self.size((len - out.len()).min(4096));
+            if self.rng.chance(zero_fraction) {
+                out.resize(out.len() + run, 0);
+            } else {
+                out.extend((0..run).map(|_| (self.rng.next_u32() >> 13) as u8));
+            }
+        }
+        out.truncate(len);
+        out
+    }
 }
 
 /// Run `cases` random cases of `prop`. The property indicates failure by
@@ -128,6 +165,38 @@ mod tests {
             assert!(v < 10_000); // passes
             assert!(v > 10_000, "deliberate failure"); // fails
         });
+    }
+
+    #[test]
+    fn sparse_bytes_hits_the_requested_length_and_sparsity() {
+        let mut g = Gen::new(7);
+        for _ in 0..20 {
+            let len = g.size(20_000);
+            let b = g.sparse_bytes(len, 0.9);
+            assert_eq!(b.len(), len);
+        }
+        // At 90% zero runs the buffer is dominated by zeros.
+        let b = g.sparse_bytes(100_000, 0.9);
+        let zeros = b.iter().filter(|&&x| x == 0).count();
+        assert!(zeros > b.len() / 2, "{zeros} of {}", b.len());
+        // And a dense request still yields mostly non-zero bytes.
+        let d = g.sparse_bytes(100_000, 0.0);
+        let nz = d.iter().filter(|&&x| x != 0).count();
+        assert!(nz > d.len() / 2, "{nz} of {}", d.len());
+    }
+
+    #[test]
+    fn near_and_ident_are_bounded() {
+        let mut g = Gen::new(9);
+        for _ in 0..200 {
+            let n = g.near(1000, 3);
+            assert!((997..=1003).contains(&n), "{n}");
+            let n0 = g.near(1, 5);
+            assert!(n0 <= 6, "{n0}");
+            let s = g.ident(12);
+            assert!(!s.is_empty() && s.len() <= 12);
+            assert!(s.is_ascii());
+        }
     }
 
     #[test]

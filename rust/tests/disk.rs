@@ -1,16 +1,23 @@
 //! Integration tests for the on-disk workload tier (`service::disk`):
-//! warm-restart reuse through a whole `Service`, corrupt-entry
-//! recovery, cross-"process" build coordination via the per-key file
-//! lock, and the size-bounded GC.
+//! warm-restart reuse through a whole `Service`, the v2 compressed
+//! codec (property-tested over `util::prop`-generated workloads and a
+//! fault-injection corruption matrix), the read-only seed tier and its
+//! invariants under concurrent GC, cross-"process" build coordination
+//! via the per-key file lock, the size-bounded GC with its dry-run
+//! report, and the held-lock `clear()` regression.
 
 use dare::coordinator::{BenchPoint, RunSpec};
-use dare::kernels::{KernelKind, WorkloadKey};
-use dare::service::disk::CODEC_VERSION;
+use dare::isa::{Csr, MInstr, MReg, Program, NUM_MREGS};
+use dare::kernels::{KernelKind, RegionCheck, Workload, WorkloadKey};
+use dare::service::disk::{self, CODEC_V1, CODEC_VERSION, HEADER_LEN, MAX_RUN};
 use dare::service::{DiskConfig, DiskStore, Fetch, Service, ServiceConfig, WorkloadCache};
-use dare::sim::Variant;
+use dare::sim::{MemImage, Variant};
 use dare::sparse::DatasetKind;
+use dare::util::prop::{self, Gen};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::SystemTime;
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("dare-e2e-disk-{}-{tag}", std::process::id()));
@@ -27,6 +34,14 @@ fn store_at(dir: &Path) -> Arc<DiskStore> {
     Arc::new(DiskStore::open(DiskConfig::new(dir)).unwrap())
 }
 
+fn seeded_store(writable: &Path, seed: &Path) -> Arc<DiskStore> {
+    Arc::new(DiskStore::open(DiskConfig::new(writable).with_seed(seed)).unwrap())
+}
+
+fn entry_path(dir: &Path, k: &WorkloadKey) -> PathBuf {
+    dir.join(format!("{}.dwl", k.cache_file_stem()))
+}
+
 fn entry_files(dir: &Path) -> Vec<PathBuf> {
     let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
         .unwrap()
@@ -37,6 +52,401 @@ fn entry_files(dir: &Path) -> Vec<PathBuf> {
     v.sort();
     v
 }
+
+/// `(name, content, mtime)` of every file in `dir` — the "nothing here
+/// may ever change" witness for seed-tier invariants.
+fn dir_snapshot(dir: &Path) -> Vec<(String, Vec<u8>, SystemTime)> {
+    let mut v: Vec<(String, Vec<u8>, SystemTime)> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let content = std::fs::read(e.path()).unwrap();
+            let mtime = e.metadata().unwrap().modified().unwrap();
+            (name, content, mtime)
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+fn assert_same_workload(a: &Workload, b: &Workload) {
+    assert_eq!(a.kind.name(), b.kind.name());
+    assert_eq!(a.program.name, b.program.name);
+    assert_eq!(a.program.instrs, b.program.instrs);
+    assert_eq!(a.program.useful_macs, b.program.useful_macs);
+    assert_eq!(a.program.issued_macs, b.program.issued_macs);
+    assert_eq!(a.program.mem_high_water, b.program.mem_high_water);
+    assert_eq!(a.mem.len(), b.mem.len());
+    assert_eq!(a.mem.read_bytes(0, a.mem.len()), b.mem.read_bytes(0, b.mem.len()));
+    assert_eq!(a.checks.len(), b.checks.len());
+    for (ca, cb) in a.checks.iter().zip(&b.checks) {
+        assert_eq!(ca.name, cb.name);
+        assert_eq!(ca.addr, cb.addr);
+        assert_eq!(ca.expect, cb.expect);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generators (over util::prop) for the codec property suite
+// ---------------------------------------------------------------------
+
+fn gen_mreg(g: &mut Gen) -> MReg {
+    MReg(g.usize_in(0, NUM_MREGS) as u8)
+}
+
+fn gen_instr(g: &mut Gen) -> MInstr {
+    match g.usize_in(0, 6) {
+        0 => MInstr::Mcfg {
+            csr: *g.pick(&[Csr::MatrixM, Csr::MatrixK, Csr::MatrixN]),
+            val: g.u32(),
+        },
+        1 => MInstr::Mld { md: gen_mreg(g), base: g.u64(), stride: g.u64() },
+        2 => MInstr::Mst { ms3: gen_mreg(g), base: g.u64(), stride: g.u64() },
+        3 => MInstr::Mma { md: gen_mreg(g), ms1: gen_mreg(g), ms2: gen_mreg(g) },
+        4 => MInstr::Mgather { md: gen_mreg(g), ms1: gen_mreg(g) },
+        _ => MInstr::Mscatter { ms2: gen_mreg(g), ms1: gen_mreg(g) },
+    }
+}
+
+/// A synthetic workload with a `zero_fraction`-sparse memory image of
+/// `mem_len` bytes — every field the codec serializes is randomized.
+fn gen_workload(g: &mut Gen, mem_len: usize, zero_fraction: f64) -> Workload {
+    let mut mem = MemImage::new(mem_len);
+    if mem_len > 0 {
+        let bytes = g.sparse_bytes(mem_len, zero_fraction);
+        mem.write_bytes(0, &bytes);
+    }
+    let n_instrs = g.usize_in(0, 65);
+    let instrs = (0..n_instrs).map(|_| gen_instr(g)).collect();
+    let n_checks = g.usize_in(0, 4);
+    let checks = (0..n_checks)
+        .map(|_| {
+            let n = g.usize_in(0, 16);
+            RegionCheck { name: g.ident(12), addr: g.u64(), expect: g.vec_f32(n) }
+        })
+        .collect();
+    Workload {
+        kind: *g.pick(&KernelKind::ALL),
+        program: Program {
+            name: g.ident(24),
+            instrs,
+            useful_macs: g.u64(),
+            issued_macs: g.u64(),
+            mem_high_water: g.u64(),
+        },
+        mem,
+        checks,
+    }
+}
+
+/// A raw v2 frame with an arbitrary (possibly hostile) header.
+fn v2_frame(checksum: u64, body_len: u64, payload: &[u8]) -> Vec<u8> {
+    disk::frame(CODEC_VERSION, checksum, body_len, payload)
+}
+
+// ---------------------------------------------------------------------
+// v2 codec property suite
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_v2_codec_round_trips_generated_workloads() {
+    prop::run("v2-roundtrip", 40, |g| {
+        let zero_fraction = g.f64();
+        let mem_len = g.usize_in(0, 1 << 15);
+        let w = gen_workload(g, mem_len, zero_fraction);
+        let k = key(1);
+        let bytes = disk::encode(&k, &w);
+        let back = disk::decode(&k, &bytes).expect("v2 round trip decode");
+        assert_same_workload(&w, &back);
+        // The retained v1 reference codec agrees on the same workload.
+        let v1 = disk::encode_v1(&k, &w);
+        let (b1, ver) = disk::decode_versioned(&k, &v1).expect("v1 decode");
+        assert_eq!(ver, CODEC_V1);
+        assert_same_workload(&w, &b1);
+    });
+}
+
+#[test]
+fn prop_v2_codec_round_trips_edge_images() {
+    prop::run("v2-edges", 30, |g| {
+        // Image lengths that stress the RLE chunking: empty, tiny,
+        // straddling MAX_RUN, multi-chunk max-length runs, and ordinary.
+        let mem_len = match g.usize_in(0, 5) {
+            0 => 0,
+            1 => g.near(MAX_RUN, 2),
+            2 => g.near(2 * MAX_RUN, 3),
+            3 => g.size(64),
+            _ => g.size(1 << 14),
+        };
+        for mode in 0..3 {
+            let mut mem = MemImage::new(mem_len);
+            match mode {
+                // All-zero image: one giant (possibly split) zero run.
+                0 => {}
+                // Fully dense image: pure literals, no compressible run.
+                1 => {
+                    let b: Vec<u8> = (0..mem_len).map(|i| (i % 251) as u8 + 1).collect();
+                    mem.write_bytes(0, &b);
+                }
+                // Mixed runs.
+                _ => {
+                    let b = g.sparse_bytes(mem_len, 0.7);
+                    mem.write_bytes(0, &b);
+                }
+            }
+            let w = Workload {
+                kind: KernelKind::Sddmm,
+                program: Program {
+                    name: "edge".into(),
+                    instrs: Vec::new(),
+                    useful_macs: 0,
+                    issued_macs: 0,
+                    mem_high_water: 0,
+                },
+                mem,
+                checks: Vec::new(),
+            };
+            let k = key(1);
+            let back = disk::decode(&k, &disk::encode(&k, &w))
+                .unwrap_or_else(|e| panic!("edge len {mem_len} mode {mode}: {e}"));
+            assert_same_workload(&w, &back);
+        }
+    });
+}
+
+#[test]
+fn prop_zero_heavy_entries_compress_at_least_4x() {
+    prop::run("v2-compression", 15, |g| {
+        let mem_len = 32 * 1024 + g.size(64 * 1024);
+        let w = gen_workload(g, mem_len, 0.95);
+        let k = key(1);
+        let v2 = disk::encode(&k, &w).len();
+        let v1 = disk::encode_v1(&k, &w).len();
+        assert!(v2 * 4 <= v1, "compressed {v2} B vs raw {v1} B: zero-heavy must be >= 4x");
+    });
+}
+
+// ---------------------------------------------------------------------
+// v2 fault-injection matrix
+// ---------------------------------------------------------------------
+
+#[test]
+fn v2_frame_corruption_matrix() {
+    let k = key(1);
+    let bytes = disk::encode(&k, &k.build());
+    // Truncation mid-run: cut inside an op header and inside run data.
+    for cut in [HEADER_LEN + 1, HEADER_LEN + 2, bytes.len() / 2, bytes.len() - 1] {
+        assert!(disk::decode(&k, &bytes[..cut]).is_err(), "cut at {cut} must not decode");
+    }
+    // A run length that would overflow the declared body size must
+    // error before producing a single byte — not OOM, not wrap.
+    let hostile = v2_frame(0, 64, &[0x00, 0xFF, 0xFF]);
+    let err = disk::decode(&k, &hostile).unwrap_err();
+    assert!(err.contains("overflows"), "{err}");
+    // A hostile declared body length is rejected before any allocation.
+    let huge = v2_frame(0, u64::MAX, &[]);
+    assert!(disk::decode(&k, &huge).unwrap_err().contains("sanity"));
+    // Bit-flips anywhere in the compressed payload are caught: either
+    // the RLE stream no longer parses, or the flip survives inflation
+    // and the checksum over the *uncompressed* body rejects it.
+    for i in (HEADER_LEN..bytes.len()).step_by(97) {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x10;
+        assert!(disk::decode(&k, &bad).is_err(), "payload flip at {i} must not decode");
+    }
+}
+
+#[test]
+fn mixed_generation_store_serves_both_and_migrates_v1() {
+    let dir = tmp_dir("mixed");
+    let store = store_at(&dir);
+    let (k1, k2) = (key(1), key(2));
+    let w1 = k1.build();
+    // A v1 entry left behind by an old binary, next to a fresh v2 one.
+    std::fs::write(entry_path(&dir, &k1), disk::encode_v1(&k1, &w1)).unwrap();
+    store.store(&k2, &k2.build()).unwrap();
+    assert_eq!(store.stats().versions, vec![(CODEC_V1, 1), (CODEC_VERSION, 1)]);
+    let cache = WorkloadCache::new(4).with_disk(store.clone());
+    assert_eq!(cache.get_or_build(&k1).unwrap().1, Fetch::DiskHit, "v1 generation serves");
+    assert_eq!(cache.get_or_build(&k2).unwrap().1, Fetch::DiskHit, "v2 generation serves");
+    // The v1 hit was lazily rewritten in the current compressed format.
+    assert_eq!(store.stats().versions, vec![(CODEC_VERSION, 2)], "lazy migration");
+    // A corrupt legacy entry rebuilds cleanly instead of poisoning the
+    // directory.
+    let mut bad = disk::encode_v1(&k1, &w1);
+    bad.truncate(bad.len() - 3);
+    std::fs::write(entry_path(&dir, &k1), &bad).unwrap();
+    let cache2 = WorkloadCache::new(4).with_disk(store_at(&dir));
+    assert_eq!(cache2.get_or_build(&k1).unwrap().1, Fetch::Built);
+    assert_eq!(store.stats().versions, vec![(CODEC_VERSION, 2)]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Seed tier
+// ---------------------------------------------------------------------
+
+#[test]
+fn seed_tier_serves_promotes_and_never_writes_the_seed() {
+    let seed = tmp_dir("seed-src");
+    let writable = tmp_dir("seed-writable");
+    let k = key(1);
+    DiskStore::open(DiskConfig::new(&seed)).unwrap().store(&k, &k.build()).unwrap();
+    let before = dir_snapshot(&seed);
+
+    let cache = WorkloadCache::new(4).with_disk(seeded_store(&writable, &seed));
+    let (_, fetch) = cache.get_or_build(&k).unwrap();
+    assert_eq!(fetch, Fetch::SeedHit);
+    let c = cache.counters();
+    assert_eq!((c.seed_hits, c.disk_hits, c.disk_misses, c.builds()), (1, 0, 0, 0));
+    assert!((c.disk_hit_rate() - 1.0).abs() < 1e-9);
+    assert!(c.compression_ratio() > 1.0, "ratio {}", c.compression_ratio());
+    // Promoted into memory: the next lookup in this cache is a plain hit.
+    assert_eq!(cache.get_or_build(&k).unwrap().1, Fetch::Hit);
+    // Promoted into the writable tier: a fresh cache (≈ a new process)
+    // hits the writable dir and never reaches the seed.
+    assert_eq!(entry_files(&writable).len(), 1, "seed hit promoted to writable tier");
+    let cache2 = WorkloadCache::new(4).with_disk(seeded_store(&writable, &seed));
+    assert_eq!(cache2.get_or_build(&k).unwrap().1, Fetch::DiskHit);
+    assert_eq!(cache2.counters().seed_hits, 0);
+    // The read-only invariant: byte-for-byte and mtime-for-mtime, the
+    // seed is exactly what it was.
+    assert_eq!(dir_snapshot(&seed), before, "the seed must never be written or touched");
+    let _ = std::fs::remove_dir_all(&seed);
+    let _ = std::fs::remove_dir_all(&writable);
+}
+
+#[test]
+fn corrupt_seed_entry_falls_through_to_build_without_poisoning() {
+    let seed = tmp_dir("seed-corrupt-src");
+    let writable = tmp_dir("seed-corrupt-writable");
+    let k = key(1);
+    let mut bad = disk::encode(&k, &k.build());
+    bad.truncate(bad.len() - 11);
+    std::fs::write(entry_path(&seed, &k), &bad).unwrap();
+    let before = dir_snapshot(&seed);
+
+    let cache = WorkloadCache::new(4).with_disk(seeded_store(&writable, &seed));
+    let (_, fetch) = cache.get_or_build(&k).unwrap();
+    assert_eq!(fetch, Fetch::Built, "corrupt seed entry must fall through to a build");
+    let c = cache.counters();
+    assert_eq!((c.seed_hits, c.disk_hits, c.disk_misses, c.builds()), (0, 0, 1, 1));
+    // The corpse is left exactly as-is (read-only tier: no quarantine).
+    assert_eq!(dir_snapshot(&seed), before, "corrupt seed entries are never deleted");
+    // The build landed in the writable tier — healthy, not poisoned.
+    let cache2 = WorkloadCache::new(4).with_disk(seeded_store(&writable, &seed));
+    assert_eq!(cache2.get_or_build(&k).unwrap().1, Fetch::DiskHit);
+    let _ = std::fs::remove_dir_all(&seed);
+    let _ = std::fs::remove_dir_all(&writable);
+}
+
+/// Writable tier under concurrent GC while a read-only seed is mounted:
+/// the seed is never written, never evicted, and a seed hit during
+/// eviction still serves. The writable bound is 1 byte, so every
+/// promotion is immediately evictable — maximum churn.
+#[test]
+fn concurrent_gc_never_touches_the_seed_and_seed_hits_still_serve() {
+    let seed = tmp_dir("seed-gc-src");
+    let writable = tmp_dir("seed-gc-writable");
+    let keys = [key(1), key(2)];
+    let builder = DiskStore::open(DiskConfig::new(&seed)).unwrap();
+    for k in &keys {
+        builder.store(k, &k.build()).unwrap();
+    }
+    let before = dir_snapshot(&seed);
+
+    let cfg = DiskConfig { dir: writable.clone(), max_bytes: 1, seed: Some(seed.clone()) };
+    let store = Arc::new(DiskStore::open(cfg).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let gc_thread = {
+        let store = store.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut sweeps = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                store.gc();
+                sweeps += 1;
+            }
+            sweeps
+        })
+    };
+    let loaders: Vec<_> = keys
+        .iter()
+        .copied()
+        .map(|k| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                for i in 0..25 {
+                    let l = store
+                        .load(&k)
+                        .unwrap_or_else(|| panic!("load {i} of {} must serve", k.name()));
+                    assert!(!l.workload.mem.is_empty());
+                }
+            })
+        })
+        .collect();
+    for h in loaders {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let sweeps = gc_thread.join().unwrap();
+    assert!(sweeps > 0, "GC must actually have raced the loads");
+    assert_eq!(
+        dir_snapshot(&seed),
+        before,
+        "concurrent GC/promotion must never write, touch, or evict the seed"
+    );
+    let _ = std::fs::remove_dir_all(&seed);
+    let _ = std::fs::remove_dir_all(&writable);
+}
+
+/// The acceptance-criteria seed path end-to-end: a *service* over a
+/// fresh writable tier + the previous run's cache as a read-only seed
+/// compiles nothing and reports every build as a seed hit.
+#[test]
+fn seeded_service_compiles_nothing() {
+    let seed = tmp_dir("seed-service-src");
+    let writable = tmp_dir("seed-service-writable");
+    let specs: Vec<RunSpec> = [Variant::Baseline, Variant::DareFre]
+        .into_iter()
+        .flat_map(|v| {
+            [DatasetKind::PubMed, DatasetKind::Gpt2Attention]
+                .into_iter()
+                .map(move |d| RunSpec::new(BenchPoint::new(KernelKind::Sddmm, d, 1, 0.04), v))
+        })
+        .collect();
+    // Build the seed with a plain --cache-dir run.
+    let cold = Service::start(ServiceConfig {
+        workers: 2,
+        disk: Some(DiskConfig::new(&seed)),
+        ..ServiceConfig::default()
+    });
+    let cold_results = cold.run_batch(&specs);
+    drop(cold);
+    // Seeded run: fresh memory cache, fresh writable dir, read-only seed.
+    let seeded = Service::start(ServiceConfig {
+        workers: 2,
+        disk: Some(DiskConfig::new(&writable).with_seed(&seed)),
+        ..ServiceConfig::default()
+    });
+    let seeded_results = seeded.run_batch(&specs);
+    let c = seeded.metrics().cache;
+    assert_eq!(c.seed_hits, 2, "one seed hit per unique workload");
+    assert_eq!(c.disk_misses, 0);
+    assert_eq!(c.builds(), 0, "a seeded run compiles nothing");
+    assert!((c.disk_hit_rate() - 1.0).abs() < 1e-9);
+    for (a, b) in cold_results.iter().zip(&seeded_results) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.stats.cycles, b.stats.cycles, "{}", a.name);
+    }
+    let _ = std::fs::remove_dir_all(&seed);
+    let _ = std::fs::remove_dir_all(&writable);
+}
+
+// ---------------------------------------------------------------------
+// Warm restart / corruption recovery / locking / GC (writable tier)
+// ---------------------------------------------------------------------
 
 /// The acceptance-criteria path end-to-end: a second *service* (≈ a
 /// second `dare` process / a restarted `dare serve`) over the same
@@ -64,6 +474,7 @@ fn warm_service_restart_hits_disk_for_every_unique_workload() {
     assert_eq!(c.disk_hits, 0, "first run has nothing to reuse");
     assert_eq!(c.disk_misses, 2, "one probe per unique workload");
     assert!(c.bytes_on_disk > 0);
+    assert!(c.compression_ratio() > 1.0, "stored entries are compressed");
     drop(cold);
 
     // "Restart": a brand-new service, empty memory cache, same dir.
@@ -94,14 +505,15 @@ fn every_corruption_class_rebuilds_instead_of_panicking() {
     store_at(&dir).store(&k, &k.build()).unwrap();
     let pristine = std::fs::read(&entry_files(&dir)[0]).unwrap();
 
-    // (tag, mutate) pairs covering: truncated body, flipped body byte
-    // (checksum), foreign codec version, garbage header.
+    // (tag, mutate) pairs covering: truncated payload, flipped payload
+    // byte (structural or checksum failure), unknown codec version,
+    // garbage header.
     type Mutate = fn(&[u8]) -> Vec<u8>;
     let cases: [(&str, Mutate); 4] = [
         ("truncated", |b| b[..b.len() - 9].to_vec()),
         ("bit-flip", |b| {
             let mut v = b.to_vec();
-            let mid = 24 + (v.len() - 24) / 2;
+            let mid = HEADER_LEN + (v.len() - HEADER_LEN) / 2;
             v[mid] ^= 0x40;
             v
         }),
@@ -163,6 +575,34 @@ fn concurrent_processes_build_a_key_exactly_once() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Regression: `clear()` must skip lock files whose flock is currently
+/// held. Unlinking a held lock lets the next process lock a fresh inode
+/// while the builder still holds the old one — two "exclusive" builders.
+#[test]
+fn clear_skips_lock_files_held_by_a_live_builder() {
+    let dir = tmp_dir("clear-lock");
+    let a = store_at(&dir);
+    let b = store_at(&dir);
+    let k = key(1);
+    a.store(&k, &k.build()).unwrap();
+    let guard = a.lock(&k).expect("builder lock");
+    // A second store (≈ a concurrent `dare cache clear`) wipes the dir.
+    assert_eq!(b.clear().unwrap(), 1, "the entry itself is removed");
+    let lock_path = dir.join(format!("{}.lock", k.cache_file_stem()));
+    if cfg!(unix) {
+        assert!(lock_path.exists(), "held lock file must survive clear");
+        // The single-builder guarantee still holds through the original
+        // inode: a third party cannot take the lock.
+        assert!(b.try_lock(&k).is_none(), "lock must still be exclusively held");
+    }
+    drop(guard);
+    // With the builder gone the lock is reapable and takeable again.
+    b.clear().unwrap();
+    assert!(!lock_path.exists(), "released lock file is reaped by the next clear");
+    assert!(b.try_lock(&k).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn gc_respects_the_size_bound_and_evicts_oldest_first() {
     let dir = tmp_dir("gc");
@@ -170,7 +610,7 @@ fn gc_respects_the_size_bound_and_evicts_oldest_first() {
     let keys = [key(1), key(2), key(4)];
     let mut sizes = Vec::new();
     for k in &keys {
-        sizes.push(unbounded.store(k, &k.build()).unwrap());
+        sizes.push(unbounded.store(k, &k.build()).unwrap().stored_bytes);
         // Distinct mtimes so eviction order is well-defined.
         std::thread::sleep(std::time::Duration::from_millis(30));
     }
@@ -178,10 +618,17 @@ fn gc_respects_the_size_bound_and_evicts_oldest_first() {
     assert_eq!(unbounded.bytes_on_disk(), total);
     assert_eq!(entry_files(&dir).len(), 3);
 
-    // A bound just below the total must evict exactly the oldest entry.
+    // A bound just below the total: dry-run first — it must name
+    // exactly the oldest entry and delete nothing.
     let bound = total - 1;
-    let bounded_cfg = DiskConfig { dir: dir.clone(), max_bytes: bound };
+    let bounded_cfg = DiskConfig { dir: dir.clone(), max_bytes: bound, seed: None };
     let bounded = Arc::new(DiskStore::open(bounded_cfg).unwrap());
+    let plan = bounded.gc_with(bound, true);
+    assert!(plan.dry_run);
+    assert_eq!(plan.victims.len(), 1, "{plan:?}");
+    assert_eq!(plan.victims[0].1, sizes[0], "oldest entry is the victim");
+    assert_eq!(entry_files(&dir).len(), 3, "dry run deletes nothing");
+    // The live sweep evicts exactly that entry.
     let evicted = bounded.gc();
     assert_eq!(evicted, sizes[0], "oldest entry evicted first");
     assert!(bounded.bytes_on_disk() <= bound);
