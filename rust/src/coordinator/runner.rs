@@ -12,19 +12,27 @@ use crate::service::{Service, ServiceConfig};
 use crate::sim::{Mpu, NativeMma, SimStats};
 
 #[derive(Debug, Clone)]
+/// Everything one completed run produces: the simulation counters,
+/// the energy breakdown derived from them, and the optional
+/// verification error.
 pub struct RunResult {
+    /// The spec's display name.
     pub name: String,
+    /// The simulation's counters.
     pub stats: SimStats,
+    /// Energy derived from `stats` under the default model.
     pub energy: EnergyBreakdown,
     /// Max relative functional error, when verification was requested.
     pub verify_err: Option<f32>,
 }
 
 impl RunResult {
+    /// Total execution cycles.
     pub fn cycles(&self) -> u64 {
         self.stats.cycles
     }
 
+    /// Total energy, picojoules.
     pub fn energy_pj(&self) -> f64 {
         self.energy.total_pj()
     }

@@ -9,7 +9,9 @@ use crate::sparse::{Csc, DatasetKind};
 /// dataset, and the blockification size `B`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BenchPoint {
+    /// The kernel to run.
     pub kernel: KernelKind,
+    /// The sparse operand's dataset.
     pub dataset: DatasetKind,
     /// Block size `B` (1 = original unstructured pattern).
     pub block: usize,
@@ -18,10 +20,12 @@ pub struct BenchPoint {
 }
 
 impl BenchPoint {
+    /// A point from its four coordinates.
     pub fn new(kernel: KernelKind, dataset: DatasetKind, block: usize, scale: f64) -> Self {
         Self { kernel, dataset, block, scale }
     }
 
+    /// Human-readable form: `kernel/dataset/B=block`.
     pub fn name(&self) -> String {
         format!("{}/{}/B={}", self.kernel.name(), self.dataset.name(), self.block)
     }
@@ -52,21 +56,28 @@ impl BenchPoint {
 /// optional config overrides.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
+    /// The benchmark point.
     pub point: BenchPoint,
+    /// The design variant to simulate.
     pub variant: Variant,
     /// Applied on top of `SimConfig::for_variant(variant)`.
     pub config_override: Option<fn(&mut SimConfig)>,
     /// Arbitrary closure-free parametric overrides (riq/vmr/llc latency).
     pub riq_entries: Option<usize>,
+    /// Override the VMR capacity (Fig 8).
     pub vmr_entries: Option<usize>,
+    /// Override the LLC hit latency (Fig 7).
     pub llc_hit_latency: Option<u64>,
+    /// Override the RFU dynamic/static mode.
     pub rfu_dynamic: Option<bool>,
+    /// Use the zero-miss oracle LLC (Fig 1a).
     pub oracle_llc: bool,
     /// Verify functional outputs after the run.
     pub verify: bool,
 }
 
 impl RunSpec {
+    /// A spec with no overrides and verification off.
     pub fn new(point: BenchPoint, variant: Variant) -> Self {
         Self {
             point,
@@ -81,6 +92,7 @@ impl RunSpec {
         }
     }
 
+    /// Human-readable form: `point/variant`.
     pub fn name(&self) -> String {
         format!("{}/{}", self.point.name(), self.variant.name())
     }
@@ -99,6 +111,8 @@ impl RunSpec {
         self.point.key(self.uses_gsa())
     }
 
+    /// The simulator configuration: the variant's Table II defaults
+    /// with this spec's overrides applied.
     pub fn config(&self) -> SimConfig {
         let mut cfg = SimConfig::for_variant(self.variant);
         if let Some(r) = self.riq_entries {

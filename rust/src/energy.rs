@@ -55,16 +55,24 @@ impl Default for EnergyModel {
 /// Energy breakdown for one simulation, in picojoules.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EnergyBreakdown {
+    /// PE array energy while streaming `mma`s.
     pub compute_active: f64,
+    /// PE array idle energy.
     pub compute_idle: f64,
+    /// Matrix register file access energy.
     pub regfile: f64,
+    /// LLC access energy.
     pub llc: f64,
+    /// DRAM transfer energy.
     pub dram: f64,
+    /// RIQ/VMR/RFU bookkeeping energy.
     pub runahead: f64,
+    /// Leakage over the run's wall-clock cycles.
     pub static_: f64,
 }
 
 impl EnergyBreakdown {
+    /// Total energy, picojoules.
     pub fn total_pj(&self) -> f64 {
         self.compute_active
             + self.compute_idle
@@ -75,6 +83,7 @@ impl EnergyBreakdown {
             + self.static_
     }
 
+    /// Total energy, microjoules.
     pub fn total_uj(&self) -> f64 {
         self.total_pj() / 1e6
     }

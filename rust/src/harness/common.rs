@@ -35,24 +35,32 @@ impl Default for HarnessOpts {
 const SHARED_CACHE_CAPACITY: usize = 128;
 
 /// Initialize the per-process shared service explicitly, optionally
-/// attaching the on-disk workload tier — `dare all --cache-dir D` calls
-/// this *before* any figure harness implicitly starts the service
-/// without one. First caller wins (see `service::shared`).
-pub fn init_shared_service(opts: HarnessOpts, disk: Option<DiskConfig>) -> &'static Service {
+/// attaching the on-disk tiers and switching result memoization —
+/// `dare all --cache-dir D` calls this *before* any figure harness
+/// implicitly starts the service without them. First caller wins (see
+/// `service::shared`).
+pub fn init_shared_service(
+    opts: HarnessOpts,
+    disk: Option<DiskConfig>,
+    result_cache: bool,
+) -> &'static Service {
     crate::service::shared(ServiceConfig {
         workers: opts.threads,
         cache_capacity: SHARED_CACHE_CAPACITY,
         disk,
+        result_cache,
         ..ServiceConfig::default()
     })
 }
 
 /// The per-process service every figure harness runs through, so `dare
-/// all` builds each workload exactly once across figures. First caller
-/// fixes the worker count (later `opts.threads` values are ignored —
-/// the CLI passes one value for the whole run).
+/// all` builds each workload exactly once across figures — and, via the
+/// result tier, simulates each (workload, config) point at most once per
+/// process even without a `--cache-dir`. First caller fixes the worker
+/// count (later `opts.threads` values are ignored — the CLI passes one
+/// value for the whole run).
 pub fn shared_service(opts: HarnessOpts) -> &'static Service {
-    init_shared_service(opts, None)
+    init_shared_service(opts, None, true)
 }
 
 /// Run a spec batch on the shared harness service, results in spec
@@ -130,13 +138,14 @@ mod tests {
         let before = shared_service(opts).metrics().cache;
         let second = run_shared(std::slice::from_ref(&spec), opts);
         let after = shared_service(opts).metrics().cache;
-        // Same build served both batches: identical results, and the
-        // second lookup reused the resident workload. (Counters are
-        // process-global, so compare deltas, not absolutes.)
+        // The first batch simulated and memoized; the second batch
+        // replays the result without a build or a simulation, identical
+        // stats included. (Counters are process-global, so compare
+        // deltas, not absolutes.)
         assert_eq!(first[0].stats.cycles, second[0].stats.cycles);
         assert!(
-            after.hits + after.coalesced > before.hits + before.coalesced,
-            "second batch must reuse the first batch's build: {before:?} → {after:?}"
+            after.result_hits > before.result_hits,
+            "second batch must replay the first batch's result: {before:?} → {after:?}"
         );
     }
 

@@ -14,15 +14,19 @@ use crate::sparse::DatasetKind;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 
+/// The non-baseline variants of the Fig 5 grid, in ablation order.
 pub const VARIANTS: [Variant; 4] =
     [Variant::Nvr, Variant::DareFre, Variant::DareGsa, Variant::DareFull];
 
+/// Every run of the speedup/efficiency grid, point-major.
 pub struct GridResults {
+    /// The evaluated benchmark points.
     pub points: Vec<BenchPoint>,
     /// results[point][0] = baseline, then VARIANTS order.
     pub runs: Vec<Vec<RunResult>>,
 }
 
+/// Run baseline + [`VARIANTS`] for every kernel/dataset/block point.
 pub fn run_grid(opts: HarnessOpts, blocks: &[usize]) -> GridResults {
     let mut points = Vec::new();
     for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {

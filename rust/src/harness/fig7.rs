@@ -12,6 +12,8 @@ use crate::sim::Variant;
 use crate::sparse::DatasetKind;
 use crate::util::table::Table;
 
+/// LLC-hit-latency sensitivity sweep (Fig 7): speedup of each
+/// variant as the hit latency grows.
 pub fn fig7(opts: HarnessOpts) -> Table {
     let latencies: [u64; 5] = [20, 40, 60, 80, 100];
     let p = BenchPoint::new(KernelKind::Sddmm, DatasetKind::Gpt2Attention, 8, opts.scale);

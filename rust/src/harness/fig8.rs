@@ -10,9 +10,12 @@ use crate::sparse::DatasetKind;
 use crate::util::stats::minmax_normalize;
 use crate::util::table::Table;
 
+/// The RIQ capacities swept by Fig 8.
 pub const RIQ_SIZES: [usize; 4] = [8, 16, 32, 64];
+/// The VMR capacities swept by Fig 8.
 pub const VMR_SIZES: [usize; 4] = [4, 8, 16, 32];
 
+/// RIQ/VMR capacity sensitivity sweep (Fig 8).
 pub fn fig8(opts: HarnessOpts) -> Table {
     let mut t = Table::new(
         "Fig 8 — performance sensitivity to VMR size × RIQ size (SpMM, DARE-full, normalized [0,1])",

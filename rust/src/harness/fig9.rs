@@ -10,10 +10,13 @@ use crate::sim::Variant;
 use crate::sparse::DatasetKind;
 use crate::util::table::Table;
 
+/// The blockification sizes swept by Fig 9.
 pub const BLOCKS: [usize; 5] = [1, 2, 4, 8, 16];
 const VARIANTS: [Variant; 4] =
     [Variant::Baseline, Variant::Nvr, Variant::DareFre, Variant::DareFull];
 
+/// Blockification sweep (Fig 9): DARE vs structured pruning at
+/// growing block sizes.
 pub fn fig9(opts: HarnessOpts) -> Table {
     let mut t = Table::new(
         "Fig 9 — performance vs block size (normalized to baseline B=1)",

@@ -21,12 +21,19 @@ use super::instr::{Csr, MInstr, MReg, NUM_MREGS};
 // (Display/Error impls are hand-written: `thiserror` is a proc-macro
 // dependency and this crate builds offline with no deps.)
 #[derive(Debug, PartialEq, Eq)]
+/// A parse failure, with the 1-based source line it occurred on.
 pub enum AsmError {
+    /// A mnemonic that is not part of the DARE ISA.
     UnknownMnemonic { line: usize, mnemonic: String },
+    /// Wrong number of operands for the mnemonic.
     OperandCount { line: usize, expected: usize, got: usize },
+    /// A token that is not a valid `m0`–`m7` register.
     BadMReg { line: usize, tok: String },
+    /// A token that is not a shape CSR name.
     BadCsr { line: usize, tok: String },
+    /// A token that is not a valid integer literal.
     BadInt { line: usize, tok: String },
+    /// A base-address operand missing its parentheses.
     ExpectedParen { line: usize, tok: String },
 }
 

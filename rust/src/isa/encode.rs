@@ -27,11 +27,17 @@ pub const OPCODE: u32 = 0b010_1011;
 
 /// `funct3` assignments.
 pub mod funct3 {
+    /// `mcfg` — write a shape CSR.
     pub const MCFG: u32 = 0b000;
+    /// `mld` — strided tile load.
     pub const MLD: u32 = 0b001;
+    /// `mst` — strided tile store.
     pub const MST: u32 = 0b010;
+    /// `mma` — tile multiply-accumulate.
     pub const MMA: u32 = 0b011;
+    /// `mgather` — row gather via a base-address vector.
     pub const MGATHER: u32 = 0b100;
+    /// `mscatter` — row scatter via a base-address vector.
     pub const MSCATTER: u32 = 0b101;
 }
 
@@ -55,10 +61,15 @@ pub enum ArchInstr {
 // (Display/Error impls are hand-written: `thiserror` is a proc-macro
 // dependency and this crate builds offline with no deps.)
 #[derive(Debug, PartialEq, Eq)]
+/// Why a 32-bit word failed to decode as a DARE instruction.
 pub enum DecodeError {
+    /// The major opcode is not DARE's custom-1.
     BadOpcode(u32),
+    /// An unassigned `funct3` value.
     BadFunct3(u32),
+    /// A register field beyond `m7`.
     BadMReg(u32),
+    /// Reserved bits that must be zero were set.
     ReservedNonZero(u32),
 }
 

@@ -14,11 +14,13 @@ pub const MREG_BYTES: usize = MREG_ROWS * MREG_ROW_BYTES;
 pub struct MReg(pub u8);
 
 impl MReg {
+    /// Register `m<i>`; panics when `i` is out of range.
     pub fn new(i: u8) -> Self {
         assert!((i as usize) < NUM_MREGS, "m{i} out of range");
         MReg(i)
     }
 
+    /// The register number as an index.
     pub fn index(self) -> usize {
         self.0 as usize
     }
@@ -42,6 +44,7 @@ pub enum Csr {
 }
 
 impl Csr {
+    /// The CSR's architectural index.
     pub fn index(self) -> u32 {
         match self {
             Csr::MatrixM => 0,
@@ -50,6 +53,7 @@ impl Csr {
         }
     }
 
+    /// Inverse of [`Csr::index`] (`None` for reserved indices).
     pub fn from_index(i: u32) -> Option<Self> {
         match i {
             0 => Some(Csr::MatrixM),
@@ -77,20 +81,26 @@ impl std::fmt::Display for Csr {
 /// `k / 4` elements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MatShape {
+    /// Rows of the A/C tiles (≤ 16).
     pub m: u16,
+    /// Bytes per row of the A/B tiles (≤ 64).
     pub k: u16,
+    /// Rows of the B tile / columns of the C tile (≤ 16).
     pub n: u16,
 }
 
 impl MatShape {
+    /// The architectural maximum tile: 16×64(bytes)×16.
     pub const FULL: MatShape = MatShape { m: 16, k: 64, n: 16 };
 
+    /// A validated shape; panics on out-of-range dimensions.
     pub fn new(m: u16, k: u16, n: u16) -> Self {
         let s = MatShape { m, k, n };
         s.validate().expect("invalid MatShape");
         s
     }
 
+    /// Check every dimension against the architectural limits.
     pub fn validate(&self) -> Result<(), String> {
         if self.m == 0 || self.m as usize > MREG_ROWS {
             return Err(format!("matrixM={} out of [1,{MREG_ROWS}]", self.m));

@@ -10,7 +10,9 @@ use super::instr::{Csr, MInstr, MReg, MatShape};
 /// A fully-lowered DARE program.
 #[derive(Debug, Clone)]
 pub struct Program {
+    /// Human-readable program name (kernel/dataset/variant).
     pub name: String,
+    /// The instruction stream, in program order.
     pub instrs: Vec<MInstr>,
     /// MACs that contribute to the mathematical result (nnz-driven).
     pub useful_macs: u64,
@@ -22,6 +24,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// Count instructions per mnemonic.
     pub fn stats(&self) -> ProgramStats {
         let mut s = ProgramStats::default();
         for i in &self.instrs {
@@ -41,19 +44,27 @@ impl Program {
 /// Per-mnemonic instruction counts.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ProgramStats {
+    /// `mcfg` count.
     pub mcfg: usize,
+    /// `mld` count.
     pub mld: usize,
+    /// `mst` count.
     pub mst: usize,
+    /// `mma` count.
     pub mma: usize,
+    /// `mgather` count.
     pub mgather: usize,
+    /// `mscatter` count.
     pub mscatter: usize,
 }
 
 impl ProgramStats {
+    /// Total instructions.
     pub fn total(&self) -> usize {
         self.mcfg + self.mld + self.mst + self.mma + self.mgather + self.mscatter
     }
 
+    /// Instructions that touch memory.
     pub fn mem_instrs(&self) -> usize {
         self.mld + self.mst + self.mgather + self.mscatter
     }
@@ -72,6 +83,8 @@ pub struct ProgramBuilder {
 }
 
 impl ProgramBuilder {
+    /// Start a program; emits the architectural-reset `mcfg` triple so
+    /// the built program is self-contained.
     pub fn new(name: &str) -> Self {
         let mut b = Self {
             name: name.to_string(),
@@ -87,6 +100,7 @@ impl ProgramBuilder {
         b
     }
 
+    /// The tile shape configured at the current program point.
     pub fn shape(&self) -> MatShape {
         self.shape
     }
@@ -114,11 +128,13 @@ impl ProgramBuilder {
         self.mem_high_water = self.mem_high_water.max(last);
     }
 
+    /// Emit `mld md, (base), stride` — strided tile load.
     pub fn mld(&mut self, md: MReg, base: u64, stride: u64) {
         self.touch(base, stride);
         self.instrs.push(MInstr::Mld { md, base, stride });
     }
 
+    /// Emit `mst ms3, (base), stride` — strided tile store.
     pub fn mst(&mut self, ms3: MReg, base: u64, stride: u64) {
         self.touch(base, stride);
         self.instrs.push(MInstr::Mst { ms3, base, stride });
@@ -136,22 +152,29 @@ impl ProgramBuilder {
         self.instrs.push(MInstr::Mma { md, ms1, ms2 });
     }
 
+    /// Emit `mgather md, ms1` — row gather via the base-address vector
+    /// in `ms1`.
     pub fn mgather(&mut self, md: MReg, ms1: MReg) {
         self.instrs.push(MInstr::Mgather { md, ms1 });
     }
 
+    /// Emit `mscatter ms2, ms1` — row scatter via the base-address
+    /// vector in `ms1`.
     pub fn mscatter(&mut self, ms2: MReg, ms1: MReg) {
         self.instrs.push(MInstr::Mscatter { ms2, ms1 });
     }
 
+    /// Instructions emitted so far.
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// True when nothing has been emitted.
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }
 
+    /// Finish, producing the immutable [`Program`].
     pub fn build(self) -> Program {
         Program {
             name: self.name,

@@ -10,19 +10,27 @@ use crate::sparse::Dense;
 const ALIGN: u64 = 4096;
 
 #[derive(Debug, Clone)]
+/// One named, page-aligned address range of the memory image.
 pub struct Region {
+    /// Region name (e.g. `"A"`, `"B"`, `"C"`).
     pub name: String,
+    /// Base address.
     pub addr: u64,
+    /// Region size in bytes.
     pub bytes: u64,
 }
 
 #[derive(Debug, Default)]
+/// A bump allocator of page-aligned named regions — how the kernel
+/// compilers place operands in the memory image.
 pub struct Layout {
     cursor: u64,
     regions: Vec<Region>,
 }
 
 impl Layout {
+    /// An empty layout; page 0 is left unallocated to catch
+    /// zero-address bugs.
     pub fn new() -> Self {
         // Leave page 0 unmapped-ish (catches zero-address bugs).
         Self { cursor: ALIGN, regions: Vec::new() }
@@ -41,10 +49,12 @@ impl Layout {
         self.cursor as usize
     }
 
+    /// Every allocated region, in allocation order.
     pub fn regions(&self) -> &[Region] {
         &self.regions
     }
 
+    /// Look up a region by name.
     pub fn region(&self, name: &str) -> Option<&Region> {
         self.regions.iter().find(|r| r.name == name)
     }

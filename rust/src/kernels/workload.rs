@@ -15,15 +15,21 @@ use crate::sparse::{Csc, Dataset, DatasetKind};
 use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// The three evaluated kernels (§V-A2).
 pub enum KernelKind {
+    /// Dense matrix multiply (regular baseline).
     Gemm,
+    /// Sparse × dense matrix multiply.
     SpMM,
+    /// Sampled dense-dense matrix multiply.
     Sddmm,
 }
 
 impl KernelKind {
+    /// Every kernel, in evaluation order.
     pub const ALL: [KernelKind; 3] = [KernelKind::Gemm, KernelKind::SpMM, KernelKind::Sddmm];
 
+    /// Short lowercase name used by the CLI and report tables.
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::Gemm => "gemm",
@@ -32,6 +38,7 @@ impl KernelKind {
         }
     }
 
+    /// Inverse of [`KernelKind::name`] (`None` for unknown names).
     pub fn from_name(s: &str) -> Option<Self> {
         KernelKind::ALL.iter().copied().find(|k| k.name() == s)
     }
@@ -48,7 +55,9 @@ pub type SharedWorkload = Arc<Workload>;
 /// approximation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WorkloadKey {
+    /// The kernel to compile.
     pub kernel: KernelKind,
+    /// The sparse operand's dataset.
     pub dataset: DatasetKind,
     /// Blockification size `B` (1 = original unstructured pattern).
     pub block: usize,
@@ -61,6 +70,7 @@ pub struct WorkloadKey {
 }
 
 impl WorkloadKey {
+    /// A key from its five determining inputs.
     pub fn new(
         kernel: KernelKind,
         dataset: DatasetKind,
@@ -81,6 +91,7 @@ impl WorkloadKey {
         }
     }
 
+    /// The dataset scale this key was built with.
     pub fn scale(&self) -> f64 {
         f64::from_bits(self.scale_bits)
     }
@@ -116,6 +127,7 @@ impl WorkloadKey {
         )
     }
 
+    /// Human-readable form: `kernel/dataset/B=block/lowering@hash`.
     pub fn name(&self) -> String {
         format!(
             "{}/{}/B={}/{}@{}",
@@ -159,6 +171,7 @@ impl WorkloadKey {
         }
     }
 
+    /// Build and wrap in an [`Arc`] for cache sharing.
     pub fn build_shared(&self) -> SharedWorkload {
         Arc::new(self.build())
     }
@@ -167,16 +180,25 @@ impl WorkloadKey {
 /// Expected contiguous f32 values at an address (output region).
 #[derive(Debug, Clone)]
 pub struct RegionCheck {
+    /// The checked region's name.
     pub name: String,
+    /// Base address of the expected values.
     pub addr: u64,
+    /// The expected f32 contents.
     pub expect: Vec<f32>,
 }
 
 #[derive(Debug)]
+/// A fully-built workload: the lowered program, its initial memory
+/// image, and the output checks verification runs against.
 pub struct Workload {
+    /// The kernel this workload computes.
     pub kind: KernelKind,
+    /// The lowered instruction stream.
     pub program: Program,
+    /// The initial memory image (operands laid out, outputs zeroed).
     pub mem: MemImage,
+    /// Expected output regions (reference results).
     pub checks: Vec<RegionCheck>,
 }
 

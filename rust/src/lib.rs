@@ -20,6 +20,8 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record of every table and figure.
 
+#![warn(missing_docs)]
+
 pub mod coordinator;
 pub mod energy;
 pub mod harness;

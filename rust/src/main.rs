@@ -11,6 +11,7 @@
 //! dare serve [--socket P | --tcp H:P] [--cache-dir D]           service: JSONL jobs, stdio or socket
 //! dare client (--socket P | --tcp H:P) [jobs.jsonl] [--shutdown]   drive a running server
 //! dare cache stats|clear|gc --cache-dir D                       inspect/wipe/sweep an on-disk cache
+//!                                                               (workload + result tiers)
 //! dare asm <file.s>                                             assemble + run
 //! ```
 
@@ -47,10 +48,11 @@ commands:\n\
                  (socket mode also drains on SIGTERM/SIGINT; stdio drains at EOF)\n\
   client         connect to a serve socket, submit a job file (if given), print the\n\
                  streamed responses; --shutdown asks the server to drain and exit\n\
-  cache          on-disk workload cache maintenance: `dare cache stats --cache-dir D`\n\
-                 (entries, bytes, codec-version histogram), `dare cache clear …`, or\n\
-                 `dare cache gc --cache-dir D [--max-mb N] [--dry-run]` (explicit\n\
-                 size-bound sweep; dry-run lists victims without deleting)\n\
+  cache          on-disk cache maintenance, covering both the workload (.dwl) and\n\
+                 simulation-result (.dsr) tiers: `dare cache stats --cache-dir D`\n\
+                 (per-tier entries, bytes, codec-version histogram), `dare cache\n\
+                 clear …`, or `dare cache gc --cache-dir D [--max-mb N] [--dry-run]`\n\
+                 (explicit size-bound sweep; dry-run lists victims without deleting)\n\
   asm            assemble and simulate a .s file (DARE-full MPU)\n\
   help           print this help\n\
 options:\n\
@@ -62,6 +64,8 @@ options:\n\
   --cache-max-mb N   size bound for --cache-dir; GC evicts oldest entries (default 512)\n\
   --cache-seed S     read-only seed cache directory, probed after --cache-dir misses;\n\
                      hits are promoted into --cache-dir, the seed is never written or GC'd\n\
+  --no-result-cache  disable simulation-result memoization (every job simulates from\n\
+                     cycle 0 — benchmarking escape hatch; builds still cache)\n\
   --max-mb N         cache gc: override the sweep bound (alias of --cache-max-mb)\n\
   --dry-run          cache gc: report would-be victims without deleting anything\n\
   --verify           check functional outputs against references\n\
@@ -83,6 +87,7 @@ fn service_config(args: &Args, opts: &HarnessOpts) -> Result<ServiceConfig, CliE
         workers: opts.threads,
         cache_capacity: args.get_parse("cache", ServiceConfig::default().cache_capacity),
         disk: disk_config(args)?,
+        result_cache: !args.flag("no-result-cache"),
         ..ServiceConfig::default()
     })
 }
@@ -119,20 +124,27 @@ fn disk_config(args: &Args) -> Result<Option<DiskConfig>, CliError> {
     }))
 }
 
-/// Print one store's `stats` block under a label. `bound` is the GC
-/// bound to report — `None` for the seed tier, which has none.
+/// Print one store's `stats` block under a label, split per entry kind
+/// so workload builds and memoized results are never conflated. `bound`
+/// is the GC bound to report — `None` for the seed tier, which has none.
 fn print_cache_stats(label: &str, dir: &str, store: &DiskStore, bound: Option<u64>) {
     let s = store.stats();
     let bound = match bound {
         Some(b) => format!(" (bound {} MiB)", b / (1024 * 1024)),
         None => " (read-only seed, never GC'd)".to_string(),
     };
-    println!("[{label}] {dir}: {} entries, {} bytes on disk{bound}", s.entries, s.bytes);
-    for (version, count) in &s.versions {
-        println!("[{label}]   codec v{version}: {count} entries");
-    }
-    if s.unreadable > 0 {
-        println!("[{label}]   unreadable/foreign: {} (rebuilt on next use)", s.unreadable);
+    println!("[{label}] {dir}: {} entries, {} bytes on disk{bound}", s.entries(), s.bytes());
+    for (kind, tier) in [("workloads (.dwl)", &s.workloads), ("results (.dsr)", &s.results)] {
+        println!("[{label}]   {kind}: {} entries, {} bytes", tier.entries, tier.bytes);
+        for (version, count) in &tier.versions {
+            println!("[{label}]     codec v{version}: {count} entries");
+        }
+        if tier.unreadable > 0 {
+            println!(
+                "[{label}]     unreadable/foreign: {} (rebuilt on next use)",
+                tier.unreadable
+            );
+        }
     }
 }
 
@@ -159,7 +171,7 @@ fn cmd_cache(args: &Args) -> Result<(), CliError> {
         }
         "clear" => {
             let removed = store.clear()?;
-            println!("[cache] {dir}: removed {removed} entries");
+            println!("[cache] {dir}: removed {removed} entries (workloads + results)");
         }
         "gc" => {
             // `--max-mb` overrides the sweep bound (`--cache-max-mb`
@@ -477,13 +489,12 @@ fn main() -> Result<(), CliError> {
             tables::overhead_report();
         }
         "all" => {
-            // Attach the on-disk tier (if requested) before any figure
-            // harness implicitly starts the shared service without it —
-            // `dare all --cache-dir D` then reuses builds from previous
-            // runs and leaves a warm cache for the next one.
-            if let Some(disk_cfg) = disk_config(&args)? {
-                common::init_shared_service(opts, Some(disk_cfg));
-            }
+            // Start the shared service first so every figure harness
+            // inherits the on-disk tiers (if requested) and the result
+            // switch — a warm `dare all --cache-dir D` then replays every
+            // simulation from previous runs (builds == 0 and sims == 0)
+            // and leaves a warm cache for the next one.
+            common::init_shared_service(opts, disk_config(&args)?, !args.flag("no-result-cache"));
             tables::table1();
             tables::table2();
             tables::overhead_report();
@@ -502,8 +513,9 @@ fn main() -> Result<(), CliError> {
             if let Some(service) = dare::service::shared_handle() {
                 let m = service.metrics();
                 println!(
-                    "[all] shared service: {} jobs across figures — workload cache: {}",
+                    "[all] shared service: {} jobs ({} simulated) across figures — cache: {}",
                     m.jobs_completed,
+                    m.sims,
                     m.cache.summary()
                 );
             }

@@ -9,6 +9,7 @@
 use super::LINE_BYTES;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// DRAM latency/bandwidth model parameters.
 pub struct DramConfig {
     /// Access latency in cycles (paper: 45 ns @ 2 GHz = 90 cycles).
     pub latency: u64,
@@ -23,29 +24,38 @@ impl Default for DramConfig {
 }
 
 #[derive(Debug, Default, Clone, Copy)]
+/// DRAM counters for one run.
 pub struct DramStats {
+    /// Line reads (fills).
     pub reads: u64,
+    /// Line writes (writebacks).
     pub writes: u64,
     /// Cycles during which the channel was transferring data.
     pub busy_cycles: f64,
 }
 
 impl DramStats {
+    /// Total bytes moved over the channel.
     pub fn bytes(&self) -> u64 {
         (self.reads + self.writes) * LINE_BYTES
     }
 }
 
 #[derive(Debug)]
+/// Fixed-latency, bandwidth-limited DRAM behind the LLC: each line
+/// transfer occupies the single channel for `LINE_BYTES /
+/// bytes_per_cycle` cycles after the access latency.
 pub struct Dram {
     cfg: DramConfig,
     /// Time at which the channel next becomes free (fractional cycles so
     /// bandwidth accounting doesn't drift).
     channel_free_at: f64,
+    /// Counters for this run.
     pub stats: DramStats,
 }
 
 impl Dram {
+    /// A DRAM model with an idle channel.
     pub fn new(cfg: DramConfig) -> Self {
         assert!(cfg.bytes_per_cycle > 0.0);
         Self { cfg, channel_free_at: 0.0, stats: DramStats::default() }

@@ -19,13 +19,20 @@ use super::dram::{Dram, DramConfig};
 use super::{line_of, LINE_BYTES};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// LLC geometry and timing (defaults = Table II: 2 MiB, 16-way,
+/// 16 banks, 20-cycle hits).
 pub struct LlcConfig {
+    /// Total capacity in bytes.
     pub size_bytes: u64,
+    /// Set associativity.
     pub ways: usize,
+    /// Bank count (one read + one write port each per cycle).
     pub banks: usize,
+    /// Hit latency in cycles.
     pub hit_latency: u64,
     /// Zero-miss oracle cache (Fig 1a).
     pub oracle: bool,
+    /// The DRAM model behind the cache.
     pub dram: DramConfig,
 }
 
@@ -43,6 +50,7 @@ impl Default for LlcConfig {
 }
 
 impl LlcConfig {
+    /// Number of sets implied by the geometry.
     pub fn sets(&self) -> usize {
         (self.size_bytes / LINE_BYTES) as usize / self.ways
     }
@@ -51,18 +59,24 @@ impl LlcConfig {
 /// A memory request offered to the LLC.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemRequest {
+    /// Caller-chosen id echoed back in the [`Completion`].
     pub id: u64,
+    /// Byte address (the LLC operates on its cache line).
     pub addr: u64,
+    /// Write (store / writeback) vs read.
     pub is_write: bool,
+    /// Runahead prefetch vs demand access.
     pub is_prefetch: bool,
 }
 
 /// A finished request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Completion {
+    /// The id of the request this completes.
     pub id: u64,
     /// Cycle at which data is available.
     pub at: u64,
+    /// The request hit in the cache.
     pub was_hit: bool,
     /// True if this was a prefetch that found its line present/in-flight.
     pub redundant_prefetch: bool,
@@ -78,29 +92,41 @@ pub enum Rejection {
 }
 
 #[derive(Debug, Default, Clone, Copy)]
+/// LLC counters for one run.
 pub struct LlcStats {
+    /// Demand read accesses.
     pub demand_reads: u64,
+    /// Demand write accesses.
     pub demand_writes: u64,
+    /// Demand accesses that hit.
     pub demand_hits: u64,
+    /// Demand accesses that missed.
     pub demand_misses: u64,
+    /// Prefetch requests accepted.
     pub prefetches: u64,
+    /// Prefetches whose line was already present or in flight.
     pub prefetch_redundant: u64,
     /// Prefetch that missed and brought a new line in.
     pub prefetch_useful_fills: u64,
     /// Demand accesses that hit a line brought in by a prefetch.
     pub prefetch_hits_consumed: u64,
+    /// Dirty lines written back to DRAM.
     pub writebacks: u64,
     /// Bank slots consumed (reads+writes accepted).
     pub slots_used: u64,
+    /// Requests refused for lack of a bank port or MSHR.
     pub rejections: u64,
+    /// Requests merged into an in-flight miss to the same line.
     pub mshr_merges: u64,
 }
 
 impl LlcStats {
+    /// Total demand accesses (reads + writes).
     pub fn demand_accesses(&self) -> u64 {
         self.demand_reads + self.demand_writes
     }
 
+    /// Demand miss rate (0 when there were no demand accesses).
     pub fn miss_rate(&self) -> f64 {
         if self.demand_accesses() == 0 {
             0.0
@@ -150,6 +176,9 @@ struct Mshr {
 }
 
 #[derive(Debug)]
+/// The banked, MSHR-tracked last-level cache model. Requests are
+/// offered per cycle and complete as [`Completion`]s once their
+/// latency (hit or DRAM round-trip) elapses.
 pub struct Llc {
     cfg: LlcConfig,
     sets: Vec<Line>, // sets × ways, flat
@@ -162,11 +191,14 @@ pub struct Llc {
     bank_read_used: Vec<bool>,
     bank_write_used: Vec<bool>,
     lru_clock: u64,
+    /// The DRAM model (exposed for stats).
     pub dram: Dram,
+    /// Counters for this run.
     pub stats: LlcStats,
 }
 
 impl Llc {
+    /// An empty cache (panics unless the set count is a power of two).
     pub fn new(cfg: LlcConfig) -> Self {
         let sets = cfg.sets();
         assert!(sets.is_power_of_two(), "set count must be a power of two");
@@ -186,6 +218,7 @@ impl Llc {
         }
     }
 
+    /// The configuration this LLC was built with.
     pub fn config(&self) -> &LlcConfig {
         &self.cfg
     }

@@ -20,14 +20,23 @@ pub const CHECKPOINT_STORAGE_BYTES: f64 = 8.0 * 1024.0;
 /// decompose counter", §IV-C, plus the RFU flags of §IV-E).
 #[derive(Debug, Clone, Copy)]
 pub struct RiqEntryBits {
+    /// The undecoded 32-bit instruction word.
     pub instr_word: u32,
+    /// Base + stride scalars read at dispatch (2 × 64).
     pub resolved_scalars: u32,
+    /// CSR shape at dispatch (3 × 6 bits).
     pub shape_snapshot: u32,
+    /// Next row uop to emit (≤ 16 rows + done).
     pub decompose_counter: u32,
+    /// `granted` and `TentativeSent`.
     pub rfu_flags: u32,
+    /// VMR slot pointer + valid bit.
     pub vmr_ptr: u32,
+    /// Issued/complete bit per row uop.
     pub uop_status_bitmap: u32,
+    /// Latency tag for tentative-uop reconciliation.
     pub tentative_latency_tag: u32,
+    /// Link to the producer entry found by the DMU walk.
     pub dmu_link: u32,
 }
 
@@ -48,6 +57,7 @@ impl Default for RiqEntryBits {
 }
 
 impl RiqEntryBits {
+    /// Total bits per RIQ entry.
     pub fn total(&self) -> u32 {
         self.instr_word
             + self.resolved_scalars
@@ -62,21 +72,30 @@ impl RiqEntryBits {
 }
 
 #[derive(Debug, Clone, Copy)]
+/// Hardware cost of the DARE additions, in bytes of state and
+/// fraction of baseline MPU area.
 pub struct OverheadReport {
+    /// RIQ storage, bytes.
     pub riq_bytes: f64,
+    /// VMR storage, bytes.
     pub vmr_bytes: f64,
+    /// RFU storage, bytes.
     pub rfu_bytes: f64,
     /// Area of each component as a fraction of the baseline MPU.
     pub riq_area_frac: f64,
+    /// VMR area as a fraction of the baseline MPU.
     pub vmr_area_frac: f64,
+    /// RFU area as a fraction of the baseline MPU.
     pub rfu_area_frac: f64,
 }
 
 impl OverheadReport {
+    /// Total added state, bytes.
     pub fn total_bytes(&self) -> f64 {
         self.riq_bytes + self.vmr_bytes + self.rfu_bytes
     }
 
+    /// Total added state, KiB.
     pub fn total_kb(&self) -> f64 {
         self.total_bytes() / 1024.0
     }
@@ -86,6 +105,7 @@ impl OverheadReport {
         NVR_STORAGE_BYTES / self.total_bytes()
     }
 
+    /// Total added area as a fraction of the baseline MPU.
     pub fn total_area_frac(&self) -> f64 {
         self.riq_area_frac + self.vmr_area_frac + self.rfu_area_frac
     }

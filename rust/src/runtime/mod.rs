@@ -3,10 +3,10 @@
 //!
 //! The implementation is split by the `xla` cargo feature:
 //!
-//! * `--features xla` compiles [`pjrt`], the real PJRT CPU-client
+//! * `--features xla` compiles `pjrt`, the real PJRT CPU-client
 //!   backend (requires the `xla` + `anyhow` crates from the internal
 //!   toolchain image — see `Cargo.toml`).
-//! * The default build compiles a [`stub`] whose `XlaMma` cannot be
+//! * The default build compiles a `stub` whose `XlaMma` cannot be
 //!   constructed and makes [`artifacts_available`] report `false`, so
 //!   every caller (tests, examples, the service workers) falls back to
 //!   the native functional backend. This keeps the tier-1 verify fully

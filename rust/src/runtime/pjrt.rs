@@ -20,6 +20,7 @@ use std::path::Path;
 /// A compiled HLO module on the PJRT CPU client.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// The artifact name this executable was loaded from.
     pub name: String,
 }
 
@@ -29,11 +30,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// A runtime on the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self { client })
     }
 
+    /// The PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -44,6 +47,7 @@ impl Runtime {
         self.load_hlo_file(name, &path)
     }
 
+    /// Load + compile an HLO-text file at an explicit path.
     pub fn load_hlo_file(&self, name: &str, path: &Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
@@ -90,16 +94,19 @@ impl Executable {
 /// exact for matmul-accumulate).
 pub struct XlaMma {
     exe: Executable,
+    /// Tile executions so far.
     pub calls: u64,
 }
 
 impl XlaMma {
+    /// Build a private runtime and load the `mma_tile` artifact.
     pub fn from_artifacts() -> Result<Self> {
         let rt = Runtime::cpu()?;
         let exe = rt.load_artifact("mma_tile")?;
         Ok(Self { exe, calls: 0 })
     }
 
+    /// Load the `mma_tile` artifact on an existing runtime.
     pub fn new(rt: &Runtime) -> Result<Self> {
         Ok(Self { exe: rt.load_artifact("mma_tile")?, calls: 0 })
     }

@@ -10,13 +10,14 @@
 
 use crate::sim::MmaExec;
 
-/// Stand-in for [`crate::runtime::pjrt::XlaMma`]: carries no state and
+/// Stand-in for the real `runtime::pjrt::XlaMma`: carries no state and
 /// cannot be constructed.
 pub struct XlaMma {
     _private: (),
 }
 
 impl XlaMma {
+    /// Always fails: the `xla` feature is off in this build.
     pub fn from_artifacts() -> Result<Self, String> {
         Err("built without the `xla` cargo feature; XLA/PJRT execution is unavailable".into())
     }

@@ -25,10 +25,22 @@
 //! RLE-compressed; the `compressed_bytes`/`uncompressed_bytes` counters
 //! accumulate both sides of every entry encoded or decoded, so
 //! [`CacheCounters::compression_ratio`] reports the realized saving.
+//!
+//! Result tier: alongside the workload tiers, the cache fronts the
+//! simulation-*result* store (`super::results`) with a small in-memory
+//! memo. [`lookup_result`](WorkloadCache::lookup_result) probes memo →
+//! writable `.dsr` → seed `.dsr`; a hit means the worker replays the
+//! memoized [`SimStats`] and skips the simulation (and usually the
+//! workload fetch) entirely. The tier is on by default and disabled
+//! wholesale by `--no-result-cache`
+//! ([`with_result_cache`](WorkloadCache::with_result_cache)); without a
+//! disk tier only the in-process memo operates.
 
-use super::disk::DiskStore;
+use super::disk::{BuildLock, DiskStore};
 use super::panic_message;
+use super::results::ResultKey;
 use crate::kernels::{SharedWorkload, WorkloadKey};
+use crate::sim::SimStats;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -51,6 +63,10 @@ pub enum Fetch {
     SeedHit,
     /// We were the builder.
     Built,
+    /// A memoized simulation result replayed; neither a workload fetch
+    /// nor a simulation ran (reported by the worker loop — the workload
+    /// tiers above are never probed on this path).
+    ResultHit,
 }
 
 enum BuildState {
@@ -92,6 +108,9 @@ struct Counters {
     disk_hits: AtomicU64,
     disk_misses: AtomicU64,
     seed_hits: AtomicU64,
+    result_hits: AtomicU64,
+    result_misses: AtomicU64,
+    result_seed_hits: AtomicU64,
     compressed_bytes: AtomicU64,
     uncompressed_bytes: AtomicU64,
 }
@@ -99,13 +118,16 @@ struct Counters {
 /// A point-in-time copy of the cache counters.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CacheCounters {
+    /// Lookups served by a resident entry.
     pub hits: u64,
     /// Lookups that waited on another thread's in-flight build.
     pub coalesced: u64,
     /// Memory misses — lookups that became the builder (each one is
     /// then either a disk hit or an actual compile).
     pub misses: u64,
+    /// Entries evicted by the per-shard LRU.
     pub evictions: u64,
+    /// Builds that panicked or errored.
     pub build_failures: u64,
     /// Memory misses satisfied by the writable on-disk tier.
     pub disk_hits: u64,
@@ -115,6 +137,14 @@ pub struct CacheCounters {
     /// Memory misses satisfied by the read-only seed directory (the
     /// `--cache-seed` tier); always promoted, never written back.
     pub seed_hits: u64,
+    /// Result-tier lookups served by the memo or the writable `.dsr`
+    /// tier — each one is a simulation that never ran.
+    pub result_hits: u64,
+    /// Result-tier lookups that fell through to an actual simulation.
+    pub result_misses: u64,
+    /// Result-tier lookups served by the read-only seed directory
+    /// (promoted into the writable tier, never written back).
+    pub result_seed_hits: u64,
     /// On-disk (RLE-compressed, header included) bytes of every entry
     /// this cache encoded or decoded.
     pub compressed_bytes: u64,
@@ -127,6 +157,7 @@ pub struct CacheCounters {
 }
 
 impl CacheCounters {
+    /// Total workload-tier lookups (hits + coalesced + misses).
     pub fn lookups(&self) -> u64 {
         self.hits + self.coalesced + self.misses
     }
@@ -154,6 +185,19 @@ impl CacheCounters {
         }
     }
 
+    /// Fraction of result-tier lookups served without simulating — the
+    /// warm-sweep CI metric (`result_hit_rate >= 0.9` on a second pass).
+    /// 0 when the result tier is off or was never probed.
+    pub fn result_hit_rate(&self) -> f64 {
+        let served = self.result_hits + self.result_seed_hits;
+        let probes = served + self.result_misses;
+        if probes == 0 {
+            0.0
+        } else {
+            served as f64 / probes as f64
+        }
+    }
+
     /// Uncompressed-to-compressed ratio of every entry encoded or
     /// decoded (≥ 1.0 once the RLE codec is earning its keep; 0 before
     /// any disk traffic).
@@ -173,6 +217,7 @@ impl CacheCounters {
         self.misses.saturating_sub(self.disk_hits + self.seed_hits)
     }
 
+    /// One-line human-readable digest of every tier's counters.
     pub fn summary(&self) -> String {
         let probes = self.disk_hits + self.seed_hits + self.disk_misses;
         let disk = if probes > 0 || self.bytes_on_disk > 0 {
@@ -195,9 +240,24 @@ impl CacheCounters {
         } else {
             String::new()
         };
+        let result_probes = self.result_hits + self.result_seed_hits + self.result_misses;
+        let results = if result_probes > 0 {
+            let seed = if self.result_seed_hits > 0 {
+                format!(" ({} from seed)", self.result_seed_hits)
+            } else {
+                String::new()
+            };
+            format!(
+                "; results: {} replayed{seed} / {result_probes} probes ({:.0}%)",
+                self.result_hits + self.result_seed_hits,
+                100.0 * self.result_hit_rate()
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} lookups = {} hits + {} coalesced + {} disk hits + {} builds \
-             ({:.0}% hit rate), {} evictions, {} resident{}",
+             ({:.0}% hit rate), {} evictions, {} resident{}{}",
             self.lookups(),
             self.hits,
             self.coalesced,
@@ -206,20 +266,36 @@ impl CacheCounters {
             100.0 * self.hit_rate(),
             self.evictions,
             self.resident,
-            disk
+            disk,
+            results
         )
     }
 }
 
+/// The in-memory front of the whole cache stack: sharded workload LRU
+/// with build dedup, plus the simulation-result memo fronting the
+/// on-disk `.dsr` tier. One instance is shared by every worker of a
+/// [`Service`](super::workers::Service).
 pub struct WorkloadCache {
     shards: Vec<Mutex<Shard>>,
     per_shard_capacity: usize,
     counters: Counters,
     /// Optional on-disk tier probed on memory misses.
     disk: Option<Arc<DiskStore>>,
+    /// Result tier switch (`--no-result-cache` turns it off wholesale).
+    results_enabled: bool,
+    /// In-process memo of the result tier, keyed by
+    /// [`ResultKey::combined_hash`]. `SimStats` is a small `Copy` record,
+    /// so this is bounded by [`RESULT_MEMO_CAPACITY`] with a
+    /// clear-on-overflow epoch rather than per-entry LRU bookkeeping.
+    result_memo: Mutex<HashMap<u64, SimStats>>,
 }
 
 const DEFAULT_SHARDS: usize = 8;
+
+/// Result-memo bound: ~360 B per entry, so ≈1.5 MB at the cap. Overflow
+/// clears the whole memo (the disk tier refills it at replay speed).
+const RESULT_MEMO_CAPACITY: usize = 4096;
 
 impl WorkloadCache {
     /// A cache of roughly `capacity` built workloads. The bound is
@@ -231,6 +307,8 @@ impl WorkloadCache {
         Self::with_shards(capacity, DEFAULT_SHARDS)
     }
 
+    /// A cache with an explicit shard count (panics on zero
+    /// capacity/shards); `capacity` divides evenly-ish across shards.
     pub fn with_shards(capacity: usize, shards: usize) -> Self {
         assert!(capacity > 0 && shards > 0, "cache capacity and shards must be positive");
         let shards = shards.min(capacity);
@@ -242,6 +320,8 @@ impl WorkloadCache {
             per_shard_capacity,
             counters: Counters::default(),
             disk: None,
+            results_enabled: true,
+            result_memo: Mutex::new(HashMap::new()),
         }
     }
 
@@ -257,6 +337,21 @@ impl WorkloadCache {
         self.disk.as_ref()
     }
 
+    /// Enable or disable the simulation-result tier (on by default;
+    /// `--no-result-cache` sets false). Disabled means
+    /// [`lookup_result`](Self::lookup_result) never hits, never counts,
+    /// and [`store_result`](Self::store_result) is a no-op — every job
+    /// simulates, as before the tier existed.
+    pub fn with_result_cache(mut self, enabled: bool) -> Self {
+        self.results_enabled = enabled;
+        self
+    }
+
+    /// Is the simulation-result tier on?
+    pub fn results_enabled(&self) -> bool {
+        self.results_enabled
+    }
+
     fn shard_of(&self, key: &WorkloadKey) -> usize {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
@@ -268,10 +363,12 @@ impl WorkloadCache {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
+    /// True when no workloads are resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// A consistent-enough point-in-time copy of every counter.
     pub fn counters(&self) -> CacheCounters {
         // Read disk_hits/seed_hits before misses: a builder bumps misses
         // first and the hit counters later, so this order can only
@@ -289,11 +386,92 @@ impl WorkloadCache {
             disk_hits,
             disk_misses,
             seed_hits,
+            result_hits: self.counters.result_hits.load(Ordering::Relaxed),
+            result_misses: self.counters.result_misses.load(Ordering::Relaxed),
+            result_seed_hits: self.counters.result_seed_hits.load(Ordering::Relaxed),
             compressed_bytes: self.counters.compressed_bytes.load(Ordering::Relaxed),
             uncompressed_bytes: self.counters.uncompressed_bytes.load(Ordering::Relaxed),
             resident: self.len() as u64,
             bytes_on_disk: self.disk.as_ref().map(|d| d.bytes_on_disk()).unwrap_or(0),
         }
+    }
+
+    /// Probe the result tier for `key`: in-process memo, then the
+    /// writable `.dsr` tier, then the read-only seed (disk hits are
+    /// memoized, seed hits also promoted on disk). Counts one hit or
+    /// miss per call — the worker's double-checked locking means a cold
+    /// key with a disk tier costs two misses (pre-lock and under-lock)
+    /// and a warm key costs one hit. Returns `None` (uncounted) when
+    /// the tier is disabled.
+    pub fn lookup_result(&self, key: &ResultKey) -> Option<SimStats> {
+        if !self.results_enabled {
+            return None;
+        }
+        let hash = key.combined_hash();
+        if let Some(stats) = self.result_memo.lock().unwrap().get(&hash) {
+            self.counters.result_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(*stats);
+        }
+        if let Some(disk) = &self.disk {
+            if let Some(loaded) = disk.load_result(key) {
+                self.counters.compressed_bytes.fetch_add(loaded.stored_bytes, Ordering::Relaxed);
+                self.counters
+                    .uncompressed_bytes
+                    .fetch_add(loaded.body_bytes, Ordering::Relaxed);
+                let counter = if loaded.from_seed {
+                    &self.counters.result_seed_hits
+                } else {
+                    &self.counters.result_hits
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
+                self.memo_insert(hash, loaded.stats);
+                return Some(loaded.stats);
+            }
+        }
+        self.counters.result_misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Memoize a freshly simulated result in the memo and (when a disk
+    /// tier is configured) as a `.dsr` entry. Persistence failure never
+    /// fails the job; the next process simply re-simulates. No-op when
+    /// the tier is disabled.
+    pub fn store_result(&self, key: &ResultKey, stats: &SimStats) {
+        if !self.results_enabled {
+            return;
+        }
+        self.memo_insert(key.combined_hash(), *stats);
+        if let Some(disk) = &self.disk {
+            match disk.store_result(key, stats) {
+                Ok(stored) => {
+                    self.counters
+                        .compressed_bytes
+                        .fetch_add(stored.stored_bytes, Ordering::Relaxed);
+                    self.counters
+                        .uncompressed_bytes
+                        .fetch_add(stored.body_bytes, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    eprintln!("[cache] warn: could not persist result {}: {e}", key.name())
+                }
+            }
+        }
+    }
+
+    /// Take `key`'s cross-process single-runner lock (`None` without a
+    /// disk tier, or when locking is unavailable — callers proceed
+    /// unlocked; worst case is a duplicated simulation, never
+    /// corruption).
+    pub fn result_lock(&self, key: &ResultKey) -> Option<BuildLock> {
+        self.disk.as_ref()?.lock_result(key)
+    }
+
+    fn memo_insert(&self, hash: u64, stats: SimStats) {
+        let mut memo = self.result_memo.lock().unwrap();
+        if memo.len() >= RESULT_MEMO_CAPACITY {
+            memo.clear();
+        }
+        memo.insert(hash, stats);
     }
 
     /// Fetch the workload for `key`, building it at most once across all
@@ -528,6 +706,36 @@ mod tests {
         assert!((c.compression_ratio() - 5.0).abs() < 1e-9);
         assert!(c.summary().contains("from seed"), "{}", c.summary());
         assert!(c.summary().contains("compression"), "{}", c.summary());
+    }
+
+    #[test]
+    fn result_memo_hits_without_a_disk_tier() {
+        use crate::sim::{SimConfig, Variant};
+        let cache = WorkloadCache::new(4);
+        let rk = ResultKey::new(&key(1), &SimConfig::for_variant(Variant::Baseline));
+        assert!(cache.lookup_result(&rk).is_none(), "cold memo misses");
+        let mut stats = SimStats::default();
+        stats.cycles = 1234;
+        cache.store_result(&rk, &stats);
+        let back = cache.lookup_result(&rk).expect("memo serves");
+        assert_eq!(back.cycles, 1234);
+        let c = cache.counters();
+        assert_eq!((c.result_hits, c.result_misses), (1, 1));
+        assert!((c.result_hit_rate() - 0.5).abs() < 1e-9);
+        assert!(c.summary().contains("results:"), "{}", c.summary());
+    }
+
+    #[test]
+    fn disabled_result_tier_neither_serves_nor_counts() {
+        use crate::sim::{SimConfig, Variant};
+        let cache = WorkloadCache::new(4).with_result_cache(false);
+        assert!(!cache.results_enabled());
+        let rk = ResultKey::new(&key(1), &SimConfig::for_variant(Variant::Baseline));
+        cache.store_result(&rk, &SimStats::default());
+        assert!(cache.lookup_result(&rk).is_none());
+        let c = cache.counters();
+        assert_eq!((c.result_hits, c.result_misses, c.result_seed_hits), (0, 0, 0));
+        assert_eq!(c.result_hit_rate(), 0.0);
     }
 
     #[test]

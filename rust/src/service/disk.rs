@@ -8,11 +8,18 @@
 //!
 //! ```text
 //! <dir>/
-//!   sddmm-pubmed-b1-strided-9f2c….dwl    one entry per WorkloadKey
-//!   sddmm-pubmed-b1-strided-9f2c….lock   advisory flock for that key
-//!   <stem>.tmp.<pid>                     in-flight writes (renamed on
-//!                                        completion, swept by GC)
+//!   sddmm-pubmed-b1-strided-9f2c….dwl         one entry per WorkloadKey
+//!   sddmm-pubmed-b1-strided-9f2c….lock        advisory flock for that key
+//!   sddmm-pubmed-b1-strided-9f2c…-17ab….dsr   one simulation result per
+//!                                             ResultKey (`service::results`)
+//!   <stem>.tmp.<pid>                          in-flight writes (renamed on
+//!                                             completion, swept by GC)
 //! ```
+//!
+//! `.dsr` result entries share this module's frame codec, lock files,
+//! GC, `clear`, and stats machinery; their body layout and key
+//! derivation live in [`super::results`]. See `docs/CACHING.md` for the
+//! full tier walkthrough.
 //!
 //! Entry file format (all integers little-endian):
 //!
@@ -130,6 +137,7 @@ const TMP_SWEEP_AGE: Duration = Duration::from_secs(3600);
 /// Where and how large the on-disk tier is.
 #[derive(Debug, Clone)]
 pub struct DiskConfig {
+    /// The writable cache directory (`--cache-dir`).
     pub dir: PathBuf,
     /// GC bound for the writable directory, in bytes.
     pub max_bytes: u64,
@@ -140,10 +148,12 @@ pub struct DiskConfig {
 }
 
 impl DiskConfig {
+    /// A config for `dir` with the default size bound and no seed.
     pub fn new(dir: impl Into<PathBuf>) -> Self {
         Self { dir: dir.into(), max_bytes: DEFAULT_MAX_BYTES, seed: None }
     }
 
+    /// Attach a read-only seed directory (`--cache-seed`).
     pub fn with_seed(mut self, seed: impl Into<PathBuf>) -> Self {
         self.seed = Some(seed.into());
         self
@@ -249,7 +259,7 @@ fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -353,14 +363,15 @@ pub fn encode_v1(key: &WorkloadKey, w: &Workload) -> Vec<u8> {
     frame(CODEC_V1, fnv1a64(&body), body.len() as u64, &body)
 }
 
-/// A bounds-checked little-endian reader over the body bytes.
-struct Cur<'a> {
-    b: &'a [u8],
-    p: usize,
+/// A bounds-checked little-endian reader over the body bytes (shared
+/// with the result-entry parser in [`super::results`]).
+pub(crate) struct Cur<'a> {
+    pub(crate) b: &'a [u8],
+    pub(crate) p: usize,
 }
 
 impl<'a> Cur<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
         let end = self
             .p
             .checked_add(n)
@@ -371,23 +382,23 @@ impl<'a> Cur<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
+    pub(crate) fn u8(&mut self) -> Result<u8, String> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32, String> {
+    pub(crate) fn f32(&mut self) -> Result<f32, String> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    pub(crate) fn string(&mut self) -> Result<String, String> {
         let len = self.u32()? as usize;
         let bytes = self.take(len)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| "invalid UTF-8 in string".to_string())
@@ -395,7 +406,7 @@ impl<'a> Cur<'a> {
 
     /// A capacity hint that cannot exceed what the remaining bytes could
     /// possibly hold (`elem_min` = minimum encoded size per element).
-    fn cap(&self, count: usize, elem_min: usize) -> usize {
+    pub(crate) fn cap(&self, count: usize, elem_min: usize) -> usize {
         count.min((self.b.len() - self.p) / elem_min.max(1))
     }
 }
@@ -473,16 +484,18 @@ fn parse_body(key: &WorkloadKey, body: &[u8]) -> Result<Workload, String> {
     })
 }
 
-/// Decode a complete entry file (either codec generation) back into the
-/// [`Workload`] it stores plus the codec version it was written with,
-/// validating magic, version, length, checksum, and that the entry
-/// actually belongs to `key`. Any failure means "rebuild", never panic.
-pub fn decode_versioned(key: &WorkloadKey, bytes: &[u8]) -> Result<(Workload, u16), String> {
+/// Validate and open an entry frame — magic, known codec version,
+/// declared-length sanity bound, v2 inflation, checksum over the
+/// uncompressed body — returning the body bytes plus the codec version
+/// the frame was written with. This is the trust boundary every on-disk
+/// entry (workload `.dwl` *and* result `.dsr`) passes through; the body
+/// layout on top of it is the caller's to parse.
+pub fn decode_frame(bytes: &[u8]) -> Result<(Vec<u8>, u16), String> {
     if bytes.len() < HEADER_LEN {
         return Err(format!("file too short ({} bytes) for a header", bytes.len()));
     }
     if bytes[..4] != MAGIC {
-        return Err("bad magic (not a DARE workload cache entry)".to_string());
+        return Err("bad magic (not a DARE cache entry)".to_string());
     }
     let version = u16::from_le_bytes([bytes[4], bytes[5]]);
     if version != CODEC_V1 && version != CODEC_VERSION {
@@ -496,8 +509,7 @@ pub fn decode_versioned(key: &WorkloadKey, bytes: &[u8]) -> Result<(Workload, u1
         ));
     }
     let payload = &bytes[HEADER_LEN..];
-    let inflated;
-    let body: &[u8] = match version {
+    let body: Vec<u8> = match version {
         CODEC_V1 => {
             if payload.len() as u64 != body_len {
                 return Err(format!(
@@ -505,17 +517,23 @@ pub fn decode_versioned(key: &WorkloadKey, bytes: &[u8]) -> Result<(Workload, u1
                     payload.len()
                 ));
             }
-            payload
+            payload.to_vec()
         }
-        _ => {
-            inflated = rle_decompress(payload, body_len as usize)?;
-            &inflated
-        }
+        _ => rle_decompress(payload, body_len as usize)?,
     };
-    if fnv1a64(body) != checksum {
+    if fnv1a64(&body) != checksum {
         return Err("checksum mismatch (corrupt body)".to_string());
     }
-    parse_body(key, body).map(|w| (w, version))
+    Ok((body, version))
+}
+
+/// Decode a complete entry file (either codec generation) back into the
+/// [`Workload`] it stores plus the codec version it was written with,
+/// validating magic, version, length, checksum, and that the entry
+/// actually belongs to `key`. Any failure means "rebuild", never panic.
+pub fn decode_versioned(key: &WorkloadKey, bytes: &[u8]) -> Result<(Workload, u16), String> {
+    let (body, version) = decode_frame(bytes)?;
+    parse_body(key, &body).map(|w| (w, version))
 }
 
 /// [`decode_versioned`] without the provenance — the common caller shape.
@@ -529,7 +547,7 @@ pub fn decode(key: &WorkloadKey, bytes: &[u8]) -> Result<Workload, String> {
 // ---------------------------------------------------------------------
 
 #[cfg(unix)]
-mod sys {
+pub(crate) mod sys {
     use std::fs::File;
     use std::os::unix::io::AsRawFd;
 
@@ -571,7 +589,7 @@ mod sys {
 }
 
 #[cfg(not(unix))]
-mod sys {
+pub(crate) mod sys {
     use std::fs::File;
 
     // Locking degrades to a no-op off unix: single-process correctness
@@ -632,10 +650,12 @@ impl Drop for BuildLock {
 // Store
 // ---------------------------------------------------------------------
 
-/// Aggregate stats for `dare cache stats`.
+/// Per-entry-kind aggregate for `dare cache stats` — one for the
+/// workload (`.dwl`) tier, one for the result (`.dsr`) tier, so the
+/// stats report never conflates the two.
 #[derive(Debug, Clone, Default)]
-pub struct DiskStats {
-    /// `.dwl` entries present.
+pub struct TierStats {
+    /// Entries present.
     pub entries: u64,
     /// Total bytes across entries.
     pub bytes: u64,
@@ -645,9 +665,48 @@ pub struct DiskStats {
     pub unreadable: u64,
 }
 
+impl TierStats {
+    fn record(&mut self, len: u64, hdr: Option<[u8; 8]>) {
+        self.entries += 1;
+        self.bytes += len;
+        match hdr {
+            Some(hdr) if hdr[..4] == MAGIC => {
+                let v = u16::from_le_bytes([hdr[4], hdr[5]]);
+                match self.versions.iter_mut().find(|(ver, _)| *ver == v) {
+                    Some((_, n)) => *n += 1,
+                    None => self.versions.push((v, 1)),
+                }
+            }
+            _ => self.unreadable += 1,
+        }
+    }
+}
+
+/// Aggregate stats for `dare cache stats`, split per entry kind.
+#[derive(Debug, Clone, Default)]
+pub struct DiskStats {
+    /// The workload-build (`.dwl`) entries.
+    pub workloads: TierStats,
+    /// The simulation-result (`.dsr`) entries.
+    pub results: TierStats,
+}
+
+impl DiskStats {
+    /// Entries across both kinds.
+    pub fn entries(&self) -> u64 {
+        self.workloads.entries + self.results.entries
+    }
+
+    /// Bytes across both kinds (what the GC bound applies to).
+    pub fn bytes(&self) -> u64 {
+        self.workloads.bytes + self.results.bytes
+    }
+}
+
 /// A successful [`DiskStore::load`]: the workload plus where it came
 /// from and how well it compressed (for the cache's gauges).
 pub struct DiskLoad {
+    /// The decoded workload, ready to share across jobs.
     pub workload: SharedWorkload,
     /// True when the writable tier missed and the read-only seed served.
     pub from_seed: bool,
@@ -661,7 +720,9 @@ pub struct DiskLoad {
 /// uncompressed body it encodes.
 #[derive(Debug, Clone, Copy)]
 pub struct StoredEntry {
+    /// On-disk entry size (header + compressed payload).
     pub stored_bytes: u64,
+    /// Uncompressed body size (the header's declared length).
     pub body_bytes: u64,
 }
 
@@ -682,6 +743,7 @@ pub struct GcReport {
 }
 
 impl GcReport {
+    /// Total bytes the eviction (or dry run) covered.
     pub fn evicted_bytes(&self) -> u64 {
         self.victims.iter().map(|(_, len)| *len).sum()
     }
@@ -706,10 +768,12 @@ impl DiskStore {
         Ok(DiskStore { dir: cfg.dir, max_bytes: cfg.max_bytes, seed: cfg.seed })
     }
 
+    /// The writable cache directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// The GC size bound, bytes (0 = unbounded).
     pub fn max_bytes(&self) -> u64 {
         self.max_bytes
     }
@@ -727,8 +791,8 @@ impl DiskStore {
         Some(self.seed.as_ref()?.join(format!("{}.dwl", key.cache_file_stem())))
     }
 
-    fn lock_file_path(&self, key: &WorkloadKey) -> PathBuf {
-        self.dir.join(format!("{}.lock", key.cache_file_stem()))
+    fn lock_file_path(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.lock"))
     }
 
     /// Take the exclusive build lock for `key`, blocking until granted.
@@ -742,7 +806,31 @@ impl DiskStore {
     /// second builder lock the path's fresh file — two "exclusive"
     /// builders. On a mismatch we reopen and retry.
     pub fn lock(&self, key: &WorkloadKey) -> Option<BuildLock> {
-        let path = self.lock_file_path(key);
+        self.lock_stem(&key.cache_file_stem())
+    }
+
+    /// Non-blocking variant of [`lock`](Self::lock): `None` when
+    /// another holder (any process) has the key locked, or when the
+    /// lock file is not creatable. Same orphaned-inode retry as `lock`.
+    pub fn try_lock(&self, key: &WorkloadKey) -> Option<BuildLock> {
+        let path = self.lock_file_path(&key.cache_file_stem());
+        loop {
+            let file = open_lock_file(&path, true)?;
+            if !sys::try_lock_exclusive(&file) {
+                return None;
+            }
+            if same_inode(&file, &path) {
+                return Some(BuildLock { file });
+            }
+        }
+    }
+
+    /// [`lock`](Self::lock) by file stem — the shared implementation
+    /// behind workload build locks and result run locks
+    /// (`super::results`). Stems never collide across the two kinds: a
+    /// result stem is its workload's stem plus a `-<hash16>` suffix.
+    pub(crate) fn lock_stem(&self, stem: &str) -> Option<BuildLock> {
+        let path = self.lock_file_path(stem);
         loop {
             let file = open_lock_file(&path, true)?;
             if !sys::lock_exclusive(&file) {
@@ -752,22 +840,6 @@ impl DiskStore {
                 return Some(BuildLock { file });
             }
             // Orphaned inode: drop it (unlocks) and take the fresh file.
-        }
-    }
-
-    /// Non-blocking variant of [`lock`](Self::lock): `None` when
-    /// another holder (any process) has the key locked, or when the
-    /// lock file is not creatable. Same orphaned-inode retry as `lock`.
-    pub fn try_lock(&self, key: &WorkloadKey) -> Option<BuildLock> {
-        let path = self.lock_file_path(key);
-        loop {
-            let file = open_lock_file(&path, true)?;
-            if !sys::try_lock_exclusive(&file) {
-                return None;
-            }
-            if same_inode(&file, &path) {
-                return Some(BuildLock { file });
-            }
         }
     }
 
@@ -846,19 +918,29 @@ impl DiskStore {
     pub fn store(&self, key: &WorkloadKey, w: &Workload) -> io::Result<StoredEntry> {
         let bytes = encode(key, w);
         let body_bytes = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
-        let tmp = self.dir.join(format!("{}.tmp.{}", key.cache_file_stem(), std::process::id()));
-        {
-            let mut f = File::create(&tmp)?;
-            f.write_all(&bytes)?;
-            let _ = f.sync_all();
-        }
-        fs::rename(&tmp, self.entry_path(key))?;
-        self.gc();
+        self.write_entry_file(&key.cache_file_stem(), "dwl", &bytes)?;
         Ok(StoredEntry { stored_bytes: bytes.len() as u64, body_bytes })
     }
 
-    /// `(path, size, recency)` of every `.dwl` entry in the writable
-    /// directory (the seed is never scanned).
+    /// The atomic-write path shared by workload and result entries:
+    /// write `bytes` to `<stem>.tmp.<pid>`, fsync, rename to
+    /// `<stem>.<ext>` (readers never see partial writes), then GC the
+    /// writable directory back under its size bound.
+    pub(crate) fn write_entry_file(&self, stem: &str, ext: &str, bytes: &[u8]) -> io::Result<()> {
+        let tmp = self.dir.join(format!("{stem}.tmp.{}", std::process::id()));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(bytes)?;
+            let _ = f.sync_all();
+        }
+        fs::rename(&tmp, self.dir.join(format!("{stem}.{ext}")))?;
+        self.gc();
+        Ok(())
+    }
+
+    /// `(path, size, recency)` of every `.dwl`/`.dsr` entry in the
+    /// writable directory (the seed is never scanned). Both entry kinds
+    /// share the GC bound and the recency ordering.
     fn scan(&self) -> Vec<(PathBuf, u64, SystemTime)> {
         let mut out = Vec::new();
         let rd = match fs::read_dir(&self.dir) {
@@ -867,7 +949,7 @@ impl DiskStore {
         };
         for e in rd.flatten() {
             let path = e.path();
-            if path.extension().and_then(|s| s.to_str()) != Some("dwl") {
+            if !matches!(path.extension().and_then(|s| s.to_str()), Some("dwl") | Some("dsr")) {
                 continue;
             }
             if let Ok(md) = e.metadata() {
@@ -986,35 +1068,31 @@ impl DiskStore {
     }
 
     /// Entry count, bytes, and per-version histogram of the writable
-    /// directory (reads only the 8-byte header prefix of each entry).
+    /// directory, split per entry kind — workload `.dwl` vs result
+    /// `.dsr` (reads only the 8-byte header prefix of each entry).
     pub fn stats(&self) -> DiskStats {
         let mut s = DiskStats::default();
-        let mut versions: Vec<(u16, u64)> = Vec::new();
         for (path, len, _) in self.scan() {
-            s.entries += 1;
-            s.bytes += len;
             let mut hdr = [0u8; 8];
             let read = File::open(&path).and_then(|mut f| f.read_exact(&mut hdr));
-            if read.is_ok() && hdr[..4] == MAGIC {
-                let v = u16::from_le_bytes([hdr[4], hdr[5]]);
-                match versions.iter_mut().find(|(ver, _)| *ver == v) {
-                    Some((_, n)) => *n += 1,
-                    None => versions.push((v, 1)),
-                }
+            let hdr = read.ok().map(|_| hdr);
+            if path.extension().and_then(|e| e.to_str()) == Some("dsr") {
+                s.results.record(len, hdr);
             } else {
-                s.unreadable += 1;
+                s.workloads.record(len, hdr);
             }
         }
-        versions.sort_unstable_by_key(|(v, _)| *v);
-        s.versions = versions;
+        s.workloads.versions.sort_unstable_by_key(|(v, _)| *v);
+        s.results.versions.sort_unstable_by_key(|(v, _)| *v);
         s
     }
 
-    /// Remove every entry, tmp file, and *unheld* lock file. Lock files
-    /// whose flock is currently held by a live builder are skipped:
-    /// unlinking one would let the next process lock a fresh inode while
-    /// the builder still holds the old one, silently breaking the
-    /// single-builder guarantee. Returns entries removed.
+    /// Remove every entry (workload and result), tmp file, and *unheld*
+    /// lock file. Lock files whose flock is currently held by a live
+    /// builder are skipped: unlinking one would let the next process
+    /// lock a fresh inode while the builder still holds the old one,
+    /// silently breaking the single-builder guarantee. Returns entries
+    /// removed (both kinds).
     pub fn clear(&self) -> io::Result<u64> {
         let mut removed = 0u64;
         for e in fs::read_dir(&self.dir)?.flatten() {
@@ -1036,8 +1114,9 @@ impl DiskStore {
                 }
                 continue;
             }
-            let is_ours = name.ends_with(".dwl") || name.contains(".tmp.");
-            if is_ours && fs::remove_file(&path).is_ok() && name.ends_with(".dwl") {
+            let is_entry = name.ends_with(".dwl") || name.ends_with(".dsr");
+            let is_ours = is_entry || name.contains(".tmp.");
+            if is_ours && fs::remove_file(&path).is_ok() && is_entry {
                 removed += 1;
             }
         }
@@ -1209,8 +1288,10 @@ mod tests {
         assert_eq!(loaded.body_bytes, stored.body_bytes);
         assert_same_workload(&w, &loaded.workload);
         let s = store.stats();
-        assert_eq!((s.entries, s.bytes, s.unreadable), (1, stored.stored_bytes, 0));
-        assert_eq!(s.versions, vec![(CODEC_VERSION, 1)]);
+        let w = &s.workloads;
+        assert_eq!((w.entries, w.bytes, w.unreadable), (1, stored.stored_bytes, 0));
+        assert_eq!(w.versions, vec![(CODEC_VERSION, 1)]);
+        assert_eq!(s.results.entries, 0, "no result entries in a workload-only store");
         assert_eq!(store.clear().unwrap(), 1);
         assert_eq!(store.bytes_on_disk(), 0);
         let _ = fs::remove_dir_all(&dir);
@@ -1238,10 +1319,14 @@ mod tests {
         let k = key(1);
         let w = k.build();
         fs::write(store.entry_path(&k), encode_v1(&k, &w)).unwrap();
-        assert_eq!(store.stats().versions, vec![(CODEC_V1, 1)]);
+        assert_eq!(store.stats().workloads.versions, vec![(CODEC_V1, 1)]);
         let loaded = store.load(&k).expect("v1 entry serves");
         assert_same_workload(&w, &loaded.workload);
-        assert_eq!(store.stats().versions, vec![(CODEC_VERSION, 1)], "rewritten as v2 on read");
+        assert_eq!(
+            store.stats().workloads.versions,
+            vec![(CODEC_VERSION, 1)],
+            "rewritten as v2 on read"
+        );
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -1279,10 +1364,10 @@ mod tests {
         assert!(report.dry_run);
         assert_eq!(report.victims.len(), 2, "{report:?}");
         assert_eq!(report.bytes_after, 0);
-        assert_eq!(store.stats().entries, 2, "dry run deletes nothing");
+        assert_eq!(store.stats().entries(), 2, "dry run deletes nothing");
         let live = store.gc_with(0, false);
         assert_eq!(live.victims.len(), 2);
-        assert_eq!(store.stats().entries, 0);
+        assert_eq!(store.stats().entries(), 0);
         let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -9,17 +9,21 @@ use std::time::Duration;
 /// submissions — batch collectors sort on it), the run spec, the backend
 /// selector, and the channel the executing worker replies on.
 pub struct Job {
+    /// Service-assigned submission sequence number.
     pub seq: u64,
+    /// What to run.
     pub spec: RunSpec,
     /// Execute `mma` through the AOT PJRT artifact instead of the native
     /// backend (requires the `xla` feature + artifacts).
     pub use_xla: bool,
+    /// Where the executing worker sends the outcome.
     pub reply: Sender<JobOutcome>,
 }
 
 /// What a worker delivers for one job.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
+    /// The sequence number of the job this answers.
     pub seq: u64,
     /// The run result, or the build/simulation failure message (workers
     /// catch panics so one bad job cannot take the service down).

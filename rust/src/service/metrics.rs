@@ -6,6 +6,8 @@ use super::cache::CacheCounters;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+/// Lock-free service counters, updated by workers and snapshotted
+/// by [`snapshot`](Self::snapshot) for reporting.
 pub struct ServiceMetrics {
     started: Instant,
     jobs_submitted: AtomicU64,
@@ -13,11 +15,15 @@ pub struct ServiceMetrics {
     jobs_failed: AtomicU64,
     /// Simulated cycles aggregated across completed jobs.
     sim_cycles: AtomicU64,
+    /// Simulations actually executed (jobs not served by the result
+    /// tier) — the `sims` a warm sweep drives to 0.
+    sims_executed: AtomicU64,
     /// Per-worker busy wall-clock, in nanoseconds.
     worker_busy_ns: Vec<AtomicU64>,
 }
 
 impl ServiceMetrics {
+    /// Zeroed metrics for a service with `workers` workers.
     pub fn new(workers: usize) -> Self {
         Self {
             started: Instant::now(),
@@ -25,14 +31,25 @@ impl ServiceMetrics {
             jobs_completed: AtomicU64::new(0),
             jobs_failed: AtomicU64::new(0),
             sim_cycles: AtomicU64::new(0),
+            sims_executed: AtomicU64::new(0),
             worker_busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
+    /// Record one submission.
     pub fn job_submitted(&self) {
         self.jobs_submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record that a worker ran a simulation from cycle 0 (as opposed to
+    /// replaying a memoized result).
+    pub fn sim_executed(&self) {
+        self.sims_executed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one finished job (failed or not) and the worker's busy
+    /// time; out-of-range worker indices only lose their busy-time
+    /// attribution.
     pub fn job_done(&self, worker: usize, busy: Duration, sim_cycles: u64, ok: bool) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         if !ok {
@@ -44,6 +61,8 @@ impl ServiceMetrics {
         }
     }
 
+    /// A point-in-time copy, joined with the queue depth and cache
+    /// counters the caller reads.
     pub fn snapshot(&self, queue_depth: usize, cache: CacheCounters) -> MetricsSnapshot {
         MetricsSnapshot {
             uptime: self.started.elapsed(),
@@ -51,6 +70,7 @@ impl ServiceMetrics {
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            sims: self.sims_executed.load(Ordering::Relaxed),
             queue_depth,
             worker_busy: self
                 .worker_busy_ns
@@ -65,18 +85,29 @@ impl ServiceMetrics {
 /// A point-in-time view of the service, cheap to copy around and print.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Time since the service started.
     pub uptime: Duration,
+    /// Jobs submitted.
     pub jobs_submitted: u64,
+    /// Jobs completed (including failures).
     pub jobs_completed: u64,
+    /// Jobs that failed.
     pub jobs_failed: u64,
+    /// Simulated cycles summed across completed jobs.
     pub sim_cycles: u64,
+    /// Simulations executed from cycle 0 (a warm sweep reports 0 — every
+    /// job replayed a memoized result).
+    pub sims: u64,
+    /// Jobs queued at snapshot time.
     pub queue_depth: usize,
     /// Busy wall-clock per worker since the service started.
     pub worker_busy: Vec<Duration>,
+    /// Cache counters (all tiers) at snapshot time.
     pub cache: CacheCounters,
 }
 
 impl MetricsSnapshot {
+    /// Completed jobs per second of uptime.
     pub fn jobs_per_sec(&self) -> f64 {
         let secs = self.uptime.as_secs_f64();
         if secs == 0.0 {
@@ -104,11 +135,13 @@ impl MetricsSnapshot {
         format!(
             "{{\"uptime_s\":{:.3},\"jobs_submitted\":{},\"jobs_completed\":{},\
              \"jobs_failed\":{},\"jobs_per_sec\":{:.3},\"sim_cycles\":{},\
-             \"sim_cycles_per_sec\":{:.1},\"queue_depth\":{},\"workers\":{},\
+             \"sim_cycles_per_sec\":{:.1},\"sims\":{},\"queue_depth\":{},\"workers\":{},\
              \"worker_utilization\":{:.4},\"cache\":{{\"lookups\":{},\"hits\":{},\
              \"coalesced\":{},\"builds\":{},\"evictions\":{},\"build_failures\":{},\
              \"resident\":{},\"hit_rate\":{:.4},\"disk_hits\":{},\"disk_misses\":{},\
-             \"seed_hits\":{},\"disk_hit_rate\":{:.4},\"bytes_on_disk\":{},\
+             \"seed_hits\":{},\"disk_hit_rate\":{:.4},\"result_hits\":{},\
+             \"result_misses\":{},\"result_seed_hits\":{},\"result_hit_rate\":{:.4},\
+             \"bytes_on_disk\":{},\
              \"compressed_bytes\":{},\"uncompressed_bytes\":{},\
              \"compression_ratio\":{:.4}}}}}",
             self.uptime.as_secs_f64(),
@@ -118,6 +151,7 @@ impl MetricsSnapshot {
             self.jobs_per_sec(),
             self.sim_cycles,
             self.sim_cycles_per_sec(),
+            self.sims,
             self.queue_depth,
             self.worker_busy.len(),
             self.worker_utilization(),
@@ -133,6 +167,10 @@ impl MetricsSnapshot {
             c.disk_misses,
             c.seed_hits,
             c.disk_hit_rate(),
+            c.result_hits,
+            c.result_misses,
+            c.result_seed_hits,
+            c.result_hit_rate(),
             c.bytes_on_disk,
             c.compressed_bytes,
             c.uncompressed_bytes,
@@ -154,9 +192,10 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "[service] {} jobs in {:.2}s ({:.1} jobs/s, {:.1} Msim-cycles/s), \
-             {} failed, queue depth {}",
+            "[service] {} jobs ({} simulated) in {:.2}s ({:.1} jobs/s, \
+             {:.1} Msim-cycles/s), {} failed, queue depth {}",
             self.jobs_completed,
+            self.sims,
             self.uptime.as_secs_f64(),
             self.jobs_per_sec(),
             self.sim_cycles_per_sec() / 1e6,
@@ -182,6 +221,7 @@ mod tests {
         let m = ServiceMetrics::new(2);
         m.job_submitted();
         m.job_submitted();
+        m.sim_executed();
         m.job_done(0, Duration::from_millis(10), 1000, true);
         m.job_done(1, Duration::from_millis(30), 500, false);
         std::thread::sleep(Duration::from_millis(5));
@@ -190,6 +230,7 @@ mod tests {
         assert_eq!(s.jobs_completed, 2);
         assert_eq!(s.jobs_failed, 1);
         assert_eq!(s.sim_cycles, 1500);
+        assert_eq!(s.sims, 1, "one of the two jobs simulated; the other replayed");
         assert_eq!(s.queue_depth, 3);
         assert_eq!(s.worker_busy.len(), 2);
         assert!(s.jobs_per_sec() > 0.0);
@@ -210,6 +251,8 @@ mod tests {
             disk_hits: 1,
             disk_misses: 1,
             seed_hits: 1,
+            result_hits: 9,
+            result_misses: 1,
             compressed_bytes: 1024,
             uncompressed_bytes: 8192,
             bytes_on_disk: 4096,
@@ -236,6 +279,12 @@ mod tests {
         assert_eq!(c.get("seed_hits").and_then(Json::as_u64), Some(1));
         let rate = c.get("disk_hit_rate").and_then(Json::as_f64).unwrap();
         assert!((rate - 2.0 / 3.0).abs() < 1e-3, "{rate}");
+        assert_eq!(v.get("sims").and_then(Json::as_u64), Some(0));
+        assert_eq!(c.get("result_hits").and_then(Json::as_u64), Some(9));
+        assert_eq!(c.get("result_misses").and_then(Json::as_u64), Some(1));
+        assert_eq!(c.get("result_seed_hits").and_then(Json::as_u64), Some(0));
+        let rrate = c.get("result_hit_rate").and_then(Json::as_f64).unwrap();
+        assert!((rrate - 0.9).abs() < 1e-3, "{rrate}");
         assert_eq!(c.get("bytes_on_disk").and_then(Json::as_u64), Some(4096));
         assert_eq!(c.get("compressed_bytes").and_then(Json::as_u64), Some(1024));
         assert_eq!(c.get("uncompressed_bytes").and_then(Json::as_u64), Some(8192));

@@ -13,7 +13,11 @@
 //!  RunSpec, RunSpec, …  ──▶  │ JobQueue (bounded MPMC)              │
 //!                            │   │ pop                              │
 //!                            │   ▼                                  │
-//!                            │ worker pool ──▶ WorkloadCache        │
+//!                            │ worker pool ──▶ result tier          │
+//!                            │   │   lookup_result (memo → .dsr →   │
+//!                            │   │    seed; hit = replay, no sim)   │
+//!                            │   ▼ miss                             │
+//!                            │ WorkloadCache                        │
 //!                            │   │   get_or_build (sharded LRU,     │
 //!                            │   │    in-flight dedup, Arc-shared)  │
 //!                            │   ▼                                  │
@@ -33,6 +37,11 @@
 //!   v1 entries decode and lazily migrate), cross-process build locks,
 //!   and size-bounded GC (`dare cache gc`), so builds persist across
 //!   processes, serve restarts, and CI runs.
+//! * [`results`] — the simulation-*result* tier: `.dsr` entries memoize
+//!   the full `SimStats` of one deterministic run, keyed by
+//!   `(workload, resolved config, SIM_VERSION)` under the same codec,
+//!   lock, seed, and GC discipline, so a warm sweep replays results
+//!   instead of simulating (builds == 0 **and** sims == 0).
 //! * [`workers`] — the worker pool and the [`Service`] facade.
 //! * [`job`] — the scheduled unit and its outcome.
 //! * [`protocol`] — the JSONL job/result wire format of `dare batch`
@@ -54,11 +63,13 @@ pub mod job;
 pub mod metrics;
 pub mod protocol;
 pub mod queue;
+pub mod results;
 pub mod transport;
 pub mod workers;
 
 pub use cache::{CacheCounters, Fetch, WorkloadCache};
-pub use disk::{DiskConfig, DiskLoad, DiskStats, DiskStore, GcReport, StoredEntry};
+pub use disk::{DiskConfig, DiskLoad, DiskStats, DiskStore, GcReport, StoredEntry, TierStats};
+pub use results::{ResultKey, ResultLoad};
 pub use job::{Job, JobOutcome};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use protocol::{JobRequest, JobResponse, Json};

@@ -34,15 +34,22 @@ use crate::sparse::DatasetKind;
 /// keys resolve to the first occurrence (lookup by linear scan).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, as ordered key/value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing bytes are an error).
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -54,6 +61,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -61,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +77,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -75,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The value as a u64, if this is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
@@ -84,10 +95,12 @@ impl Json {
         }
     }
 
+    /// The value as a usize, if this is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -311,16 +324,27 @@ pub fn escape(s: &str) -> String {
 pub struct JobRequest {
     /// Caller-chosen id, echoed into the matching [`JobResponse`].
     pub id: Option<String>,
+    /// The kernel to run.
     pub kernel: KernelKind,
+    /// The sparse operand's dataset.
     pub dataset: DatasetKind,
+    /// The design variant to simulate.
     pub variant: Variant,
+    /// Blockification size `B` (default 1).
     pub block: usize,
+    /// Dataset scale in (0, 1] (default 0.5).
     pub scale: f64,
+    /// Verify functional outputs after the run.
     pub verify: bool,
+    /// Override the RIQ capacity.
     pub riq_entries: Option<usize>,
+    /// Override the VMR capacity.
     pub vmr_entries: Option<usize>,
+    /// Override the LLC hit latency.
     pub llc_hit_latency: Option<u64>,
+    /// Override the RFU dynamic/static mode.
     pub rfu_dynamic: Option<bool>,
+    /// Use the zero-miss oracle LLC.
     pub oracle_llc: bool,
     /// Execute `mma` through the AOT PJRT artifact (needs the `xla`
     /// feature + artifacts; jobs fail gracefully otherwise).
@@ -347,6 +371,7 @@ const JOB_KEYS: [&str; 13] = [
 ];
 
 impl JobRequest {
+    /// A job with every optional knob at its default.
     pub fn new(kernel: KernelKind, dataset: DatasetKind, variant: Variant) -> Self {
         Self {
             id: None,
@@ -365,6 +390,7 @@ impl JobRequest {
         }
     }
 
+    /// Parse one job line (strict: unknown keys are rejected).
     pub fn parse(line: &str) -> Result<Self, String> {
         let obj = Json::parse(line)?;
         match &obj {
@@ -437,6 +463,7 @@ impl JobRequest {
         })
     }
 
+    /// The job as a single JSONL line.
     pub fn to_json(&self) -> String {
         let mut s = String::from("{");
         if let Some(id) = &self.id {
@@ -493,15 +520,25 @@ impl JobRequest {
 /// either the headline stats or the failure message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobResponse {
+    /// The request's id, echoed back.
     pub id: Option<String>,
+    /// The run's display name.
     pub name: String,
+    /// Whether the job succeeded.
     pub ok: bool,
+    /// The failure message, when `ok` is false.
     pub error: Option<String>,
+    /// Total execution cycles.
     pub cycles: u64,
+    /// Instructions retired.
     pub instrs: u64,
+    /// Total energy, picojoules.
     pub energy_pj: f64,
+    /// Max relative functional error, when verification ran.
     pub verify_err: Option<f64>,
+    /// The workload build came from the cache.
     pub cache_hit: bool,
+    /// Worker wall-clock spent on the job, milliseconds.
     pub wall_ms: f64,
 }
 
@@ -556,6 +593,7 @@ impl JobResponse {
         }
     }
 
+    /// The response as a single JSONL line (no `event` tag).
     pub fn to_json(&self) -> String {
         let mut s = String::from("{");
         if let Some(id) = &self.id {
@@ -588,6 +626,7 @@ impl JobResponse {
         format!("{{\"event\":\"result\",{}", &body[1..])
     }
 
+    /// Parse a result line (either the bare or the `event`-tagged form).
     pub fn parse(line: &str) -> Result<Self, String> {
         let obj = Json::parse(line)?;
         let name =

@@ -29,6 +29,10 @@ struct Inner<T> {
     closed: bool,
 }
 
+/// A bounded MPMC blocking queue (condvar-based; this crate builds
+/// offline with no deps, so no crossbeam): producers block at
+/// capacity, consumers block when empty, [`close`](Self::close)
+/// wakes everyone.
 pub struct JobQueue<T> {
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
@@ -37,6 +41,7 @@ pub struct JobQueue<T> {
 }
 
 impl<T> JobQueue<T> {
+    /// A queue holding at most `capacity` items (panics on zero).
     pub fn bounded(capacity: usize) -> Self {
         assert!(capacity > 0, "queue capacity must be positive");
         Self {
@@ -47,6 +52,7 @@ impl<T> JobQueue<T> {
         }
     }
 
+    /// The capacity bound.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -130,6 +136,7 @@ impl<T> JobQueue<T> {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// True when nothing is queued (racy snapshot).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -142,6 +149,7 @@ impl<T> JobQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// True once [`close`](Self::close) has been called.
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
     }

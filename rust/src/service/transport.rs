@@ -66,8 +66,11 @@ pub struct SessionSummary {
 
 /// A parsed, submission-ready job line.
 pub struct ParsedJob {
+    /// Caller-chosen id, echoed into the result frame.
     pub id: Option<String>,
+    /// The parsed run spec.
     pub spec: RunSpec,
+    /// Execute `mma` through the AOT PJRT artifact.
     pub use_xla: bool,
 }
 
@@ -289,19 +292,25 @@ pub fn run_session<R: BufRead>(
 
 /// A connected byte stream, unix or TCP.
 pub enum Stream {
+    /// A unix-domain connection.
     Unix(UnixStream),
+    /// A TCP connection.
     Tcp(TcpStream),
 }
 
 impl Stream {
+    /// Connect to a unix socket path.
     pub fn connect_unix(path: &str) -> io::Result<Stream> {
         Ok(Stream::Unix(UnixStream::connect(path)?))
     }
 
+    /// Connect to a TCP address.
     pub fn connect_tcp(addr: &str) -> io::Result<Stream> {
         Ok(Stream::Tcp(TcpStream::connect(addr)?))
     }
 
+    /// An independent handle to the same connection (for the
+    /// read/write split).
     pub fn try_clone(&self) -> io::Result<Stream> {
         Ok(match self {
             Stream::Unix(s) => Stream::Unix(s.try_clone()?),
@@ -362,7 +371,9 @@ impl Write for Stream {
 /// A bound listening endpoint, unix or TCP. Listeners are non-blocking:
 /// the accept loop polls so it can notice shutdown requests promptly.
 pub enum Listener {
+    /// A unix-domain listener.
     Unix(UnixListener),
+    /// A TCP listener.
     Tcp(TcpListener),
 }
 
@@ -388,6 +399,7 @@ impl Listener {
         Ok(Listener::Unix(l))
     }
 
+    /// Bind a TCP listener.
     pub fn bind_tcp(addr: &str) -> io::Result<Listener> {
         let l = TcpListener::bind(addr)?;
         l.set_nonblocking(true)?;
@@ -452,6 +464,7 @@ impl Server {
         self.shutdown.clone()
     }
 
+    /// Block until the accept loop exits.
     pub fn join(self) {
         let _ = self.accept_thread.join();
     }
@@ -557,6 +570,7 @@ pub fn install_signal_handlers() {
 }
 
 #[cfg(not(unix))]
+/// No-op on non-unix targets (no signal-driven drain).
 pub fn install_signal_handlers() {}
 
 #[cfg(test)]

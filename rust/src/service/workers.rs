@@ -9,7 +9,10 @@ use super::job::{Job, JobOutcome};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::panic_message;
 use super::queue::{JobQueue, PushError};
+use super::results::ResultKey;
 use crate::coordinator::{run_prebuilt, RunResult, RunSpec};
+use crate::energy::{energy_of, EnergyModel};
+use crate::sim::SimStats;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
@@ -41,6 +44,8 @@ pub fn shared_handle() -> Option<&'static Service> {
 }
 
 #[derive(Debug, Clone)]
+/// Everything [`Service::start`] needs: pool size, queue bound, and
+/// the cache tiers' configuration.
 pub struct ServiceConfig {
     /// Worker threads (0 = one per core).
     pub workers: usize,
@@ -51,15 +56,20 @@ pub struct ServiceConfig {
     /// Optional on-disk workload tier (`--cache-dir`): builds persist
     /// across processes and serve restarts. Default off.
     pub disk: Option<DiskConfig>,
+    /// Simulation-result memoization (`--no-result-cache` sets false):
+    /// workers probe the result tier before simulating and store after,
+    /// so a warm sweep replays instead of simulating. Default on.
+    pub result_cache: bool,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 0, queue_capacity: 1024, cache_capacity: 32, disk: None }
+        Self { workers: 0, queue_capacity: 1024, cache_capacity: 32, disk: None, result_cache: true }
     }
 }
 
 impl ServiceConfig {
+    /// Defaults with an explicit worker count.
     pub fn with_workers(workers: usize) -> Self {
         Self { workers, ..Self::default() }
     }
@@ -86,10 +96,12 @@ pub struct Service {
 }
 
 impl Service {
+    /// Start the worker pool. Workers live until the service is dropped
+    /// or [`shutdown`](Service::shutdown).
     pub fn start(cfg: ServiceConfig) -> Self {
         let n = cfg.resolved_workers();
         let queue = Arc::new(JobQueue::bounded(cfg.queue_capacity));
-        let mut cache = WorkloadCache::new(cfg.cache_capacity);
+        let mut cache = WorkloadCache::new(cfg.cache_capacity).with_result_cache(cfg.result_cache);
         if let Some(disk_cfg) = cfg.disk.clone() {
             let dir = disk_cfg.dir.display().to_string();
             let store = DiskStore::open(disk_cfg)
@@ -112,6 +124,7 @@ impl Service {
         Self { queue, cache, metrics, workers, next_seq: AtomicU64::new(0) }
     }
 
+    /// Resolved worker-thread count.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
@@ -219,6 +232,7 @@ impl Service {
         self.metrics.snapshot(self.queue.len(), self.cache.counters())
     }
 
+    /// The shared workload cache (all tiers).
     pub fn cache(&self) -> &WorkloadCache {
         &self.cache
     }
@@ -251,33 +265,101 @@ fn worker_loop(
     while let Some(job) = queue.pop() {
         let Job { seq, spec, use_xla, reply } = job;
         let t0 = Instant::now();
-        // Key derivation can assert on malformed specs (e.g. scale out
-        // of range); catch it so the worker survives any job.
-        let key = std::panic::catch_unwind(AssertUnwindSafe(|| spec.workload_key()))
-            .map_err(|p| format!("invalid spec '{}': {}", spec.name(), panic_message(p.as_ref())));
-        let fetched = key.and_then(|k| {
-            cache
-                .get_or_build(&k)
-                .map_err(|e| format!("workload build failed for {}: {e}", spec.name()))
-        });
-        let (result, cache_hit) = match fetched {
-            Err(e) => (Err(e), false),
-            Ok((workload, fetch)) => {
-                let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    run_prebuilt(&spec, &workload, use_xla)
-                }))
-                .map_err(|p| {
-                    format!("job '{}' panicked: {}", spec.name(), panic_message(p.as_ref()))
-                });
-                (run, fetch != Fetch::Built)
-            }
-        };
+        let (result, cache_hit, simulated) = run_or_replay(&spec, use_xla, cache);
+        if simulated && result.is_ok() {
+            metrics.sim_executed();
+        }
         let wall = t0.elapsed();
         let cycles = result.as_ref().map(|r| r.stats.cycles).unwrap_or(0);
         metrics.job_done(wid, wall, cycles, result.is_ok());
         // A dropped receiver (caller gave up on the batch) is not an
         // error the worker can act on.
         let _ = reply.send(JobOutcome { seq, result, cache_hit, wall });
+    }
+}
+
+/// Execute one job through the full cache stack: result tier first
+/// (memo → writable `.dsr` → seed), then workload tiers + simulation,
+/// then result write-back. Returns `(outcome, cache_hit, simulated)` —
+/// `cache_hit` is true for any fetch short of a cold compile, and
+/// `simulated` is false exactly when a memoized result replayed.
+fn run_or_replay(
+    spec: &RunSpec,
+    use_xla: bool,
+    cache: &WorkloadCache,
+) -> (Result<RunResult, String>, bool, bool) {
+    // Key derivation can assert on malformed specs (e.g. scale out of
+    // range); catch it so the worker survives any job.
+    let key = match std::panic::catch_unwind(AssertUnwindSafe(|| spec.workload_key())) {
+        Ok(k) => k,
+        Err(p) => {
+            let msg =
+                format!("invalid spec '{}': {}", spec.name(), panic_message(p.as_ref()));
+            return (Err(msg), false, false);
+        }
+    };
+    // Verification reruns the functional model against the memory image
+    // and XLA swaps the mma backend — neither is captured by SimStats,
+    // so those jobs bypass the result tier entirely.
+    let result_key = (cache.results_enabled() && !spec.verify && !use_xla)
+        .then(|| ResultKey::new(&key, &spec.config()));
+    if let Some(rk) = &result_key {
+        // Fast path: no lock. Counts one result hit or miss.
+        if let Some(stats) = cache.lookup_result(rk) {
+            return (Ok(replay(spec, stats)), true, false);
+        }
+        // Single-runner path: take the cross-process run lock and
+        // re-check — a racing process may have simulated and stored
+        // while we waited (the re-check only happens when a lock
+        // exists, i.e. with a disk tier, so a memo-only miss costs
+        // exactly one counted lookup).
+        let guard = cache.result_lock(rk);
+        if guard.is_some() {
+            if let Some(stats) = cache.lookup_result(rk) {
+                return (Ok(replay(spec, stats)), true, false);
+            }
+        }
+        return match simulate(spec, use_xla, cache, &key) {
+            Ok((run, fetch)) => {
+                cache.store_result(rk, &run.stats);
+                (Ok(run), fetch != Fetch::Built, true)
+            }
+            Err(e) => (Err(e), false, false),
+        };
+        // `guard` drops here, releasing the run lock after the store.
+    }
+    match simulate(spec, use_xla, cache, &key) {
+        Ok((run, fetch)) => (Ok(run), fetch != Fetch::Built, true),
+        Err(e) => (Err(e), false, false),
+    }
+}
+
+/// The pre-result-tier job body: fetch (or build) the workload, then
+/// simulate against it.
+fn simulate(
+    spec: &RunSpec,
+    use_xla: bool,
+    cache: &WorkloadCache,
+    key: &crate::kernels::WorkloadKey,
+) -> Result<(RunResult, Fetch), String> {
+    let (workload, fetch) = cache
+        .get_or_build(key)
+        .map_err(|e| format!("workload build failed for {}: {e}", spec.name()))?;
+    let run = std::panic::catch_unwind(AssertUnwindSafe(|| run_prebuilt(spec, &workload, use_xla)))
+        .map_err(|p| format!("job '{}' panicked: {}", spec.name(), panic_message(p.as_ref())))?;
+    Ok((run, fetch))
+}
+
+/// Reconstruct a [`RunResult`] from memoized stats without simulating:
+/// the energy breakdown is a pure function of the stats, so a replayed
+/// result is field-for-field what the simulation would have produced
+/// (`verify_err` is always `None` — verify jobs never take this path).
+fn replay(spec: &RunSpec, stats: SimStats) -> RunResult {
+    RunResult {
+        name: spec.name(),
+        stats,
+        energy: energy_of(&stats, &EnergyModel::default()),
+        verify_err: None,
     }
 }
 

@@ -21,9 +21,11 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Every design point of the evaluation, in ablation order.
     pub const ALL: [Variant; 5] =
         [Variant::Baseline, Variant::Nvr, Variant::DareFre, Variant::DareGsa, Variant::DareFull];
 
+    /// Short lowercase name used by the CLI and report tables.
     pub fn name(self) -> &'static str {
         match self {
             Variant::Baseline => "baseline",
@@ -34,6 +36,7 @@ impl Variant {
         }
     }
 
+    /// Inverse of [`Variant::name`] (`None` for unknown names).
     pub fn from_name(s: &str) -> Option<Self> {
         Variant::ALL.iter().copied().find(|v| v.name() == s)
     }
@@ -92,6 +95,7 @@ impl Default for RfuConfig {
 /// Full system configuration (defaults = Table II).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
+    /// The design point this configuration models.
     pub variant: Variant,
     /// RIQ capacity (paper: 32; `usize::MAX` = NVR's infinite emulation).
     pub riq_entries: usize,
@@ -99,6 +103,7 @@ pub struct SimConfig {
     pub vmr_entries: usize,
     /// Load-queue / store-queue entries (Table II: 48 each).
     pub lq_entries: usize,
+    /// Store-queue entries (Table II: 48).
     pub sq_entries: usize,
     /// MPU issue width (Table II: 2-way).
     pub issue_width: usize,
@@ -113,8 +118,11 @@ pub struct SimConfig {
     pub prefetch_width: usize,
     /// Systolic array dimensions (Table II: 16×16).
     pub pe_rows: usize,
+    /// Systolic array columns (Table II: 16×16).
     pub pe_cols: usize,
+    /// Runahead Filter Unit configuration (§IV-E).
     pub rfu: RfuConfig,
+    /// LLC + DRAM configuration (Table II).
     pub llc: LlcConfig,
     /// Safety valve for the cycle loop (0 = no limit).
     pub max_cycles: u64,
@@ -148,10 +156,13 @@ impl SimConfig {
         cfg
     }
 
+    /// Number of processing elements in the systolic array.
     pub fn total_pes(&self) -> usize {
         self.pe_rows * self.pe_cols
     }
 
+    /// Reject configurations the pipeline cannot model (zero widths,
+    /// zero capacities, malformed array shape).
     pub fn validate(&self) -> Result<(), String> {
         if self.issue_width == 0 || self.dispatch_width == 0 || self.lsu_width == 0 {
             return Err("widths must be positive".into());

@@ -6,19 +6,24 @@
 //! functional side of execute-at-issue simulation.
 
 #[derive(Debug, Clone)]
+/// Byte-addressable flat memory image: the simulated DRAM contents
+/// a workload compiler fills and an MPU run mutates.
 pub struct MemImage {
     bytes: Vec<u8>,
 }
 
 impl MemImage {
+    /// An all-zero image of `size` bytes.
     pub fn new(size: usize) -> Self {
         Self { bytes: vec![0u8; size] }
     }
 
+    /// Image size in bytes.
     pub fn len(&self) -> usize {
         self.bytes.len()
     }
 
+    /// True for a zero-byte image.
     pub fn is_empty(&self) -> bool {
         self.bytes.is_empty()
     }
@@ -32,20 +37,24 @@ impl MemImage {
         );
     }
 
+    /// Read `len` bytes at `addr` (panics on out-of-range access).
     pub fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
         self.check(addr, len);
         &self.bytes[addr as usize..addr as usize + len]
     }
 
+    /// Write `data` at `addr` (panics on out-of-range access).
     pub fn write_bytes(&mut self, addr: u64, data: &[u8]) {
         self.check(addr, data.len());
         self.bytes[addr as usize..addr as usize + data.len()].copy_from_slice(data);
     }
 
+    /// Read one little-endian f32.
     pub fn read_f32(&self, addr: u64) -> f32 {
         f32::from_le_bytes(self.read_bytes(addr, 4).try_into().unwrap())
     }
 
+    /// Write one little-endian f32.
     pub fn write_f32(&mut self, addr: u64, v: f32) {
         self.write_bytes(addr, &v.to_le_bytes());
     }
@@ -57,15 +66,19 @@ impl MemImage {
         u64::from_le_bytes(b.try_into().unwrap()) & 0x0000_FFFF_FFFF_FFFF
     }
 
+    /// Write a 48-bit (Sv48) address as 8 little-endian bytes;
+    /// panics if `v` has high bits set.
     pub fn write_addr48(&mut self, addr: u64, v: u64) {
         assert!(v <= 0x0000_FFFF_FFFF_FFFF, "address 0x{v:x} exceeds Sv48");
         self.write_bytes(addr, &v.to_le_bytes());
     }
 
+    /// Read `n` consecutive f32 values starting at `addr`.
     pub fn read_f32_slice(&self, addr: u64, n: usize) -> Vec<f32> {
         (0..n).map(|i| self.read_f32(addr + 4 * i as u64)).collect()
     }
 
+    /// Write consecutive f32 values starting at `addr`.
     pub fn write_f32_slice(&mut self, addr: u64, vs: &[f32]) {
         for (i, &v) in vs.iter().enumerate() {
             self.write_f32(addr + 4 * i as u64, v);

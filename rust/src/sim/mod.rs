@@ -37,3 +37,18 @@ pub use exec::{MmaExec, NativeMma};
 pub use memimg::MemImage;
 pub use mpu::Mpu;
 pub use stats::SimStats;
+
+/// Version of the simulator's timing and statistics semantics, baked
+/// into every on-disk simulation-result cache key
+/// (`service::results`).
+///
+/// **Bump this on any change that can alter the [`SimStats`] produced
+/// for the same (workload, [`SimConfig`]) pair** — pipeline timing,
+/// arbitration order, stat accounting, a new counter, a fixed
+/// off-by-one. The result tier keys entries by
+/// `(WorkloadKey::stable_hash, SimConfig hash, SIM_VERSION)`, so a bump
+/// instantly invalidates every memoized result; forgetting one lets a
+/// stale result masquerade as the current simulator's output. Workload
+/// *builds* (`service::disk`) are unaffected: they version the codec,
+/// not the simulator.
+pub const SIM_VERSION: u32 = 1;

@@ -112,15 +112,21 @@ struct InflightMem {
     is_write: bool,
 }
 
+/// The cycle-level MPU model: dispatch, RIQ/VMR/RFU runahead,
+/// scoreboarded issue, systolic execute and the LSU→LLC→DRAM path,
+/// stepped one cycle at a time until the program retires.
 pub struct Mpu {
     cfg: SimConfig,
+    /// Architectural matrix register file (read by verification).
     pub regfile: RegFile,
     scoreboard: Scoreboard,
     systolic: Systolic,
+    /// The LLC (owns the DRAM model; exposed for stats).
     pub llc: Llc,
     riq: Riq,
     vmr: Vmr,
     rfu: Rfu,
+    /// The memory image this run mutates (read back by verification).
     pub mem: MemImage,
     exec: Box<dyn MmaExec>,
 
@@ -142,10 +148,13 @@ pub struct Mpu {
     runahead_front: u64,
 
     now: u64,
+    /// Aggregated counters for the run so far.
     pub stats: SimStats,
 }
 
 impl Mpu {
+    /// Build an MPU from a validated config, an initial memory image and
+    /// a functional `mma` executor (panics on an invalid config).
     pub fn new(cfg: SimConfig, mem: MemImage, exec: Box<dyn MmaExec>) -> Self {
         cfg.validate().expect("invalid SimConfig");
         let queue_cap =
@@ -183,6 +192,7 @@ impl Mpu {
         }
     }
 
+    /// The configuration this MPU was built with.
     pub fn config(&self) -> &SimConfig {
         &self.cfg
     }

@@ -4,6 +4,7 @@
 use crate::isa::{Csr, MatShape, MReg, MREG_ROWS, MREG_ROW_BYTES, NUM_MREGS};
 
 #[derive(Debug, Clone)]
+/// The register file contents plus the current CSR shape.
 pub struct RegFile {
     /// Raw register bytes: `NUM_MREGS × MREG_ROWS × MREG_ROW_BYTES`.
     data: Vec<u8>,
@@ -11,14 +12,18 @@ pub struct RegFile {
 }
 
 impl RegFile {
+    /// Zeroed registers, full (16×64×16) shape.
     pub fn new() -> Self {
         Self { data: vec![0u8; NUM_MREGS * MREG_ROWS * MREG_ROW_BYTES], shape: MatShape::FULL }
     }
 
+    /// The current CSR-configured tile shape.
     pub fn shape(&self) -> MatShape {
         self.shape
     }
 
+    /// Update one shape CSR (`mcfg`); panics if the result is invalid,
+    /// mirroring the architectural reserved-value trap.
     pub fn write_csr(&mut self, csr: Csr, val: u32) {
         let mut s = self.shape;
         match csr {
@@ -36,11 +41,13 @@ impl RegFile {
         reg.index() * MREG_ROWS * MREG_ROW_BYTES + row * MREG_ROW_BYTES
     }
 
+    /// One 64-byte register row.
     pub fn row(&self, reg: MReg, row: usize) -> &[u8] {
         let off = Self::row_offset(reg, row);
         &self.data[off..off + MREG_ROW_BYTES]
     }
 
+    /// Overwrite the leading bytes of a register row.
     pub fn write_row(&mut self, reg: MReg, row: usize, bytes: &[u8]) {
         assert!(bytes.len() <= MREG_ROW_BYTES);
         let off = Self::row_offset(reg, row);

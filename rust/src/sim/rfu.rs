@@ -21,10 +21,15 @@ use super::config::RfuConfig;
 use std::collections::VecDeque;
 
 #[derive(Debug, Default, Clone, Copy)]
+/// RFU counters for one run.
 pub struct RfuStats {
+    /// Demand-miss latencies fed to the classifier.
     pub observations: u64,
+    /// Dynamic-threshold recomputations.
     pub threshold_updates: u64,
+    /// Uops classified as likely LLC misses (granted).
     pub classified_miss: u64,
+    /// Uops classified as likely LLC hits (filtered).
     pub classified_hit: u64,
     /// Prefetch uops suppressed by `!granted && TentativeSent`.
     pub suppressed_uops: u64,
@@ -33,14 +38,20 @@ pub struct RfuStats {
 }
 
 #[derive(Debug)]
+/// The Runahead Filter Unit (§IV-E): classifies prospective
+/// prefetch uops as likely-hit (filtered out) or likely-miss
+/// (granted) from a sliding window of observed demand latencies.
 pub struct Rfu {
     cfg: RfuConfig,
     window: VecDeque<u64>,
     threshold: u64,
+    /// Counters for this run.
     pub stats: RfuStats,
 }
 
 impl Rfu {
+    /// An RFU with an empty observation window. The initial threshold is
+    /// `hit_latency + slack` when dynamic, else the static threshold.
     pub fn new(cfg: RfuConfig, hit_latency: u64) -> Self {
         // Initial dynamic threshold: hit latency + slack (the classifier
         // refines it as soon as the window fills).
@@ -49,6 +60,7 @@ impl Rfu {
         Self { cfg, window: VecDeque::with_capacity(cfg.window), threshold, stats: RfuStats::default() }
     }
 
+    /// The current classification threshold, in cycles.
     pub fn threshold(&self) -> u64 {
         self.threshold
     }

@@ -12,15 +12,19 @@ use std::collections::VecDeque;
 /// §IV-E plus the decompose counter of §IV-C).
 #[derive(Debug, Clone)]
 pub struct RiqEntry {
+    /// Program-order sequence number (total order over dispatches).
     pub seq: u64,
+    /// The decoded instruction.
     pub instr: MInstr,
     /// CSR view at dispatch (decides uop count).
     pub shape: MatShape,
     /// RFU tentative-uop mechanism state.
     pub tentative_sent: bool,
+    /// RFU grant: this entry's uops may prefetch.
     pub granted: bool,
     /// Decompose counter: next row uop to emit as a prefetch.
     pub next_prefetch_row: usize,
+    /// Every row uop has been emitted.
     pub prefetch_done: bool,
     /// `mgather` runahead: allocated VMR entry, if any.
     pub vmr_slot: Option<VmrHandle>,
@@ -33,6 +37,7 @@ pub struct RiqEntry {
 }
 
 impl RiqEntry {
+    /// A freshly-dispatched entry: no grants, no prefetches, no VMR.
     pub fn new(seq: u64, instr: MInstr, shape: MatShape) -> Self {
         Self {
             seq,
@@ -55,36 +60,49 @@ impl RiqEntry {
 }
 
 #[derive(Debug, Default, Clone, Copy)]
+/// RIQ counters for one run.
 pub struct RiqStats {
+    /// Entries dispatched into the queue.
     pub inserts: u64,
+    /// Cycles dispatch stalled on a full queue.
     pub dispatch_stalls: u64,
+    /// High-water mark of queue occupancy.
     pub peak_occupancy: usize,
     /// DMU walks that found the producer.
     pub dmu_hits: u64,
+    /// DMU walks that found no producer.
     pub dmu_misses: u64,
 }
 
 #[derive(Debug)]
+/// The Runahead Instruction Queue (§IV-C): an in-order queue of
+/// decoded instructions whose younger entries drive prefetching
+/// while the head waits to issue.
 pub struct Riq {
     entries: VecDeque<RiqEntry>,
     capacity: usize,
+    /// Counters for this run.
     pub stats: RiqStats,
 }
 
 impl Riq {
+    /// An empty queue (`usize::MAX` capacity = NVR's infinite emulation).
     pub fn new(capacity: usize) -> Self {
         let prealloc = if capacity == usize::MAX { 64 } else { capacity };
         Self { entries: VecDeque::with_capacity(prealloc), capacity, stats: RiqStats::default() }
     }
 
+    /// Entries currently queued.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no entries are queued.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// True when another entry can be dispatched.
     pub fn has_space(&self) -> bool {
         self.entries.len() < self.capacity
     }
@@ -101,22 +119,27 @@ impl Riq {
         true
     }
 
+    /// The oldest entry, if any.
     pub fn head(&self) -> Option<&RiqEntry> {
         self.entries.front()
     }
 
+    /// Remove and return the oldest entry.
     pub fn pop_head(&mut self) -> Option<RiqEntry> {
         self.entries.pop_front()
     }
 
+    /// The `idx`-th oldest entry.
     pub fn get(&self, idx: usize) -> Option<&RiqEntry> {
         self.entries.get(idx)
     }
 
+    /// Mutable access to the `idx`-th oldest entry.
     pub fn get_mut(&mut self, idx: usize) -> Option<&mut RiqEntry> {
         self.entries.get_mut(idx)
     }
 
+    /// Iterate entries oldest-first.
     pub fn iter(&self) -> impl Iterator<Item = &RiqEntry> {
         self.entries.iter()
     }

@@ -6,6 +6,7 @@
 use crate::isa::{MInstr, MReg, NUM_MREGS};
 
 #[derive(Debug, Default, Clone)]
+/// Per-register reader/writer counts for the in-flight window.
 pub struct Scoreboard {
     /// In-flight writers per register (0 or 1 writer; WAW blocks a second).
     writers: [u8; NUM_MREGS],
@@ -14,6 +15,7 @@ pub struct Scoreboard {
 }
 
 impl Scoreboard {
+    /// An empty scoreboard (no in-flight instructions).
     pub fn new() -> Self {
         Self::default()
     }

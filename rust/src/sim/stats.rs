@@ -8,12 +8,17 @@ use crate::mem::dram::DramStats;
 use crate::mem::LlcStats;
 
 #[derive(Debug, Default, Clone, Copy)]
+/// Every counter one simulation produces — the value memoized by the
+/// service's result tier, so adding a field means bumping
+/// [`SIM_VERSION`](crate::sim::SIM_VERSION).
 pub struct SimStats {
     /// Total execution cycles.
     pub cycles: u64,
+    /// Instructions retired.
     pub instrs_retired: u64,
     /// Demand memory-uop latency accounting (Fig 3b).
     pub demand_uops: u64,
+    /// Sum of demand-uop completion latencies (avg = sum / uops).
     pub demand_latency_sum: u64,
     /// Prefetch uops issued by the runahead engine.
     pub prefetch_uops_issued: u64,
@@ -23,12 +28,19 @@ pub struct SimStats {
     pub vmr_fill_uops: u64,
     /// Program-level useful/issued MAC counts (from the compiler).
     pub useful_macs: u64,
+    /// MACs the PE array actually performed (shape-driven).
     pub issued_macs: u64,
+    /// LLC counters.
     pub llc: LlcStats,
+    /// DRAM counters.
     pub dram: DramStats,
+    /// Systolic-array counters.
     pub systolic: SystolicStats,
+    /// RIQ counters.
     pub riq: RiqStats,
+    /// VMR counters.
     pub vmr: VmrStats,
+    /// RFU counters.
     pub rfu: RfuStats,
 }
 
@@ -62,6 +74,7 @@ impl SimStats {
         baseline.cycles as f64 / self.cycles as f64
     }
 
+    /// One-line human-readable digest of the headline counters.
     pub fn summary(&self) -> String {
         format!(
             "cycles={} instrs={} missrate={:.3} avg_mem_lat={:.1} pe_util={:.3} \

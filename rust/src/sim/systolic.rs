@@ -11,8 +11,11 @@
 use crate::isa::MatShape;
 
 #[derive(Debug, Clone, Copy)]
+/// Systolic-array shape and per-`mma` pipeline overhead.
 pub struct SystolicConfig {
+    /// PE rows (Table II: 16).
     pub rows: usize,
+    /// PE columns (Table II: 16).
     pub cols: usize,
     /// Fixed pipeline overhead per `mma` (fill + drain), cycles.
     pub fill_drain: u64,
@@ -28,7 +31,9 @@ impl Default for SystolicConfig {
 }
 
 #[derive(Debug, Default, Clone, Copy)]
+/// Systolic-array counters for one run.
 pub struct SystolicStats {
+    /// `mma` instructions executed.
     pub mma_count: u64,
     /// Cycles the array was streaming any mma.
     pub busy_cycles: u64,
@@ -60,17 +65,22 @@ struct InFlight {
 }
 
 #[derive(Debug)]
+/// Timing model of the 16×16 output-stationary array: one `mma` in
+/// flight at a time, occupancy derived from the tile shape.
 pub struct Systolic {
     cfg: SystolicConfig,
     current: Option<InFlight>,
+    /// Counters for this run.
     pub stats: SystolicStats,
 }
 
 impl Systolic {
+    /// An idle array.
     pub fn new(cfg: SystolicConfig) -> Self {
         Self { cfg, current: None, stats: SystolicStats::default() }
     }
 
+    /// True while an `mma` is streaming through the array.
     pub fn busy(&self) -> bool {
         self.current.is_some()
     }

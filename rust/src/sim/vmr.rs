@@ -17,7 +17,10 @@ use std::collections::VecDeque;
 /// A generation-tagged reference to a VMR entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VmrHandle {
+    /// Slot index in the VMR.
     pub slot: usize,
+    /// Allocation generation: a reused slot gets a new generation, so a
+    /// stale handle (or stale in-flight fill) can never touch it.
     pub gen: u64,
 }
 
@@ -50,15 +53,24 @@ pub enum FillResult {
 }
 
 #[derive(Debug, Default, Clone, Copy)]
+/// VMR counters for one run.
 pub struct VmrStats {
+    /// Successful entry allocations.
     pub allocs: u64,
+    /// Allocations rejected because every slot was live.
     pub alloc_failures: u64,
+    /// Entries released.
     pub releases: u64,
+    /// Fills dropped because their handle's generation had passed.
     pub stale_fills: u64,
+    /// High-water mark of live entries.
     pub peak_live: usize,
 }
 
 #[derive(Debug)]
+/// The Vector Metadata Register file (§IV-D): generation-tagged slots
+/// holding the base-address vectors that `mgather`/`mscatter`
+/// runahead resolves ahead of issue.
 pub struct Vmr {
     entries: Vec<VmrEntry>,
     free: VecDeque<usize>,
@@ -66,10 +78,12 @@ pub struct Vmr {
     capacity: usize,
     live: usize,
     next_gen: u64,
+    /// Counters for this run.
     pub stats: VmrStats,
 }
 
 impl Vmr {
+    /// An empty VMR (`usize::MAX` capacity = NVR's infinite emulation).
     pub fn new(capacity: usize) -> Self {
         let prealloc = if capacity == usize::MAX { 0 } else { capacity };
         Self {
@@ -131,6 +145,7 @@ impl Vmr {
         }
     }
 
+    /// True if `h` still names a live entry of the same generation.
     pub fn is_valid(&self, h: VmrHandle) -> bool {
         self.entry(h).map(|e| e.valid).unwrap_or(false)
     }
@@ -154,10 +169,12 @@ impl Vmr {
         self.stats.releases += 1;
     }
 
+    /// Entries currently live.
     pub fn live(&self) -> usize {
         self.live
     }
 
+    /// Slots currently free (meaningless for infinite capacity).
     pub fn free_count(&self) -> usize {
         if self.capacity == usize::MAX {
             usize::MAX

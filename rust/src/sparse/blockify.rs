@@ -12,9 +12,11 @@ use super::formats::{Csc, Triplet};
 /// The set of nonzero B×B blocks of a sparse matrix, in block-CSC order.
 #[derive(Debug, Clone)]
 pub struct BlockPattern {
+    /// Block size `B`.
     pub block: usize,
     /// Matrix shape in blocks.
     pub brows: usize,
+    /// Matrix width in blocks.
     pub bcols: usize,
     /// Block-column pointer (`bcols + 1` entries) over `blk_row_idx`.
     pub col_ptr: Vec<u32>,
@@ -26,6 +28,7 @@ pub struct BlockPattern {
 }
 
 impl BlockPattern {
+    /// Count of nonzero blocks.
     pub fn nblocks(&self) -> usize {
         self.row_idx.len()
     }

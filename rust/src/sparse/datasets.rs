@@ -19,14 +19,21 @@ use super::formats::{Csc, Triplet};
 use crate::util::prng::Pcg32;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// The four evaluation datasets (Table III), regenerated as
+/// statistically-matched synthetic matrices.
 pub enum DatasetKind {
+    /// Citation graph: power-law degrees, mean ≈ 4.5.
     PubMed,
+    /// Collaboration graph: power-law degrees, mean ≈ 8.
     OgblCollab,
+    /// Protein-association graph: dense power-law, mean ≈ 32.
     OgbnProteins,
+    /// Sparsified causal attention map (90% zero).
     Gpt2Attention,
 }
 
 impl DatasetKind {
+    /// Every dataset, in evaluation order.
     pub const ALL: [DatasetKind; 4] = [
         DatasetKind::PubMed,
         DatasetKind::OgblCollab,
@@ -34,6 +41,7 @@ impl DatasetKind {
         DatasetKind::Gpt2Attention,
     ];
 
+    /// Short name used by the CLI and report tables.
     pub fn name(self) -> &'static str {
         match self {
             DatasetKind::PubMed => "pubmed",
@@ -43,6 +51,7 @@ impl DatasetKind {
         }
     }
 
+    /// Inverse of [`DatasetKind::name`], plus common abbreviations.
     pub fn from_name(s: &str) -> Option<Self> {
         match s {
             "pubmed" => Some(DatasetKind::PubMed),
@@ -58,7 +67,9 @@ impl DatasetKind {
 /// used by SpMM/SDDMM in the evaluation.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Which dataset this is.
     pub kind: DatasetKind,
+    /// The sparse operand.
     pub matrix: Csc,
     /// Feature dimension of the dense operands (columns of B).
     pub feature_dim: usize,
@@ -79,6 +90,7 @@ impl Dataset {
         Dataset { kind, matrix, feature_dim: 64 }
     }
 
+    /// The dataset's short name.
     pub fn name(&self) -> &'static str {
         self.kind.name()
     }

@@ -2,17 +2,23 @@
 //! functional mode and the tests check against.
 
 #[derive(Debug, Clone, PartialEq)]
+/// A dense matrix with row-major `data` of `rows × cols` f32s.
 pub struct Dense {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major elements (`rows * cols` of them).
     pub data: Vec<f32>,
 }
 
 impl Dense {
+    /// An all-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut m = Self::zeros(rows, cols);
         for r in 0..rows {
@@ -24,17 +30,20 @@ impl Dense {
     }
 
     #[inline]
+    /// The element at `(r, c)`.
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Overwrite the element at `(r, c)`.
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
 
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
@@ -73,6 +82,7 @@ impl Dense {
         out
     }
 
+    /// The transposed matrix.
     pub fn transpose(&self) -> Dense {
         Dense::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
     }
@@ -87,6 +97,7 @@ impl Dense {
             .fold(0.0, f32::max)
     }
 
+    /// Count of nonzero elements.
     pub fn nnz(&self) -> usize {
         self.data.iter().filter(|&&v| v != 0.0).count()
     }

@@ -5,8 +5,11 @@ use super::dense::Dense;
 /// A coordinate-format entry used to construct the compressed formats.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Triplet {
+    /// Row index.
     pub row: u32,
+    /// Column index.
     pub col: u32,
+    /// The value.
     pub val: f32,
 }
 
@@ -15,24 +18,36 @@ pub struct Triplet {
 /// column `c`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csc {
+    /// Row count.
     pub nrows: usize,
+    /// Column count.
     pub ncols: usize,
+    /// Per-column offset into `row_idx`/`vals` (`ncols + 1` entries).
     pub col_ptr: Vec<u32>,
+    /// Row indices, sorted within each column.
     pub row_idx: Vec<u32>,
+    /// Values, parallel to `row_idx`.
     pub vals: Vec<f32>,
 }
 
 /// Compressed Sparse Row (transpose-dual of [`Csc`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
+    /// Row count.
     pub nrows: usize,
+    /// Column count.
     pub ncols: usize,
+    /// Per-row offset into `col_idx`/`vals` (`nrows + 1` entries).
     pub row_ptr: Vec<u32>,
+    /// Column indices, sorted within each row.
     pub col_idx: Vec<u32>,
+    /// Values, parallel to `col_idx`.
     pub vals: Vec<f32>,
 }
 
 impl Csc {
+    /// Build from coordinate entries (sorted and deduplicated here;
+    /// duplicate coordinates sum).
     pub fn from_triplets(nrows: usize, ncols: usize, mut ts: Vec<Triplet>) -> Self {
         ts.sort_by_key(|t| (t.col, t.row));
         ts.dedup_by_key(|t| (t.col, t.row));
@@ -53,14 +68,17 @@ impl Csc {
         }
     }
 
+    /// Count of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.row_idx.len()
     }
 
+    /// nnz as a fraction of the full matrix.
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.nrows * self.ncols) as f64
     }
 
+    /// `1 - density`.
     pub fn sparsity(&self) -> f64 {
         1.0 - self.density()
     }
@@ -79,6 +97,7 @@ impl Csc {
         &self.vals[lo..hi]
     }
 
+    /// Expand to a dense matrix.
     pub fn to_dense(&self) -> Dense {
         let mut d = Dense::zeros(self.nrows, self.ncols);
         for c in 0..self.ncols {
@@ -89,6 +108,7 @@ impl Csc {
         d
     }
 
+    /// Compress a dense matrix (exact zeros dropped).
     pub fn from_dense(d: &Dense) -> Self {
         let mut ts = Vec::new();
         for r in 0..d.rows {
@@ -102,6 +122,7 @@ impl Csc {
         Self::from_triplets(d.rows, d.cols, ts)
     }
 
+    /// Convert to the row-compressed dual.
     pub fn to_csr(&self) -> Csr {
         let mut row_ptr = vec![0u32; self.nrows + 1];
         for &r in &self.row_idx {
@@ -156,22 +177,26 @@ impl Csc {
 }
 
 impl Csr {
+    /// Count of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.col_idx.len()
     }
 
+    /// Column indices of row `r`.
     pub fn row_cols(&self, r: usize) -> &[u32] {
         let lo = self.row_ptr[r] as usize;
         let hi = self.row_ptr[r + 1] as usize;
         &self.col_idx[lo..hi]
     }
 
+    /// Values of row `r`.
     pub fn row_vals(&self, r: usize) -> &[f32] {
         let lo = self.row_ptr[r] as usize;
         let hi = self.row_ptr[r + 1] as usize;
         &self.vals[lo..hi]
     }
 
+    /// Expand to a dense matrix.
     pub fn to_dense(&self) -> Dense {
         let mut d = Dense::zeros(self.nrows, self.ncols);
         for r in 0..self.nrows {
@@ -182,6 +207,7 @@ impl Csr {
         d
     }
 
+    /// Convert to the column-compressed dual.
     pub fn to_csc(&self) -> Csc {
         let mut ts = Vec::with_capacity(self.nnz());
         for r in 0..self.nrows {

@@ -11,14 +11,21 @@
 use super::stats;
 use std::time::Instant;
 
+/// How many warmups/samples/iterations each benchmark runs.
 pub struct BenchConfig {
+    /// Untimed warmup iterations before sampling.
     pub warmup_iters: u64,
+    /// Timed samples taken.
     pub samples: usize,
+    /// Iterations aggregated into one sample.
     pub iters_per_sample: u64,
+    /// Only run benchmarks whose name contains this substring.
     pub filter: Option<String>,
 }
 
 impl BenchConfig {
+    /// Parse from CLI args: `--filter <s>` / a bare substring, and
+    /// `--fast`/`--smoke` for a minimal run.
     pub fn from_env() -> Self {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         let mut filter = None;
@@ -49,22 +56,30 @@ impl BenchConfig {
     }
 }
 
+/// A minimal benchmark runner (this crate builds offline with no
+/// deps, so no criterion): warmup, sample, report median/mean/σ.
 pub struct Bencher {
     cfg: BenchConfig,
     results: Vec<BenchResult>,
 }
 
 #[derive(Debug, Clone)]
+/// Timing summary of one benchmark.
 pub struct BenchResult {
+    /// The benchmark's name.
     pub name: String,
+    /// Median sample time, nanoseconds.
     pub median_ns: f64,
+    /// Mean sample time, nanoseconds.
     pub mean_ns: f64,
+    /// Sample standard deviation, nanoseconds.
     pub stddev_ns: f64,
     /// Optional elements-per-iteration for throughput reporting.
     pub elements: Option<u64>,
 }
 
 impl BenchResult {
+    /// Elements per second at the median, when `elements` is known.
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.elements
             .map(|e| e as f64 / (self.median_ns / 1e9))
@@ -96,6 +111,7 @@ fn fmt_rate(r: f64) -> String {
 }
 
 impl Bencher {
+    /// A runner configured from the environment.
     pub fn new() -> Self {
         Self { cfg: BenchConfig::from_env(), results: Vec::new() }
     }
@@ -156,6 +172,7 @@ impl Bencher {
         self.results.push(res);
     }
 
+    /// Every result recorded so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -8,6 +8,8 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone)]
+/// Parsed command line: subcommand, positionals, `--key value`
+/// options and bare `--flag`s.
 pub struct Args {
     /// First positional token (subcommand), if any.
     pub command: Option<String>,
@@ -25,6 +27,7 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Parse an argument iterator (without argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
         let mut command = None;
         let mut positional = Vec::new();

@@ -16,10 +16,12 @@ const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 pub struct Fnv64(u64);
 
 impl Fnv64 {
+    /// A hasher at the FNV offset basis.
     pub fn new() -> Self {
         Fnv64(FNV_OFFSET)
     }
 
+    /// Absorb bytes.
     pub fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
@@ -32,6 +34,7 @@ impl Fnv64 {
         self.update(&v.to_le_bytes());
     }
 
+    /// The current hash value.
     pub fn finish(&self) -> u64 {
         self.0
     }

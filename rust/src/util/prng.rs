@@ -17,11 +17,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the expander.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// The next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -56,6 +58,7 @@ impl Pcg32 {
     }
 
     #[inline]
+    /// The next 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old
@@ -67,6 +70,7 @@ impl Pcg32 {
     }
 
     #[inline]
+    /// Two 32-bit outputs concatenated.
     pub fn next_u64(&mut self) -> u64 {
         (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
     }

@@ -14,36 +14,45 @@
 
 use super::prng::Pcg32;
 
+/// A seeded case generator handed to each property-test case.
 pub struct Gen {
     rng: Pcg32,
+    /// The seed of this case (printed on failure for replay).
     pub case_seed: u64,
 }
 
 impl Gen {
+    /// A generator for one case.
     pub fn new(seed: u64) -> Self {
         Self { rng: Pcg32::new(seed), case_seed: seed }
     }
 
+    /// A uniform u32.
     pub fn u32(&mut self) -> u32 {
         self.rng.next_u32()
     }
 
+    /// A uniform u64.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// A uniform usize in `[lo, hi)`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.range(lo, hi)
     }
 
+    /// A uniform f32 in `[0, 1)`.
     pub fn f32(&mut self) -> f32 {
         self.rng.f32()
     }
 
+    /// A uniform f64 in `[0, 1)`.
     pub fn f64(&mut self) -> f64 {
         self.rng.f64()
     }
 
+    /// True with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.chance(p)
     }
@@ -57,18 +66,22 @@ impl Gen {
         (x as usize).clamp(1, max)
     }
 
+    /// `len` uniform f32s in `[-1, 1)`.
     pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
         (0..len).map(|_| self.rng.f32() * 2.0 - 1.0).collect()
     }
 
+    /// `len` uniform u32s below `bound`.
     pub fn vec_u32_below(&mut self, len: usize, bound: u32) -> Vec<u32> {
         (0..len).map(|_| self.rng.below(bound)).collect()
     }
 
+    /// A uniformly-chosen element.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.range(0, xs.len())]
     }
 
+    /// Fisher–Yates shuffle in place.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         self.rng.shuffle(xs)
     }

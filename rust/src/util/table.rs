@@ -7,13 +7,19 @@
 use std::fmt::Write as _;
 
 #[derive(Debug, Clone)]
+/// A titled, aligned text table (also CSV-exportable) — how every
+/// figure harness reports its numbers.
 pub struct Table {
+    /// Table title, printed above the header row.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the same length as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -22,6 +28,7 @@ impl Table {
         }
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -38,14 +45,17 @@ impl Table {
         format!("{v:.2}x")
     }
 
+    /// Format a float with sensible precision for tables.
     pub fn f(v: f64) -> String {
         format!("{v:.3}")
     }
 
+    /// Format a fraction as a percentage.
     pub fn pct(v: f64) -> String {
         format!("{:.1}%", v * 100.0)
     }
 
+    /// The aligned text form.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -75,10 +85,12 @@ impl Table {
         out
     }
 
+    /// Print the aligned text form to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
 
+    /// The CSV form (title omitted).
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') {

@@ -266,12 +266,12 @@ fn mixed_generation_store_serves_both_and_migrates_v1() {
     // A v1 entry left behind by an old binary, next to a fresh v2 one.
     std::fs::write(entry_path(&dir, &k1), disk::encode_v1(&k1, &w1)).unwrap();
     store.store(&k2, &k2.build()).unwrap();
-    assert_eq!(store.stats().versions, vec![(CODEC_V1, 1), (CODEC_VERSION, 1)]);
+    assert_eq!(store.stats().workloads.versions, vec![(CODEC_V1, 1), (CODEC_VERSION, 1)]);
     let cache = WorkloadCache::new(4).with_disk(store.clone());
     assert_eq!(cache.get_or_build(&k1).unwrap().1, Fetch::DiskHit, "v1 generation serves");
     assert_eq!(cache.get_or_build(&k2).unwrap().1, Fetch::DiskHit, "v2 generation serves");
     // The v1 hit was lazily rewritten in the current compressed format.
-    assert_eq!(store.stats().versions, vec![(CODEC_VERSION, 2)], "lazy migration");
+    assert_eq!(store.stats().workloads.versions, vec![(CODEC_VERSION, 2)], "lazy migration");
     // A corrupt legacy entry rebuilds cleanly instead of poisoning the
     // directory.
     let mut bad = disk::encode_v1(&k1, &w1);
@@ -279,7 +279,7 @@ fn mixed_generation_store_serves_both_and_migrates_v1() {
     std::fs::write(entry_path(&dir, &k1), &bad).unwrap();
     let cache2 = WorkloadCache::new(4).with_disk(store_at(&dir));
     assert_eq!(cache2.get_or_build(&k1).unwrap().1, Fetch::Built);
-    assert_eq!(store.stats().versions, vec![(CODEC_VERSION, 2)]);
+    assert_eq!(store.stats().workloads.versions, vec![(CODEC_VERSION, 2)]);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -416,10 +416,14 @@ fn seeded_service_compiles_nothing() {
                 .map(move |d| RunSpec::new(BenchPoint::new(KernelKind::Sddmm, d, 1, 0.04), v))
         })
         .collect();
-    // Build the seed with a plain --cache-dir run.
+    // Build the seed with a plain --cache-dir run. The result tier is
+    // off in both services so this test keeps exercising the *workload*
+    // tier (result-tier replay would skip get_or_build entirely; the
+    // result-tier seed path has its own test in tests/results.rs).
     let cold = Service::start(ServiceConfig {
         workers: 2,
         disk: Some(DiskConfig::new(&seed)),
+        result_cache: false,
         ..ServiceConfig::default()
     });
     let cold_results = cold.run_batch(&specs);
@@ -428,6 +432,7 @@ fn seeded_service_compiles_nothing() {
     let seeded = Service::start(ServiceConfig {
         workers: 2,
         disk: Some(DiskConfig::new(&writable).with_seed(&seed)),
+        result_cache: false,
         ..ServiceConfig::default()
     });
     let seeded_results = seeded.run_batch(&specs);
@@ -463,9 +468,13 @@ fn warm_service_restart_hits_disk_for_every_unique_workload() {
         })
         .collect();
 
+    // Result memoization off: with it on, the warm run would replay
+    // `.dsr` results and never probe the workload tier this test is
+    // about (tests/results.rs covers the warm *result* path).
     let cold_cfg = ServiceConfig {
         workers: 2,
         disk: Some(DiskConfig::new(&dir)),
+        result_cache: false,
         ..ServiceConfig::default()
     };
     let cold = Service::start(cold_cfg.clone());
@@ -657,11 +666,18 @@ fn stats_and_clear_see_the_same_entries_the_service_wrote() {
     drop(service);
     let store = store_at(&dir);
     let s = store.stats();
-    assert_eq!(s.entries, 1);
-    assert!(s.bytes > 0);
-    assert_eq!(s.versions, vec![(CODEC_VERSION, 1)]);
-    assert_eq!(s.unreadable, 0);
-    assert_eq!(store.clear().unwrap(), 1);
-    assert_eq!(store.stats().entries, 0);
+    // One `.dwl` workload entry *and* one `.dsr` result entry, reported
+    // per tier — the `dare cache stats` split.
+    assert_eq!(s.workloads.entries, 1);
+    assert_eq!(s.results.entries, 1, "the sim result is persisted beside the workload");
+    assert!(s.workloads.bytes > 0);
+    assert!(s.results.bytes > 0);
+    assert_eq!(s.workloads.versions, vec![(CODEC_VERSION, 1)]);
+    assert_eq!(s.results.versions, vec![(CODEC_VERSION, 1)]);
+    assert_eq!(s.workloads.unreadable + s.results.unreadable, 0);
+    assert_eq!(s.entries(), 2);
+    assert_eq!(s.bytes(), s.workloads.bytes + s.results.bytes);
+    assert_eq!(store.clear().unwrap(), 2, "clear removes both tiers' entries");
+    assert_eq!(store.stats().entries(), 0);
     let _ = std::fs::remove_dir_all(&dir);
 }

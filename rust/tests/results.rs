@@ -1,0 +1,375 @@
+//! Integration tests for the simulation-result tier (`service::results`):
+//! the cold-vs-replayed determinism regression, warm services replaying
+//! every result (`sims == 0`), the read-only result seed, the
+//! `--no-result-cache` escape hatch, verify-job bypass, the `.dsr`
+//! fault-injection matrix (corrupt entries fall through to a fresh
+//! simulation and are rewritten), and the cross-process single-runner
+//! lock (two services racing a missing key simulate exactly once).
+
+use dare::coordinator::{BenchPoint, RunSpec};
+use dare::kernels::KernelKind;
+use dare::service::results::{decode_result, encode_result};
+use dare::service::{disk, DiskConfig, DiskStore, ResultKey, Service, ServiceConfig};
+use dare::sim::Variant;
+use dare::sparse::DatasetKind;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::SystemTime;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dare-e2e-results-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny(kernel: KernelKind, dataset: DatasetKind, variant: Variant) -> RunSpec {
+    RunSpec::new(BenchPoint::new(kernel, dataset, 1, 0.04), variant)
+}
+
+fn result_key(spec: &RunSpec) -> ResultKey {
+    ResultKey::new(&spec.workload_key(), &spec.config())
+}
+
+fn dsr_path(dir: &Path, spec: &RunSpec) -> PathBuf {
+    dir.join(format!("{}.dsr", result_key(spec).file_stem()))
+}
+
+fn dsr_files(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("dsr"))
+        .collect();
+    v.sort();
+    v
+}
+
+/// `(name, content, mtime)` of every file in `dir` — the seed-tier
+/// "nothing here may ever change" witness.
+fn dir_snapshot(dir: &Path) -> Vec<(String, Vec<u8>, SystemTime)> {
+    let mut v: Vec<(String, Vec<u8>, SystemTime)> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let content = std::fs::read(e.path()).unwrap();
+            let mtime = e.metadata().unwrap().modified().unwrap();
+            (name, content, mtime)
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+fn service_at(dir: &Path, workers: usize) -> Service {
+    Service::start(ServiceConfig {
+        workers,
+        disk: Some(DiskConfig::new(dir)),
+        ..ServiceConfig::default()
+    })
+}
+
+/// The acceptance-criteria determinism regression: the stats a cold
+/// simulation produces and the stats a warm service replays from the
+/// `.dsr` entry are bit-identical — asserted by comparing the canonical
+/// entry encodings, which cover every counter (and the one f64 by bit
+/// pattern), not just a couple of headline fields.
+#[test]
+fn cold_and_replayed_results_are_bit_identical() {
+    let dir = tmp_dir("bit-identical");
+    let specs = vec![
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::Baseline),
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre),
+        tiny(KernelKind::SpMM, DatasetKind::PubMed, Variant::DareFull),
+    ];
+    let cold = service_at(&dir, 2);
+    let cold_results = cold.run_batch(&specs);
+    assert_eq!(cold.metrics().sims, specs.len() as u64, "every cold job simulates");
+    drop(cold);
+
+    let warm = service_at(&dir, 2);
+    let warm_results = warm.run_batch(&specs);
+    let m = warm.metrics();
+    assert_eq!(m.sims, 0, "a warm service replays, never simulates");
+    for (spec, (a, b)) in specs.iter().zip(cold_results.iter().zip(&warm_results)) {
+        let rk = result_key(spec);
+        assert_eq!(a.name, b.name);
+        assert_eq!(
+            encode_result(&rk, &a.stats),
+            encode_result(&rk, &b.stats),
+            "replayed stats must be bit-identical for {}",
+            a.name
+        );
+        // The derived energy is a pure function of the stats.
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits(), "{}", a.name);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The warm-sweep acceptance metric end-to-end: second service over the
+/// same cache dir reports builds == 0 **and** sims == 0, with every job
+/// a result hit.
+#[test]
+fn warm_service_replays_every_result_without_building() {
+    let dir = tmp_dir("warm");
+    let specs: Vec<RunSpec> = [Variant::Baseline, Variant::Nvr, Variant::DareFre]
+        .into_iter()
+        .flat_map(|v| {
+            [DatasetKind::PubMed, DatasetKind::Gpt2Attention]
+                .into_iter()
+                .map(move |d| RunSpec::new(BenchPoint::new(KernelKind::Sddmm, d, 1, 0.04), v))
+        })
+        .collect();
+    let cold = service_at(&dir, 2);
+    let _ = cold.run_batch(&specs);
+    drop(cold);
+    assert_eq!(dsr_files(&dir).len(), specs.len(), "one .dsr entry per (workload, config)");
+
+    let warm = service_at(&dir, 2);
+    let _ = warm.run_batch(&specs);
+    let m = warm.metrics();
+    let c = m.cache;
+    assert_eq!(m.sims, 0, "warm run simulates nothing");
+    assert_eq!(c.builds(), 0, "warm run compiles nothing");
+    assert_eq!(c.result_hits, specs.len() as u64, "every job replayed from the .dsr tier");
+    assert_eq!(c.result_misses, 0);
+    assert!(
+        c.result_hit_rate() >= 0.9,
+        "warm result hit rate {} below the CI bar",
+        c.result_hit_rate()
+    );
+    // Replays skip the workload tiers entirely.
+    assert_eq!(c.lookups(), 0, "no workload fetch behind a result replay");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Result entries ride the read-only seed tier: a fresh writable dir
+/// over a previous run's cache replays every result from the seed,
+/// promotes each into the writable tier, and never writes the seed.
+#[test]
+fn seeded_service_simulates_nothing_and_never_writes_the_seed() {
+    let seed = tmp_dir("seed-src");
+    let writable = tmp_dir("seed-writable");
+    let specs = vec![
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::Baseline),
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFull),
+    ];
+    let cold = service_at(&seed, 2);
+    let cold_results = cold.run_batch(&specs);
+    drop(cold);
+    let before = dir_snapshot(&seed);
+
+    let seeded = Service::start(ServiceConfig {
+        workers: 2,
+        disk: Some(DiskConfig::new(&writable).with_seed(&seed)),
+        ..ServiceConfig::default()
+    });
+    let seeded_results = seeded.run_batch(&specs);
+    let m = seeded.metrics();
+    assert_eq!(m.sims, 0, "a seeded run simulates nothing");
+    assert_eq!(m.cache.result_seed_hits, specs.len() as u64);
+    assert_eq!(m.cache.result_misses, 0);
+    for (a, b) in cold_results.iter().zip(&seeded_results) {
+        assert_eq!(a.stats.cycles, b.stats.cycles, "{}", a.name);
+    }
+    // Promoted: a third service over the writable dir alone replays
+    // without the seed.
+    assert_eq!(dsr_files(&writable).len(), specs.len(), "seed hits promoted to writable tier");
+    drop(seeded);
+    let third = service_at(&writable, 2);
+    let _ = third.run_batch(&specs);
+    let m = third.metrics();
+    assert_eq!((m.sims, m.cache.result_seed_hits), (0, 0));
+    assert_eq!(m.cache.result_hits, specs.len() as u64);
+    // Byte-for-byte and mtime-for-mtime, the seed is exactly what it was.
+    assert_eq!(dir_snapshot(&seed), before, "the seed must never be written or touched");
+    let _ = std::fs::remove_dir_all(&seed);
+    let _ = std::fs::remove_dir_all(&writable);
+}
+
+/// `--no-result-cache`: the escape hatch re-simulates every job (and
+/// counts no result probes), while workload builds still cache.
+#[test]
+fn disabled_result_tier_re_simulates_every_warm_job() {
+    let dir = tmp_dir("no-result-cache");
+    let specs = vec![
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::Baseline),
+        tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre),
+    ];
+    let cold = service_at(&dir, 2);
+    let _ = cold.run_batch(&specs);
+    drop(cold);
+
+    let warm = Service::start(ServiceConfig {
+        workers: 2,
+        disk: Some(DiskConfig::new(&dir)),
+        result_cache: false,
+        ..ServiceConfig::default()
+    });
+    let _ = warm.run_batch(&specs);
+    let m = warm.metrics();
+    assert_eq!(m.sims, specs.len() as u64, "every job re-simulates");
+    let c = m.cache;
+    assert_eq!((c.result_hits, c.result_misses, c.result_seed_hits), (0, 0, 0));
+    // The workload tier still serves: both specs share one strided
+    // build, loaded from disk, zero compiles.
+    assert_eq!(c.builds(), 0, "workload builds still cache");
+    assert_eq!(c.disk_hits, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Verification jobs rerun the functional model against the memory
+/// image — `SimStats` doesn't capture that, so they bypass the result
+/// tier in both directions: never served by it, never stored into it.
+#[test]
+fn verify_jobs_bypass_the_result_tier() {
+    let dir = tmp_dir("verify-bypass");
+    let mut spec = tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre);
+    spec.verify = true;
+    let service = service_at(&dir, 1);
+    let results = service.run_batch(&[spec.clone(), spec.clone()]);
+    assert!(results.iter().all(|r| r.verify_err.is_some()), "verify jobs verified");
+    let m = service.metrics();
+    assert_eq!(m.sims, 2, "verify jobs always simulate");
+    let c = m.cache;
+    assert_eq!((c.result_hits, c.result_misses, c.result_seed_hits), (0, 0, 0));
+    assert!(dsr_files(&dir).is_empty(), "verify jobs never write .dsr entries");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `.dsr` fault-injection matrix at the decode boundary: every
+/// bit-flip and truncation of a real entry must fail closed (an `Err`,
+/// never a panic, never silently wrong stats).
+#[test]
+fn dsr_corruption_is_always_detected() {
+    let dir = tmp_dir("dsr-decode-matrix");
+    let spec = tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre);
+    let service = service_at(&dir, 1);
+    let _ = service.run_batch(std::slice::from_ref(&spec));
+    drop(service);
+    let rk = result_key(&spec);
+    let pristine = std::fs::read(dsr_path(&dir, &spec)).unwrap();
+    decode_result(&rk, &pristine).expect("pristine entry decodes");
+    // Bit-flip sweep across the whole entry — magic, version, checksum,
+    // length, and compressed payload alike. Offsets 6–7 are the header's
+    // reserved (ignored) field, the only bytes a flip may not trip.
+    for i in (0..pristine.len()).filter(|i| !(6..8).contains(i)) {
+        let mut bad = pristine.clone();
+        bad[i] ^= 0x04;
+        assert!(decode_result(&rk, &bad).is_err(), "flip at byte {i} must not decode");
+    }
+    // Truncation sweep.
+    for n in 0..pristine.len() {
+        assert!(decode_result(&rk, &pristine[..n]).is_err(), "prefix {n} must not decode");
+    }
+    // Hostile declared lengths are rejected before any allocation.
+    let huge = disk::frame(disk::CODEC_VERSION, 0, u64::MAX, &[0u8; 8]);
+    assert!(decode_result(&rk, &huge).unwrap_err().contains("sanity"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt writable `.dsr` entries fall through to a fresh simulation
+/// and are rewritten — the entry heals byte-for-byte (the codec is
+/// deterministic), and the job still succeeds with correct stats.
+#[test]
+fn corrupt_result_entries_fall_through_to_simulation_and_rewrite() {
+    let dir = tmp_dir("dsr-heal");
+    let spec = tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre);
+    let cold = service_at(&dir, 1);
+    let baseline = cold.run_batch(std::slice::from_ref(&spec));
+    drop(cold);
+    let path = dsr_path(&dir, &spec);
+    let pristine = std::fs::read(&path).unwrap();
+
+    type Mutate = fn(&[u8]) -> Vec<u8>;
+    let cases: [(&str, Mutate); 4] = [
+        ("truncated", |b| b[..b.len() - 5].to_vec()),
+        ("bit-flip", |b| {
+            let mut v = b.to_vec();
+            let mid = v.len() / 2;
+            v[mid] ^= 0x20;
+            v
+        }),
+        ("future-version", |b| {
+            let mut v = b.to_vec();
+            let bumped = (disk::CODEC_VERSION + 1).to_le_bytes();
+            v[4] = bumped[0];
+            v[5] = bumped[1];
+            v
+        }),
+        ("garbage", |b| vec![0xA5; b.len().min(48)]),
+    ];
+    for (tag, mutate) in cases {
+        std::fs::write(&path, mutate(&pristine)).unwrap();
+        let service = service_at(&dir, 1);
+        let results = service.run_batch(std::slice::from_ref(&spec));
+        let m = service.metrics();
+        assert_eq!(m.sims, 1, "{tag}: corrupt entry must re-simulate, not replay");
+        assert_eq!(m.cache.result_hits, 0, "{tag}");
+        assert_eq!(results[0].stats.cycles, baseline[0].stats.cycles, "{tag}");
+        let healed = std::fs::read(&path).unwrap_or_else(|e| panic!("{tag}: rewritten: {e}"));
+        assert_eq!(healed, pristine, "{tag}: deterministic re-simulation re-persists identically");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two services (≈ two processes) over one cache dir racing the same
+/// missing result key: the single-runner flock serializes them, so the
+/// simulation runs exactly once and the loser replays the winner's
+/// entry.
+#[cfg(unix)]
+#[test]
+fn concurrent_services_simulate_a_result_exactly_once() {
+    let dir = tmp_dir("two-runners");
+    let spec = tiny(KernelKind::Sddmm, DatasetKind::PubMed, Variant::DareFre);
+    let services: Vec<Arc<Service>> = (0..2).map(|_| Arc::new(service_at(&dir, 1))).collect();
+    let barrier = Arc::new(std::sync::Barrier::new(services.len()));
+    let handles: Vec<_> = services
+        .iter()
+        .map(|service| {
+            let service = service.clone();
+            let spec = spec.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                service.run_batch(std::slice::from_ref(&spec))[0].stats.cycles
+            })
+        })
+        .collect();
+    let cycles: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(cycles[0], cycles[1], "both runners observe identical stats");
+    let total_sims: u64 = services.iter().map(|s| s.metrics().sims).sum();
+    let total_replays: u64 = services.iter().map(|s| s.metrics().cache.result_hits).sum();
+    assert_eq!(total_sims, 1, "the run lock admits exactly one simulation");
+    assert_eq!(total_replays, 1, "the other runner replays the winner's entry");
+    assert_eq!(dsr_files(&dir).len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A direct store-level round trip through `DiskStore`, plus the
+/// per-tier stats split: result entries are visible under
+/// `stats().results`, not `stats().workloads`.
+#[test]
+fn store_level_result_round_trip_and_stats_split() {
+    let dir = tmp_dir("store-level");
+    let spec = tiny(KernelKind::SpMM, DatasetKind::PubMed, Variant::Baseline);
+    let rk = result_key(&spec);
+    let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+    assert!(store.load_result(&rk).is_none(), "cold store misses");
+    let mut stats = dare::sim::SimStats::default();
+    stats.cycles = 424242;
+    stats.dram.busy_cycles = 3.5;
+    let stored = store.store_result(&rk, &stats).unwrap();
+    assert!(stored.stored_bytes > 0);
+    let loaded = store.load_result(&rk).expect("stored entry loads");
+    assert!(!loaded.from_seed);
+    assert_eq!(loaded.stats.cycles, 424242);
+    assert_eq!(loaded.stats.dram.busy_cycles.to_bits(), 3.5f64.to_bits());
+    let s = store.stats();
+    assert_eq!((s.workloads.entries, s.results.entries), (0, 1), "tier split");
+    assert_eq!(s.results.versions, vec![(disk::CODEC_VERSION, 1)]);
+    assert_eq!(store.clear().unwrap(), 1, "clear covers .dsr entries");
+    let _ = std::fs::remove_dir_all(&dir);
+}

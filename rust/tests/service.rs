@@ -101,10 +101,23 @@ fn n_identical_specs_build_once() {
     assert_eq!(results.len(), 8);
     // Deterministic simulator + shared build → identical cycle counts.
     assert!(results.windows(2).all(|w| w[0].stats.cycles == w[1].stats.cycles));
-    let counters = service.metrics().cache;
+    let m = service.metrics();
+    let counters = m.cache;
     assert_eq!(counters.builds(), 1, "8 identical queued specs must build exactly once");
-    assert_eq!(counters.hits + counters.coalesced, 7);
-    assert!(counters.hit_rate() > 0.8);
+    // Every job past the first was served by reuse: either a memory /
+    // coalesced hit on the workload build, or an in-process replay of
+    // the memoized simulation result. How the 7 split between the two
+    // depends on worker interleaving; the sum does not.
+    assert_eq!(
+        counters.hits + counters.coalesced + counters.result_hits,
+        7,
+        "{counters:?}"
+    );
+    // Without a disk tier every job probes the result memo exactly once:
+    // replays hit, the rest simulate.
+    assert_eq!(counters.result_hits + counters.result_misses, 8, "{counters:?}");
+    assert_eq!(m.sims, counters.result_misses, "every memo miss simulates");
+    assert!(m.sims >= 1, "at least the first job must simulate");
 }
 
 #[test]
