@@ -1,0 +1,600 @@
+//! The simulated world and the actors the scheduler interleaves over
+//! it.
+//!
+//! Everything an actor touches is the *production* stack: sessions go
+//! through [`run_session`], cache traffic through [`WorkloadCache`] and
+//! [`DiskStore`], GC through `gc_with` — the only substitutions are the
+//! environment seams in [`super::env`] (in-memory session pipes, the
+//! disk fault hook). Each actor step returns a short, deterministic
+//! description for the trace, or an `Err` describing the invariant it
+//! saw break.
+
+use super::env::{FaultInjector, FlakyWriter, SharedBuf};
+use super::faults::{FaultClass, FaultSpec};
+use crate::coordinator::{run_prebuilt, BenchPoint, RunSpec};
+use crate::kernels::KernelKind;
+use crate::service::queue::{Closed, PushError};
+use crate::service::transport::{run_session, SessionOpts};
+use crate::service::{
+    DiskConfig, DiskStore, JobQueue, Json, ResultKey, Service, ServiceConfig, WorkloadCache,
+};
+use crate::sim::Variant;
+use crate::sparse::DatasetKind;
+use crate::util::prng::Pcg32;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Dataset scale every DST spec uses — the unit-test scale, so builds
+/// and simulations stay fast enough for thousands of steps.
+const SCALE: f64 = 0.04;
+
+/// One entry of the fixed spec pool actors draw jobs from.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SpecDef {
+    kernel: KernelKind,
+    variant: Variant,
+    block: usize,
+}
+
+impl SpecDef {
+    /// The fixed pool: 2 kernels × 2 blocks × (baseline, dare-full), so
+    /// the schedule exercises both the strided and the densified (GSA)
+    /// lowerings and eight distinct workload/result keys.
+    pub fn pool() -> Vec<SpecDef> {
+        let mut specs = Vec::new();
+        for kernel in [KernelKind::Sddmm, KernelKind::SpMM] {
+            for block in [1usize, 2] {
+                for variant in [Variant::Baseline, Variant::DareFull] {
+                    specs.push(SpecDef { kernel, variant, block });
+                }
+            }
+        }
+        specs
+    }
+
+    /// The in-process [`RunSpec`] for direct-path actors.
+    pub fn run_spec(&self) -> RunSpec {
+        RunSpec::new(
+            BenchPoint::new(self.kernel, DatasetKind::PubMed, self.block, SCALE),
+            self.variant,
+        )
+    }
+
+    /// The JSONL job line a session actor submits for this spec.
+    pub fn job_line(&self, id: &str) -> String {
+        format!(
+            "{{\"id\":\"{id}\",\"kernel\":\"{}\",\"dataset\":\"pubmed\",\"variant\":\"{}\",\"block\":{},\"scale\":0.04}}",
+            self.kernel.name(),
+            self.variant.name(),
+            self.block
+        )
+    }
+}
+
+/// The kinds of actor the scheduler can step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActorKind {
+    /// A batch client: submits 1–3 jobs (sometimes plus a malformed
+    /// frame) through a full `run_session` and checks every accepted
+    /// job is answered exactly once, in a valid stream shape.
+    Client,
+    /// A client that ends its session with `{"cmd":"shutdown"}`: the
+    /// drain path — all accepted jobs must still complete and the
+    /// server-shutdown flag must flip.
+    Drain,
+    /// A client whose connection drops mid-stream (byte-budgeted
+    /// writer): `run_session` must finish the jobs and surface the
+    /// write failure as an error, not swallow it.
+    DropConn,
+    /// A "second process": drives a separate [`WorkloadCache`] +
+    /// [`DiskStore`] over the same directories, exercising
+    /// cross-process hits, seed promotion, and quarantine-on-load.
+    Direct,
+    /// Runs the store's GC: dry-run sweeps, full wipes (bound 0), and
+    /// no-op sweeps (bound `u64::MAX`).
+    Gc,
+    /// Crash/restart of the "second process": drops and recreates the
+    /// direct handles, losing all in-memory state but no disk state.
+    Restart,
+    /// An adversary that flips or truncates bytes of a committed entry
+    /// in place (only scheduled when the `corrupt-entry` fault class is
+    /// enabled).
+    Corrupt,
+    /// A single-threaded model check of [`JobQueue`] backpressure:
+    /// full-queue `try_push`, expiring `push_timeout` (when the
+    /// `queue-stall` class is enabled), and close-then-drain.
+    Queue,
+}
+
+impl ActorKind {
+    /// Every actor kind, in canonical scheduling order.
+    pub const ALL: [ActorKind; 8] = [
+        ActorKind::Client,
+        ActorKind::Drain,
+        ActorKind::DropConn,
+        ActorKind::Direct,
+        ActorKind::Gc,
+        ActorKind::Restart,
+        ActorKind::Corrupt,
+        ActorKind::Queue,
+    ];
+
+    /// Stable command-line / trace name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ActorKind::Client => "client",
+            ActorKind::Drain => "drain",
+            ActorKind::DropConn => "drop-conn",
+            ActorKind::Direct => "direct",
+            ActorKind::Gc => "gc",
+            ActorKind::Restart => "restart",
+            ActorKind::Corrupt => "corrupt",
+            ActorKind::Queue => "queue",
+        }
+    }
+
+    /// Parse a single actor name as written on the command line.
+    pub fn from_name(name: &str) -> Option<ActorKind> {
+        ActorKind::ALL.into_iter().find(|a| a.name() == name)
+    }
+
+    /// Parse `all` or a comma-separated list of actor names, normalized
+    /// to canonical order (so schedules don't depend on spelling).
+    pub fn parse_list(spec: &str) -> Result<Vec<ActorKind>, String> {
+        if spec.trim() == "all" {
+            return Ok(ActorKind::ALL.to_vec());
+        }
+        let mut picked = [false; ActorKind::ALL.len()];
+        for part in spec.split(',') {
+            let name = part.trim();
+            if name.is_empty() {
+                continue;
+            }
+            match ActorKind::from_name(name) {
+                Some(a) => picked[ActorKind::ALL.iter().position(|x| *x == a).unwrap()] = true,
+                None => {
+                    return Err(format!(
+                        "unknown actor '{name}' (expected all or a comma list of: {})",
+                        ActorKind::ALL.map(ActorKind::name).join(", ")
+                    ))
+                }
+            }
+        }
+        let actors: Vec<ActorKind> = ActorKind::ALL
+            .into_iter()
+            .zip(picked)
+            .filter_map(|(a, on)| if on { Some(a) } else { None })
+            .collect();
+        if actors.is_empty() {
+            return Err("empty actor list".to_string());
+        }
+        Ok(actors)
+    }
+}
+
+/// The world one DST run steps: a live in-process service plus a
+/// "second process" worth of direct handles, all over one writable
+/// cache dir and one read-only seed dir, with the shared fault
+/// injector threaded through every store.
+pub(crate) struct World {
+    /// The writable cache directory.
+    pub dir: PathBuf,
+    /// The read-only seed directory (baked before stepping starts).
+    pub seed_dir: PathBuf,
+    /// The shared one-shot disk fault seam.
+    pub injector: Arc<FaultInjector>,
+    /// The live service sessions run against.
+    pub service: Service,
+    /// The "second process" store handle.
+    pub direct_store: Arc<DiskStore>,
+    /// The "second process" cache handle.
+    pub direct_cache: WorkloadCache,
+    /// The fixed spec pool.
+    pub specs: Vec<SpecDef>,
+}
+
+impl World {
+    /// Build the world: bake the seed tier if empty, start a one-worker
+    /// service over a hooked store, and open the direct handles.
+    pub fn new(
+        dir: &Path,
+        seed_dir: &Path,
+        injector: Arc<FaultInjector>,
+    ) -> Result<World, String> {
+        let specs = SpecDef::pool();
+        bake_seed(seed_dir, &specs)?;
+        let service_store = open_store(dir, seed_dir)?.with_hooks(injector.clone());
+        // One worker keeps completion order equal to submission order —
+        // the concurrency the harness explores is the *interleaving of
+        // actors*, which the seed fully determines.
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_capacity: 64,
+            cache_capacity: 16,
+            ..ServiceConfig::default()
+        };
+        let service = Service::start_with_store(cfg, Some(Arc::new(service_store)));
+        let (direct_store, direct_cache) = direct_handles(dir, seed_dir, &injector)?;
+        Ok(World {
+            dir: dir.to_path_buf(),
+            seed_dir: seed_dir.to_path_buf(),
+            injector,
+            service,
+            direct_store,
+            direct_cache,
+            specs,
+        })
+    }
+
+    /// Crash/restart the "second process": new store + cache handles,
+    /// empty memory tiers, same directories and fault seam.
+    pub fn restart_direct(&mut self) -> Result<(), String> {
+        let (store, cache) = direct_handles(&self.dir, &self.seed_dir, &self.injector)?;
+        self.direct_store = store;
+        self.direct_cache = cache;
+        Ok(())
+    }
+}
+
+/// Open a hook-free unbounded store over `dir` with `seed_dir` as the
+/// read-only tier. `max_bytes` is `u64::MAX` so the post-store GC never
+/// evicts on its own — evictions happen only when the GC *actor* runs,
+/// keeping disk state a pure function of the schedule.
+fn open_store(dir: &Path, seed_dir: &Path) -> Result<DiskStore, String> {
+    DiskStore::open(DiskConfig {
+        dir: dir.to_path_buf(),
+        max_bytes: u64::MAX,
+        seed: Some(seed_dir.to_path_buf()),
+    })
+    .map_err(|e| format!("open cache dir: {e}"))
+}
+
+/// Fresh "second process" handles over the shared directories.
+fn direct_handles(
+    dir: &Path,
+    seed_dir: &Path,
+    injector: &Arc<FaultInjector>,
+) -> Result<(Arc<DiskStore>, WorkloadCache), String> {
+    let store = Arc::new(open_store(dir, seed_dir)?.with_hooks(injector.clone()));
+    let cache = WorkloadCache::new(8).with_disk(store.clone());
+    Ok((store, cache))
+}
+
+/// Bake the read-only seed tier (two workloads + one result) unless it
+/// already holds entries — the baked bytes are deterministic, so a
+/// cached seed dir (CI) and a fresh bake are interchangeable.
+fn bake_seed(seed_dir: &Path, specs: &[SpecDef]) -> Result<(), String> {
+    let has_entries = fs::read_dir(seed_dir)
+        .map(|read| {
+            read.flatten().any(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                name.ends_with(".dwl") || name.ends_with(".dsr")
+            })
+        })
+        .unwrap_or(false);
+    if has_entries {
+        return Ok(());
+    }
+    let store = DiskStore::open(DiskConfig {
+        dir: seed_dir.to_path_buf(),
+        max_bytes: u64::MAX,
+        seed: None,
+    })
+    .map_err(|e| format!("bake seed dir: {e}"))?;
+    let err = |e| format!("bake seed entry: {e}");
+    let k0 = specs[0].run_spec().workload_key();
+    let k1 = specs[1].run_spec().workload_key();
+    store.store(&k0, &k0.build()).map_err(err)?;
+    store.store(&k1, &k1.build()).map_err(err)?;
+    let spec0 = specs[0].run_spec();
+    let workload = k0.build();
+    let run = run_prebuilt(&spec0, &workload, false);
+    let rk = ResultKey::new(&k0, &spec0.config());
+    store.store_result(&rk, &run.stats).map_err(err)?;
+    Ok(())
+}
+
+/// How a session actor's connection behaves.
+enum SessionMode {
+    /// Well-behaved client over an in-memory sink.
+    Plain,
+    /// Well-behaved client that ends with `{"cmd":"shutdown"}`.
+    Drain,
+    /// Peer vanishes after a small byte budget.
+    DropConn,
+}
+
+/// Run one actor step. `Ok` carries the deterministic trace
+/// description; `Err` carries a violation.
+pub(crate) fn execute(
+    kind: ActorKind,
+    world: &mut World,
+    rng: &mut Pcg32,
+    faults: &FaultSpec,
+) -> Result<String, String> {
+    match kind {
+        ActorKind::Client => session_step(world, rng, SessionMode::Plain),
+        ActorKind::Drain => session_step(world, rng, SessionMode::Drain),
+        ActorKind::DropConn => session_step(world, rng, SessionMode::DropConn),
+        ActorKind::Direct => direct_step(world, rng),
+        ActorKind::Gc => gc_step(world, rng),
+        ActorKind::Restart => {
+            world.restart_direct()?;
+            Ok("restart: fresh direct store + cache handles".to_string())
+        }
+        ActorKind::Corrupt => corrupt_step(world, rng),
+        ActorKind::Queue => queue_step(faults),
+    }
+}
+
+/// One full session through `run_session`, then stream-shape checks.
+fn session_step(
+    world: &mut World,
+    rng: &mut Pcg32,
+    mode: SessionMode,
+) -> Result<String, String> {
+    let njobs = 1 + rng.below(3) as usize;
+    let malformed = rng.chance(0.25);
+    let mut input = String::new();
+    for i in 0..njobs {
+        let idx = rng.below(world.specs.len() as u32) as usize;
+        input.push_str(&world.specs[idx].job_line(&format!("j{i}")));
+        input.push('\n');
+    }
+    if malformed {
+        input.push_str("this is not a job frame\n");
+    }
+    if matches!(mode, SessionMode::Drain) {
+        input.push_str("{\"cmd\":\"shutdown\"}\n");
+    }
+    let expected = njobs as u64 + u64::from(malformed);
+    let opts = SessionOpts::default();
+
+    if let SessionMode::DropConn = mode {
+        let budget = rng.below(48) as usize;
+        let writer = Box::new(FlakyWriter::new(budget));
+        return match run_session(&world.service, input.as_bytes(), writer, &opts, None) {
+            Ok(_) => Err(
+                "dropped connection: run_session returned Ok, write failure was swallowed"
+                    .to_string(),
+            ),
+            Err(e) if e.kind() == io::ErrorKind::BrokenPipe => Ok(format!(
+                "drop-conn: jobs={njobs} malformed={} budget={budget}B -> BrokenPipe surfaced",
+                u64::from(malformed)
+            )),
+            Err(e) => Err(format!(
+                "dropped connection surfaced wrong error kind: {e}"
+            )),
+        };
+    }
+
+    let buf = SharedBuf::default();
+    let flag = AtomicBool::new(false);
+    let server_shutdown = if matches!(mode, SessionMode::Drain) { Some(&flag) } else { None };
+    let summary = run_session(
+        &world.service,
+        input.as_bytes(),
+        Box::new(buf.clone()),
+        &opts,
+        server_shutdown,
+    )
+    .map_err(|e| format!("session against an in-memory sink failed: {e}"))?;
+
+    // Stream-shape invariants. Only *counts* and ordering of the final
+    // `done` are asserted: with malformed frames in play, the reader
+    // thread answers parse failures while the writer thread streams
+    // results, so inter-result order is scheduling-dependent — but
+    // every accepted job must be answered, and `done` must come last.
+    let lines = buf.take_lines();
+    let mut results = 0u64;
+    let mut done = 0u64;
+    let mut failed = 0u64;
+    for line in &lines {
+        let json = Json::parse(line)
+            .map_err(|e| format!("session emitted an unparseable line: {e}"))?;
+        match json.get("event").and_then(|j| j.as_str()) {
+            Some("result") => {
+                results += 1;
+                if let Some(Json::Bool(false)) = json.get("ok") {
+                    failed += 1;
+                }
+            }
+            Some("done") => done += 1,
+            Some("busy") => {}
+            other => {
+                return Err(format!("session emitted unknown event {other:?}"))
+            }
+        }
+    }
+    if summary.jobs != expected {
+        return Err(format!(
+            "session summary counted {} jobs, submitted {expected}",
+            summary.jobs
+        ));
+    }
+    if results != expected {
+        return Err(format!(
+            "accepted jobs lost: {expected} submitted, {results} result events"
+        ));
+    }
+    if done != 1 {
+        return Err(format!("expected exactly one done event, saw {done}"));
+    }
+    match lines.last().and_then(|l| Json::parse(l).ok()) {
+        Some(j) if j.get("event").and_then(|e| e.as_str()) == Some("done") => {}
+        _ => return Err("done event was not the final line of the session".to_string()),
+    }
+    if summary.failed != u64::from(malformed) || failed != u64::from(malformed) {
+        return Err(format!(
+            "jobs failed under fault injection: summary.failed={} failed-events={failed}, \
+             expected only the {} malformed frame(s) — store faults must never fail jobs",
+            summary.failed,
+            u64::from(malformed)
+        ));
+    }
+    let drained = matches!(mode, SessionMode::Drain);
+    if summary.shutdown_requested != drained || flag.load(Ordering::SeqCst) != drained {
+        return Err(format!(
+            "shutdown_requested={} server_flag={} but session {} a shutdown cmd",
+            summary.shutdown_requested,
+            flag.load(Ordering::SeqCst),
+            if drained { "sent" } else { "never sent" }
+        ));
+    }
+    let label = if drained { "drain" } else { "client" };
+    Ok(format!(
+        "{label}: jobs={njobs} malformed={} -> {results} results, done last",
+        u64::from(malformed)
+    ))
+}
+
+/// One "second process" cache operation.
+fn direct_step(world: &mut World, rng: &mut Pcg32) -> Result<String, String> {
+    let idx = rng.below(world.specs.len() as u32) as usize;
+    let spec = world.specs[idx].run_spec();
+    let key = spec.workload_key();
+    match rng.below(3) {
+        0 => {
+            let (_workload, fetch) = world
+                .direct_cache
+                .get_or_build(&key)
+                .map_err(|e| format!("get_or_build failed for a valid key: {e}"))?;
+            Ok(format!(
+                "direct: get_or_build {} -> {fetch:?}",
+                key.cache_file_stem()
+            ))
+        }
+        1 => {
+            let rk = ResultKey::new(&key, &spec.config());
+            let hit = world.direct_cache.lookup_result(&rk).is_some();
+            Ok(format!("direct: lookup_result {} -> hit={hit}", rk.name()))
+        }
+        _ => {
+            let from_seed = world.direct_store.load(&key).map(|l| l.from_seed);
+            Ok(format!(
+                "direct: disk load {} -> {}",
+                key.cache_file_stem(),
+                match from_seed {
+                    Some(true) => "seed hit",
+                    Some(false) => "writable hit",
+                    None => "miss",
+                }
+            ))
+        }
+    }
+}
+
+/// One GC sweep over the shared store.
+fn gc_step(world: &mut World, rng: &mut Pcg32) -> Result<String, String> {
+    match rng.below(3) {
+        0 => {
+            let r = world.direct_store.gc_with(0, true);
+            Ok(format!(
+                "gc: dry-run would evict {} entries ({} lock-skipped)",
+                r.victims.len(),
+                r.skipped_locked
+            ))
+        }
+        1 => {
+            let r = world.direct_store.gc_with(0, false);
+            Ok(format!(
+                "gc: wiped {} entries ({} lock-skipped)",
+                r.victims.len(),
+                r.skipped_locked
+            ))
+        }
+        _ => {
+            let r = world.direct_store.gc_with(u64::MAX, false);
+            Ok(format!("gc: no-op sweep evicted {}", r.victims.len()))
+        }
+    }
+}
+
+/// Flip or truncate one committed entry in place.
+fn corrupt_step(world: &mut World, rng: &mut Pcg32) -> Result<String, String> {
+    let mut names: Vec<String> = Vec::new();
+    if let Ok(read) = fs::read_dir(&world.dir) {
+        for e in read.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".dwl") || name.ends_with(".dsr") {
+                names.push(name);
+            }
+        }
+    }
+    names.sort();
+    if names.is_empty() {
+        return Ok("corrupt: no committed entries to attack".to_string());
+    }
+    let name = names[rng.below(names.len() as u32) as usize].clone();
+    let path = world.dir.join(&name);
+    let bytes = fs::read(&path).map_err(|e| format!("corrupt actor read failed: {e}"))?;
+    if bytes.len() < 2 || rng.chance(0.5) {
+        let keep = rng.below(bytes.len().max(1) as u32) as usize;
+        fs::write(&path, &bytes[..keep])
+            .map_err(|e| format!("corrupt actor truncate failed: {e}"))?;
+        Ok(format!("corrupt: truncated {name} to {keep} bytes"))
+    } else {
+        let mut bytes = bytes;
+        let off = rng.below(bytes.len() as u32) as usize;
+        bytes[off] ^= 0xFF;
+        fs::write(&path, &bytes)
+            .map_err(|e| format!("corrupt actor flip failed: {e}"))?;
+        Ok(format!("corrupt: flipped byte {off} of {name}"))
+    }
+}
+
+/// Single-threaded model check of the bounded queue's backpressure and
+/// close semantics (the concurrent versions live in `queue.rs` tests;
+/// here the point is exercising them inside the fault schedule).
+fn queue_step(faults: &FaultSpec) -> Result<String, String> {
+    let q: JobQueue<u32> = JobQueue::bounded(2);
+    q.push(1).map_err(|_| "push into an open, non-full queue failed")?;
+    q.push(2).map_err(|_| "push into an open, non-full queue failed")?;
+    match q.try_push(3) {
+        Err(PushError::Full(3)) => {}
+        other => return Err(format!("try_push on a full queue: expected Full(3), got {other:?}")),
+    }
+    let stalled = faults.contains(FaultClass::QueueStall);
+    if stalled {
+        match q.push_timeout(4, Duration::from_millis(2)) {
+            Err(PushError::Full(4)) => {}
+            other => {
+                return Err(format!(
+                    "push_timeout on a full queue: expected Full(4) after expiry, got {other:?}"
+                ))
+            }
+        }
+    }
+    if q.pop() != Some(1) {
+        return Err("pop returned the wrong item (FIFO broken)".to_string());
+    }
+    q.try_push(5).map_err(|e| format!("try_push after a pop freed a slot: {e:?}"))?;
+    if q.pop() != Some(2) {
+        return Err("pop returned the wrong item (FIFO broken)".to_string());
+    }
+    q.close();
+    match q.push(6) {
+        Err(Closed(6)) => {}
+        other => return Err(format!("push after close: expected Closed(6), got {other:?}")),
+    }
+    match q.push_timeout(7, Duration::from_millis(2)) {
+        Err(PushError::Closed(7)) => {}
+        other => {
+            return Err(format!("push_timeout after close: expected Closed(7), got {other:?}"))
+        }
+    }
+    if q.pop() != Some(5) {
+        return Err("close dropped a queued item".to_string());
+    }
+    if q.pop().is_some() {
+        return Err("pop after drain of a closed queue returned an item".to_string());
+    }
+    Ok(format!(
+        "queue: bounded/backpressure{}/close-drain model holds",
+        if stalled { "/stall" } else { "" }
+    ))
+}

@@ -1,0 +1,139 @@
+//! The pluggable environment layer the DST scheduler threads through
+//! the production stack: a virtual clock, the one-shot disk fault
+//! injector (a [`DiskHooks`] implementation handed to every
+//! [`DiskStore`](crate::service::DiskStore) the harness opens), and the
+//! byte-budgeted writer that models a client whose connection drops
+//! mid-stream. Nothing here mocks the service — these are the seams the
+//! real code already calls through.
+
+use crate::service::{DiskHooks, WritePlan};
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex};
+
+/// Deterministic virtual time. The scheduler advances it by a
+/// PRNG-drawn amount per step and stamps trace events with it, so a
+/// trace carries a stable notion of "when" with zero wall-clock
+/// coupling — two runs of the same seed see identical timestamps.
+#[derive(Debug, Clone, Copy)]
+pub struct VClock {
+    nanos: u64,
+}
+
+impl VClock {
+    /// A clock starting at virtual time zero.
+    pub fn new() -> Self {
+        VClock { nanos: 0 }
+    }
+
+    /// Current virtual time, nanoseconds since the run started.
+    pub fn now(&self) -> u64 {
+        self.nanos
+    }
+
+    /// Advance virtual time by `nanos` (saturating).
+    pub fn advance(&mut self, nanos: u64) {
+        self.nanos = self.nanos.saturating_add(nanos);
+    }
+}
+
+impl Default for VClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The one-shot disk fault seam: the scheduler arms at most one
+/// [`WritePlan`] before an actor runs, and the *first* entry write the
+/// actor's code path performs — wherever in `service::{disk,results,
+/// cache,workers}` it happens — consumes it through the production
+/// [`DiskHooks`] hook. An unconsumed plan is disarmed after the step so
+/// a fault can never leak across steps (which would break seed
+/// reproducibility).
+pub struct FaultInjector {
+    armed: Mutex<Option<WritePlan>>,
+}
+
+impl FaultInjector {
+    /// A disarmed injector.
+    pub fn new() -> Self {
+        FaultInjector { armed: Mutex::new(None) }
+    }
+
+    /// Arm `plan` for the next entry write (replacing any armed plan).
+    pub fn arm(&self, plan: WritePlan) {
+        *self.armed.lock().unwrap() = Some(plan);
+    }
+
+    /// Take the leftover plan, if the step's actor never wrote an
+    /// entry. `None` means the armed plan was consumed by a real write.
+    pub fn disarm(&self) -> Option<WritePlan> {
+        self.armed.lock().unwrap().take()
+    }
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DiskHooks for FaultInjector {
+    fn write_plan(&self, _stem: &str, _ext: &str, _len: usize) -> WritePlan {
+        self.armed.lock().unwrap().take().unwrap_or(WritePlan::Commit)
+    }
+}
+
+/// An in-memory session output the harness can read back — the same
+/// shape the transport tests use, shared between the session's writer
+/// thread and the checking actor.
+#[derive(Clone, Default)]
+pub struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    /// Everything written so far, split into lines.
+    pub fn take_lines(&self) -> Vec<String> {
+        let bytes = self.0.lock().unwrap();
+        String::from_utf8_lossy(&bytes).lines().map(String::from).collect()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A session writer modeling a dropped connection: accepts at most
+/// `budget` bytes, then every write fails `BrokenPipe` — exactly what a
+/// socket write to a vanished peer returns. `run_session` must survive
+/// it (jobs still execute) and report the failure at the end.
+pub struct FlakyWriter {
+    budget: usize,
+}
+
+impl FlakyWriter {
+    /// A writer that accepts `budget` bytes before the peer "vanishes".
+    pub fn new(budget: usize) -> Self {
+        FlakyWriter { budget }
+    }
+}
+
+impl Write for FlakyWriter {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.budget == 0 {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "peer dropped connection"));
+        }
+        let n = buf.len().min(self.budget);
+        self.budget -= n;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}

@@ -1,0 +1,205 @@
+//! The fault taxonomy the harness draws from, and the `--faults`
+//! command-line specification.
+//!
+//! Faults split into two delivery mechanisms:
+//!
+//! * **Disk-plan faults** ([`FaultClass::is_disk`]) are armed one-shot
+//!   on the [`FaultInjector`](super::env::FaultInjector) before a step
+//!   and consumed by the next real entry write inside the production
+//!   store: crash-before-rename, a torn (short) frame the disk still
+//!   "commits", and out-of-space mid-write.
+//! * **Actor-gated faults** select whole hostile behaviours: a client
+//!   whose connection drops mid-session, an adversary that corrupts
+//!   entries in place, and queue stall/backpressure probing. Disabling
+//!   the class removes the behaviour from the schedule.
+
+use crate::service::disk::HEADER_LEN;
+use crate::service::WritePlan;
+use crate::util::prng::Pcg32;
+
+/// One class of injected failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Process dies after the temp file is written and synced but
+    /// before the atomic rename: a stale `.tmp.<pid>` file is left
+    /// behind and the entry never appears.
+    CrashRename,
+    /// The disk acknowledges a write that only persisted a prefix of
+    /// the frame (torn write): the entry *is* renamed into place, so
+    /// readers must detect it by checksum/length and quarantine it.
+    TornFrame,
+    /// `ENOSPC` partway through the temp-file write; the store must
+    /// surface a typed error and quarantine the partial temp file.
+    DiskFull,
+    /// The session peer vanishes mid-stream: every write to the
+    /// connection fails `BrokenPipe` after a small byte budget.
+    DropConn,
+    /// Backpressure probing: bounded-queue stalls where `push_timeout`
+    /// expires against a full queue and the item is handed back.
+    QueueStall,
+    /// An adversary flips or truncates bytes of a committed cache entry
+    /// in place (bit rot / partial overwrite).
+    CorruptEntry,
+}
+
+impl FaultClass {
+    /// Every class, in canonical order (the order `--faults all` uses).
+    pub const ALL: [FaultClass; 6] = [
+        FaultClass::CrashRename,
+        FaultClass::TornFrame,
+        FaultClass::DiskFull,
+        FaultClass::DropConn,
+        FaultClass::QueueStall,
+        FaultClass::CorruptEntry,
+    ];
+
+    /// Stable command-line / trace name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultClass::CrashRename => "crash-rename",
+            FaultClass::TornFrame => "torn-frame",
+            FaultClass::DiskFull => "disk-full",
+            FaultClass::DropConn => "drop-conn",
+            FaultClass::QueueStall => "queue-stall",
+            FaultClass::CorruptEntry => "corrupt-entry",
+        }
+    }
+
+    /// Parse a single class name as written on the command line.
+    pub fn from_name(name: &str) -> Option<FaultClass> {
+        FaultClass::ALL.into_iter().find(|c| c.name() == name)
+    }
+
+    /// Whether this class is delivered as a one-shot [`WritePlan`]
+    /// through the disk hook (as opposed to gating an actor behaviour).
+    pub fn is_disk(self) -> bool {
+        matches!(
+            self,
+            FaultClass::CrashRename | FaultClass::TornFrame | FaultClass::DiskFull
+        )
+    }
+
+    /// Draw a concrete [`WritePlan`] for a disk-plan class, with the
+    /// fault parameters (torn length, bytes written before `ENOSPC`)
+    /// taken from the schedule PRNG. Panics if called on a non-disk
+    /// class.
+    pub fn draw_plan(self, rng: &mut Pcg32) -> WritePlan {
+        match self {
+            FaultClass::CrashRename => WritePlan::CrashBeforeRename,
+            FaultClass::TornFrame => WritePlan::TornFrame {
+                keep: HEADER_LEN + rng.below(32) as usize,
+            },
+            FaultClass::DiskFull => WritePlan::DiskFull {
+                written: rng.below(64) as usize,
+            },
+            other => panic!("{} is not a disk-plan fault", other.name()),
+        }
+    }
+}
+
+/// The enabled fault set, parsed from `--faults`.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    enabled: Vec<FaultClass>,
+}
+
+impl FaultSpec {
+    /// Every fault class enabled (`--faults all`, the default).
+    pub fn all() -> FaultSpec {
+        FaultSpec { enabled: FaultClass::ALL.to_vec() }
+    }
+
+    /// No faults at all (`--faults none`): a pure-interleaving run.
+    pub fn none() -> FaultSpec {
+        FaultSpec { enabled: Vec::new() }
+    }
+
+    /// Parse `all`, `none`, or a comma-separated list of class names
+    /// (e.g. `crash-rename,torn-frame`). Duplicates collapse; order is
+    /// normalized to the canonical [`FaultClass::ALL`] order so the
+    /// schedule does not depend on how the user spelled the list.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        match spec.trim() {
+            "all" => return Ok(FaultSpec::all()),
+            "none" | "" => return Ok(FaultSpec::none()),
+            _ => {}
+        }
+        let mut picked = [false; FaultClass::ALL.len()];
+        for part in spec.split(',') {
+            let name = part.trim();
+            if name.is_empty() {
+                continue;
+            }
+            match FaultClass::from_name(name) {
+                Some(c) => picked[FaultClass::ALL.iter().position(|x| *x == c).unwrap()] = true,
+                None => {
+                    return Err(format!(
+                        "unknown fault class '{name}' (expected all, none, or a comma list of: {})",
+                        FaultClass::ALL.map(FaultClass::name).join(", ")
+                    ))
+                }
+            }
+        }
+        let enabled = FaultClass::ALL
+            .into_iter()
+            .zip(picked)
+            .filter_map(|(c, on)| if on { Some(c) } else { None })
+            .collect();
+        Ok(FaultSpec { enabled })
+    }
+
+    /// Whether `class` is enabled.
+    pub fn contains(&self, class: FaultClass) -> bool {
+        self.enabled.contains(&class)
+    }
+
+    /// The enabled disk-plan classes, in canonical order.
+    pub fn disk_classes(&self) -> Vec<FaultClass> {
+        self.enabled.iter().copied().filter(|c| c.is_disk()).collect()
+    }
+
+    /// The enabled classes, in canonical order.
+    pub fn classes(&self) -> &[FaultClass] {
+        &self.enabled
+    }
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_normalizes() {
+        assert_eq!(FaultSpec::parse("all").unwrap().classes(), FaultClass::ALL);
+        assert!(FaultSpec::parse("none").unwrap().classes().is_empty());
+        let spec = FaultSpec::parse("torn-frame,crash-rename,torn-frame").unwrap();
+        assert_eq!(spec.classes(), [FaultClass::CrashRename, FaultClass::TornFrame]);
+        assert!(FaultSpec::parse("bit-flip").is_err());
+    }
+
+    #[test]
+    fn disk_classes_subset() {
+        let spec = FaultSpec::all();
+        let disk = spec.disk_classes();
+        assert_eq!(
+            disk,
+            vec![FaultClass::CrashRename, FaultClass::TornFrame, FaultClass::DiskFull]
+        );
+        assert!(disk.iter().all(|c| c.is_disk()));
+        assert!(!FaultClass::DropConn.is_disk());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for c in FaultClass::ALL {
+            assert_eq!(FaultClass::from_name(c.name()), Some(c));
+        }
+        assert_eq!(FaultClass::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,377 @@
+//! The global invariants checked after every simulation step, plus the
+//! offline entry auditor that `dare cache verify` reuses.
+//!
+//! The invariant suite is intentionally written against *observable
+//! state* (directory contents, decodability, lock files) rather than
+//! internal counters, so it holds across process "restarts" and does
+//! not care which code path produced a file:
+//!
+//! 1. **Entries decode or quarantine** — every committed `.dwl`/`.dsr`
+//!    either decodes cleanly or is detected as corrupt by the frame
+//!    checksum; decoding never panics, whatever bytes a fault left
+//!    behind. Corrupt entries are not violations (torn frames are an
+//!    injected fault) — the loaders must quarantine them on next touch.
+//! 2. **Byte-identical replay** — the first time an entry name decodes,
+//!    its body hash is recorded; any later decode of the same name must
+//!    match. Since the result codec is a pure function of `SimStats`,
+//!    this is exactly the "replayed stats are bit-identical to a cold
+//!    run" check, and it survives eviction/rebuild cycles.
+//! 3. **Seed tier is immutable** — a snapshot of the read-only seed
+//!    directory (name → length, checksum) taken at startup must match
+//!    after every step; promotion reads the seed, never writes it.
+//! 4. **No leaked locks** — between steps no `.lock` file may still be
+//!    held: builders and runners release their lock before replying, so
+//!    a held lock at a quiescent point is a leak (and would deadlock a
+//!    future builder of that key).
+//!
+//! (The "at most one builder/runner per key" invariant is enforced by
+//! the same lock files during a step; checking for leaks at every
+//! quiescent point is the observable half the harness can assert.)
+
+use crate::service::disk::{self, decode_frame};
+use crate::util::fnv::fnv1a64;
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{self, OpenOptions};
+use std::io;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+
+/// The audit of one on-disk cache entry.
+#[derive(Debug, Clone)]
+pub struct EntryAudit {
+    /// File name (not path — traces must not contain machine paths).
+    pub name: String,
+    /// `true` for a `.dsr` result entry, `false` for a `.dwl` workload.
+    pub is_result: bool,
+    /// FNV-1a64 of the decoded body when the frame decodes cleanly;
+    /// `None` when the entry is corrupt (checksum/length mismatch).
+    pub body_fnv: Option<u64>,
+    /// Whether decoding *panicked* — always an invariant violation.
+    pub panicked: bool,
+}
+
+/// Per-kind ok/corrupt counts for one directory walk.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DirAudit {
+    /// `.dwl` entries that decoded cleanly.
+    pub workloads_ok: u64,
+    /// `.dwl` entries whose frame failed checksum/length validation.
+    pub workloads_corrupt: u64,
+    /// `.dsr` entries that decoded cleanly.
+    pub results_ok: u64,
+    /// `.dsr` entries whose frame failed checksum/length validation.
+    pub results_corrupt: u64,
+    /// Entries whose decode panicked (should always be zero).
+    pub panicked: u64,
+}
+
+impl DirAudit {
+    /// Fold one entry audit into the counts.
+    pub fn record(&mut self, entry: &EntryAudit) {
+        if entry.panicked {
+            self.panicked += 1;
+        }
+        match (entry.is_result, entry.body_fnv.is_some()) {
+            (false, true) => self.workloads_ok += 1,
+            (false, false) => self.workloads_corrupt += 1,
+            (true, true) => self.results_ok += 1,
+            (true, false) => self.results_corrupt += 1,
+        }
+    }
+
+    /// Total corrupt entries across both kinds.
+    pub fn corrupt(&self) -> u64 {
+        self.workloads_corrupt + self.results_corrupt
+    }
+
+    /// One-line, path-free rendering for traces and `dare cache verify`.
+    pub fn summary(&self) -> String {
+        format!(
+            "workloads {} ok / {} corrupt, results {} ok / {} corrupt",
+            self.workloads_ok, self.workloads_corrupt, self.results_ok, self.results_corrupt
+        )
+    }
+}
+
+/// Audit every `.dwl`/`.dsr` entry under `dir`, sorted by file name.
+///
+/// Lock-free and read-only: entries are read as raw bytes and pushed
+/// through the production frame decoder under `catch_unwind`, so the
+/// walk can run against a live cache directory without blocking (or
+/// being blocked by) builders. A directory that does not exist audits
+/// as empty.
+pub fn audit_entries(dir: &Path) -> io::Result<Vec<EntryAudit>> {
+    let mut names: Vec<(String, bool)> = Vec::new();
+    let read = match fs::read_dir(dir) {
+        Ok(read) => read,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e),
+    };
+    for entry in read {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let is_result = match name.rsplit_once('.') {
+            Some((_, "dwl")) => false,
+            Some((_, "dsr")) => true,
+            _ => continue,
+        };
+        names.push((name, is_result));
+    }
+    names.sort();
+    let mut audits = Vec::with_capacity(names.len());
+    for (name, is_result) in names {
+        let bytes = fs::read(dir.join(&name))?;
+        let decoded = catch_unwind(AssertUnwindSafe(|| decode_frame(&bytes)));
+        let (body_fnv, panicked) = match decoded {
+            Ok(Ok((body, _version))) => (Some(fnv1a64(&body)), false),
+            Ok(Err(_)) => (None, false),
+            Err(_) => (None, true),
+        };
+        audits.push(EntryAudit { name, is_result, body_fnv, panicked });
+    }
+    Ok(audits)
+}
+
+/// Walk `dir` and aggregate per-kind ok/corrupt counts — the offline
+/// checker behind `dare cache verify`.
+pub fn audit_dir(dir: &Path) -> io::Result<DirAudit> {
+    let mut audit = DirAudit::default();
+    for entry in audit_entries(dir)? {
+        audit.record(&entry);
+    }
+    Ok(audit)
+}
+
+/// First-observation registry for invariant 2: entry name → FNV of the
+/// decoded body. Keyed on the decoded *body*, not raw file bytes, so a
+/// fault that flips a byte the codec ignores (reserved header bytes)
+/// cannot fake a divergence — only a semantic change can.
+#[derive(Debug, Default)]
+pub struct BodyOracle {
+    seen: HashMap<String, u64>,
+}
+
+impl BodyOracle {
+    /// An empty oracle.
+    pub fn new() -> BodyOracle {
+        BodyOracle::default()
+    }
+
+    /// Record or check one decoded entry. The first observation of a
+    /// name pins its body hash; any later mismatch is a violation.
+    pub fn observe(&mut self, name: &str, body_fnv: u64) -> Result<(), String> {
+        match self.seen.get(name) {
+            Some(prev) if *prev != body_fnv => Err(format!(
+                "entry {name} re-decoded to a different body ({prev:016x} -> {body_fnv:016x}); \
+                 replay is not byte-identical"
+            )),
+            Some(_) => Ok(()),
+            None => {
+                self.seen.insert(name.to_string(), body_fnv);
+                Ok(())
+            }
+        }
+    }
+
+    /// Number of distinct entry names observed so far.
+    pub fn len(&self) -> usize {
+        self.seen.len()
+    }
+
+    /// Whether no entry has been observed yet.
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+}
+
+/// Immutable snapshot of the read-only seed tier: name → (length,
+/// raw-byte checksum). Captured once at startup, verified after every
+/// step — any drift means production code wrote into the seed dir.
+#[derive(Debug, Clone, Default)]
+pub struct SeedSnapshot {
+    entries: BTreeMap<String, (u64, u64)>,
+}
+
+impl SeedSnapshot {
+    /// Capture the current contents of `dir` (missing dir = empty).
+    pub fn capture(dir: &Path) -> io::Result<SeedSnapshot> {
+        let mut entries = BTreeMap::new();
+        let read = match fs::read_dir(dir) {
+            Ok(read) => read,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                return Ok(SeedSnapshot { entries })
+            }
+            Err(e) => return Err(e),
+        };
+        for entry in read {
+            let entry = entry?;
+            if !entry.file_type()?.is_file() {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let bytes = fs::read(entry.path())?;
+            entries.insert(name, (bytes.len() as u64, fnv1a64(&bytes)));
+        }
+        Ok(SeedSnapshot { entries })
+    }
+
+    /// Number of files in the snapshot.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the snapshot is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Verify `dir` still matches the snapshot exactly (same file set,
+    /// same lengths, same bytes).
+    pub fn verify(&self, dir: &Path) -> Result<(), String> {
+        let now = SeedSnapshot::capture(dir)
+            .map_err(|e| format!("seed tier re-scan failed: {e}"))?;
+        if now.entries == self.entries {
+            return Ok(());
+        }
+        for (name, meta) in &self.entries {
+            match now.entries.get(name) {
+                None => return Err(format!("seed tier entry {name} disappeared")),
+                Some(m) if m != meta => {
+                    return Err(format!("seed tier entry {name} was modified"))
+                }
+                Some(_) => {}
+            }
+        }
+        for name in now.entries.keys() {
+            if !self.entries.contains_key(name) {
+                return Err(format!("seed tier gained unexpected entry {name}"));
+            }
+        }
+        Err("seed tier drifted".to_string())
+    }
+}
+
+/// Names of `.lock` files under `dir` that are currently *held* (an
+/// exclusive flock probe fails). Opens existing lock files without
+/// creating new ones, so the probe itself leaves no residue.
+pub fn held_locks(dir: &Path) -> io::Result<Vec<String>> {
+    let mut held = Vec::new();
+    let read = match fs::read_dir(dir) {
+        Ok(read) => read,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(held),
+        Err(e) => return Err(e),
+    };
+    let mut names: Vec<String> = Vec::new();
+    for entry in read {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".lock") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    for name in names {
+        let file = match OpenOptions::new().read(true).write(true).open(dir.join(&name)) {
+            Ok(f) => f,
+            // Racing against the owner's cleanup is fine: gone = not held.
+            Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(e),
+        };
+        if disk::sys::try_lock_exclusive(&file) {
+            disk::sys::unlock(&file);
+        } else {
+            held.push(name);
+        }
+    }
+    Ok(held)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelKind, WorkloadKey};
+    use crate::service::{DiskConfig, DiskStore};
+    use crate::sparse::DatasetKind;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dare-dst-inv-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn key(block: usize) -> WorkloadKey {
+        WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, block, true, 0.04)
+    }
+
+    #[test]
+    fn audit_counts_ok_and_corrupt() {
+        let dir = tmp_dir("audit");
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        let k1 = key(1);
+        let k2 = key(2);
+        store.store(&k1, &k1.build()).unwrap();
+        store.store(&k2, &k2.build()).unwrap();
+        // Corrupt the second entry's payload in place.
+        let victim = dir.join(format!("{}.dwl", k2.cache_file_stem()));
+        let mut bytes = fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&victim, &bytes).unwrap();
+        let audit = audit_dir(&dir).unwrap();
+        assert_eq!(audit.workloads_ok, 1);
+        assert_eq!(audit.workloads_corrupt, 1);
+        assert_eq!(audit.results_ok + audit.results_corrupt, 0);
+        assert_eq!(audit.panicked, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn audit_of_missing_dir_is_empty() {
+        let audit = audit_dir(Path::new("/nonexistent/dare-dst-nowhere")).unwrap();
+        assert_eq!(audit, DirAudit::default());
+    }
+
+    #[test]
+    fn oracle_pins_first_observation() {
+        let mut oracle = BodyOracle::new();
+        oracle.observe("a.dwl", 1).unwrap();
+        oracle.observe("a.dwl", 1).unwrap();
+        assert!(oracle.observe("a.dwl", 2).is_err());
+        assert_eq!(oracle.len(), 1);
+    }
+
+    #[test]
+    fn seed_snapshot_detects_drift() {
+        let dir = tmp_dir("snap");
+        fs::write(dir.join("a.dwl"), b"aaaa").unwrap();
+        let snap = SeedSnapshot::capture(&dir).unwrap();
+        assert_eq!(snap.len(), 1);
+        snap.verify(&dir).unwrap();
+        fs::write(dir.join("a.dwl"), b"bbbb").unwrap();
+        assert!(snap.verify(&dir).unwrap_err().contains("modified"));
+        fs::write(dir.join("a.dwl"), b"aaaa").unwrap();
+        snap.verify(&dir).unwrap();
+        fs::write(dir.join("b.dwl"), b"cccc").unwrap();
+        assert!(snap.verify(&dir).unwrap_err().contains("unexpected"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn held_locks_sees_live_build_locks() {
+        let dir = tmp_dir("locks");
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap();
+        assert!(held_locks(&dir).unwrap().is_empty());
+        let guard = store.lock(&key(1));
+        let held = held_locks(&dir).unwrap();
+        assert_eq!(held.len(), 1, "one held lock visible: {held:?}");
+        drop(guard);
+        assert!(held_locks(&dir).unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,137 @@
+//! Deterministic simulation testing (DST) for the cache/service stack.
+//!
+//! `dare dst --seed N --steps M` runs a seeded, single-logical-thread
+//! schedule of hostile actors — batch clients, draining clients,
+//! dropped connections, a "second process" of direct cache handles,
+//! GC sweeps, crash/restarts, entry corrupters, queue model checks —
+//! against the *production* `service::{cache,disk,results,queue,
+//! transport}` code. Faults (crash-before-rename, torn frames,
+//! disk-full, dropped connections, queue stalls, bit rot) are drawn
+//! from the same seed, and after every step a global invariant suite
+//! runs:
+//!
+//! * every committed entry decodes or is detected corrupt — never a
+//!   panic, and corrupt entries get quarantined on next touch;
+//! * re-decoded entries are byte-identical to their first observation
+//!   (replayed `SimStats` bit-identical to cold runs);
+//! * the read-only seed tier is never written;
+//! * no build/run lock is held at a quiescent point;
+//! * sessions answer every accepted job exactly once and `done` is the
+//!   final event, even while the store is failing underneath them.
+//!
+//! Two runs of the same seed produce byte-identical traces (the report
+//! carries an FNV digest of the full trace), so any violation found in
+//! CI reproduces locally from the seed alone. See `docs/DST.md` for
+//! the actor model and fault taxonomy in detail.
+//!
+//! The design follows the FoundationDB / TigerBeetle ("VOPR") school
+//! of simulation testing, scaled to this crate: real code, simulated
+//! hostile environment, seed-reproducible schedules.
+
+pub mod actors;
+pub mod env;
+pub mod faults;
+pub mod invariants;
+mod sched;
+
+pub use actors::ActorKind;
+pub use faults::{FaultClass, FaultSpec};
+pub use invariants::DirAudit;
+
+use std::path::PathBuf;
+
+/// Configuration of one DST run (`dare dst` flags).
+#[derive(Debug, Clone)]
+pub struct DstConfig {
+    /// The schedule seed — the only input a violation needs to
+    /// reproduce.
+    pub seed: u64,
+    /// Number of steps to run (default 1000).
+    pub steps: u64,
+    /// The enabled actor kinds (default: all).
+    pub actors: Vec<ActorKind>,
+    /// The enabled fault classes (default: all).
+    pub faults: FaultSpec,
+    /// Use this directory as the read-only seed tier instead of baking
+    /// a fresh one in the scratch dir. Baked on first use if empty —
+    /// the baked bytes are deterministic, so CI can cache it.
+    pub seed_dir: Option<PathBuf>,
+}
+
+impl DstConfig {
+    /// Defaults for `--seed N`: 1000 steps, all actors, all faults.
+    pub fn new(seed: u64) -> DstConfig {
+        DstConfig {
+            seed,
+            steps: 1000,
+            actors: ActorKind::ALL.to_vec(),
+            faults: FaultSpec::all(),
+            seed_dir: None,
+        }
+    }
+}
+
+/// What one DST run did. Everything in here (and in [`DstReport::trace`])
+/// is a pure function of the seeded schedule — no wall-clock times,
+/// machine paths, or pids — so same-seed reports compare equal.
+#[derive(Debug, Clone)]
+pub struct DstReport {
+    /// The seed the schedule ran under.
+    pub seed: u64,
+    /// Steps actually executed (equals the configured steps unless a
+    /// violation stopped the run early).
+    pub steps_run: u64,
+    /// Invariant violations, each tagged with the step that tripped it.
+    /// Empty on a passing run.
+    pub violations: Vec<String>,
+    /// Per-actor step counts, in canonical order (enabled actors only).
+    pub actor_counts: Vec<(&'static str, u64)>,
+    /// Per-class armed counts for the disk-plan fault classes.
+    pub fault_counts: Vec<(&'static str, u64)>,
+    /// Armed faults that a real entry write actually consumed.
+    pub faults_consumed: u64,
+    /// The entry audit after the final step.
+    pub final_audit: DirAudit,
+    /// FNV-1a64 digest of the full step trace.
+    pub trace_digest: u64,
+    /// The full step trace, one deterministic line per step.
+    pub trace: Vec<String>,
+}
+
+impl DstReport {
+    /// Multi-line, deterministic summary for the CLI.
+    pub fn summary(&self) -> String {
+        let actors = self
+            .actor_counts
+            .iter()
+            .map(|(name, count)| format!("{name}={count}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let faults = self
+            .fault_counts
+            .iter()
+            .map(|(name, count)| format!("{name}={count}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "dst: seed={} steps={} violations={} trace-digest={:016x}\n\
+               actors: {actors}\n\
+               disk faults armed: {} (consumed {})\n\
+               final audit: {}",
+            self.seed,
+            self.steps_run,
+            self.violations.len(),
+            self.trace_digest,
+            if faults.is_empty() { "none".to_string() } else { faults },
+            self.faults_consumed,
+            self.final_audit.summary()
+        )
+    }
+}
+
+/// Run one deterministic simulation. `Err` is a setup failure;
+/// invariant violations come back in [`DstReport::violations`] with
+/// the trace that led to them.
+pub fn run(cfg: &DstConfig) -> Result<DstReport, String> {
+    sched::drive(cfg)
+}

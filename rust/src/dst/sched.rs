@@ -1,0 +1,214 @@
+//! The deterministic scheduler: one seed in, one step trace out.
+//!
+//! All randomness in a run flows from a single root [`Pcg32`] seeded
+//! with `--seed`, split into independent streams (clock, actor choice,
+//! fault schedule, actor-internal draws) so that an actor consuming a
+//! different number of draws cannot shift a sibling stream. Steps are
+//! strictly sequential: pick an actor, maybe arm one disk fault,
+//! execute the actor to quiescence (sessions drain before returning),
+//! disarm any unconsumed fault, then run the full invariant suite.
+//! Trace lines contain only virtual time and deterministic counts —
+//! never wall-clock times, paths, or pids — so two runs of the same
+//! seed produce byte-identical traces, and any violation reproduces
+//! from `dare dst --seed N` alone.
+
+use super::actors::{self, ActorKind, World};
+use super::env::{FaultInjector, VClock};
+use super::faults::FaultClass;
+use super::invariants::{self, BodyOracle, DirAudit, SeedSnapshot};
+use super::{DstConfig, DstReport};
+use crate::util::fnv::fnv1a64;
+use crate::util::prng::Pcg32;
+use std::fs;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Run the full invariant suite at a quiescent point. Returns the
+/// entry audit for the trace line, or the first violation.
+fn check_step(
+    world: &World,
+    snapshot: &SeedSnapshot,
+    oracle: &mut BodyOracle,
+) -> Result<DirAudit, String> {
+    let mut audit = DirAudit::default();
+    let entries = invariants::audit_entries(&world.dir)
+        .map_err(|e| format!("entry audit failed: {e}"))?;
+    for entry in entries {
+        if entry.panicked {
+            return Err(format!(
+                "decoding entry {} panicked (must error, never panic)",
+                entry.name
+            ));
+        }
+        if let Some(body_fnv) = entry.body_fnv {
+            oracle.observe(&entry.name, body_fnv)?;
+        }
+        audit.record(&entry);
+    }
+    snapshot.verify(&world.seed_dir)?;
+    let held = invariants::held_locks(&world.dir)
+        .map_err(|e| format!("lock probe failed: {e}"))?;
+    if !held.is_empty() {
+        return Err(format!(
+            "lock(s) still held at a quiescent point: {}",
+            held.join(", ")
+        ));
+    }
+    Ok(audit)
+}
+
+/// Prime the byte-identity oracle with the seed tier's entries.
+fn prime_oracle(seed_dir: &Path, oracle: &mut BodyOracle) -> Result<(), String> {
+    let entries = invariants::audit_entries(seed_dir)
+        .map_err(|e| format!("seed tier audit failed: {e}"))?;
+    for entry in entries {
+        if let Some(body_fnv) = entry.body_fnv {
+            oracle.observe(&entry.name, body_fnv)?;
+        }
+    }
+    Ok(())
+}
+
+/// Execute one full DST run. `Err` is a *setup* failure (bad config,
+/// unusable scratch dir); invariant violations come back inside the
+/// report, with the trace that led to them.
+pub(crate) fn drive(cfg: &DstConfig) -> Result<DstReport, String> {
+    let scratch =
+        std::env::temp_dir().join(format!("dare-dst-{}-{}", cfg.seed, std::process::id()));
+    let _ = fs::remove_dir_all(&scratch);
+    fs::create_dir_all(&scratch).map_err(|e| format!("create scratch dir: {e}"))?;
+    let seed_dir = cfg.seed_dir.clone().unwrap_or_else(|| scratch.join("seed"));
+    let cache_dir = scratch.join("cache");
+
+    // Effective actor pool: canonical order, restricted to the enabled
+    // actors, minus actors whose defining fault class is disabled.
+    let pool: Vec<ActorKind> = ActorKind::ALL
+        .into_iter()
+        .filter(|a| cfg.actors.contains(a))
+        .filter(|a| match a {
+            ActorKind::DropConn => cfg.faults.contains(FaultClass::DropConn),
+            ActorKind::Corrupt => cfg.faults.contains(FaultClass::CorruptEntry),
+            _ => true,
+        })
+        .collect();
+    if pool.is_empty() {
+        return Err("no actors enabled after fault gating (check --actors/--faults)".to_string());
+    }
+    let disk_classes = cfg.faults.disk_classes();
+
+    let injector = Arc::new(FaultInjector::new());
+    let mut world = World::new(&cache_dir, &seed_dir, injector)?;
+
+    let mut root = Pcg32::new(cfg.seed);
+    let mut clock_rng = root.split();
+    let mut sched_rng = root.split();
+    let mut fault_rng = root.split();
+    let mut actor_rng = root.split();
+    let mut clock = VClock::new();
+
+    let snapshot = SeedSnapshot::capture(&seed_dir)
+        .map_err(|e| format!("snapshot seed tier: {e}"))?;
+    let mut oracle = BodyOracle::new();
+    prime_oracle(&seed_dir, &mut oracle)?;
+
+    let mut trace: Vec<String> = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+    let mut actor_counts = [0u64; ActorKind::ALL.len()];
+    let mut fault_counts = [0u64; FaultClass::ALL.len()];
+    let mut faults_consumed = 0u64;
+    let mut final_audit = DirAudit::default();
+    let mut steps_run = 0u64;
+
+    match check_step(&world, &snapshot, &mut oracle) {
+        Ok(audit) => final_audit = audit,
+        Err(v) => violations.push(format!("pre-flight: {v}")),
+    }
+
+    if violations.is_empty() {
+        for step in 1..=cfg.steps {
+            steps_run = step;
+            clock.advance(1_000 + u64::from(clock_rng.below(1_000_000)));
+            let actor = pool[sched_rng.below(pool.len() as u32) as usize];
+            actor_counts[pos_actor(actor)] += 1;
+
+            // Maybe arm one disk fault for actors whose step can write
+            // cache entries.
+            let disk_eligible = matches!(
+                actor,
+                ActorKind::Client | ActorKind::Drain | ActorKind::DropConn | ActorKind::Direct
+            );
+            let mut armed: Option<FaultClass> = None;
+            if disk_eligible && !disk_classes.is_empty() && fault_rng.chance(0.35) {
+                let class = disk_classes[fault_rng.below(disk_classes.len() as u32) as usize];
+                world.injector.arm(class.draw_plan(&mut fault_rng));
+                fault_counts[pos_fault(class)] += 1;
+                armed = Some(class);
+            }
+
+            let outcome = actors::execute(actor, &mut world, &mut actor_rng, &cfg.faults);
+            let leftover = world.injector.disarm();
+            let consumed = armed.is_some() && leftover.is_none();
+            if consumed {
+                faults_consumed += 1;
+            }
+
+            let prefix = format!(
+                "step={step:05} t={}ns actor={} fault={} consumed={consumed}",
+                clock.now(),
+                actor.name(),
+                armed.map_or("none", FaultClass::name)
+            );
+            match outcome {
+                Ok(desc) => match check_step(&world, &snapshot, &mut oracle) {
+                    Ok(audit) => {
+                        final_audit = audit;
+                        trace.push(format!("{prefix} | {desc} | {}", audit.summary()));
+                    }
+                    Err(v) => {
+                        trace.push(format!("{prefix} | {desc} | INVARIANT VIOLATION: {v}"));
+                        violations.push(format!("step {step}: {v}"));
+                        break;
+                    }
+                },
+                Err(v) => {
+                    trace.push(format!("{prefix} | ACTOR VIOLATION: {v}"));
+                    violations.push(format!("step {step}: {v}"));
+                    break;
+                }
+            }
+        }
+    }
+
+    // Drain the service before tearing the scratch dir down.
+    drop(world);
+    if violations.is_empty() {
+        let _ = fs::remove_dir_all(&scratch);
+    }
+
+    let trace_digest = fnv1a64(trace.join("\n").as_bytes());
+    Ok(DstReport {
+        seed: cfg.seed,
+        steps_run,
+        violations,
+        actor_counts: pool
+            .iter()
+            .map(|a| (a.name(), actor_counts[pos_actor(*a)]))
+            .collect(),
+        fault_counts: disk_classes
+            .iter()
+            .map(|c| (c.name(), fault_counts[pos_fault(*c)]))
+            .collect(),
+        faults_consumed,
+        final_audit,
+        trace_digest,
+        trace,
+    })
+}
+
+fn pos_actor(actor: ActorKind) -> usize {
+    ActorKind::ALL.iter().position(|a| *a == actor).unwrap()
+}
+
+fn pos_fault(class: FaultClass) -> usize {
+    FaultClass::ALL.iter().position(|c| *c == class).unwrap()
+}

@@ -11,8 +11,9 @@
 //!   ([`sim`]), energy and hardware-overhead models ([`energy`],
 //!   [`overhead`]), the host coordinator ([`coordinator`]), the batch
 //!   simulation service ([`service`]: bounded job queue, sharded
-//!   LRU workload cache, worker pool, JSONL protocol) and the figure
-//!   harnesses ([`harness`]).
+//!   LRU workload cache, worker pool, JSONL protocol), the figure
+//!   harnesses ([`harness`]), and the deterministic simulation testing
+//!   harness that fault-injects the whole cache/service stack ([`dst`]).
 //! * **Layer 2/1 (python, build-time only)** — JAX + Pallas numerics,
 //!   AOT-lowered to HLO text in `artifacts/` and executed from rust via
 //!   the PJRT runtime ([`runtime`]).
@@ -23,6 +24,7 @@
 #![warn(missing_docs)]
 
 pub mod coordinator;
+pub mod dst;
 pub mod energy;
 pub mod harness;
 pub mod isa;

@@ -10,12 +10,15 @@
 //! dare batch <jobs.jsonl> [--stream] [--cache-dir D [--cache-seed S]]   service: run a JSONL job file
 //! dare serve [--socket P | --tcp H:P] [--cache-dir D]           service: JSONL jobs, stdio or socket
 //! dare client (--socket P | --tcp H:P) [jobs.jsonl] [--shutdown]   drive a running server
-//! dare cache stats|clear|gc --cache-dir D                       inspect/wipe/sweep an on-disk cache
-//!                                                               (workload + result tiers)
+//! dare cache stats|clear|gc|verify --cache-dir D                inspect/wipe/sweep/audit an
+//!                                                               on-disk cache (workload + result tiers)
+//! dare dst --seed N [--steps M] [--actors A] [--faults F]       deterministic simulation testing of
+//!                                                               the cache/service stack (see docs/DST.md)
 //! dare asm <file.s>                                             assemble + run
 //! ```
 
 use dare::coordinator::{run_one, BenchPoint, RunSpec};
+use dare::dst;
 use dare::harness::{common, fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
 use dare::isa::asm;
 use dare::kernels::KernelKind;
@@ -51,8 +54,17 @@ commands:\n\
   cache          on-disk cache maintenance, covering both the workload (.dwl) and\n\
                  simulation-result (.dsr) tiers: `dare cache stats --cache-dir D`\n\
                  (per-tier entries, bytes, codec-version histogram), `dare cache\n\
-                 clear …`, or `dare cache gc --cache-dir D [--max-mb N] [--dry-run]`\n\
-                 (explicit size-bound sweep; dry-run lists victims without deleting)\n\
+                 clear …`, `dare cache gc --cache-dir D [--max-mb N] [--dry-run]`\n\
+                 (explicit size-bound sweep; dry-run lists victims without deleting),\n\
+                 or `dare cache verify --cache-dir D [--cache-seed S]` (lock-free\n\
+                 offline audit: decode every entry, report ok/corrupt per tier,\n\
+                 exit nonzero if anything is corrupt)\n\
+  dst            deterministic simulation testing: a seeded schedule of hostile\n\
+                 actors (clients, drains, dropped connections, GC, crash/restart,\n\
+                 corrupters) with injected faults (crash-mid-rename, torn frames,\n\
+                 disk-full, …) over the real cache/service code, checking global\n\
+                 invariants after every step; same seed => byte-identical trace,\n\
+                 so any violation reproduces from `dare dst --seed N` alone\n\
   asm            assemble and simulate a .s file (DARE-full MPU)\n\
   help           print this help\n\
 options:\n\
@@ -74,7 +86,16 @@ options:\n\
   --stream           batch: emit streaming result/done events in completion order\n\
   --metrics-json P   batch/serve: write the final service MetricsSnapshot as JSON to P\n\
   --poll-metrics     client: also send {\"cmd\":\"metrics\"} and print the live snapshot\n\
-  --shutdown         client: send {\"cmd\":\"shutdown\"} after the jobs (if any)";
+  --shutdown         client: send {\"cmd\":\"shutdown\"} after the jobs (if any)\n\
+  --seed N           dst: the schedule seed (default 1)\n\
+  --steps M          dst: steps to run (default 1000)\n\
+  --actors A         dst: `all` or a comma list of client,drain,drop-conn,direct,\n\
+                     gc,restart,corrupt,queue (default all)\n\
+  --faults F         dst: `all`, `none`, or a comma list of crash-rename,torn-frame,\n\
+                     disk-full,drop-conn,queue-stall,corrupt-entry (default all)\n\
+  --seed-dir D       dst: bake/reuse the read-only seed tier in D (CI caches it)\n\
+  --trace            dst: print the full step trace to stdout\n\
+  --trace-file P     dst: also write the step trace (and any violations) to P";
 
 fn usage() -> ! {
     eprintln!("{HELP}");
@@ -148,9 +169,9 @@ fn print_cache_stats(label: &str, dir: &str, store: &DiskStore, bound: Option<u6
     }
 }
 
-/// `dare cache <stats|clear|gc> --cache-dir DIR`: inspect, wipe, or
-/// sweep an on-disk workload cache, over the same store code the
-/// service runs.
+/// `dare cache <stats|clear|gc|verify> --cache-dir DIR`: inspect, wipe,
+/// sweep, or audit an on-disk workload cache, over the same store code
+/// the service runs.
 fn cmd_cache(args: &Args) -> Result<(), CliError> {
     let action = args.positional.first().map(String::as_str).unwrap_or("stats");
     let cfg = disk_config(args)?.ok_or("cache requires --cache-dir DIR")?;
@@ -201,11 +222,94 @@ fn cmd_cache(args: &Args) -> Result<(), CliError> {
                 );
             }
         }
+        "verify" => {
+            // Lock-free offline audit: read every entry's raw bytes and
+            // run them through the production frame decoder — no locks
+            // taken, no mtimes bumped, safe against a live cache. The
+            // checker is the same one the DST harness runs after every
+            // step (`dst::invariants::audit_dir`).
+            let mut corrupt = 0u64;
+            let audit = dare::dst::invariants::audit_dir(store.dir())?;
+            println!("[cache] {dir}: {}", audit.summary());
+            corrupt += audit.corrupt();
+            if let Some(seed) = seed {
+                let seed_audit = dare::dst::invariants::audit_dir(&seed)?;
+                println!("[seed] {}: {}", seed.display(), seed_audit.summary());
+                corrupt += seed_audit.corrupt();
+            }
+            if corrupt > 0 {
+                return Err(format!(
+                    "{corrupt} corrupt entr{} (quarantined and rebuilt on next use)",
+                    if corrupt == 1 { "y" } else { "ies" }
+                )
+                .into());
+            }
+            println!("[cache] all entries decode cleanly");
+        }
         other => {
             return Err(
-                format!("unknown cache action '{other}' (expected stats|clear|gc)").into()
+                format!("unknown cache action '{other}' (expected stats|clear|gc|verify)").into()
             )
         }
+    }
+    Ok(())
+}
+
+/// `dare dst --seed N [--steps M] [--actors A] [--faults F]`: one
+/// deterministic simulation run. Exits nonzero on any invariant
+/// violation, after printing the trace tail and the exact command that
+/// reproduces it.
+fn cmd_dst(args: &Args) -> Result<(), CliError> {
+    let seed: u64 = args.get_parse("seed", 1u64);
+    let mut cfg = dst::DstConfig::new(seed);
+    cfg.steps = args.get_parse("steps", cfg.steps);
+    if let Some(list) = args.get("actors") {
+        cfg.actors = dst::ActorKind::parse_list(list)?;
+    }
+    if let Some(spec) = args.get("faults") {
+        cfg.faults = dst::FaultSpec::parse(spec)?;
+    }
+    cfg.seed_dir = args.get("seed-dir").map(std::path::PathBuf::from);
+    let trace = args.flag("trace");
+    let trace_file = args.get("trace-file").map(String::from);
+
+    let report = dst::run(&cfg)?;
+
+    if trace {
+        for line in &report.trace {
+            println!("{line}");
+        }
+    }
+    println!("{}", report.summary());
+    if let Some(path) = &trace_file {
+        let mut text = report.trace.join("\n");
+        text.push('\n');
+        for v in &report.violations {
+            text.push_str(&format!("VIOLATION: {v}\n"));
+        }
+        std::fs::write(path, text)?;
+    }
+    if !report.violations.is_empty() {
+        for v in &report.violations {
+            eprintln!("[dst] VIOLATION: {v}");
+        }
+        eprintln!("[dst] trace tail:");
+        let tail = report.trace.len().saturating_sub(20);
+        for line in &report.trace[tail..] {
+            eprintln!("[dst]   {line}");
+        }
+        eprintln!(
+            "[dst] reproduce with: dare dst --seed {seed} --steps {} --actors {} --faults {}",
+            cfg.steps,
+            args.get_or("actors", "all"),
+            args.get_or("faults", "all"),
+        );
+        return Err(format!(
+            "{} invariant violation(s) at seed {seed} (step {})",
+            report.violations.len(),
+            report.steps_run
+        )
+        .into());
     }
     Ok(())
 }
@@ -558,6 +662,9 @@ fn main() -> Result<(), CliError> {
         }
         "cache" => {
             cmd_cache(&args)?;
+        }
+        "dst" => {
+            cmd_dst(&args)?;
         }
         "asm" => {
             let path = args.positional.first().ok_or("asm requires a file path")?;

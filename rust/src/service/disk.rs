@@ -134,6 +134,117 @@ pub const DEFAULT_MAX_BYTES: u64 = 512 * 1024 * 1024;
 /// writer's leftovers; live writers rename within milliseconds).
 const TMP_SWEEP_AGE: Duration = Duration::from_secs(3600);
 
+/// What a [`DiskHooks`] implementation decides about one atomic entry
+/// write, *before* any bytes reach the filesystem. `Commit` is the
+/// production path; every other plan models a storage fault the DST
+/// harness (`crate::dst`) injects to prove the trust model holds:
+/// readers must treat whatever these plans leave behind as "decode or
+/// quarantine, never panic".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritePlan {
+    /// Write everything, fsync, rename — the normal atomic path.
+    Commit,
+    /// The disk fills mid-write: only `written` bytes land in the tmp
+    /// file, which is then quarantined (deleted), and the store returns
+    /// [`StoreError::NoSpace`] — the same surface a real `ENOSPC` takes.
+    DiskFull {
+        /// Bytes the simulated device accepted before filling up.
+        written: usize,
+    },
+    /// A lying disk: only `keep` bytes (clamped below the frame length)
+    /// are written, yet the rename happens and the write *reports
+    /// success*. The resulting entry is torn; the next load must detect
+    /// and quarantine it.
+    TornFrame {
+        /// Bytes of the frame that actually reach the entry file.
+        keep: usize,
+    },
+    /// The process "crashes" after the tmp write but before the rename:
+    /// the tmp file is left behind (a crashed writer cannot clean up)
+    /// and the store returns [`StoreError::Interrupted`].
+    CrashBeforeRename,
+}
+
+/// Injection seam for entry writes, threaded through [`DiskStore`] via
+/// [`DiskStore::with_hooks`]. Consulted exactly once per
+/// `write_entry_file` call — the production store carries no hooks and
+/// always commits; the DST harness arms one-shot fault plans here so
+/// the *real* write path (not a mock) executes the fault.
+pub trait DiskHooks: Send + Sync {
+    /// Decide the fate of the write of `len` bytes to `<stem>.<ext>`.
+    fn write_plan(&self, stem: &str, ext: &str, len: usize) -> WritePlan;
+}
+
+/// Why a [`DiskStore`] write path failed — typed so callers (and the
+/// DST invariant checker) can distinguish a full disk from a torn write
+/// from an ordinary I/O error instead of pattern-matching message
+/// strings. Every variant means the entry was **not** committed and the
+/// partial tmp file was quarantined (except [`Interrupted`], which
+/// models a crash that by definition cannot clean up).
+///
+/// [`Interrupted`]: StoreError::Interrupted
+#[derive(Debug)]
+pub enum StoreError {
+    /// The device ran out of space (`ENOSPC`, or an injected
+    /// [`WritePlan::DiskFull`]); `written` of `total` bytes landed
+    /// before the failure and the tmp file was quarantined.
+    NoSpace {
+        /// Bytes accepted before the device filled.
+        written: u64,
+        /// Bytes the complete entry frame needed.
+        total: u64,
+    },
+    /// The device accepted zero bytes mid-frame without an error (a
+    /// short write); the tmp file was quarantined.
+    ShortWrite {
+        /// Bytes written before the device stalled.
+        written: u64,
+        /// Bytes the complete entry frame needed.
+        total: u64,
+    },
+    /// An injected crash between the tmp write and the rename; the tmp
+    /// file is left on disk for GC's stale-tmp sweep, exactly as a real
+    /// crashed writer would leave it.
+    Interrupted,
+    /// Any other I/O failure (create, write, rename); the tmp file was
+    /// quarantined if it existed.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::NoSpace { written, total } => {
+                write!(f, "no space on device after {written} of {total} bytes")
+            }
+            StoreError::ShortWrite { written, total } => {
+                write!(f, "short write: device accepted {written} of {total} bytes")
+            }
+            StoreError::Interrupted => write!(f, "write interrupted before rename"),
+            StoreError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for StoreError {
+    fn from(e: io::Error) -> Self {
+        #[cfg(unix)]
+        if e.raw_os_error() == Some(ENOSPC_ERRNO) {
+            return StoreError::NoSpace { written: 0, total: 0 };
+        }
+        StoreError::Io(e)
+    }
+}
+
 /// Where and how large the on-disk tier is.
 #[derive(Debug, Clone)]
 pub struct DiskConfig {
@@ -635,6 +746,34 @@ fn open_lock_file(path: &Path, create: bool) -> Option<File> {
     OpenOptions::new().create(create).read(true).write(true).open(path).ok()
 }
 
+/// `errno` for a full device; `io::ErrorKind::StorageFull` is not
+/// stable on the MSRV, so writes classify by raw errno.
+#[cfg(unix)]
+const ENOSPC_ERRNO: i32 = 28;
+
+/// `write_all` with typed failure classification: tracks how many bytes
+/// landed so `NoSpace`/`ShortWrite` can report progress, retries
+/// `EINTR`, and maps `ENOSPC` to [`StoreError::NoSpace`].
+fn write_fully(f: &mut File, bytes: &[u8]) -> Result<(), StoreError> {
+    let total = bytes.len() as u64;
+    let mut written = 0usize;
+    while written < bytes.len() {
+        match f.write(&bytes[written..]) {
+            Ok(0) => return Err(StoreError::ShortWrite { written: written as u64, total }),
+            Ok(n) => written += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                #[cfg(unix)]
+                if e.raw_os_error() == Some(ENOSPC_ERRNO) {
+                    return Err(StoreError::NoSpace { written: written as u64, total });
+                }
+                return Err(StoreError::Io(e));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// An exclusive per-key build lock, released on drop (or process death).
 pub struct BuildLock {
     file: File,
@@ -757,6 +896,8 @@ pub struct DiskStore {
     max_bytes: u64,
     /// Read-only fallback tier; see the module docs for its invariants.
     seed: Option<PathBuf>,
+    /// Fault-injection seam ([`DiskHooks`]); `None` in production.
+    hooks: Option<Arc<dyn DiskHooks>>,
 }
 
 impl DiskStore {
@@ -765,7 +906,15 @@ impl DiskStore {
     /// hits.
     pub fn open(cfg: DiskConfig) -> io::Result<DiskStore> {
         fs::create_dir_all(&cfg.dir)?;
-        Ok(DiskStore { dir: cfg.dir, max_bytes: cfg.max_bytes, seed: cfg.seed })
+        Ok(DiskStore { dir: cfg.dir, max_bytes: cfg.max_bytes, seed: cfg.seed, hooks: None })
+    }
+
+    /// Attach a [`DiskHooks`] fault seam to this store (builder style).
+    /// Only the DST harness does this; stores opened without hooks
+    /// always take the plain `Commit` write path.
+    pub fn with_hooks(mut self, hooks: Arc<dyn DiskHooks>) -> DiskStore {
+        self.hooks = Some(hooks);
+        self
     }
 
     /// The writable cache directory.
@@ -914,8 +1063,11 @@ impl DiskStore {
 
     /// Persist `w` as `key`'s entry: write to a `.tmp.<pid>` sibling,
     /// fsync, rename into place (readers never see partial writes),
-    /// then GC the writable directory back under its size bound.
-    pub fn store(&self, key: &WorkloadKey, w: &Workload) -> io::Result<StoredEntry> {
+    /// then GC the writable directory back under its size bound. On any
+    /// failure the partial tmp file is quarantined (deleted) and the
+    /// typed [`StoreError`] says what went wrong — `ENOSPC` and short
+    /// writes get their own variants instead of an opaque `io::Error`.
+    pub fn store(&self, key: &WorkloadKey, w: &Workload) -> Result<StoredEntry, StoreError> {
         let bytes = encode(key, w);
         let body_bytes = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
         self.write_entry_file(&key.cache_file_stem(), "dwl", &bytes)?;
@@ -926,16 +1078,83 @@ impl DiskStore {
     /// write `bytes` to `<stem>.tmp.<pid>`, fsync, rename to
     /// `<stem>.<ext>` (readers never see partial writes), then GC the
     /// writable directory back under its size bound.
-    pub(crate) fn write_entry_file(&self, stem: &str, ext: &str, bytes: &[u8]) -> io::Result<()> {
+    ///
+    /// A failed write never leaves the tmp file behind: `ENOSPC`
+    /// ([`StoreError::NoSpace`]), a zero-progress write
+    /// ([`StoreError::ShortWrite`]) and every other I/O failure
+    /// quarantine it before returning. The one exception is an injected
+    /// [`WritePlan::CrashBeforeRename`], which *deliberately* leaves the
+    /// tmp file — a crashed process cannot clean up; that corpse is what
+    /// [`sweep_stale_tmp`](Self::sweep_stale_tmp) exists for.
+    pub(crate) fn write_entry_file(
+        &self,
+        stem: &str,
+        ext: &str,
+        bytes: &[u8],
+    ) -> Result<(), StoreError> {
+        let plan = match &self.hooks {
+            Some(h) => h.write_plan(stem, ext, bytes.len()),
+            None => WritePlan::Commit,
+        };
         let tmp = self.dir.join(format!("{stem}.tmp.{}", std::process::id()));
-        {
-            let mut f = File::create(&tmp)?;
-            f.write_all(bytes)?;
-            let _ = f.sync_all();
+        match plan {
+            WritePlan::Commit => {
+                let mut f = File::create(&tmp).map_err(StoreError::from)?;
+                if let Err(e) = write_fully(&mut f, bytes) {
+                    drop(f);
+                    let _ = fs::remove_file(&tmp);
+                    return Err(e);
+                }
+                let _ = f.sync_all();
+                drop(f);
+                if let Err(e) = fs::rename(&tmp, self.dir.join(format!("{stem}.{ext}"))) {
+                    let _ = fs::remove_file(&tmp);
+                    return Err(StoreError::from(e));
+                }
+                self.gc();
+                Ok(())
+            }
+            WritePlan::DiskFull { written } => {
+                // Simulated ENOSPC: the device accepts a prefix, then
+                // fails. Same observable outcome as the real-errno path
+                // above — quarantined tmp, typed error.
+                let written = written.min(bytes.len());
+                if let Ok(mut f) = File::create(&tmp) {
+                    let _ = f.write_all(&bytes[..written]);
+                }
+                let _ = fs::remove_file(&tmp);
+                Err(StoreError::NoSpace { written: written as u64, total: bytes.len() as u64 })
+            }
+            WritePlan::TornFrame { keep } => {
+                // Lying disk: a truncated frame lands under the final
+                // name and the write reports success. The reader-side
+                // trust model has to catch this.
+                let keep = keep.min(bytes.len().saturating_sub(1));
+                let mut f = File::create(&tmp).map_err(StoreError::from)?;
+                if let Err(e) = write_fully(&mut f, &bytes[..keep]) {
+                    drop(f);
+                    let _ = fs::remove_file(&tmp);
+                    return Err(e);
+                }
+                let _ = f.sync_all();
+                drop(f);
+                fs::rename(&tmp, self.dir.join(format!("{stem}.{ext}"))).map_err(StoreError::from)?;
+                self.gc();
+                Ok(())
+            }
+            WritePlan::CrashBeforeRename => {
+                // Crash between tmp write and rename: the tmp file
+                // stays, exactly as a killed process would leave it.
+                let mut f = File::create(&tmp).map_err(StoreError::from)?;
+                if let Err(e) = write_fully(&mut f, bytes) {
+                    drop(f);
+                    let _ = fs::remove_file(&tmp);
+                    return Err(e);
+                }
+                let _ = f.sync_all();
+                Err(StoreError::Interrupted)
+            }
         }
-        fs::rename(&tmp, self.dir.join(format!("{stem}.{ext}")))?;
-        self.gc();
-        Ok(())
     }
 
     /// `(path, size, recency)` of every `.dwl`/`.dsr` entry in the
@@ -1128,6 +1347,7 @@ impl DiskStore {
 mod tests {
     use super::*;
     use crate::sparse::DatasetKind;
+    use std::sync::Mutex;
 
     fn key(block: usize) -> WorkloadKey {
         WorkloadKey::new(KernelKind::Sddmm, DatasetKind::PubMed, block, true, 0.04)
@@ -1369,5 +1589,106 @@ mod tests {
         assert_eq!(live.victims.len(), 2);
         assert_eq!(store.stats().entries(), 0);
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A one-shot hook for driving [`write_entry_file`] into each
+    /// injected plan (the standalone twin of the DST fault injector).
+    struct OneShot(Mutex<Option<WritePlan>>);
+
+    impl DiskHooks for OneShot {
+        fn write_plan(&self, _stem: &str, _ext: &str, _len: usize) -> WritePlan {
+            self.0.lock().unwrap().take().unwrap_or(WritePlan::Commit)
+        }
+    }
+
+    fn entry_names(dir: &Path) -> Vec<String> {
+        let mut names: Vec<String> = fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        names
+    }
+
+    #[test]
+    fn disk_full_types_the_error_and_quarantines_the_tmp() {
+        let dir = tmp_dir("hooks-enospc");
+        let hooks = Arc::new(OneShot(Mutex::new(Some(WritePlan::DiskFull { written: 5 }))));
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap().with_hooks(hooks);
+        let k = key(1);
+        match store.store(&k, &k.build()) {
+            Err(StoreError::NoSpace { written, total }) => {
+                assert_eq!(written, 5);
+                assert!(total > written, "total {total} reflects the full frame");
+            }
+            other => panic!("expected NoSpace, got {other:?}"),
+        }
+        assert!(entry_names(&dir).is_empty(), "no tmp or entry left after ENOSPC");
+        // The store is not poisoned: the next (uninjected) write lands.
+        store.store(&k, &k.build()).unwrap();
+        assert!(store.load(&k).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_before_rename_leaves_tmp_but_no_entry() {
+        let dir = tmp_dir("hooks-crash");
+        let hooks = Arc::new(OneShot(Mutex::new(Some(WritePlan::CrashBeforeRename))));
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap().with_hooks(hooks);
+        let k = key(1);
+        match store.store(&k, &k.build()) {
+            Err(StoreError::Interrupted) => {}
+            other => panic!("expected Interrupted, got {other:?}"),
+        }
+        let names = entry_names(&dir);
+        assert!(
+            names.iter().all(|n| !n.ends_with(".dwl")),
+            "no committed entry after the crash: {names:?}"
+        );
+        assert!(
+            names.iter().any(|n| n.contains(".tmp.")),
+            "the crashed write's tmp corpse remains: {names:?}"
+        );
+        assert!(store.load(&k).is_none(), "a tmp corpse must never serve a load");
+        // Recovery: the next write commits over the corpse's stem.
+        store.store(&k, &k.build()).unwrap();
+        assert!(store.load(&k).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_frame_commits_then_quarantines_on_load() {
+        let dir = tmp_dir("hooks-torn");
+        let hooks =
+            Arc::new(OneShot(Mutex::new(Some(WritePlan::TornFrame { keep: HEADER_LEN + 4 }))));
+        let store = DiskStore::open(DiskConfig::new(&dir)).unwrap().with_hooks(hooks);
+        let k = key(1);
+        // The lying disk reports success...
+        store.store(&k, &k.build()).unwrap();
+        let entry = dir.join(format!("{}.dwl", k.cache_file_stem()));
+        assert!(entry.exists(), "torn frame was renamed into place");
+        // ...but the reader detects the torn frame, quarantines it, and
+        // misses rather than serving garbage.
+        assert!(store.load(&k).is_none(), "torn entry must not decode");
+        assert!(!entry.exists(), "torn entry quarantined on load");
+        // A clean rebuild round-trips.
+        store.store(&k, &k.build()).unwrap();
+        let loaded = store.load(&k).expect("rebuilt entry loads");
+        assert_same_workload(&loaded.workload, &k.build());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_error_display_is_actionable() {
+        let e = StoreError::NoSpace { written: 5, total: 100 };
+        let msg = e.to_string();
+        assert!(msg.contains("no space"), "{msg}");
+        assert!(msg.contains('5') && msg.contains("100"), "{msg}");
+        let s = StoreError::ShortWrite { written: 1, total: 2 }.to_string();
+        assert!(s.contains("short write"), "{s}");
+        let io_err = io::Error::new(io::ErrorKind::PermissionDenied, "nope");
+        let wrapped = StoreError::from(io_err);
+        assert!(matches!(wrapped, StoreError::Io(_)), "{wrapped:?}");
     }
 }

@@ -68,7 +68,10 @@ pub mod transport;
 pub mod workers;
 
 pub use cache::{CacheCounters, Fetch, WorkloadCache};
-pub use disk::{DiskConfig, DiskLoad, DiskStats, DiskStore, GcReport, StoredEntry, TierStats};
+pub use disk::{
+    DiskConfig, DiskHooks, DiskLoad, DiskStats, DiskStore, GcReport, StoreError, StoredEntry,
+    TierStats, WritePlan,
+};
 pub use results::{ResultKey, ResultLoad};
 pub use job::{Job, JobOutcome};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};

@@ -245,6 +245,75 @@ mod tests {
     }
 
     #[test]
+    fn push_timeout_sees_close_not_full() {
+        // A producer parked in push_timeout while the queue shuts down
+        // must learn the truth: the queue is *closed*, not merely full —
+        // `Full` would invite a pointless retry loop against a dead
+        // queue. close() must also wake the waiter well before the
+        // (deliberately huge) deadline.
+        let q = Arc::new(JobQueue::bounded(1));
+        q.push(0usize).unwrap();
+        let q2 = q.clone();
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.close();
+        });
+        let t0 = std::time::Instant::now();
+        match q.push_timeout(1, Duration::from_secs(30)) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 1, "item handed back on close"),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "close() woke the waiter");
+        closer.join().unwrap();
+        // The item queued before close still drains.
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn expired_push_timeout_hands_back_for_lossless_retry() {
+        // The reserved-slot protocol of the transport: when push_timeout
+        // expires against a full queue, the producer still *holds* the
+        // item (it came back inside Full) and retries. With a slow
+        // concurrent consumer, every item must eventually land exactly
+        // once, in order — expiry must never drop or duplicate.
+        let q = Arc::new(JobQueue::bounded(2));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.pop() {
+                got.push(v);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            got
+        });
+        let total = 20usize;
+        let mut retries = 0usize;
+        for v in 0..total {
+            let mut item = v;
+            loop {
+                match q.push_timeout(item, Duration::from_millis(1)) {
+                    Ok(()) => break,
+                    Err(PushError::Full(back)) => {
+                        // Expired: the slot is still ours; retry with
+                        // the handed-back item.
+                        retries += 1;
+                        item = back;
+                    }
+                    Err(PushError::Closed(_)) => panic!("queue closed mid-test"),
+                }
+            }
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..total).collect::<Vec<_>>(), "no loss, no dups, FIFO");
+        // The consumer is slower than the 1ms budget, so backpressure
+        // must actually have fired at least once for the test to mean
+        // anything.
+        assert!(retries > 0, "expected at least one expired push_timeout");
+    }
+
+    #[test]
     fn mpmc_many_producers_many_consumers() {
         let q = Arc::new(JobQueue::bounded(4));
         let sum = Arc::new(AtomicUsize::new(0));

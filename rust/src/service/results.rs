@@ -41,10 +41,10 @@
 //! full four-tier lookup walkthrough.
 
 use std::fs::{self, File};
-use std::io::{self, Read};
+use std::io::Read;
 use std::path::PathBuf;
 
-use super::disk::{self, BuildLock, DiskStore, StoredEntry};
+use super::disk::{self, BuildLock, DiskStore, StoreError, StoredEntry};
 use crate::kernels::WorkloadKey;
 use crate::sim::config::SimConfig;
 use crate::sim::{SimStats, SIM_VERSION};
@@ -361,7 +361,12 @@ impl DiskStore {
                         key.name()
                     );
                 }
-                Some(ResultLoad { stats, from_seed: true, stored_bytes: bytes.len() as u64, body_bytes })
+                Some(ResultLoad {
+                    stats,
+                    from_seed: true,
+                    stored_bytes: bytes.len() as u64,
+                    body_bytes,
+                })
             }
             // Read-only tier: never delete or rewrite a corrupt seed
             // entry; just fall through to a simulation.
@@ -371,7 +376,13 @@ impl DiskStore {
 
     /// Persist `stats` as `key`'s `.dsr` entry via the shared atomic
     /// write-fsync-rename path, then GC back under the size bound.
-    pub fn store_result(&self, key: &ResultKey, stats: &SimStats) -> io::Result<StoredEntry> {
+    /// Failures are typed ([`StoreError`]) and quarantine the partial
+    /// tmp file, same as [`DiskStore::store`].
+    pub fn store_result(
+        &self,
+        key: &ResultKey,
+        stats: &SimStats,
+    ) -> Result<StoredEntry, StoreError> {
         let bytes = encode_result(key, stats);
         let body_bytes = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
         self.write_entry_file(&key.file_stem(), "dsr", &bytes)?;

@@ -773,6 +773,54 @@ mod tests {
     }
 
     #[test]
+    fn busy_backpressure_composes_with_shutdown_drain() {
+        // The two mechanisms together: a saturated one-slot queue (busy
+        // events firing while the worker drains concurrently) and a
+        // shutdown command at the end of the same session. Backpressure
+        // must not lose jobs, the drain must still answer all of them,
+        // and the stream must stay well-formed (one done event, last).
+        let cfg = ServiceConfig { workers: 1, queue_capacity: 1, ..ServiceConfig::default() };
+        let service = Service::start(cfg);
+        let n = 8;
+        let mut input: String =
+            (0..n).map(|i| format!("{}\n", job(&format!("d{i}"), "baseline"))).collect();
+        input.push_str("{\"cmd\":\"shutdown\"}\n");
+        let buf = SharedBuf::default();
+        let flag = AtomicBool::new(false);
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            Some(&flag),
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, n as u64);
+        assert_eq!(summary.failed, 0);
+        assert!(summary.shutdown_requested);
+        assert!(flag.load(Ordering::SeqCst), "server flag flipped by the drain");
+        let lines = buf.take_lines();
+        let (mut results, mut busy, mut done) = (0, 0, 0);
+        for l in &lines {
+            let v = Json::parse(l).unwrap();
+            match v.get("event").and_then(Json::as_str) {
+                Some("result") => {
+                    results += 1;
+                    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{l}");
+                }
+                Some("busy") => busy += 1,
+                Some("done") => done += 1,
+                other => panic!("unexpected event {other:?}: {l}"),
+            }
+        }
+        assert_eq!(results, n, "every job answered through backpressure + drain: {lines:?}");
+        assert!(busy >= 1, "no busy event despite a saturated queue: {lines:?}");
+        assert_eq!(done, 1);
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(last.get("event").and_then(Json::as_str), Some("done"), "done is last");
+    }
+
+    #[test]
     fn shutdown_cmd_drains_and_flips_server_flag() {
         let service = Service::start(ServiceConfig::with_workers(1));
         let input = format!("{}\n{{\"cmd\":\"shutdown\"}}\n", job("last", "baseline"));

@@ -99,10 +99,21 @@ impl Service {
     /// Start the worker pool. Workers live until the service is dropped
     /// or [`shutdown`](Service::shutdown).
     pub fn start(cfg: ServiceConfig) -> Self {
+        Self::start_with_store(cfg, None)
+    }
+
+    /// [`start`](Self::start) with a pre-opened [`DiskStore`] handle.
+    /// When `store` is `Some`, it is used as the disk tier verbatim —
+    /// including any [`DiskHooks`](super::DiskHooks) fault seam attached
+    /// to it — and `cfg.disk` is ignored; this is how the DST harness
+    /// (`crate::dst`) threads fault injection through a real service.
+    pub fn start_with_store(cfg: ServiceConfig, store: Option<Arc<DiskStore>>) -> Self {
         let n = cfg.resolved_workers();
         let queue = Arc::new(JobQueue::bounded(cfg.queue_capacity));
         let mut cache = WorkloadCache::new(cfg.cache_capacity).with_result_cache(cfg.result_cache);
-        if let Some(disk_cfg) = cfg.disk.clone() {
+        if let Some(store) = store {
+            cache = cache.with_disk(store);
+        } else if let Some(disk_cfg) = cfg.disk.clone() {
             let dir = disk_cfg.dir.display().to_string();
             let store = DiskStore::open(disk_cfg)
                 .unwrap_or_else(|e| panic!("cannot open workload cache dir '{dir}': {e}"));

@@ -75,6 +75,15 @@ impl Pcg32 {
         (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
     }
 
+    /// Derive an independent child stream, advancing `self` by one
+    /// draw. Seeding the child through [`Pcg32::new`] (SplitMix64
+    /// expansion) decorrelates it from the parent, so a scheduler can
+    /// hand each actor its own generator whose sequence is stable even
+    /// when sibling actors consume different amounts of randomness.
+    pub fn split(&mut self) -> Pcg32 {
+        Pcg32::new(self.next_u64())
+    }
+
     /// Uniform in `[0, bound)` using Lemire's multiply-shift rejection.
     #[inline]
     pub fn below(&mut self, bound: u32) -> u32 {
