@@ -3,14 +3,17 @@
 //! metric optimized in EXPERIMENTS.md §Perf.
 //!
 //! Run: `cargo bench --offline` (add `-- --fast` for a smoke pass,
-//! `-- --filter <substr>` to select).
+//! `-- --filter <substr>` to select). CI adds `--json
+//! BENCH_sim_hotpath.json --baseline benches/baseline.json`: the run
+//! fails if any case's median lands >25% over the committed baseline
+//! (see docs/PERF.md for the update workflow).
 
 use dare::coordinator::{run_one, BenchPoint, RunSpec};
 use dare::kernels::{KernelKind, WorkloadKey};
 use dare::mem::{Llc, LlcConfig, MemRequest};
 use dare::service::disk;
 use dare::service::{Service, ServiceConfig};
-use dare::sim::{MmaExec, Mpu, NativeMma, SimConfig, Variant};
+use dare::sim::{parallel, run_sharded, MmaExec, Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::bench::Bencher;
 
@@ -39,6 +42,52 @@ fn main() {
         let point = BenchPoint::new(KernelKind::SpMM, DatasetKind::Gpt2Attention, 8, 0.12);
         let (cycles, mut f) = sim_cycles(point, variant);
         b.bench_elems(&format!("mpu/spmm-gpt2-b8/{}", variant.name()), cycles, &mut f);
+    }
+
+    // Sharded single-job parallelism (`sim::parallel`): one large SpMM
+    // workload at 1/4/8 shard threads. The shard plan — and so every
+    // stat — is identical across the sweep (asserted below); only the
+    // wall time moves. The t1→t4 ratio is the headline speedup number
+    // in BENCH_sim_hotpath.json (§Perf targets ≥2x).
+    {
+        let point = BenchPoint::new(KernelKind::SpMM, DatasetKind::Gpt2Attention, 8, 0.25);
+        let w = point.build(true);
+        let starts = parallel::shard_starts(
+            w.program.instrs.len(),
+            &parallel::partition_boundaries(&w.program.instrs),
+        );
+        assert!(
+            starts.len() >= 4,
+            "parallel bench workload must split into >= 4 shards, got {}",
+            starts.len()
+        );
+        let checks: Vec<(u64, usize)> =
+            w.checks.iter().map(|c| (c.addr, c.expect.len())).collect();
+        let mut digests = Vec::new();
+        for threads in [1usize, 4, 8] {
+            let mut cfg = SimConfig::for_variant(Variant::DareFre);
+            cfg.sim_threads = threads;
+            let (calib, _) = run_sharded(&cfg, &w.program, &w.mem, &checks, || {
+                Box::new(NativeMma) as Box<dyn MmaExec>
+            });
+            digests.push(calib.fnv_digest());
+            b.bench_elems(&format!("parallel/spmm-gpt2-b8/t{threads}"), calib.cycles, || {
+                let (stats, _) = run_sharded(&cfg, &w.program, &w.mem, &checks, || {
+                    Box::new(NativeMma) as Box<dyn MmaExec>
+                });
+                stats.cycles
+            });
+        }
+        assert!(
+            digests.windows(2).all(|d| d[0] == d[1]),
+            "thread sweep must not change results: {digests:?}"
+        );
+        let median = |suffix: &str| {
+            b.results().iter().find(|r| r.name.ends_with(suffix)).map(|r| r.median_ns)
+        };
+        if let (Some(t1), Some(t4)) = (median("/t1"), median("/t4")) {
+            println!("parallel/spmm-gpt2-b8 speedup t1/t4: {:.2}x", t1 / t4);
+        }
     }
 
     // LLC access path in isolation.
@@ -157,4 +206,6 @@ fn main() {
     }
 
     let _ = b.write_csv("results/bench_sim_hotpath.csv");
+    // Honor `--json` (artifact) and `--baseline` (25% regression gate).
+    std::process::exit(b.finish("sim_hotpath"));
 }

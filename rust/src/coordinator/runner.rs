@@ -9,7 +9,7 @@ use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
 use crate::kernels::Workload;
 use crate::runtime::XlaMma;
 use crate::service::{Service, ServiceConfig};
-use crate::sim::{Mpu, NativeMma, SimStats};
+use crate::sim::{run_sharded, MmaExec, NativeMma, SimStats};
 
 #[derive(Debug, Clone)]
 /// Everything one completed run produces: the simulation counters,
@@ -50,21 +50,28 @@ pub fn run_one(spec: &RunSpec, use_xla: bool) -> RunResult {
 /// service workers run against cache-shared `Arc<Workload>`s. The
 /// workload is read-only: each run clones the base memory image into its
 /// own MPU, so any number of concurrent runs can share one build.
+///
+/// Large programs execute through [`run_sharded`], splitting the job
+/// across `cfg.sim_threads` workers at register-dataflow boundaries;
+/// results are bit-identical at any thread count.
 pub fn run_prebuilt(spec: &RunSpec, workload: &Workload, use_xla: bool) -> RunResult {
     let cfg = spec.config();
-    let exec: Box<dyn crate::sim::MmaExec> = if use_xla {
-        Box::new(XlaMma::from_artifacts().expect("artifacts missing: run `make artifacts`"))
-    } else {
-        Box::new(NativeMma)
+    let make_exec = || -> Box<dyn MmaExec> {
+        if use_xla {
+            Box::new(XlaMma::from_artifacts().expect("artifacts missing: run `make artifacts`"))
+        } else {
+            Box::new(NativeMma)
+        }
     };
-    let mut mpu = Mpu::new(cfg, workload.mem.clone(), exec);
-    let stats = mpu.run(&workload.program);
+    let check_regions: Vec<(u64, usize)> =
+        workload.checks.iter().map(|c| (c.addr, c.expect.len())).collect();
+    let (stats, mem) =
+        run_sharded(&cfg, &workload.program, &workload.mem, &check_regions, make_exec);
     let verify_err = if spec.verify {
-        Some(
-            workload
-                .verify(&mpu.mem, 1e-3)
-                .unwrap_or_else(|e| panic!("functional verification failed for {}: {e}", spec.name())),
-        )
+        let err = workload.verify(&mem, 1e-3).unwrap_or_else(|e| {
+            panic!("functional verification failed for {}: {e}", spec.name())
+        });
+        Some(err)
     } else {
         None
     };
@@ -124,6 +131,23 @@ mod tests {
         let prebuilt = run_prebuilt(&spec, &shared, false);
         assert_eq!(direct.stats.cycles, prebuilt.stats.cycles);
         assert_eq!(direct.name, prebuilt.name);
+    }
+
+    #[test]
+    fn sim_threads_never_change_results() {
+        // The sharded path's determinism contract at the spec level:
+        // identical stats (and digest) at 1, 2 and 8 worker threads,
+        // whether or not the workload is big enough to shard.
+        let mut results = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut spec = tiny(KernelKind::SpMM, Variant::DareFull);
+            spec.sim_threads = Some(threads);
+            results.push(run_one(&spec, false));
+        }
+        assert_eq!(results[0].stats, results[1].stats, "1 vs 2 threads");
+        assert_eq!(results[0].stats, results[2].stats, "1 vs 8 threads");
+        assert_eq!(results[0].stats.fnv_digest(), results[2].stats.fnv_digest());
+        assert!(results[0].verify_err.unwrap() < 1e-3);
     }
 
     #[test]

@@ -74,6 +74,10 @@ pub struct RunSpec {
     pub oracle_llc: bool,
     /// Verify functional outputs after the run.
     pub verify: bool,
+    /// Worker threads for sharded single-job simulation (`None` = the
+    /// variant default of 1; `Some(0)` = one per core). Never part of
+    /// the result-cache key: results are thread-count invariant.
+    pub sim_threads: Option<usize>,
 }
 
 impl RunSpec {
@@ -89,6 +93,7 @@ impl RunSpec {
             rfu_dynamic: None,
             oracle_llc: false,
             verify: false,
+            sim_threads: None,
         }
     }
 
@@ -126,6 +131,9 @@ impl RunSpec {
         }
         if let Some(d) = self.rfu_dynamic {
             cfg.rfu.dynamic = d;
+        }
+        if let Some(t) = self.sim_threads {
+            cfg.sim_threads = t;
         }
         cfg.llc.oracle = self.oracle_llc;
         if let Some(f) = self.config_override {

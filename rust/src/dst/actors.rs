@@ -204,17 +204,21 @@ impl World {
         dir: &Path,
         seed_dir: &Path,
         injector: Arc<FaultInjector>,
+        sim_threads: usize,
     ) -> Result<World, String> {
         let specs = SpecDef::pool();
         bake_seed(seed_dir, &specs)?;
         let service_store = open_store(dir, seed_dir)?.with_hooks(injector.clone());
         // One worker keeps completion order equal to submission order —
         // the concurrency the harness explores is the *interleaving of
-        // actors*, which the seed fully determines.
+        // actors*, which the seed fully determines. Intra-job sharding
+        // (`sim_threads`) is invisible to that order: it parallelizes
+        // inside one job without changing its result or its reply.
         let cfg = ServiceConfig {
             workers: 1,
             queue_capacity: 64,
             cache_capacity: 16,
+            sim_threads,
             ..ServiceConfig::default()
         };
         let service = Service::start_with_store(cfg, Some(Arc::new(service_store)));

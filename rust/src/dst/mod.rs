@@ -56,6 +56,12 @@ pub struct DstConfig {
     /// a fresh one in the scratch dir. Baked on first use if empty —
     /// the baked bytes are deterministic, so CI can cache it.
     pub seed_dir: Option<PathBuf>,
+    /// Per-job shard worker threads for the world's service
+    /// (`sim::parallel`; 0 = one per core). Simulation results — and so
+    /// every trace line and report digest — are bit-identical at any
+    /// value; CI sweeps 1/2/8 on one seed to prove it. Deliberately
+    /// *not* part of any trace line.
+    pub sim_threads: usize,
 }
 
 impl DstConfig {
@@ -67,6 +73,7 @@ impl DstConfig {
             actors: ActorKind::ALL.to_vec(),
             faults: FaultSpec::all(),
             seed_dir: None,
+            sim_threads: 1,
         }
     }
 }

@@ -6,7 +6,7 @@ use crate::coordinator::{RunResult, RunSpec};
 use crate::energy::{energy_of, EnergyBreakdown, EnergyModel};
 use crate::kernels::Workload;
 use crate::service::{DiskConfig, Service, ServiceConfig};
-use crate::sim::{Mpu, NativeMma, SimConfig, SimStats};
+use crate::sim::{run_sharded, MmaExec, NativeMma, SimConfig, SimStats};
 use crate::sparse::{Csc, Triplet};
 use crate::util::prng::Pcg32;
 use crate::util::table::Table;
@@ -69,12 +69,16 @@ pub fn run_shared(specs: &[RunSpec], opts: HarnessOpts) -> Vec<RunResult> {
     shared_service(opts).run_batch(specs)
 }
 
-/// Run one pre-built workload under `cfg` (native functional backend).
+/// Run one pre-built workload under `cfg` (native functional backend),
+/// sharded across `cfg.sim_threads` workers for large programs.
 pub fn run_workload(w: &Workload, cfg: SimConfig, verify: bool) -> (SimStats, EnergyBreakdown) {
-    let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
-    let stats = mpu.run(&w.program);
+    let check_regions: Vec<(u64, usize)> =
+        w.checks.iter().map(|c| (c.addr, c.expect.len())).collect();
+    let (stats, mem) = run_sharded(&cfg, &w.program, &w.mem, &check_regions, || {
+        Box::new(NativeMma) as Box<dyn MmaExec>
+    });
     if verify {
-        w.verify(&mpu.mem, 1e-3)
+        w.verify(&mem, 1e-3)
             .unwrap_or_else(|e| panic!("verification failed for '{}': {e}", w.program.name));
     }
     (stats, energy_of(&stats, &EnergyModel::default()))

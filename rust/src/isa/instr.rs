@@ -131,6 +131,50 @@ impl Default for MatShape {
     }
 }
 
+/// A small fixed-capacity list of source registers (at most three —
+/// `mma` reads its accumulator plus two operands).
+///
+/// Stack-allocated so per-cycle scoreboard walks stay heap-free; iterate
+/// it directly (`for s in instr.srcs()`) or borrow via [`SrcRegs::as_slice`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SrcRegs {
+    buf: [MReg; 3],
+    len: u8,
+}
+
+impl SrcRegs {
+    /// Build from a slice of at most three registers.
+    fn new(regs: &[MReg]) -> Self {
+        let mut buf = [MReg(0); 3];
+        buf[..regs.len()].copy_from_slice(regs);
+        SrcRegs { buf, len: regs.len() as u8 }
+    }
+
+    /// Number of source registers.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// True when the instruction reads no matrix registers.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The sources as a slice.
+    pub fn as_slice(&self) -> &[MReg] {
+        &self.buf[..self.len as usize]
+    }
+}
+
+impl IntoIterator for SrcRegs {
+    type Item = MReg;
+    type IntoIter = std::iter::Take<std::array::IntoIter<MReg, 3>>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.into_iter().take(self.len as usize)
+    }
+}
+
 /// A dispatched DARE instruction (scalar operands resolved by the host).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MInstr {
@@ -188,14 +232,18 @@ impl MInstr {
     }
 
     /// The matrix registers read by this instruction.
-    pub fn srcs(&self) -> Vec<MReg> {
+    ///
+    /// Returns a fixed-capacity [`SrcRegs`] rather than a `Vec`: the
+    /// scoreboard walks the source list for every queued instruction on
+    /// every cycle, so this must not allocate.
+    pub fn srcs(&self) -> SrcRegs {
         match self {
-            MInstr::Mcfg { .. } | MInstr::Mld { .. } => vec![],
-            MInstr::Mst { ms3, .. } => vec![*ms3],
+            MInstr::Mcfg { .. } | MInstr::Mld { .. } => SrcRegs::new(&[]),
+            MInstr::Mst { ms3, .. } => SrcRegs::new(&[*ms3]),
             // mma reads its accumulator as well.
-            MInstr::Mma { md, ms1, ms2 } => vec![*md, *ms1, *ms2],
-            MInstr::Mgather { ms1, .. } => vec![*ms1],
-            MInstr::Mscatter { ms2, ms1 } => vec![*ms2, *ms1],
+            MInstr::Mma { md, ms1, ms2 } => SrcRegs::new(&[*md, *ms1, *ms2]),
+            MInstr::Mgather { ms1, .. } => SrcRegs::new(&[*ms1]),
+            MInstr::Mscatter { ms2, ms1 } => SrcRegs::new(&[*ms2, *ms1]),
         }
     }
 
@@ -276,8 +324,10 @@ mod tests {
         assert!(st.is_store());
         assert_eq!(ld.dst(), Some(MReg(0)));
         assert_eq!(st.dst(), None);
-        assert_eq!(ma.srcs(), vec![MReg(3), MReg(0), MReg(1)]);
-        assert_eq!(ga.srcs(), vec![MReg(2)]);
+        assert_eq!(ma.srcs().as_slice(), &[MReg(3), MReg(0), MReg(1)]);
+        assert_eq!(ga.srcs().as_slice(), &[MReg(2)]);
+        assert!(MInstr::Mcfg { csr: Csr::MatrixM, val: 4 }.srcs().is_empty());
+        assert_eq!(st.srcs().len(), 1);
     }
 
     #[test]

@@ -31,5 +31,7 @@ pub mod encode;
 pub mod instr;
 pub mod program;
 
-pub use instr::{Csr, MInstr, MReg, MatShape, NUM_MREGS, MREG_BYTES, MREG_ROWS, MREG_ROW_BYTES};
+pub use instr::{
+    Csr, MInstr, MReg, MatShape, SrcRegs, MREG_BYTES, MREG_ROWS, MREG_ROW_BYTES, NUM_MREGS,
+};
 pub use program::{Program, ProgramBuilder, ProgramStats};

@@ -70,6 +70,8 @@ commands:\n\
 options:\n\
   --scale F          dataset scale in (0,1] (default 0.5)\n\
   --threads N        service worker threads (default all cores)\n\
+  --sim-threads N    shard one simulation across N threads (0 = all cores; results are\n\
+                     bit-identical at any N — run defaults to 0, batch/serve/dst to 1)\n\
   --cache N          service workload-cache capacity (default 32)\n\
   --cache-dir D      batch/serve/all: also persist built workloads in directory D, shared\n\
                      across processes and serve restarts (corrupt/stale entries rebuild)\n\
@@ -109,6 +111,7 @@ fn service_config(args: &Args, opts: &HarnessOpts) -> Result<ServiceConfig, CliE
         cache_capacity: args.get_parse("cache", ServiceConfig::default().cache_capacity),
         disk: disk_config(args)?,
         result_cache: !args.flag("no-result-cache"),
+        sim_threads: args.get_parse("sim-threads", ServiceConfig::default().sim_threads),
         ..ServiceConfig::default()
     })
 }
@@ -270,6 +273,7 @@ fn cmd_dst(args: &Args) -> Result<(), CliError> {
         cfg.faults = dst::FaultSpec::parse(spec)?;
     }
     cfg.seed_dir = args.get("seed-dir").map(std::path::PathBuf::from);
+    cfg.sim_threads = args.get_parse("sim-threads", cfg.sim_threads);
     let trace = args.flag("trace");
     let trace_file = args.get("trace-file").map(String::from);
 
@@ -636,6 +640,9 @@ fn main() -> Result<(), CliError> {
             let mut spec =
                 RunSpec::new(BenchPoint::new(kernel, dataset, block, opts.scale), variant);
             spec.verify = opts.verify || args.flag("xla");
+            // Single job, whole machine: shard across all cores unless
+            // the user pins a count. Results are thread-count invariant.
+            spec.sim_threads = Some(args.get_parse("sim-threads", 0usize));
             let use_xla = args.flag("xla");
             let t0 = std::time::Instant::now();
             let r = run_one(&spec, use_xla);

@@ -23,7 +23,7 @@ impl Default for DramConfig {
     }
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// DRAM counters for one run.
 pub struct DramStats {
     /// Line reads (fills).
@@ -85,6 +85,12 @@ impl Dram {
         self.channel_free_at = start + dur;
         self.stats.busy_cycles += dur;
         (start + dur) as u64 + self.cfg.latency
+    }
+
+    /// Restore the idle just-constructed state (for sim-instance reuse).
+    pub fn reset(&mut self) {
+        self.channel_free_at = 0.0;
+        self.stats = DramStats::default();
     }
 
     /// Fraction of elapsed cycles the channel was busy.

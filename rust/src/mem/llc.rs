@@ -91,7 +91,7 @@ pub enum Rejection {
     MshrFull,
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// LLC counters for one run.
 pub struct LlcStats {
     /// Demand read accesses.
@@ -183,6 +183,9 @@ pub struct Llc {
     cfg: LlcConfig,
     sets: Vec<Line>, // sets × ways, flat
     mshrs: Vec<Mshr>,
+    /// Retired MSHR shells kept for reuse so the miss path does not
+    /// allocate a fresh waiter list mid-run.
+    mshr_pool: Vec<Mshr>,
     max_mshrs: usize,
     /// Pending completions as a min-heap keyed on ready time.
     pending: std::collections::BinaryHeap<std::cmp::Reverse<(u64, u64, bool, bool)>>,
@@ -206,6 +209,7 @@ impl Llc {
         Self {
             sets: vec![Line::default(); sets * cfg.ways],
             mshrs: Vec::new(),
+            mshr_pool: Vec::new(),
             max_mshrs: 64,
             pending: std::collections::BinaryHeap::new(),
             cur_cycle: 0,
@@ -250,19 +254,31 @@ impl Llc {
 
     /// Advance internal cycle; resets bank ports and returns all
     /// completions due at or before `now`.
+    ///
+    /// Convenience wrapper over [`Llc::tick_into`] that allocates a fresh
+    /// `Vec` — fine for tests, but the per-cycle sim loop should reuse a
+    /// buffer via `tick_into`.
     pub fn tick(&mut self, now: u64) -> Vec<Completion> {
+        let mut out = Vec::new();
+        self.tick_into(now, &mut out);
+        out
+    }
+
+    /// Advance internal cycle; resets bank ports and appends all
+    /// completions due at or before `now` to `out` (allocation-free once
+    /// `out` has grown to its steady-state capacity).
+    pub fn tick_into(&mut self, now: u64, out: &mut Vec<Completion>) {
         debug_assert!(now >= self.cur_cycle);
         self.cur_cycle = now;
         self.bank_read_used.iter_mut().for_each(|b| *b = false);
         self.bank_write_used.iter_mut().for_each(|b| *b = false);
         // Retire MSHRs whose fill has arrived.
-        let mut out = Vec::new();
         let mut i = 0;
         while i < self.mshrs.len() {
             if self.mshrs[i].ready_at <= now {
-                let m = self.mshrs.swap_remove(i);
+                let mut m = self.mshrs.swap_remove(i);
                 self.install(m.line, m.prefetch_only);
-                for (id, is_write) in m.waiters {
+                for &(id, is_write) in &m.waiters {
                     if is_write {
                         self.mark_dirty(m.line);
                     }
@@ -273,6 +289,8 @@ impl Llc {
                         redundant_prefetch: false,
                     });
                 }
+                m.waiters.clear();
+                self.mshr_pool.push(m);
             } else {
                 i += 1;
             }
@@ -286,7 +304,6 @@ impl Llc {
                 break;
             }
         }
-        out
     }
 
     fn install(&mut self, line: u64, by_prefetch: bool) {
@@ -430,22 +447,51 @@ impl Llc {
             // The issuer is notified at fill time: DARE's RFU classifies
             // hit/miss from the observed uop latency, so prefetch
             // completions must carry real data-arrival timing.
-            self.mshrs.push(Mshr {
-                line,
-                ready_at,
-                waiters: vec![(req.id, false)],
-                prefetch_only: true,
-            });
+            self.push_mshr(line, ready_at, true, (req.id, false));
         } else {
             self.stats.demand_misses += 1;
-            self.mshrs.push(Mshr {
-                line,
-                ready_at,
-                waiters: vec![(req.id, req.is_write)],
-                prefetch_only: false,
-            });
+            self.push_mshr(line, ready_at, false, (req.id, req.is_write));
         }
         Ok(())
+    }
+
+    /// Enqueue a fresh MSHR, reusing a retired shell (and its waiter-list
+    /// capacity) when one is available.
+    fn push_mshr(&mut self, line: u64, ready_at: u64, prefetch_only: bool, waiter: (u64, bool)) {
+        let mut m = match self.mshr_pool.pop() {
+            Some(m) => m,
+            None => {
+                // A fresh shell raises the total shell count; keep the
+                // pool able to hold every shell, because reset() drains
+                // still-in-flight MSHRs into it and must not allocate
+                // (the allocation-free rerun contract).
+                self.mshr_pool.reserve(self.mshrs.len() + 1);
+                Mshr { line: 0, ready_at: 0, waiters: Vec::new(), prefetch_only: false }
+            }
+        };
+        m.line = line;
+        m.ready_at = ready_at;
+        m.prefetch_only = prefetch_only;
+        m.waiters.push(waiter);
+        self.mshrs.push(m);
+    }
+
+    /// Restore the cache (and its DRAM) to the just-constructed state
+    /// while keeping every internal buffer's capacity, so a reused sim
+    /// instance re-runs without fresh allocations.
+    pub fn reset(&mut self) {
+        self.sets.iter_mut().for_each(|l| *l = Line::default());
+        while let Some(mut m) = self.mshrs.pop() {
+            m.waiters.clear();
+            self.mshr_pool.push(m);
+        }
+        self.pending.clear();
+        self.cur_cycle = 0;
+        self.bank_read_used.iter_mut().for_each(|b| *b = false);
+        self.bank_write_used.iter_mut().for_each(|b| *b = false);
+        self.lru_clock = 0;
+        self.dram.reset();
+        self.stats = LlcStats::default();
     }
 
     /// Number of outstanding fills (for drain checks).

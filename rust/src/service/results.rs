@@ -98,10 +98,13 @@ impl ResultKey {
 /// A process-independent content hash of a *resolved* [`SimConfig`] —
 /// same discipline as `WorkloadKey::stable_hash`: hand-rolled FNV-1a
 /// over a canonical field encoding (f64 knobs by their bit patterns),
-/// never `DefaultHasher`. Every field of the config is hashed; adding a
-/// config field without extending this function would let two different
-/// machines share a result, so the field walk below mirrors the struct
-/// declarations one-to-one.
+/// never `DefaultHasher`. Every *result-affecting* field of the config
+/// is hashed; adding a config field without extending this function
+/// would let two different machines share a result, so the field walk
+/// below mirrors the struct declarations one-to-one. The single
+/// deliberate exclusion is `sim_threads`: sharded execution is
+/// bit-identical at any thread count (see `sim::parallel`), so hashing
+/// it would only fracture the cache across host core counts.
 pub fn config_stable_hash(cfg: &SimConfig) -> u64 {
     let mut h = Fnv64::new();
     h.update(cfg.variant.name().as_bytes());
@@ -495,6 +498,18 @@ mod tests {
             assert_ne!(config_stable_hash(c), h0);
         }
         assert_eq!(config_stable_hash(&base.clone()), h0, "hash is deterministic");
+    }
+
+    #[test]
+    fn sim_threads_excluded_from_config_hash() {
+        // Thread count never changes results (sim::parallel's contract),
+        // so two hosts with different core counts must share entries.
+        let base = SimConfig::for_variant(Variant::DareFull);
+        let mut c = base.clone();
+        c.sim_threads = 8;
+        assert_eq!(config_stable_hash(&c), config_stable_hash(&base));
+        c.sim_threads = 0;
+        assert_eq!(config_stable_hash(&c), config_stable_hash(&base));
     }
 
     #[test]

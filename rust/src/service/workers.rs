@@ -60,11 +60,24 @@ pub struct ServiceConfig {
     /// workers probe the result tier before simulating and store after,
     /// so a warm sweep replays instead of simulating. Default on.
     pub result_cache: bool,
+    /// Per-job shard worker threads (`sim::parallel`; 0 = one per core),
+    /// applied to specs that don't set their own. Default 1: the pool
+    /// already parallelizes across jobs, so intra-job sharding pays off
+    /// only when the jobs are fewer than the cores. Results are
+    /// bit-identical at any value.
+    pub sim_threads: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 0, queue_capacity: 1024, cache_capacity: 32, disk: None, result_cache: true }
+        Self {
+            workers: 0,
+            queue_capacity: 1024,
+            cache_capacity: 32,
+            disk: None,
+            result_cache: true,
+            sim_threads: 1,
+        }
     }
 }
 
@@ -121,6 +134,7 @@ impl Service {
         }
         let cache = Arc::new(cache);
         let metrics = Arc::new(ServiceMetrics::new(n));
+        let sim_threads = cfg.sim_threads;
         let workers = (0..n)
             .map(|wid| {
                 let queue = queue.clone();
@@ -128,7 +142,7 @@ impl Service {
                 let metrics = metrics.clone();
                 std::thread::Builder::new()
                     .name(format!("dare-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, &queue, &cache, &metrics))
+                    .spawn(move || worker_loop(wid, &queue, &cache, &metrics, sim_threads))
                     .expect("spawning service worker")
             })
             .collect();
@@ -272,9 +286,15 @@ fn worker_loop(
     queue: &JobQueue<Job>,
     cache: &WorkloadCache,
     metrics: &ServiceMetrics,
+    sim_threads: usize,
 ) {
     while let Some(job) = queue.pop() {
-        let Job { seq, spec, use_xla, reply } = job;
+        let Job { seq, mut spec, use_xla, reply } = job;
+        // Service-level shard default; a spec's own setting wins. Never
+        // part of the result key — results are thread-count invariant.
+        if spec.sim_threads.is_none() {
+            spec.sim_threads = Some(sim_threads);
+        }
         let t0 = Instant::now();
         let (result, cache_hit, simulated) = run_or_replay(&spec, use_xla, cache);
         if simulated && result.is_ok() {

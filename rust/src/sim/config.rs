@@ -126,6 +126,12 @@ pub struct SimConfig {
     pub llc: LlcConfig,
     /// Safety valve for the cycle loop (0 = no limit).
     pub max_cycles: u64,
+    /// Worker threads for sharded single-job simulation (0 = use
+    /// `std::thread::available_parallelism`). Results are bit-identical
+    /// at any thread count — shard boundaries are a pure function of the
+    /// program — so this knob is deliberately **excluded** from the
+    /// result-cache config hash (`service::results::config_stable_hash`).
+    pub sim_threads: usize,
 }
 
 impl SimConfig {
@@ -147,6 +153,7 @@ impl SimConfig {
             rfu: RfuConfig::default(),
             llc: LlcConfig::default(),
             max_cycles: 500_000_000,
+            sim_threads: 1,
         };
         if variant == Variant::Nvr {
             // §V-A1: infinite RIQ/VMR capacity, no filter.

@@ -24,6 +24,7 @@ pub mod config;
 pub mod exec;
 pub mod memimg;
 pub mod mpu;
+pub mod parallel;
 pub mod regfile;
 pub mod rfu;
 pub mod riq;
@@ -36,6 +37,7 @@ pub use config::{SimConfig, Variant};
 pub use exec::{MmaExec, NativeMma};
 pub use memimg::MemImage;
 pub use mpu::Mpu;
+pub use parallel::run_sharded;
 pub use stats::SimStats;
 
 /// Version of the simulator's timing and statistics semantics, baked
@@ -51,4 +53,8 @@ pub use stats::SimStats;
 /// stale result masquerade as the current simulator's output. Workload
 /// *builds* (`service::disk`) are unaffected: they version the codec,
 /// not the simulator.
-pub const SIM_VERSION: u32 = 1;
+///
+/// v2: sharded single-job execution (`sim::parallel`) — merged-shard
+/// stats replace the serial cycle loop's on every service path, so every
+/// v1 memoized result is stale.
+pub const SIM_VERSION: u32 = 2;

@@ -30,7 +30,7 @@ use super::stats::SimStats;
 use super::systolic::{Systolic, SystolicConfig};
 use super::vmr::{FillResult, Vmr, VmrHandle};
 use crate::isa::{MInstr, MatShape, Program};
-use crate::mem::{Llc, MemRequest};
+use crate::mem::{Completion, Llc, MemRequest};
 use std::collections::VecDeque;
 
 /// Routing tag for an in-flight memory uop.
@@ -74,6 +74,14 @@ impl UopSlab {
             }
             None => {
                 self.slots.push(meta);
+                // Grow the free list's capacity with the slab: ids still
+                // in flight at run end never return here, so without this
+                // the reset-time rebuild over the whole slab could be the
+                // first time `free` needs `slots.len()` capacity — an
+                // allocation inside the allocation-free rerun window.
+                if self.free.capacity() < self.slots.len() {
+                    self.free.reserve(self.slots.len() - self.free.len());
+                }
                 (self.slots.len() - 1) as u64
             }
         }
@@ -97,6 +105,27 @@ struct QueuedUop {
     addr: u64,
     is_write: bool,
     is_prefetch: bool,
+}
+
+/// Reusable scratch arena owned by the sim: every buffer the cycle loop
+/// needs lives here and is recycled across cycles *and* across `run()`
+/// calls, so a warmed-up instance re-runs without touching the heap
+/// (guarded by the counting-allocator regression test).
+#[derive(Debug, Default)]
+struct SimScratch {
+    /// LLC completions drained each cycle (phase 1).
+    completions: Vec<Completion>,
+    /// Free-list pool of per-instruction row-address vectors; returned
+    /// here when an [`InflightMem`] retires.
+    row_addr_pool: Vec<Vec<u64>>,
+    /// `mma` A-operand staging.
+    mma_a: Vec<f32>,
+    /// `mma` B-operand staging.
+    mma_b: Vec<f32>,
+    /// `mma` accumulator staging.
+    mma_acc: Vec<f32>,
+    /// Gathered prefetch address staging (runahead phase).
+    gather_addrs: Vec<u64>,
 }
 
 /// An issued (architectural) memory instruction awaiting its row uops.
@@ -147,6 +176,8 @@ pub struct Mpu {
     /// Seq of the oldest RIQ entry that may still emit prefetch uops.
     runahead_front: u64,
 
+    scratch: SimScratch,
+
     now: u64,
     /// Aggregated counters for the run so far.
     pub stats: SimStats,
@@ -186,6 +217,7 @@ impl Mpu {
             lq_used: 0,
             sq_used: 0,
             runahead_front: 0,
+            scratch: SimScratch::default(),
             now: 0,
             stats: SimStats::default(),
             cfg,
@@ -197,7 +229,55 @@ impl Mpu {
         &self.cfg
     }
 
+    /// Install a fresh memory image (for re-running a workload on a
+    /// reused instance — `run()` mutates `mem`, so reruns that expect
+    /// the initial image must reinstall it first).
+    pub fn set_mem(&mut self, mem: MemImage) {
+        self.mem = mem;
+    }
+
+    /// Consume the simulator and return its (post-run) memory image.
+    pub fn into_mem(self) -> MemImage {
+        self.mem
+    }
+
+    /// Restore every machine structure to its just-constructed state
+    /// while keeping buffer capacities, so a reused instance behaves
+    /// bit-identically to a fresh one without re-allocating.
+    fn reset_machine(&mut self) {
+        self.llc.reset();
+        self.riq.reset();
+        self.vmr.reset();
+        self.rfu.reset();
+        self.systolic.reset();
+        self.regfile.reset();
+        self.scoreboard.reset();
+        self.next_dispatch = 0;
+        self.dispatch_shape = MatShape::FULL;
+        self.seq_counter = 0;
+        while let Some(f) = self.inflight.pop() {
+            let mut v = f.row_addrs;
+            v.clear();
+            self.scratch.row_addr_pool.push(v);
+        }
+        self.mma_inflight = None;
+        self.lsu_queue.clear();
+        // Rebuild the uop-id free list over the existing slab so a rerun
+        // allocates ids in the same 0,1,2,… order as a fresh instance
+        // (ids tie-break same-cycle completion ordering).
+        self.uop_meta.free.clear();
+        self.uop_meta.free.extend((0..self.uop_meta.slots.len() as u32).rev());
+        self.lq_used = 0;
+        self.sq_used = 0;
+        self.runahead_front = 0;
+        self.now = 0;
+        self.stats = SimStats::default();
+    }
+
     /// Run `program` to completion; returns the accumulated statistics.
+    ///
+    /// An instance may be reused: each call first resets the machine
+    /// state (the memory image is *not* restored — see [`Mpu::set_mem`]).
     pub fn run(&mut self, program: &Program) -> SimStats {
         assert!(
             self.cfg.variant.has_gsa()
@@ -206,8 +286,9 @@ impl Mpu {
             self.cfg.variant,
             program.name
         );
-        self.program = program.instrs.clone();
-        self.next_dispatch = 0;
+        self.reset_machine();
+        self.program.clear();
+        self.program.extend_from_slice(&program.instrs);
         self.stats.useful_macs = program.useful_macs;
         self.stats.issued_macs = program.issued_macs;
         while !self.done() {
@@ -250,11 +331,14 @@ impl Mpu {
     fn step(&mut self) {
         self.now += 1;
         let now = self.now;
-        // Phase 1: LLC completions.
-        let completions = self.llc.tick(now);
-        for c in completions {
+        // Phase 1: LLC completions (drained into reusable scratch).
+        let mut completions = std::mem::take(&mut self.scratch.completions);
+        completions.clear();
+        self.llc.tick_into(now, &mut completions);
+        for c in &completions {
             self.route_completion(c.id, c.at);
         }
+        self.scratch.completions = completions;
         // Phase 2: systolic retirement.
         if let Some(seq) = self.systolic.tick(now) {
             let (s, instr) = self.mma_inflight.take().expect("systolic seq without inflight");
@@ -305,13 +389,15 @@ impl Mpu {
                 }
                 let f = &self.inflight[idx];
                 if f.outstanding == 0 && f.next_row >= f.row_addrs.len() {
-                    let instr = f.instr;
                     // Ordered removal keeps `inflight` seq-sorted for the
                     // allocation-free oldest-first walk in
                     // generate_demand_uops (the set is small).
-                    self.inflight.remove(idx);
-                    self.scoreboard.release(&instr);
+                    let done = self.inflight.remove(idx);
+                    self.scoreboard.release(&done.instr);
                     self.stats.instrs_retired += 1;
+                    let mut v = done.row_addrs;
+                    v.clear();
+                    self.scratch.row_addr_pool.push(v);
                 }
             }
             UopKind::Prefetch { seq, tentative } => {
@@ -366,11 +452,18 @@ impl Mpu {
                     let m = shape.m as usize;
                     let k = shape.k_elems();
                     let n = shape.n as usize;
-                    let a = self.regfile.read_tile_f32(ms1);
-                    let b = self.regfile.read_tile_f32_rows(ms2, n);
-                    let mut acc = self.regfile.read_acc_tile(md, m, n);
-                    self.exec.mma(&mut acc, &a, &b, m, k, n);
-                    self.regfile.write_acc_tile(md, m, n, &acc);
+                    self.regfile.read_tile_f32_rows_into(ms1, m, &mut self.scratch.mma_a);
+                    self.regfile.read_tile_f32_rows_into(ms2, n, &mut self.scratch.mma_b);
+                    self.regfile.read_acc_tile_into(md, m, n, &mut self.scratch.mma_acc);
+                    self.exec.mma(
+                        &mut self.scratch.mma_acc,
+                        &self.scratch.mma_a,
+                        &self.scratch.mma_b,
+                        m,
+                        k,
+                        n,
+                    );
+                    self.regfile.write_acc_tile(md, m, n, &self.scratch.mma_acc);
                     self.scoreboard.occupy(&instr);
                     let head = self.riq.pop_head().unwrap();
                     self.systolic.start(shape, head.seq, self.now);
@@ -406,39 +499,49 @@ impl Mpu {
         let shape = self.regfile.shape();
         let m = shape.m as usize;
         let kb = shape.k as usize;
-        let (row_addrs, is_write): (Vec<u64>, bool) = match instr {
+        // Row addresses go into a pooled vector (recycled at retire).
+        let mut row_addrs = self.scratch.row_addr_pool.pop().unwrap_or_default();
+        row_addrs.clear();
+        let is_write = match instr {
             MInstr::Mld { base, stride, .. } => {
-                ((0..m).map(|r| base + r as u64 * stride).collect(), false)
+                row_addrs.extend((0..m).map(|r| base + r as u64 * stride));
+                false
             }
             MInstr::Mst { base, stride, .. } => {
-                ((0..m).map(|r| base + r as u64 * stride).collect(), true)
+                row_addrs.extend((0..m).map(|r| base + r as u64 * stride));
+                true
             }
             MInstr::Mgather { ms1, .. } => {
-                ((0..m).map(|r| self.regfile.row_base_addr(ms1, r)).collect(), false)
+                let rf = &self.regfile;
+                row_addrs.extend((0..m).map(|r| rf.row_base_addr(ms1, r)));
+                false
             }
             MInstr::Mscatter { ms1, .. } => {
-                ((0..m).map(|r| self.regfile.row_base_addr(ms1, r)).collect(), true)
+                let rf = &self.regfile;
+                row_addrs.extend((0..m).map(|r| rf.row_base_addr(ms1, r)));
+                true
             }
             _ => unreachable!("issue_mem on non-memory instruction"),
         };
-        // Architectural effect (execute-at-issue).
+        // Architectural effect (execute-at-issue). Register rows and
+        // memory are disjoint fields, so rows copy without staging.
         match instr {
             MInstr::Mld { md, .. } | MInstr::Mgather { md, .. } => {
                 for (r, &addr) in row_addrs.iter().enumerate() {
-                    let bytes = self.mem.read_bytes(addr, kb).to_vec();
-                    self.regfile.write_row(md, r, &bytes);
+                    let bytes = self.mem.read_bytes(addr, kb);
+                    self.regfile.write_row(md, r, bytes);
                 }
             }
             MInstr::Mst { ms3, .. } => {
                 for (r, &addr) in row_addrs.iter().enumerate() {
-                    let bytes = self.regfile.row(ms3, r)[..kb].to_vec();
-                    self.mem.write_bytes(addr, &bytes);
+                    let bytes = &self.regfile.row(ms3, r)[..kb];
+                    self.mem.write_bytes(addr, bytes);
                 }
             }
             MInstr::Mscatter { ms2, .. } => {
                 for (r, &addr) in row_addrs.iter().enumerate() {
-                    let bytes = self.regfile.row(ms2, r)[..kb].to_vec();
-                    self.mem.write_bytes(addr, &bytes);
+                    let bytes = &self.regfile.row(ms2, r)[..kb];
+                    self.mem.write_bytes(addr, bytes);
                 }
             }
             _ => unreachable!(),
@@ -674,15 +777,31 @@ impl Mpu {
                 }
                 budget -= 1;
             } else if entry.granted {
-                let vmr = &self.vmr;
-                let addrs: Vec<u64> = (0..m).map(|r| vmr.addr(handle, r)).collect();
-                budget = self.emit_rows(idx, budget, move |row| addrs[row]);
+                budget = self.emit_gathered_rows(idx, handle, m, budget);
             }
         } else {
-            let vmr = &self.vmr;
-            let addrs: Vec<u64> = (0..m).map(|r| vmr.addr(handle, r)).collect();
-            budget = self.emit_rows(idx, budget, move |row| addrs[row]);
+            budget = self.emit_gathered_rows(idx, handle, m, budget);
         }
+        budget
+    }
+
+    /// Emit granted gathered-row prefetches via the reusable address
+    /// staging buffer.
+    fn emit_gathered_rows(
+        &mut self,
+        idx: usize,
+        handle: VmrHandle,
+        m: usize,
+        budget: usize,
+    ) -> usize {
+        let mut addrs = std::mem::take(&mut self.scratch.gather_addrs);
+        addrs.clear();
+        {
+            let vmr = &self.vmr;
+            addrs.extend((0..m).map(|r| vmr.addr(handle, r)));
+        }
+        let budget = self.emit_rows(idx, budget, |row| addrs[row]);
+        self.scratch.gather_addrs = addrs;
         budget
     }
 

@@ -54,32 +54,40 @@ impl RegFile {
         self.data[off..off + bytes.len()].copy_from_slice(bytes);
     }
 
+    /// Zero every register and restore the full shape (for sim-instance
+    /// reuse; keeps the backing allocation).
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|b| *b = 0);
+        self.shape = MatShape::FULL;
+    }
+
     /// Read the current-shape tile of `reg` as f32s, row-major
     /// (`shape.m × shape.k_elems()`).
     pub fn read_tile_f32(&self, reg: MReg) -> Vec<f32> {
-        let m = self.shape.m as usize;
-        let ke = self.shape.k_elems();
-        let mut out = Vec::with_capacity(m * ke);
-        for r in 0..m {
-            let row = self.row(reg, r);
-            for e in 0..ke {
-                out.push(f32::from_le_bytes(row[e * 4..e * 4 + 4].try_into().unwrap()));
-            }
-        }
+        let mut out = Vec::new();
+        self.read_tile_f32_rows_into(reg, self.shape.m as usize, &mut out);
         out
     }
 
     /// Read a tile at an explicit row-count (for `mma`'s N×K source).
     pub fn read_tile_f32_rows(&self, reg: MReg, rows: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.read_tile_f32_rows_into(reg, rows, &mut out);
+        out
+    }
+
+    /// [`RegFile::read_tile_f32_rows`] into a caller-owned buffer
+    /// (cleared first) — the per-`mma` path reuses scratch this way.
+    pub fn read_tile_f32_rows_into(&self, reg: MReg, rows: usize, out: &mut Vec<f32>) {
         let ke = self.shape.k_elems();
-        let mut out = Vec::with_capacity(rows * ke);
+        out.clear();
+        out.reserve(rows * ke);
         for r in 0..rows {
             let row = self.row(reg, r);
             for e in 0..ke {
                 out.push(f32::from_le_bytes(row[e * 4..e * 4 + 4].try_into().unwrap()));
             }
         }
-        out
     }
 
     /// Write an `m × n` f32 tile into `reg` (accumulator layout: N values
@@ -97,14 +105,22 @@ impl RegFile {
 
     /// Read an `m × n` accumulator tile.
     pub fn read_acc_tile(&self, reg: MReg, m: usize, n: usize) -> Vec<f32> {
-        let mut out = Vec::with_capacity(m * n);
+        let mut out = Vec::new();
+        self.read_acc_tile_into(reg, m, n, &mut out);
+        out
+    }
+
+    /// [`RegFile::read_acc_tile`] into a caller-owned buffer (cleared
+    /// first) — the per-`mma` path reuses scratch this way.
+    pub fn read_acc_tile_into(&self, reg: MReg, m: usize, n: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(m * n);
         for r in 0..m {
             let row = self.row(reg, r);
             for c in 0..n {
                 out.push(f32::from_le_bytes(row[c * 4..c * 4 + 4].try_into().unwrap()));
             }
         }
-        out
     }
 
     /// The base address held in row `row`'s first element (GSA: "the

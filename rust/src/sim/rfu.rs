@@ -20,7 +20,7 @@
 use super::config::RfuConfig;
 use std::collections::VecDeque;
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// RFU counters for one run.
 pub struct RfuStats {
     /// Demand-miss latencies fed to the classifier.
@@ -45,6 +45,12 @@ pub struct Rfu {
     cfg: RfuConfig,
     window: VecDeque<u64>,
     threshold: u64,
+    /// The threshold the unit started with (restored by [`Rfu::reset`]).
+    initial_threshold: u64,
+    /// Reusable histogram buffer for threshold recomputation (cleared and
+    /// refilled on every update so the per-cycle path never allocates once
+    /// it reaches steady-state capacity).
+    hist: Vec<u32>,
     /// Counters for this run.
     pub stats: RfuStats,
 }
@@ -57,7 +63,21 @@ impl Rfu {
         // refines it as soon as the window fills).
         let threshold =
             if cfg.dynamic { hit_latency + cfg.slack } else { cfg.static_threshold };
-        Self { cfg, window: VecDeque::with_capacity(cfg.window), threshold, stats: RfuStats::default() }
+        Self {
+            window: VecDeque::with_capacity(cfg.window),
+            threshold,
+            initial_threshold: threshold,
+            hist: Vec::new(),
+            stats: RfuStats::default(),
+            cfg,
+        }
+    }
+
+    /// Restore the just-constructed state, keeping buffer capacities.
+    pub fn reset(&mut self) {
+        self.window.clear();
+        self.threshold = self.initial_threshold;
+        self.stats = RfuStats::default();
     }
 
     /// The current classification threshold, in cycles.
@@ -96,25 +116,35 @@ impl Rfu {
         let bin = self.cfg.bin_cycles;
         let max_lat = *self.window.iter().max().unwrap();
         let nbins = (max_lat / bin + 1) as usize;
-        // Histogram (step 1).
-        let mut hist = vec![0u32; nbins];
+        // Histogram (step 1) — reuses the persistent buffer.
+        self.hist.clear();
+        self.hist.resize(nbins, 0);
         for &l in &self.window {
-            hist[(l / bin) as usize] += 1;
+            self.hist[(l / bin) as usize] += 1;
         }
-        // Peaks (step 2): relative frequency > peak_frac.
+        // Peaks (step 2): relative frequency > peak_frac. Only the
+        // smallest and largest peaks matter, so scan instead of collect.
         let need = (self.cfg.peak_frac * self.window.len() as f64).ceil() as u32;
-        let peaks: Vec<usize> =
-            (0..nbins).filter(|&i| hist[i] >= need.max(1)).collect();
-        if peaks.len() < 2 {
-            return;
+        let need = need.max(1);
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        for (i, &count) in self.hist.iter().enumerate() {
+            if count >= need {
+                if lo == usize::MAX {
+                    lo = i;
+                }
+                hi = i;
+            }
         }
-        let lo = *peaks.first().unwrap();
-        let hi = *peaks.last().unwrap();
+        if lo == usize::MAX || lo == hi {
+            return; // fewer than two peaks
+        }
         // Margin check (step 3).
         if (hi - lo) as u64 <= self.cfg.margin_bins {
             return;
         }
         // Minimum-count bin strictly between the peaks.
+        let hist = &self.hist;
         let min_bin = (lo + 1..hi)
             .min_by_key(|&i| hist[i])
             .expect("margin > 1 guarantees an interior bin");

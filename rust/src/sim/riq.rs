@@ -59,7 +59,7 @@ impl RiqEntry {
     }
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// RIQ counters for one run.
 pub struct RiqStats {
     /// Entries dispatched into the queue.
@@ -90,6 +90,12 @@ impl Riq {
     pub fn new(capacity: usize) -> Self {
         let prealloc = if capacity == usize::MAX { 64 } else { capacity };
         Self { entries: VecDeque::with_capacity(prealloc), capacity, stats: RiqStats::default() }
+    }
+
+    /// Restore the just-constructed state, keeping queue capacity.
+    pub fn reset(&mut self) {
+        self.entries.clear();
+        self.stats = RiqStats::default();
     }
 
     /// Entries currently queued.

@@ -65,6 +65,12 @@ impl Scoreboard {
         }
     }
 
+    /// Clear all in-flight tracking (for sim-instance reuse).
+    pub fn reset(&mut self) {
+        self.writers = [0; NUM_MREGS];
+        self.readers = [0; NUM_MREGS];
+    }
+
     /// Any instruction in flight touching any register?
     pub fn quiescent(&self) -> bool {
         self.writers.iter().all(|&w| w == 0) && self.readers.iter().all(|&r| r == 0)

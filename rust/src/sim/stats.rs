@@ -7,7 +7,7 @@ use super::vmr::VmrStats;
 use crate::mem::dram::DramStats;
 use crate::mem::LlcStats;
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// Every counter one simulation produces — the value memoized by the
 /// service's result tier, so adding a field means bumping
 /// [`SIM_VERSION`](crate::sim::SIM_VERSION).
@@ -72,6 +72,115 @@ impl SimStats {
     /// semantics assumed).
     pub fn speedup_vs(&self, baseline: &SimStats) -> f64 {
         baseline.cycles as f64 / self.cycles as f64
+    }
+
+    /// Accumulate one shard's counters into `self` (sharded runs merge
+    /// in fixed shard order, so the result is thread-count independent).
+    /// Plain counts add; occupancy peaks take the max; `cycles` adds,
+    /// yielding the serialized total across shards.
+    pub fn merge_shard(&mut self, s: &SimStats) {
+        self.cycles += s.cycles;
+        self.instrs_retired += s.instrs_retired;
+        self.demand_uops += s.demand_uops;
+        self.demand_latency_sum += s.demand_latency_sum;
+        self.prefetch_uops_issued += s.prefetch_uops_issued;
+        self.tentative_uops += s.tentative_uops;
+        self.vmr_fill_uops += s.vmr_fill_uops;
+        self.useful_macs += s.useful_macs;
+        self.issued_macs += s.issued_macs;
+        self.llc.demand_reads += s.llc.demand_reads;
+        self.llc.demand_writes += s.llc.demand_writes;
+        self.llc.demand_hits += s.llc.demand_hits;
+        self.llc.demand_misses += s.llc.demand_misses;
+        self.llc.prefetches += s.llc.prefetches;
+        self.llc.prefetch_redundant += s.llc.prefetch_redundant;
+        self.llc.prefetch_useful_fills += s.llc.prefetch_useful_fills;
+        self.llc.prefetch_hits_consumed += s.llc.prefetch_hits_consumed;
+        self.llc.writebacks += s.llc.writebacks;
+        self.llc.slots_used += s.llc.slots_used;
+        self.llc.rejections += s.llc.rejections;
+        self.llc.mshr_merges += s.llc.mshr_merges;
+        self.dram.reads += s.dram.reads;
+        self.dram.writes += s.dram.writes;
+        self.dram.busy_cycles += s.dram.busy_cycles;
+        self.systolic.mma_count += s.systolic.mma_count;
+        self.systolic.busy_cycles += s.systolic.busy_cycles;
+        self.systolic.active_pe_cycles += s.systolic.active_pe_cycles;
+        self.systolic.provisioned_pe_cycles += s.systolic.provisioned_pe_cycles;
+        self.riq.inserts += s.riq.inserts;
+        self.riq.dispatch_stalls += s.riq.dispatch_stalls;
+        self.riq.peak_occupancy = self.riq.peak_occupancy.max(s.riq.peak_occupancy);
+        self.riq.dmu_hits += s.riq.dmu_hits;
+        self.riq.dmu_misses += s.riq.dmu_misses;
+        self.vmr.allocs += s.vmr.allocs;
+        self.vmr.alloc_failures += s.vmr.alloc_failures;
+        self.vmr.releases += s.vmr.releases;
+        self.vmr.stale_fills += s.vmr.stale_fills;
+        self.vmr.peak_live = self.vmr.peak_live.max(s.vmr.peak_live);
+        self.rfu.observations += s.rfu.observations;
+        self.rfu.threshold_updates += s.rfu.threshold_updates;
+        self.rfu.classified_miss += s.rfu.classified_miss;
+        self.rfu.classified_hit += s.rfu.classified_hit;
+        self.rfu.suppressed_uops += s.rfu.suppressed_uops;
+        self.rfu.forced_grants += s.rfu.forced_grants;
+    }
+
+    /// FNV-1a digest over every counter in declaration order — the
+    /// value the determinism regression test and the CI thread-count
+    /// sweep compare across `--sim-threads` settings.
+    pub fn fnv_digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut put = |v: u64| {
+            for b in v.to_le_bytes() {
+                h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+            }
+        };
+        put(self.cycles);
+        put(self.instrs_retired);
+        put(self.demand_uops);
+        put(self.demand_latency_sum);
+        put(self.prefetch_uops_issued);
+        put(self.tentative_uops);
+        put(self.vmr_fill_uops);
+        put(self.useful_macs);
+        put(self.issued_macs);
+        put(self.llc.demand_reads);
+        put(self.llc.demand_writes);
+        put(self.llc.demand_hits);
+        put(self.llc.demand_misses);
+        put(self.llc.prefetches);
+        put(self.llc.prefetch_redundant);
+        put(self.llc.prefetch_useful_fills);
+        put(self.llc.prefetch_hits_consumed);
+        put(self.llc.writebacks);
+        put(self.llc.slots_used);
+        put(self.llc.rejections);
+        put(self.llc.mshr_merges);
+        put(self.dram.reads);
+        put(self.dram.writes);
+        put(self.dram.busy_cycles.to_bits());
+        put(self.systolic.mma_count);
+        put(self.systolic.busy_cycles);
+        put(self.systolic.active_pe_cycles);
+        put(self.systolic.provisioned_pe_cycles);
+        put(self.riq.inserts);
+        put(self.riq.dispatch_stalls);
+        put(self.riq.peak_occupancy as u64);
+        put(self.riq.dmu_hits);
+        put(self.riq.dmu_misses);
+        put(self.vmr.allocs);
+        put(self.vmr.alloc_failures);
+        put(self.vmr.releases);
+        put(self.vmr.stale_fills);
+        put(self.vmr.peak_live as u64);
+        put(self.rfu.observations);
+        put(self.rfu.threshold_updates);
+        put(self.rfu.classified_miss);
+        put(self.rfu.classified_hit);
+        put(self.rfu.suppressed_uops);
+        put(self.rfu.forced_grants);
+        h
     }
 
     /// One-line human-readable digest of the headline counters.

@@ -30,7 +30,7 @@ impl Default for SystolicConfig {
     }
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// Systolic-array counters for one run.
 pub struct SystolicStats {
     /// `mma` instructions executed.
@@ -78,6 +78,12 @@ impl Systolic {
     /// An idle array.
     pub fn new(cfg: SystolicConfig) -> Self {
         Self { cfg, current: None, stats: SystolicStats::default() }
+    }
+
+    /// Restore the idle just-constructed state (for sim-instance reuse).
+    pub fn reset(&mut self) {
+        self.current = None;
+        self.stats = SystolicStats::default();
     }
 
     /// True while an `mma` is streaming through the array.

@@ -52,7 +52,7 @@ pub enum FillResult {
     Complete,
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 /// VMR counters for one run.
 pub struct VmrStats {
     /// Successful entry allocations.
@@ -96,6 +96,18 @@ impl Vmr {
         }
     }
 
+    /// Restore the just-constructed state, keeping slot storage.
+    pub fn reset(&mut self) {
+        self.entries.iter_mut().for_each(|e| *e = VmrEntry::empty());
+        self.free.clear();
+        // In infinite mode grown slots stay available; in bounded mode
+        // this rebuilds the full free list.
+        self.free.extend(0..self.entries.len());
+        self.live = 0;
+        self.next_gen = 1;
+        self.stats = VmrStats::default();
+    }
+
     /// Allocate an entry expecting `rows` fill writes; `None` when full.
     pub fn alloc(&mut self, rows: usize) -> Option<VmrHandle> {
         debug_assert!(rows >= 1 && rows <= MREG_ROWS);
@@ -103,6 +115,12 @@ impl Vmr {
             Some(s) => s,
             None if self.capacity == usize::MAX => {
                 self.entries.push(VmrEntry::empty());
+                // Keep the free list able to index every slot: reset()
+                // rebuilds it over all entries, and that rebuild must not
+                // allocate (the allocation-free rerun contract).
+                if self.free.capacity() < self.entries.len() {
+                    self.free.reserve(self.entries.len() - self.free.len());
+                }
                 self.entries.len() - 1
             }
             None => {

@@ -1,0 +1,87 @@
+//! Counting global allocator for allocation-freedom regression tests
+//! (test builds only — `util::mod` gates this module on `cfg(test)`, so
+//! benches and release binaries run the system allocator untouched).
+//!
+//! The counter is **thread-local**: `cargo test` runs tests on many
+//! threads at once, and a process-global counter would charge one
+//! test's allocations to another. A test measures only what its own
+//! thread allocates — exactly right for the single-threaded simulator
+//! cycle loop the `SimScratch` arena is meant to keep allocation-free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // `const` init: plain TLS with no lazy initializer and no
+    // destructor, so reading the counter inside the allocator can
+    // never recurse into an allocation.
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations (`alloc` + growth `realloc`) made by the calling
+/// thread since it started. Take a snapshot before a region and
+/// subtract to count the region's allocations.
+pub fn thread_allocations() -> u64 {
+    THREAD_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+fn bump() {
+    // `try_with`: TLS may already be torn down during thread exit.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`; the counter bump never
+// allocates (const-initialized TLS holding a `Cell<u64>`).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Mpu, NativeMma, SimConfig, Variant};
+
+    #[test]
+    fn counter_sees_this_threads_allocations() {
+        let before = thread_allocations();
+        let v: Vec<u64> = (0..1024).collect();
+        std::hint::black_box(&v);
+        assert!(thread_allocations() > before, "a fresh Vec must be counted");
+    }
+
+    #[test]
+    fn second_run_on_a_reused_sim_is_allocation_free() {
+        // The `SimScratch` arena contract: after a first run has sized
+        // every pool, a second `run()` on the same instance touches the
+        // heap zero times — reset, cycle loop, and stats included.
+        let w = crate::kernels::compile_gemm(16, 16, 16, 1);
+        let cfg = SimConfig::for_variant(Variant::DareFre);
+        let mut mpu = Mpu::new(cfg, w.mem.clone(), Box::new(NativeMma));
+        let first = mpu.run(&w.program);
+
+        let fresh = w.mem.clone(); // allocate the replacement image *outside* the window
+        mpu.set_mem(fresh);
+        let before = thread_allocations();
+        let second = mpu.run(&w.program);
+        let delta = thread_allocations() - before;
+        assert_eq!(first, second, "a reused instance must be bit-identical to a fresh one");
+        assert_eq!(delta, 0, "the reused hot path must not allocate (saw {delta} allocations)");
+    }
+}

@@ -7,9 +7,21 @@
 //! provided. A `--filter substring` CLI argument restricts which
 //! benchmarks run; `--fast` (alias `--smoke`, as CI invokes it) shrinks
 //! sample counts for smoke runs that only guard against bench-target rot.
+//!
+//! Two more flags wire the CI perf gate (see `docs/PERF.md`):
+//! `--json PATH` writes the results as a machine-readable artifact, and
+//! `--baseline PATH` compares each case's median against a committed
+//! baseline of the same JSON shape, failing the process when a case is
+//! more than 25% slower. Call [`Bencher::finish`] at the end of a bench
+//! `main` to honor both flags.
 
 use super::stats;
+use crate::service::Json;
 use std::time::Instant;
+
+/// A case may regress this far past its baseline median before the
+/// `--baseline` gate fails (1.25 = 25% slower).
+pub const BASELINE_TOLERANCE: f64 = 1.25;
 
 /// How many warmups/samples/iterations each benchmark runs.
 pub struct BenchConfig {
@@ -21,20 +33,36 @@ pub struct BenchConfig {
     pub iters_per_sample: u64,
     /// Only run benchmarks whose name contains this substring.
     pub filter: Option<String>,
+    /// Write the results as JSON to this path (`--json PATH`).
+    pub json_out: Option<String>,
+    /// Compare medians against this committed baseline JSON and fail
+    /// on a >25% regression (`--baseline PATH`).
+    pub baseline: Option<String>,
 }
 
 impl BenchConfig {
-    /// Parse from CLI args: `--filter <s>` / a bare substring, and
-    /// `--fast`/`--smoke` for a minimal run.
+    /// Parse from CLI args: `--filter <s>` / a bare substring,
+    /// `--fast`/`--smoke` for a minimal run, `--json <path>` for the
+    /// machine-readable artifact, `--baseline <path>` for the perf gate.
     pub fn from_env() -> Self {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         let mut filter = None;
+        let mut json_out = None;
+        let mut baseline = None;
         let mut fast = false;
         let mut i = 0;
         while i < argv.len() {
             match argv[i].as_str() {
                 "--filter" if i + 1 < argv.len() => {
                     filter = Some(argv[i + 1].clone());
+                    i += 1;
+                }
+                "--json" if i + 1 < argv.len() => {
+                    json_out = Some(argv[i + 1].clone());
+                    i += 1;
+                }
+                "--baseline" if i + 1 < argv.len() => {
+                    baseline = Some(argv[i + 1].clone());
                     i += 1;
                 }
                 "--fast" | "--smoke" => fast = true,
@@ -48,11 +76,8 @@ impl BenchConfig {
             }
             i += 1;
         }
-        if fast {
-            Self { warmup_iters: 1, samples: 5, iters_per_sample: 1, filter }
-        } else {
-            Self { warmup_iters: 3, samples: 15, iters_per_sample: 1, filter }
-        }
+        let (warmup_iters, samples) = if fast { (1, 5) } else { (3, 15) };
+        Self { warmup_iters, samples, iters_per_sample: 1, filter, json_out, baseline }
     }
 }
 
@@ -198,6 +223,167 @@ impl Bencher {
         }
         Ok(())
     }
+
+    /// The results as a JSON document — the shape both the committed
+    /// baseline (`rust/benches/baseline.json`) and the CI artifact
+    /// (`BENCH_*.json`) use:
+    ///
+    /// ```json
+    /// {"bench":"sim_hotpath","results":[
+    ///   {"name":"...","median_ns":1.0,"mean_ns":1.0,"stddev_ns":0.1,
+    ///    "throughput_per_sec":null}]}
+    /// ```
+    pub fn to_json(&self, bench: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{{\"bench\":{},\"results\":[\n", json_str(bench)));
+        for (i, r) in self.results.iter().enumerate() {
+            let thr = r
+                .throughput_per_sec()
+                .map(|t| format!("{t:.1}"))
+                .unwrap_or_else(|| "null".to_string());
+            out.push_str(&format!(
+                "  {{\"name\":{},\"median_ns\":{:.1},\"mean_ns\":{:.1},\
+                 \"stddev_ns\":{:.1},\"throughput_per_sec\":{}}}{}\n",
+                json_str(&r.name),
+                r.median_ns,
+                r.mean_ns,
+                r.stddev_ns,
+                thr,
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Write [`Bencher::to_json`] to `path`, creating parent dirs.
+    pub fn write_json(&self, bench: &str, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json(bench))
+    }
+
+    /// Compare this run's medians against a baseline document (the
+    /// [`Bencher::to_json`] shape). Returns one human-readable line per
+    /// case whose median exceeds its baseline median by more than
+    /// `tolerance` (1.25 = 25% slower); empty means the gate passes.
+    /// Cases present on only one side are skipped — a new benchmark
+    /// must not fail the gate before its baseline lands. `Err` means
+    /// the baseline itself is unreadable or malformed, which also fails
+    /// the gate: a rotted baseline guards nothing.
+    pub fn check_baseline(
+        &self,
+        baseline_json: &str,
+        tolerance: f64,
+    ) -> Result<Vec<String>, String> {
+        let doc = Json::parse(baseline_json).map_err(|e| format!("baseline parse error: {e}"))?;
+        let cases = match doc.get("results") {
+            Some(Json::Arr(cases)) => cases,
+            _ => return Err("baseline has no \"results\" array".to_string()),
+        };
+        let mut base: Vec<(&str, f64)> = Vec::with_capacity(cases.len());
+        for case in cases {
+            let name = case
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "baseline case missing \"name\"".to_string())?;
+            let median = case
+                .get("median_ns")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("baseline case {name} missing \"median_ns\""))?;
+            if !median.is_finite() || median <= 0.0 {
+                return Err(format!("baseline case {name} has non-positive median"));
+            }
+            base.push((name, median));
+        }
+        let mut regressions = Vec::new();
+        for r in &self.results {
+            let Some((_, base_ns)) = base.iter().find(|(n, _)| *n == r.name) else {
+                continue;
+            };
+            let ratio = r.median_ns / base_ns;
+            if ratio > tolerance {
+                regressions.push(format!(
+                    "{}: median {} vs baseline {} ({:.0}% slower, gate is {:.0}%)",
+                    r.name,
+                    fmt_ns(r.median_ns),
+                    fmt_ns(*base_ns),
+                    (ratio - 1.0) * 100.0,
+                    (tolerance - 1.0) * 100.0
+                ));
+            }
+        }
+        Ok(regressions)
+    }
+
+    /// End-of-`main` hook for bench targets: honor `--json` (write the
+    /// artifact) and `--baseline` (fail on any >25% median regression).
+    /// Returns the process exit code — `0` clean, `1` on a regression
+    /// or an unusable baseline/artifact path.
+    pub fn finish(&self, bench: &str) -> i32 {
+        let mut code = 0;
+        if let Some(path) = &self.cfg.json_out {
+            match self.write_json(bench, path) {
+                Ok(()) => println!("[bench] wrote {path}"),
+                Err(e) => {
+                    eprintln!("[bench] FAILED writing {path}: {e}");
+                    code = 1;
+                }
+            }
+        }
+        if let Some(path) = &self.cfg.baseline {
+            let gate = std::fs::read_to_string(path)
+                .map_err(|e| format!("read {path}: {e}"))
+                .and_then(|text| self.check_baseline(&text, BASELINE_TOLERANCE));
+            match gate {
+                Ok(regressions) if regressions.is_empty() => {
+                    println!(
+                        "[bench] baseline {path}: {} case(s) within {:.0}%",
+                        self.results.len(),
+                        (BASELINE_TOLERANCE - 1.0) * 100.0
+                    );
+                }
+                Ok(regressions) => {
+                    for line in &regressions {
+                        eprintln!("[bench] REGRESSION {line}");
+                    }
+                    eprintln!(
+                        "[bench] {} case(s) regressed past baseline {path} \
+                         (see docs/PERF.md to update it after an intended change)",
+                        regressions.len()
+                    );
+                    code = 1;
+                }
+                Err(e) => {
+                    eprintln!("[bench] baseline gate FAILED: {e}");
+                    code = 1;
+                }
+            }
+        }
+        code
+    }
+}
+
+/// Encode one JSON string literal (quotes, backslashes, control bytes).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 impl Default for Bencher {
@@ -213,7 +399,14 @@ mod tests {
     #[test]
     fn bench_runs_and_records() {
         let mut b = Bencher {
-            cfg: BenchConfig { warmup_iters: 1, samples: 3, iters_per_sample: 2, filter: None },
+            cfg: BenchConfig {
+                warmup_iters: 1,
+                samples: 3,
+                iters_per_sample: 2,
+                filter: None,
+                json_out: None,
+                baseline: None,
+            },
             results: Vec::new(),
         };
         let mut acc = 0u64;
@@ -235,6 +428,8 @@ mod tests {
                 samples: 1,
                 iters_per_sample: 1,
                 filter: Some("yes".into()),
+                json_out: None,
+                baseline: None,
             },
             results: Vec::new(),
         };
@@ -242,5 +437,77 @@ mod tests {
         b.bench("yes_match", || 1);
         assert_eq!(b.results().len(), 1);
         assert_eq!(b.results()[0].name, "yes_match");
+    }
+
+    fn bencher_with(results: Vec<BenchResult>) -> Bencher {
+        Bencher {
+            cfg: BenchConfig {
+                warmup_iters: 0,
+                samples: 1,
+                iters_per_sample: 1,
+                filter: None,
+                json_out: None,
+                baseline: None,
+            },
+            results,
+        }
+    }
+
+    fn result(name: &str, median_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            median_ns,
+            mean_ns: median_ns,
+            stddev_ns: 0.0,
+            elements: None,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_the_crate_parser() {
+        let b = bencher_with(vec![result("mpu/case \"a\"", 1500.0), result("llc/tick", 42.0)]);
+        let doc = Json::parse(&b.to_json("sim_hotpath")).expect("self-emitted JSON must parse");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("sim_hotpath"));
+        let Some(Json::Arr(cases)) = doc.get("results") else {
+            panic!("results must be an array");
+        };
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").and_then(Json::as_str), Some("mpu/case \"a\""));
+        assert_eq!(cases[0].get("median_ns").and_then(Json::as_f64), Some(1500.0));
+        assert_eq!(cases[1].get("throughput_per_sec"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn baseline_gate_flags_only_real_regressions() {
+        let baseline = bencher_with(vec![
+            result("fast_case", 1000.0),
+            result("slow_case", 1000.0),
+            result("retired_case", 1000.0),
+        ])
+        .to_json("gate");
+        // Within tolerance (+20%), over tolerance (+50%), and a case
+        // with no baseline: only the middle one trips the gate.
+        let current = bencher_with(vec![
+            result("fast_case", 1200.0),
+            result("slow_case", 1500.0),
+            result("new_case", 9e9),
+        ]);
+        let regressions = current.check_baseline(&baseline, BASELINE_TOLERANCE).unwrap();
+        assert_eq!(regressions.len(), 1, "{regressions:?}");
+        assert!(regressions[0].starts_with("slow_case:"), "{}", regressions[0]);
+        // Identical run: clean.
+        let same = bencher_with(vec![result("fast_case", 1000.0)]);
+        assert!(same.check_baseline(&baseline, BASELINE_TOLERANCE).unwrap().is_empty());
+    }
+
+    #[test]
+    fn baseline_gate_rejects_malformed_baselines() {
+        let b = bencher_with(vec![result("a", 1.0)]);
+        assert!(b.check_baseline("not json", BASELINE_TOLERANCE).is_err());
+        assert!(b.check_baseline("{\"bench\":\"x\"}", BASELINE_TOLERANCE).is_err());
+        assert!(b
+            .check_baseline("{\"results\":[{\"name\":\"a\",\"median_ns\":0}]}", BASELINE_TOLERANCE)
+            .is_err());
+        assert!(b.check_baseline("{\"results\":[{\"median_ns\":1}]}", BASELINE_TOLERANCE).is_err());
     }
 }

@@ -4,6 +4,8 @@
 //! (`proptest`), a CLI parser (`clap`), plus table/CSV output and shared
 //! statistics.
 
+#[cfg(test)]
+pub mod alloctrack;
 pub mod bench;
 pub mod cli;
 pub mod fnv;
