@@ -108,11 +108,18 @@ pub enum ActorKind {
     /// full-queue `try_push`, expiring `push_timeout` (when the
     /// `queue-stall` class is enabled), and close-then-drain.
     Queue,
+    /// A deterministic in-process model check of the fleet router's
+    /// consistent-hash ring: same key → same shard, a dead shard's keys
+    /// redistribute to live shards (and only those keys move), revival
+    /// restores the original placement. No subprocesses — the real
+    /// [`HashRing`](crate::service::fleet::HashRing) over seed-drawn
+    /// workload keys.
+    Router,
 }
 
 impl ActorKind {
     /// Every actor kind, in canonical scheduling order.
-    pub const ALL: [ActorKind; 8] = [
+    pub const ALL: [ActorKind; 9] = [
         ActorKind::Client,
         ActorKind::Drain,
         ActorKind::DropConn,
@@ -121,6 +128,7 @@ impl ActorKind {
         ActorKind::Restart,
         ActorKind::Corrupt,
         ActorKind::Queue,
+        ActorKind::Router,
     ];
 
     /// Stable command-line / trace name.
@@ -134,6 +142,7 @@ impl ActorKind {
             ActorKind::Restart => "restart",
             ActorKind::Corrupt => "corrupt",
             ActorKind::Queue => "queue",
+            ActorKind::Router => "router",
         }
     }
 
@@ -195,20 +204,27 @@ pub(crate) struct World {
     pub direct_cache: WorkloadCache,
     /// The fixed spec pool.
     pub specs: Vec<SpecDef>,
+    /// Writable-tier size bound every store in the world opens with
+    /// (`u64::MAX` unless `--cache-max-mb` was given).
+    pub max_bytes: u64,
 }
 
 impl World {
     /// Build the world: bake the seed tier if empty, start a one-worker
     /// service over a hooked store, and open the direct handles.
+    /// `cache_max_mb: None` keeps the writable tier unbounded so
+    /// eviction stays purely GC-actor-driven.
     pub fn new(
         dir: &Path,
         seed_dir: &Path,
         injector: Arc<FaultInjector>,
         sim_threads: usize,
+        cache_max_mb: Option<u64>,
     ) -> Result<World, String> {
         let specs = SpecDef::pool();
+        let max_bytes = cache_max_mb.map_or(u64::MAX, |mb| mb.saturating_mul(1024 * 1024));
         bake_seed(seed_dir, &specs)?;
-        let service_store = open_store(dir, seed_dir)?.with_hooks(injector.clone());
+        let service_store = open_store(dir, seed_dir, max_bytes)?.with_hooks(injector.clone());
         // One worker keeps completion order equal to submission order —
         // the concurrency the harness explores is the *interleaving of
         // actors*, which the seed fully determines. Intra-job sharding
@@ -222,7 +238,7 @@ impl World {
             ..ServiceConfig::default()
         };
         let service = Service::start_with_store(cfg, Some(Arc::new(service_store)));
-        let (direct_store, direct_cache) = direct_handles(dir, seed_dir, &injector)?;
+        let (direct_store, direct_cache) = direct_handles(dir, seed_dir, &injector, max_bytes)?;
         Ok(World {
             dir: dir.to_path_buf(),
             seed_dir: seed_dir.to_path_buf(),
@@ -231,27 +247,30 @@ impl World {
             direct_store,
             direct_cache,
             specs,
+            max_bytes,
         })
     }
 
     /// Crash/restart the "second process": new store + cache handles,
     /// empty memory tiers, same directories and fault seam.
     pub fn restart_direct(&mut self) -> Result<(), String> {
-        let (store, cache) = direct_handles(&self.dir, &self.seed_dir, &self.injector)?;
+        let (store, cache) =
+            direct_handles(&self.dir, &self.seed_dir, &self.injector, self.max_bytes)?;
         self.direct_store = store;
         self.direct_cache = cache;
         Ok(())
     }
 }
 
-/// Open a hook-free unbounded store over `dir` with `seed_dir` as the
-/// read-only tier. `max_bytes` is `u64::MAX` so the post-store GC never
+/// Open a hook-free store over `dir` with `seed_dir` as the read-only
+/// tier. `max_bytes` defaults to `u64::MAX` so the post-store GC never
 /// evicts on its own — evictions happen only when the GC *actor* runs,
-/// keeping disk state a pure function of the schedule.
-fn open_store(dir: &Path, seed_dir: &Path) -> Result<DiskStore, String> {
+/// keeping disk state a pure function of the schedule. A finite bound
+/// (`--cache-max-mb`) makes size-pressure eviction part of it instead.
+fn open_store(dir: &Path, seed_dir: &Path, max_bytes: u64) -> Result<DiskStore, String> {
     DiskStore::open(DiskConfig {
         dir: dir.to_path_buf(),
-        max_bytes: u64::MAX,
+        max_bytes,
         seed: Some(seed_dir.to_path_buf()),
     })
     .map_err(|e| format!("open cache dir: {e}"))
@@ -262,8 +281,9 @@ fn direct_handles(
     dir: &Path,
     seed_dir: &Path,
     injector: &Arc<FaultInjector>,
+    max_bytes: u64,
 ) -> Result<(Arc<DiskStore>, WorkloadCache), String> {
-    let store = Arc::new(open_store(dir, seed_dir)?.with_hooks(injector.clone()));
+    let store = Arc::new(open_store(dir, seed_dir, max_bytes)?.with_hooks(injector.clone()));
     let cache = WorkloadCache::new(8).with_disk(store.clone());
     Ok((store, cache))
 }
@@ -332,6 +352,7 @@ pub(crate) fn execute(
         }
         ActorKind::Corrupt => corrupt_step(world, rng),
         ActorKind::Queue => queue_step(faults),
+        ActorKind::Router => router_step(world, rng),
     }
 }
 
@@ -343,7 +364,11 @@ fn session_step(
 ) -> Result<String, String> {
     let njobs = 1 + rng.below(3) as usize;
     let malformed = rng.chance(0.25);
+    let hello = rng.chance(0.5);
     let mut input = String::new();
+    if hello {
+        input.push_str("{\"cmd\":\"hello\",\"proto\":2}\n");
+    }
     for i in 0..njobs {
         let idx = rng.below(world.specs.len() as u32) as usize;
         input.push_str(&world.specs[idx].job_line(&format!("j{i}")));
@@ -367,8 +392,9 @@ fn session_step(
                     .to_string(),
             ),
             Err(e) if e.kind() == io::ErrorKind::BrokenPipe => Ok(format!(
-                "drop-conn: jobs={njobs} malformed={} budget={budget}B -> BrokenPipe surfaced",
-                u64::from(malformed)
+                "drop-conn: jobs={njobs} malformed={} hello={} budget={budget}B -> BrokenPipe surfaced",
+                u64::from(malformed),
+                u64::from(hello)
             )),
             Err(e) => Err(format!(
                 "dropped connection surfaced wrong error kind: {e}"
@@ -397,6 +423,8 @@ fn session_step(
     let mut results = 0u64;
     let mut done = 0u64;
     let mut failed = 0u64;
+    let mut errors = 0u64;
+    let mut hellos = 0u64;
     for line in &lines {
         let json = Json::parse(line)
             .map_err(|e| format!("session emitted an unparseable line: {e}"))?;
@@ -409,6 +437,8 @@ fn session_step(
             }
             Some("done") => done += 1,
             Some("busy") => {}
+            Some("hello") => hellos += 1,
+            Some("error") => errors += 1,
             other => {
                 return Err(format!("session emitted unknown event {other:?}"))
             }
@@ -420,9 +450,21 @@ fn session_step(
             summary.jobs
         ));
     }
-    if results != expected {
+    if results != njobs as u64 {
         return Err(format!(
-            "accepted jobs lost: {expected} submitted, {results} result events"
+            "accepted jobs lost: {njobs} submitted, {results} result events"
+        ));
+    }
+    if errors != u64::from(malformed) {
+        return Err(format!(
+            "expected {} error event(s) for malformed frames, saw {errors}",
+            u64::from(malformed)
+        ));
+    }
+    if hellos != u64::from(hello) {
+        return Err(format!(
+            "expected {} hello event(s), saw {hellos}",
+            u64::from(hello)
         ));
     }
     if done != 1 {
@@ -432,10 +474,11 @@ fn session_step(
         Some(j) if j.get("event").and_then(|e| e.as_str()) == Some("done") => {}
         _ => return Err("done event was not the final line of the session".to_string()),
     }
-    if summary.failed != u64::from(malformed) || failed != u64::from(malformed) {
+    if summary.failed != u64::from(malformed) || failed != 0 {
         return Err(format!(
-            "jobs failed under fault injection: summary.failed={} failed-events={failed}, \
-             expected only the {} malformed frame(s) — store faults must never fail jobs",
+            "jobs failed under fault injection: summary.failed={} ok:false-results={failed}, \
+             expected only the {} malformed frame(s) counted as failed (as error events) — \
+             store faults must never fail jobs",
             summary.failed,
             u64::from(malformed)
         ));
@@ -451,8 +494,72 @@ fn session_step(
     }
     let label = if drained { "drain" } else { "client" };
     Ok(format!(
-        "{label}: jobs={njobs} malformed={} -> {results} results, done last",
-        u64::from(malformed)
+        "{label}: jobs={njobs} malformed={} hello={} -> {results} results, {errors} errors, done last",
+        u64::from(malformed),
+        u64::from(hello)
+    ))
+}
+
+/// Deterministic model check of the fleet router's consistent-hash
+/// ring: stability, minimal movement on shard death, dead shards never
+/// targeted, and placement restored on revival.
+fn router_step(world: &mut World, rng: &mut Pcg32) -> Result<String, String> {
+    use crate::service::fleet::HashRing;
+    let shards = 2 + rng.below(6) as usize;
+    let ring = HashRing::new(shards, 16);
+    let nkeys = 4 + rng.below(12) as usize;
+    let mut keys = Vec::with_capacity(nkeys);
+    for i in 0..nkeys {
+        if i % 2 == 0 {
+            // Real workload keys from the spec pool, exactly as the
+            // router hashes live jobs.
+            let idx = rng.below(world.specs.len() as u32) as usize;
+            keys.push(world.specs[idx].run_spec().workload_key().stable_hash());
+        } else {
+            keys.push(rng.next_u64());
+        }
+    }
+    let all = vec![true; shards];
+    let mut before = Vec::with_capacity(nkeys);
+    for &k in &keys {
+        let owner = ring
+            .shard_for(k, &all)
+            .ok_or("ring with live shards placed a key nowhere")?;
+        before.push(owner);
+    }
+    for (&k, &owner) in keys.iter().zip(&before) {
+        if ring.shard_for(k, &all) != Some(owner) {
+            return Err(format!("ring placement unstable for key {k:#018x}"));
+        }
+    }
+    let dead = rng.below(shards as u32) as usize;
+    let mut alive = all.clone();
+    alive[dead] = false;
+    let mut moved = 0usize;
+    for (&k, &owner) in keys.iter().zip(&before) {
+        let after = ring
+            .shard_for(k, &alive)
+            .ok_or("ring with a live shard placed a key nowhere")?;
+        if after == dead {
+            return Err(format!("dead shard {dead} still targeted for key {k:#018x}"));
+        }
+        if owner == dead {
+            moved += 1;
+        } else if after != owner {
+            return Err(format!(
+                "key {k:#018x} moved from live shard {owner} to {after} when shard {dead} died"
+            ));
+        }
+    }
+    for (&k, &owner) in keys.iter().zip(&before) {
+        if ring.shard_for(k, &all) != Some(owner) {
+            return Err(format!(
+                "reviving shard {dead} did not restore placement for key {k:#018x}"
+            ));
+        }
+    }
+    Ok(format!(
+        "router: shards={shards} keys={nkeys} dead={dead} moved={moved}, placement minimal"
     ))
 }
 

@@ -62,6 +62,11 @@ pub struct DstConfig {
     /// value; CI sweeps 1/2/8 on one seed to prove it. Deliberately
     /// *not* part of any trace line.
     pub sim_threads: usize,
+    /// Size bound for the writable cache tier, in MiB (`--cache-max-mb`).
+    /// `None` (the default) keeps the tier unbounded so eviction stays
+    /// purely GC-actor-driven and existing seed traces are unchanged;
+    /// setting it makes size-pressure eviction part of the schedule.
+    pub cache_max_mb: Option<u64>,
 }
 
 impl DstConfig {
@@ -74,6 +79,7 @@ impl DstConfig {
             faults: FaultSpec::all(),
             seed_dir: None,
             sim_threads: 1,
+            cache_max_mb: None,
         }
     }
 }

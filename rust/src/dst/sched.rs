@@ -97,7 +97,8 @@ pub(crate) fn drive(cfg: &DstConfig) -> Result<DstReport, String> {
     let disk_classes = cfg.faults.disk_classes();
 
     let injector = Arc::new(FaultInjector::new());
-    let mut world = World::new(&cache_dir, &seed_dir, injector, cfg.sim_threads)?;
+    let mut world =
+        World::new(&cache_dir, &seed_dir, injector, cfg.sim_threads, cfg.cache_max_mb)?;
 
     let mut root = Pcg32::new(cfg.seed);
     let mut clock_rng = root.split();

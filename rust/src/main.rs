@@ -8,7 +8,8 @@
 //! dare all [--scale 0.5]                                        everything
 //! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
 //! dare batch <jobs.jsonl> [--stream] [--cache-dir D [--cache-seed S]]   service: run a JSONL job file
-//! dare serve [--socket P | --tcp H:P] [--cache-dir D]           service: JSONL jobs, stdio or socket
+//! dare serve [--socket P | --tcp H:P] [--cache-dir D] [--auth S]   service: JSONL jobs, stdio or socket
+//! dare fleet --workers N (--socket P | --tcp H:P)               sharded router + N serve workers
 //! dare client (--socket P | --tcp H:P) [jobs.jsonl] [--shutdown]   drive a running server
 //! dare cache stats|clear|gc|verify --cache-dir D                inspect/wipe/sweep/audit an
 //!                                                               on-disk cache (workload + result tiers)
@@ -22,9 +23,10 @@ use dare::dst;
 use dare::harness::{common, fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
 use dare::isa::asm;
 use dare::kernels::KernelKind;
-use dare::service::disk;
+use dare::service::fleet::{Fleet, FleetConfig};
+use dare::service::protocol::Hello;
 use dare::service::transport::{self, Listener, SessionOpts, Stream};
-use dare::service::{DiskConfig, DiskStore, JobOutcome, JobResponse, Json, Service, ServiceConfig};
+use dare::service::{DiskConfig, DiskStore, JobOutcome, JobResponse, Json, Service, ServiceOpts};
 use dare::sim::{Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::cli::Args;
@@ -49,8 +51,15 @@ commands:\n\
                  snapshot, {\"cmd\":\"shutdown\"} drain+exit; a full job queue answers\n\
                  {\"event\":\"busy\",\"queue_depth\":…} instead of silently blocking\n\
                  (socket mode also drains on SIGTERM/SIGINT; stdio drains at EOF)\n\
+  fleet          sharded serve fleet: a router on --socket/--tcp consistent-hashes\n\
+                 each job by workload key to one of --workers N backend `dare serve`\n\
+                 processes (private unix sockets, shared --cache-dir), health-checks\n\
+                 and restarts them, re-routes a dead shard's pending jobs to live\n\
+                 shards, and enforces --auth/--max-jobs/--max-inflight per connection;\n\
+                 clients speak the normal session protocol, unchanged\n\
   client         connect to a serve socket, submit a job file (if given), print the\n\
-                 streamed responses; --shutdown asks the server to drain and exit\n\
+                 streamed responses; --shutdown asks the server to drain and exit;\n\
+                 --auth SECRET opens with the v2 hello handshake\n\
   cache          on-disk cache maintenance, covering both the workload (.dwl) and\n\
                  simulation-result (.dsr) tiers: `dare cache stats --cache-dir D`\n\
                  (per-tier entries, bytes, codec-version histogram), `dare cache\n\
@@ -83,8 +92,16 @@ options:\n\
   --max-mb N         cache gc: override the sweep bound (alias of --cache-max-mb)\n\
   --dry-run          cache gc: report would-be victims without deleting anything\n\
   --verify           check functional outputs against references\n\
-  --socket PATH      serve/client: unix socket path\n\
-  --tcp HOST:PORT    serve/client: TCP endpoint\n\
+  --socket PATH      serve/fleet/client: unix socket path\n\
+  --tcp HOST:PORT    serve/fleet/client: TCP endpoint\n\
+  --workers N        fleet: backend worker shard count (default 2)\n\
+  --auth SECRET      serve/fleet: require the v2 {\"cmd\":\"hello\",\"auth\":…} handshake\n\
+                     with this shared secret before any job; client: send it\n\
+  --max-jobs N       serve/fleet: per-connection job quota (excess answered with a\n\
+                     {\"event\":\"error\",\"code\":\"quota\"} frame)\n\
+  --max-inflight N   fleet: per-connection in-flight cap (busy backpressure)\n\
+  --fleet-dir D      fleet: directory for worker unix sockets (default under /tmp)\n\
+  --no-restart       fleet: leave dead workers down (their keys stay re-routed)\n\
   --stream           batch: emit streaming result/done events in completion order\n\
   --metrics-json P   batch/serve: write the final service MetricsSnapshot as JSON to P\n\
   --poll-metrics     client: also send {\"cmd\":\"metrics\"} and print the live snapshot\n\
@@ -104,48 +121,20 @@ fn usage() -> ! {
     std::process::exit(2)
 }
 
-/// Service configuration from the shared CLI options.
-fn service_config(args: &Args, opts: &HarnessOpts) -> Result<ServiceConfig, CliError> {
-    Ok(ServiceConfig {
-        workers: opts.threads,
-        cache_capacity: args.get_parse("cache", ServiceConfig::default().cache_capacity),
-        disk: disk_config(args)?,
-        result_cache: !args.flag("no-result-cache"),
-        sim_threads: args.get_parse("sim-threads", ServiceConfig::default().sim_threads),
-        ..ServiceConfig::default()
-    })
+/// Parse the shared service flags — one parser
+/// ([`ServiceOpts::from_args`]) for `batch`/`serve`/`fleet`/`all`/`dst`,
+/// so a new flag lands in one place.
+fn service_opts(args: &Args) -> Result<ServiceOpts, CliError> {
+    ServiceOpts::from_args(args).map_err(Into::into)
 }
 
-/// `--cache-dir DIR [--cache-max-mb N] [--cache-seed SEED]`: the
-/// on-disk workload tiers shared across processes and serve restarts.
-/// Off unless requested; the read-only seed tier needs a writable tier
-/// to promote into, so `--cache-seed` without `--cache-dir` is an error.
-fn disk_config(args: &Args) -> Result<Option<DiskConfig>, CliError> {
-    // Read every option first so they always count as consumed.
-    let max_mb: u64 = args.get_parse("cache-max-mb", disk::DEFAULT_MAX_BYTES / (1024 * 1024));
-    let seed = args.get("cache-seed").map(std::path::PathBuf::from);
-    if let Some(seed) = &seed {
-        // The seed invariant is "never created, never written": a
-        // missing directory is an operator error (typo, unmounted
-        // volume), not a dir to silently mkdir or serve 0 hits from.
-        if !seed.is_dir() {
-            return Err(format!("--cache-seed {}: not a directory", seed.display()).into());
-        }
+/// `--max-jobs N`: the optional per-connection job quota of `serve` and
+/// `fleet`.
+fn max_jobs_opt(args: &Args) -> Result<Option<u64>, CliError> {
+    match args.get("max-jobs") {
+        None => Ok(None),
+        Some(s) => Ok(Some(s.parse::<u64>().map_err(|e| format!("--max-jobs {s}: {e}"))?)),
     }
-    let dir = match args.get("cache-dir") {
-        Some(dir) => dir,
-        None if seed.is_some() => {
-            return Err("--cache-seed requires --cache-dir (the writable tier seed hits \
-                        are promoted into)"
-                .into())
-        }
-        None => return Ok(None),
-    };
-    Ok(Some(DiskConfig {
-        dir: std::path::PathBuf::from(dir),
-        max_bytes: max_mb.saturating_mul(1024 * 1024),
-        seed,
-    }))
 }
 
 /// Print one store's `stats` block under a label, split per entry kind
@@ -177,7 +166,7 @@ fn print_cache_stats(label: &str, dir: &str, store: &DiskStore, bound: Option<u6
 /// the service runs.
 fn cmd_cache(args: &Args) -> Result<(), CliError> {
     let action = args.positional.first().map(String::as_str).unwrap_or("stats");
-    let cfg = disk_config(args)?.ok_or("cache requires --cache-dir DIR")?;
+    let cfg = service_opts(args)?.disk().ok_or("cache requires --cache-dir DIR")?;
     let dir = cfg.dir.display().to_string();
     let seed = cfg.seed.clone();
     let store = DiskStore::open(cfg)?;
@@ -185,7 +174,7 @@ fn cmd_cache(args: &Args) -> Result<(), CliError> {
         "stats" => {
             print_cache_stats("cache", &dir, &store, Some(store.max_bytes()));
             if let Some(seed) = seed {
-                // disk_config validated the dir exists, so open is a
+                // service_opts validated the dir exists, so open is a
                 // no-op mkdir and stats only reads — the seed stays
                 // untouched.
                 let seed_dir = seed.display().to_string();
@@ -273,7 +262,12 @@ fn cmd_dst(args: &Args) -> Result<(), CliError> {
         cfg.faults = dst::FaultSpec::parse(spec)?;
     }
     cfg.seed_dir = args.get("seed-dir").map(std::path::PathBuf::from);
-    cfg.sim_threads = args.get_parse("sim-threads", cfg.sim_threads);
+    // The shared service parser covers --sim-threads and the previously
+    // ignored --cache-max-mb (None keeps the DST tier unbounded, so
+    // default traces are unchanged).
+    let sopts = service_opts(args)?;
+    cfg.sim_threads = sopts.sim_threads;
+    cfg.cache_max_mb = sopts.cache_max_mb;
     let trace = args.flag("trace");
     let trace_file = args.get("trace-file").map(String::from);
 
@@ -340,14 +334,14 @@ fn write_metrics_json(args: &Args, service: &Service) -> Result<(), CliError> {
 /// stderr either way.
 fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     let path = args.positional.first().ok_or("batch requires a jobs.jsonl path")?;
-    let service = Service::start(service_config(args, &opts)?);
+    let service = Service::start(service_opts(args)?.service_config());
     if args.flag("stream") {
         let file = std::fs::File::open(path)?;
         let summary = transport::run_session(
             &service,
             BufReader::new(file),
             Box::new(std::io::stdout()),
-            &SessionOpts { verify: opts.verify },
+            &SessionOpts { verify: opts.verify, ..SessionOpts::default() },
             None,
         )?;
         eprintln!("{}", service.metrics());
@@ -417,8 +411,12 @@ fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
 fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     let socket = args.get("socket").map(String::from);
     let tcp = args.get("tcp").map(String::from);
-    let service = Arc::new(Service::start(service_config(args, &opts)?));
-    let session_opts = SessionOpts { verify: opts.verify };
+    let service = Arc::new(Service::start(service_opts(args)?.service_config()));
+    let session_opts = SessionOpts {
+        verify: opts.verify,
+        auth: args.get("auth").map(String::from),
+        max_jobs: max_jobs_opt(args)?,
+    };
     if socket.is_some() || tcp.is_some() {
         let listener = match (&socket, &tcp) {
             (Some(_), Some(_)) => return Err("pass --socket or --tcp, not both".into()),
@@ -454,6 +452,60 @@ fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     )?;
     eprintln!("{}", service.metrics());
     write_metrics_json(args, &service)?;
+    Ok(())
+}
+
+/// `dare fleet --workers N (--socket P | --tcp H:P)`: the sharded
+/// router/worker serve fleet. The router accepts client connections on
+/// the given endpoint, consistent-hashes each job by its workload key
+/// to one of N `dare serve` worker processes (spawned from this same
+/// binary, each on a private unix socket), and streams results back
+/// over the normal session protocol. Dead workers are health-checked,
+/// failed over (pending jobs re-route to live shards), and restarted;
+/// SIGTERM or a client `{"cmd":"shutdown"}` drains everything.
+fn cmd_fleet(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
+    let workers: usize = args.get_parse("workers", 2usize);
+    let socket = args.get("socket").map(String::from);
+    let tcp = args.get("tcp").map(String::from);
+    let listener = match (&socket, &tcp) {
+        (Some(_), Some(_)) => return Err("pass --socket or --tcp, not both".into()),
+        (Some(path), None) => Listener::bind_unix(path)?,
+        (None, Some(addr)) => Listener::bind_tcp(addr)?,
+        (None, None) => return Err("fleet requires --socket PATH or --tcp HOST:PORT".into()),
+    };
+    let sopts = service_opts(args)?;
+    let socket_dir = match args.get("fleet-dir") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => std::env::temp_dir().join(format!("dare-fleet-{}", std::process::id())),
+    };
+    let mut cfg = FleetConfig::new(workers, std::env::current_exe()?, socket_dir);
+    cfg.worker_args = sopts.forward_args();
+    if opts.verify {
+        cfg.worker_args.push("--verify".to_string());
+    }
+    cfg.auth = args.get("auth").map(String::from);
+    cfg.max_jobs = max_jobs_opt(args)?;
+    cfg.max_inflight = match args.get("max-inflight") {
+        None => None,
+        Some(s) => Some(s.parse::<u64>().map_err(|e| format!("--max-inflight {s}: {e}"))?),
+    };
+    cfg.restart = !args.flag("no-restart");
+    transport::install_signal_handlers();
+    eprintln!(
+        "[fleet] router listening on {} with {workers} worker shard(s)",
+        listener.local_label()
+    );
+    let fleet = Fleet::launch(cfg, listener)?;
+    let metrics = fleet.join(); // runs until {"cmd":"shutdown"} or SIGTERM/SIGINT
+    if let Some(path) = &socket {
+        let _ = std::fs::remove_file(path);
+    }
+    eprintln!("[fleet] drained");
+    eprintln!("[fleet] router metrics: {metrics}");
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(path, format!("{metrics}\n"))?;
+        eprintln!("[fleet] metrics written to {path}");
+    }
     Ok(())
 }
 
@@ -498,6 +550,12 @@ fn cmd_client(args: &Args, _opts: HarnessOpts) -> Result<(), CliError> {
         let _ = done_tx.send(None);
     });
     let mut writer = stream.try_clone()?;
+    // Protocol v2: `--auth SECRET` opens the session with the hello
+    // handshake (required by servers started with --auth; the server's
+    // {"event":"hello"} answer is echoed by the printer thread).
+    if let Some(secret) = args.get("auth") {
+        writeln!(writer, "{}", Hello::new(Some(secret.to_string())).to_json())?;
+    }
     let mut sent = 0u64;
     if let Some(path) = args.positional.first() {
         let text = std::fs::read_to_string(path)?;
@@ -602,7 +660,8 @@ fn main() -> Result<(), CliError> {
             // switch — a warm `dare all --cache-dir D` then replays every
             // simulation from previous runs (builds == 0 and sims == 0)
             // and leaves a warm cache for the next one.
-            common::init_shared_service(opts, disk_config(&args)?, !args.flag("no-result-cache"));
+            let sopts = service_opts(&args)?;
+            common::init_shared_service(opts, sopts.disk(), sopts.result_cache);
             tables::table1();
             tables::table2();
             tables::overhead_report();
@@ -663,6 +722,9 @@ fn main() -> Result<(), CliError> {
         }
         "serve" => {
             cmd_serve(&args, opts)?;
+        }
+        "fleet" => {
+            cmd_fleet(&args, opts)?;
         }
         "client" => {
             cmd_client(&args, opts)?;

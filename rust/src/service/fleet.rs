@@ -1,0 +1,1015 @@
+//! The sharded multi-process serve fleet: `dare fleet --workers N`.
+//!
+//! One **router** process accepts client connections (unix or TCP) and
+//! speaks the same pipelined JSONL session protocol as `dare serve` —
+//! v2 hello/auth handshake, `result`/`done`/`busy`/`error` events,
+//! `done`/`metrics`/`shutdown` control lines. Behind it, N **worker**
+//! processes (plain `dare serve --socket` children, spawned from the
+//! same binary) each own one shard of the key space:
+//!
+//! ```text
+//!   clients ──▶ router (consistent hash by WorkloadKey::stable_hash)
+//!                 │ ├─▶ worker 0  (dare serve --socket …/worker-0.sock)
+//!                 │ ├─▶ worker 1
+//!                 │ └─▶ worker N-1
+//!                 └── shared --cache-dir: failover re-runs are hits
+//! ```
+//!
+//! * **Sharding** — each job hashes by its workload key onto a
+//!   [`HashRing`] with virtual nodes, so one shard's memory cache stays
+//!   hot for its key range and adding/removing a shard moves only the
+//!   keys that must move.
+//! * **Health + failover** — a monitor thread reaps exited workers; a
+//!   dead shard's pending jobs re-route to the next live shard on the
+//!   ring (the shared `--cache-dir` result tier makes re-runs cache
+//!   hits), and the worker is restarted. Results are delivered
+//!   **exactly once**: first answer wins, a late duplicate from a
+//!   presumed-dead worker is dropped.
+//! * **Auth/quotas** — the router enforces `--auth` (hello handshake),
+//!   `--max-jobs` (per-connection quota), and `--max-inflight`
+//!   (per-connection in-flight cap, surfaced as `busy` backpressure).
+//! * **Graceful drain** — SIGTERM or `{"cmd":"shutdown"}` stops the
+//!   accept loop, drains every client session, then asks each worker to
+//!   drain and waits for it to exit.
+
+use super::protocol::{
+    busy_event, done_event, error_event, hello_event, ErrorCode, Hello, JobRequest, JobResponse,
+    Json, PROTO_VERSION,
+};
+use super::transport::{sigterm_received, Listener, Stream, ACCEPT_POLL};
+use crate::util::fnv::Fnv64;
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Virtual nodes per shard on the ring (smooths the key distribution).
+pub const DEFAULT_VNODES: usize = 64;
+
+/// How often the monitor thread health-checks the workers.
+const HEALTH_POLL: Duration = Duration::from_millis(100);
+
+/// Retry cadence while waiting for a spawned worker to bind its socket.
+const CONNECT_POLL: Duration = Duration::from_millis(50);
+
+/// Connect attempts before a spawned worker is declared dead on arrival
+/// (`CONNECT_RETRIES * CONNECT_POLL` ≈ 10 s — generous for CI machines).
+const CONNECT_RETRIES: usize = 200;
+
+/// A consistent-hash ring over `shards` shards: the same key always
+/// lands on the same shard while that shard is alive, and when a shard
+/// dies only *its* keys move (each to the next live shard clockwise) —
+/// every other key keeps its placement, so the surviving shards' memory
+/// caches stay hot.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// (point hash, shard) pairs, sorted by hash.
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl HashRing {
+    /// Build a ring of `shards` shards with `vnodes` points each.
+    pub fn new(shards: usize, vnodes: usize) -> HashRing {
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for shard in 0..shards {
+            for vnode in 0..vnodes {
+                let mut h = Fnv64::new();
+                h.update_u64(shard as u64);
+                h.update_u64(vnode as u64);
+                points.push((h.finish(), shard));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, shards }
+    }
+
+    /// Number of shards the ring was built over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The live shard owning `key`: the first ring point at or after the
+    /// key (wrapping) whose shard is alive. `None` when every shard is
+    /// down.
+    pub fn shard_for(&self, key: u64, alive: &[bool]) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self.points.partition_point(|&(h, _)| h < key);
+        for i in 0..self.points.len() {
+            let (_, shard) = self.points[(start + i) % self.points.len()];
+            if alive.get(shard).copied().unwrap_or(false) {
+                return Some(shard);
+            }
+        }
+        None
+    }
+}
+
+/// Configuration for [`Fleet::launch`].
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Backend worker count (shards).
+    pub workers: usize,
+    /// The `dare` binary to spawn workers from (normally
+    /// `std::env::current_exe()`).
+    pub exe: PathBuf,
+    /// Extra CLI flags forwarded to every worker (normally
+    /// [`ServiceOpts::forward_args`](super::ServiceOpts::forward_args)).
+    pub worker_args: Vec<String>,
+    /// Directory for the per-worker unix sockets.
+    pub socket_dir: PathBuf,
+    /// Shared-secret auth required of router clients (`--auth`).
+    pub auth: Option<String>,
+    /// Per-connection job quota (`--max-jobs`).
+    pub max_jobs: Option<u64>,
+    /// Per-connection in-flight cap (`--max-inflight`): submissions past
+    /// it block the connection's reader, with `busy` events once per
+    /// stall.
+    pub max_inflight: Option<u64>,
+    /// Virtual nodes per shard on the hash ring.
+    pub vnodes: usize,
+    /// Restart a worker that dies (`--no-restart` sets false; its keys
+    /// then stay re-routed to the surviving shards).
+    pub restart: bool,
+}
+
+impl FleetConfig {
+    /// A config with default ring/restart behavior and no auth/quotas.
+    pub fn new(workers: usize, exe: impl Into<PathBuf>, socket_dir: impl Into<PathBuf>) -> Self {
+        FleetConfig {
+            workers,
+            exe: exe.into(),
+            worker_args: Vec::new(),
+            socket_dir: socket_dir.into(),
+            auth: None,
+            max_jobs: None,
+            max_inflight: None,
+            vnodes: DEFAULT_VNODES,
+            restart: true,
+        }
+    }
+}
+
+/// Router-side counters, reported by `{"cmd":"metrics"}` and in every
+/// `done` summary's service slot.
+struct RouterMetrics {
+    connections: AtomicU64,
+    jobs_routed: AtomicU64,
+    results_relayed: AtomicU64,
+    rerouted: AtomicU64,
+    failovers: AtomicU64,
+    restarts: AtomicU64,
+    errors: AtomicU64,
+    upstream_busy: AtomicU64,
+    shard_jobs: Vec<AtomicU64>,
+}
+
+impl RouterMetrics {
+    fn new(shards: usize) -> RouterMetrics {
+        RouterMetrics {
+            connections: AtomicU64::new(0),
+            jobs_routed: AtomicU64::new(0),
+            results_relayed: AtomicU64::new(0),
+            rerouted: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            upstream_busy: AtomicU64::new(0),
+            shard_jobs: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// One backend worker slot: socket path, liveness, and the process +
+/// upstream write half, guarded together so dispatch/death/restart are
+/// serialized per shard.
+struct WorkerHandle {
+    sock: PathBuf,
+    alive: AtomicBool,
+    state: Mutex<WorkerState>,
+}
+
+struct WorkerState {
+    child: Option<Child>,
+    writer: Option<Stream>,
+    /// Bumped on every (re)spawn: a death detected against a stale
+    /// generation (the reader of a worker we already replaced) is
+    /// ignored instead of killing the fresh worker.
+    generation: u64,
+}
+
+/// Per-client-connection output state, shared by the session reader and
+/// every upstream reader relaying results to it.
+struct ClientSession {
+    out: Mutex<Box<dyn Write + Send>>,
+    completed: Mutex<u64>,
+    completed_cv: Condvar,
+    failed: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
+impl ClientSession {
+    fn new(out: Box<dyn Write + Send>) -> ClientSession {
+        ClientSession {
+            out: Mutex::new(out),
+            completed: Mutex::new(0),
+            completed_cv: Condvar::new(),
+            failed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Write one line + flush. Errors are ignored: a vanished router
+    /// client is routine, and its jobs still drain.
+    fn write_line(&self, line: &str) {
+        let mut out = self.out.lock().unwrap();
+        let _ = writeln!(out, "{line}").and_then(|_| out.flush());
+    }
+
+    /// One submitted job fully answered (result relayed or error frame
+    /// written).
+    fn complete_one(&self) {
+        let mut completed = self.completed.lock().unwrap();
+        *completed += 1;
+        self.completed_cv.notify_all();
+    }
+
+    /// Block until all `submitted` jobs have been answered.
+    fn drain_all(&self, submitted: u64) {
+        let mut completed = self.completed.lock().unwrap();
+        while *completed < submitted {
+            completed = self.completed_cv.wait(completed).unwrap();
+        }
+    }
+
+    /// In-flight cap: block the session reader until fewer than `cap`
+    /// jobs are outstanding, emitting one `busy` event per stall.
+    fn throttle(&self, submitted: u64, cap: u64) {
+        let mut completed = self.completed.lock().unwrap();
+        let mut warned = false;
+        while submitted - *completed >= cap {
+            if !warned {
+                // Safe with the completed lock held: relays release the
+                // out lock before touching the completed counter.
+                self.write_line(&busy_event((submitted - *completed) as usize));
+                warned = true;
+            }
+            completed = self.completed_cv.wait(completed).unwrap();
+        }
+    }
+}
+
+/// A routed job awaiting its result, keyed by router seq in
+/// [`FleetShared::pending`]. Removing the entry is what delivers: first
+/// answer wins, so failover can never double-answer a job.
+#[derive(Clone)]
+struct PendingJob {
+    session: Arc<ClientSession>,
+    /// The client's own id, restored onto the relayed result.
+    orig_id: Option<String>,
+    /// The rewritten job line (`"id":"r<seq>"`) sent upstream.
+    line: String,
+    /// The workload's stable hash (ring key), for re-routing.
+    key: u64,
+    /// The shard the job is currently dispatched to.
+    shard: usize,
+}
+
+struct FleetShared {
+    exe: PathBuf,
+    worker_args: Vec<String>,
+    auth: Option<String>,
+    max_jobs: Option<u64>,
+    max_inflight: Option<u64>,
+    restart: bool,
+    ring: HashRing,
+    workers: Vec<WorkerHandle>,
+    pending: Mutex<HashMap<u64, PendingJob>>,
+    next_seq: AtomicU64,
+    metrics: RouterMetrics,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl FleetShared {
+    /// The router snapshot: fills the service slot of `done` summaries
+    /// and the `{"cmd":"metrics"}` answer.
+    fn metrics_json(&self) -> String {
+        let alive = self.workers.iter().filter(|w| w.alive.load(Ordering::SeqCst)).count();
+        let m = &self.metrics;
+        let shard_jobs: Vec<String> =
+            m.shard_jobs.iter().map(|a| a.load(Ordering::Relaxed).to_string()).collect();
+        format!(
+            "{{\"workers\":{},\"workers_alive\":{alive},\"connections\":{},\
+             \"jobs_routed\":{},\"results_relayed\":{},\"rerouted\":{},\"failovers\":{},\
+             \"restarts\":{},\"errors\":{},\"upstream_busy\":{},\"shard_jobs\":[{}]}}",
+            self.workers.len(),
+            m.connections.load(Ordering::Relaxed),
+            m.jobs_routed.load(Ordering::Relaxed),
+            m.results_relayed.load(Ordering::Relaxed),
+            m.rerouted.load(Ordering::Relaxed),
+            m.failovers.load(Ordering::Relaxed),
+            m.restarts.load(Ordering::Relaxed),
+            m.errors.load(Ordering::Relaxed),
+            m.upstream_busy.load(Ordering::Relaxed),
+            shard_jobs.join(",")
+        )
+    }
+}
+
+/// Route one job to its shard, retrying over worker deaths. Returns
+/// false when no live shard remains: the job is answered with a
+/// `shard_down` error frame and counted completed.
+fn dispatch(shared: &Arc<FleetShared>, seq: u64, job: PendingJob) -> bool {
+    loop {
+        let alive: Vec<bool> =
+            shared.workers.iter().map(|w| w.alive.load(Ordering::SeqCst)).collect();
+        let Some(shard) = shared.ring.shard_for(job.key, &alive) else {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            job.session.failed.fetch_add(1, Ordering::Relaxed);
+            job.session.write_line(&error_event(
+                ErrorCode::ShardDown,
+                "no live worker shard (re-route exhausted)",
+                job.orig_id.as_deref(),
+                seq,
+            ));
+            job.session.complete_one();
+            return false;
+        };
+        // Register as pending on this shard *before* writing, so a death
+        // detected right after the write still finds the entry to fail
+        // over.
+        shared.pending.lock().unwrap().insert(seq, PendingJob { shard, ..job.clone() });
+        let w = &shared.workers[shard];
+        let (generation, write_ok) = {
+            let mut st = w.state.lock().unwrap();
+            let ok = match st.writer.as_mut() {
+                Some(wr) => writeln!(wr, "{}", job.line).and_then(|_| wr.flush()).is_ok(),
+                None => false,
+            };
+            (st.generation, ok)
+        };
+        if write_ok {
+            shared.metrics.jobs_routed.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.shard_jobs[shard].fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        // The write failed: un-register (unless a concurrent failover
+        // already re-routed the entry elsewhere — then it's theirs) and
+        // report the death before retrying on the updated ring.
+        {
+            let mut pending = shared.pending.lock().unwrap();
+            match pending.get(&seq) {
+                Some(p) if p.shard == shard => {
+                    pending.remove(&seq);
+                }
+                _ => return true, // failover owns it now
+            }
+        }
+        handle_worker_death(shared, shard, generation);
+    }
+}
+
+/// Move every pending job of a dead shard to the next live shard on the
+/// ring (or answer `shard_down` when none is left).
+fn failover_pending(shared: &Arc<FleetShared>, dead: usize) {
+    let moved: Vec<(u64, PendingJob)> = {
+        let mut pending = shared.pending.lock().unwrap();
+        let seqs: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.shard == dead)
+            .map(|(&seq, _)| seq)
+            .collect();
+        seqs.into_iter().filter_map(|seq| pending.remove(&seq).map(|p| (seq, p))).collect()
+    };
+    if moved.is_empty() {
+        return;
+    }
+    shared.metrics.rerouted.fetch_add(moved.len() as u64, Ordering::Relaxed);
+    eprintln!("[fleet] re-routing {} pending job(s) from dead worker {dead}", moved.len());
+    for (seq, job) in moved {
+        dispatch(shared, seq, job);
+    }
+}
+
+/// Centralized death path, reached from the upstream reader (EOF), the
+/// monitor (child exited), and dispatch (write failed). Exactly one
+/// caller per generation wins; it reaps the process, fails pending jobs
+/// over, and (outside shutdown) restarts the shard.
+fn handle_worker_death(shared: &Arc<FleetShared>, shard: usize, generation: u64) {
+    let w = &shared.workers[shard];
+    {
+        let mut st = w.state.lock().unwrap();
+        if st.generation != generation || !w.alive.swap(false, Ordering::SeqCst) {
+            return; // stale detection, or another detector won
+        }
+        if let Some(mut child) = st.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        st.writer = None;
+    }
+    if shared.shutdown.load(Ordering::SeqCst) || sigterm_received() {
+        return; // drain path: workers are reaped by shutdown_workers
+    }
+    shared.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+    eprintln!("[fleet] worker {shard} died");
+    failover_pending(shared, shard);
+    if shared.restart {
+        match spawn_worker(shared, shard) {
+            Ok(()) => {
+                shared.metrics.restarts.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[fleet] worker {shard} restarted");
+            }
+            Err(e) => eprintln!("[fleet] worker {shard} restart failed: {e}"),
+        }
+    }
+}
+
+/// Spawn (or respawn) the worker process for `shard`, connect to its
+/// socket, and start its upstream reader thread.
+fn spawn_worker(shared: &Arc<FleetShared>, shard: usize) -> io::Result<()> {
+    let w = &shared.workers[shard];
+    let sock = w.sock.display().to_string();
+    // Clear any stale socket file first; the worker binds it fresh.
+    let _ = std::fs::remove_file(&w.sock);
+    let mut child = Command::new(&shared.exe)
+        .arg("serve")
+        .arg("--socket")
+        .arg(&sock)
+        .args(&shared.worker_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()?;
+    let mut stream = None;
+    for _ in 0..CONNECT_RETRIES {
+        match Stream::connect_unix(&sock) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(CONNECT_POLL),
+        }
+    }
+    let Some(stream) = stream else {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(io::Error::new(
+            io::ErrorKind::TimedOut,
+            format!("worker {shard} never bound {sock}"),
+        ));
+    };
+    let read_half = stream.try_clone()?;
+    let generation = {
+        let mut st = w.state.lock().unwrap();
+        st.generation += 1;
+        st.child = Some(child);
+        st.writer = Some(stream);
+        st.generation
+    };
+    w.alive.store(true, Ordering::SeqCst);
+    let shared = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("dare-fleet-up{shard}"))
+        .spawn(move || upstream_reader(&shared, shard, generation, read_half))
+        .expect("spawning upstream reader");
+    Ok(())
+}
+
+/// Relay one worker's output stream: result events go back to the
+/// owning client session (original id restored), `busy` is counted, and
+/// EOF means the worker died.
+fn upstream_reader(shared: &Arc<FleetShared>, shard: usize, generation: u64, read_half: Stream) {
+    let reader = BufReader::new(read_half);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let Ok(v) = Json::parse(trimmed) else { continue };
+        match v.get("event").and_then(Json::as_str) {
+            Some("result") => {
+                let Some(seq) = v
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .and_then(|id| id.strip_prefix('r'))
+                    .and_then(|n| n.parse::<u64>().ok())
+                else {
+                    continue; // not a router-tagged result
+                };
+                // First answer wins: a failover may re-run a job whose
+                // original worker had already buffered a result; only
+                // whoever removes the pending entry delivers.
+                let Some(p) = shared.pending.lock().unwrap().remove(&seq) else {
+                    continue; // late duplicate from a replaced worker
+                };
+                match JobResponse::parse(trimmed) {
+                    Ok(mut resp) => {
+                        resp.id = p.orig_id.clone();
+                        if !resp.ok {
+                            p.session.failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if resp.cache_hit {
+                            p.session.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        p.session.write_line(&resp.to_event_json());
+                        shared.metrics.results_relayed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        p.session.failed.fetch_add(1, Ordering::Relaxed);
+                        p.session.write_line(&error_event(
+                            ErrorCode::Internal,
+                            &format!("unparsable result from worker {shard}: {e}"),
+                            p.orig_id.as_deref(),
+                            seq,
+                        ));
+                    }
+                }
+                p.session.complete_one();
+            }
+            Some("busy") => {
+                shared.metrics.upstream_busy.fetch_add(1, Ordering::Relaxed);
+            }
+            // done/metrics/hello summaries from the worker are
+            // router-internal; clients get the router's own summaries.
+            _ => {}
+        }
+    }
+    handle_worker_death(shared, shard, generation);
+}
+
+/// One client connection against the router: the same session protocol
+/// as [`run_session`](super::transport::run_session), with submissions
+/// routed to the shards instead of a local worker pool.
+fn router_session(shared: &Arc<FleetShared>, stream: Stream) {
+    let t0 = Instant::now();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let session = Arc::new(ClientSession::new(Box::new(write_half)));
+    shared.metrics.connections.fetch_add(1, Ordering::Relaxed);
+    let reader = BufReader::new(stream);
+
+    let mut submitted: u64 = 0;
+    let mut errored: u64 = 0;
+    let mut frames: u64 = 0;
+    let mut authed = shared.auth.is_none();
+    let mut dirty = false;
+    let mut emitted_done = false;
+    let mut aborted = false;
+
+    let emit_done = |session: &ClientSession, submitted: u64, errored: u64| {
+        session.drain_all(submitted);
+        let failed = session.failed.load(Ordering::Relaxed) + errored;
+        let hits = session.cache_hits.load(Ordering::Relaxed);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        session.write_line(&done_event(
+            submitted + errored,
+            failed,
+            hits,
+            wall_ms,
+            &shared.metrics_json(),
+        ));
+    };
+
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        frames += 1;
+        let parsed = Json::parse(trimmed).ok();
+        if let Some(v) = parsed.as_ref().filter(|v| Hello::is_hello(v)) {
+            match Hello::parse(v) {
+                Ok(h) if h.proto > PROTO_VERSION => {
+                    let detail = format!(
+                        "unsupported protocol version {} (this router speaks {PROTO_VERSION})",
+                        h.proto
+                    );
+                    session.write_line(&error_event(ErrorCode::Malformed, &detail, None, frames));
+                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    errored += 1;
+                    aborted = true;
+                    break;
+                }
+                Ok(h) => {
+                    if let Some(secret) = &shared.auth {
+                        if h.auth.as_deref() != Some(secret.as_str()) {
+                            session.write_line(&error_event(
+                                ErrorCode::Unauthorized,
+                                "bad or missing auth secret",
+                                None,
+                                frames,
+                            ));
+                            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            errored += 1;
+                            aborted = true;
+                            break;
+                        }
+                    }
+                    authed = true;
+                    session.write_line(&hello_event(PROTO_VERSION));
+                }
+                Err(e) => {
+                    session.write_line(&error_event(ErrorCode::Malformed, &e, None, frames));
+                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    errored += 1;
+                    aborted = true;
+                    break;
+                }
+            }
+            continue;
+        }
+        if !authed {
+            session.write_line(&error_event(
+                ErrorCode::Unauthorized,
+                "authentication required: open with {\"cmd\":\"hello\",\"proto\":2,\"auth\":…}",
+                None,
+                frames,
+            ));
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            errored += 1;
+            aborted = true;
+            break;
+        }
+        match parsed.as_ref().and_then(|v| v.get("cmd").and_then(Json::as_str)) {
+            Some("done") => {
+                emit_done(&session, submitted, errored);
+                emitted_done = true;
+                dirty = false;
+                continue;
+            }
+            Some("metrics") => {
+                session
+                    .write_line(&format!("{{\"event\":\"metrics\",\"router\":{}}}", shared.metrics_json()));
+                continue;
+            }
+            Some("shutdown") => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                break;
+            }
+            _ => {} // not a router control line: treat as a job below
+        }
+        let id = parsed
+            .as_ref()
+            .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)));
+        if let Some(cap) = shared.max_jobs {
+            if submitted + errored >= cap {
+                let detail = format!("per-session job quota of {cap} reached");
+                session.write_line(&error_event(ErrorCode::Quota, &detail, id.as_deref(), frames));
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                errored += 1;
+                dirty = true;
+                continue;
+            }
+        }
+        match JobRequest::parse(trimmed) {
+            Ok(mut req) => {
+                let key = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    req.to_spec().workload_key().stable_hash()
+                })) {
+                    Ok(key) => key,
+                    Err(payload) => {
+                        let msg = super::panic_message(&*payload);
+                        session.write_line(&error_event(
+                            ErrorCode::Internal,
+                            &format!("keying job failed: {msg}"),
+                            req.id.as_deref(),
+                            frames,
+                        ));
+                        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        errored += 1;
+                        dirty = true;
+                        continue;
+                    }
+                };
+                if let Some(cap) = shared.max_inflight {
+                    session.throttle(submitted, cap);
+                }
+                let orig_id = req.id.take();
+                let seq = shared.next_seq.fetch_add(1, Ordering::Relaxed);
+                req.id = Some(format!("r{seq}"));
+                let job = PendingJob {
+                    session: session.clone(),
+                    orig_id,
+                    line: req.to_json(),
+                    key,
+                    shard: 0, // set by dispatch
+                };
+                submitted += 1;
+                dirty = true;
+                dispatch(shared, seq, job);
+            }
+            Err(e) => {
+                session.write_line(&error_event(ErrorCode::Malformed, &e, id.as_deref(), frames));
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                errored += 1;
+                dirty = true;
+            }
+        }
+    }
+
+    if aborted {
+        session.drain_all(submitted);
+    } else if dirty || !emitted_done {
+        emit_done(&session, submitted, errored);
+    } else {
+        session.drain_all(submitted);
+    }
+}
+
+/// Ask every worker to drain and exit, wait for it, and remove its
+/// socket file. Used on launch failure and at the end of a drain.
+fn shutdown_workers(shared: &Arc<FleetShared>) {
+    for w in &shared.workers {
+        let mut st = w.state.lock().unwrap();
+        if let Some(wr) = st.writer.as_mut() {
+            let _ = writeln!(wr, "{{\"cmd\":\"shutdown\"}}").and_then(|_| wr.flush());
+        }
+        st.writer = None;
+        if let Some(mut child) = st.child.take() {
+            let _ = child.wait();
+        }
+        w.alive.store(false, Ordering::SeqCst);
+        let _ = std::fs::remove_file(&w.sock);
+    }
+}
+
+/// A running fleet: router accept loop + monitor thread + N worker
+/// processes. [`Fleet::join`] blocks until fully drained.
+pub struct Fleet {
+    shared: Arc<FleetShared>,
+    accept_thread: JoinHandle<()>,
+    monitor_thread: JoinHandle<()>,
+}
+
+impl Fleet {
+    /// Spawn the workers, connect to each, and start routing `listener`
+    /// connections. Fails (with every spawned worker reaped) if any
+    /// worker can't be started.
+    pub fn launch(cfg: FleetConfig, listener: Listener) -> io::Result<Fleet> {
+        if cfg.workers == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "fleet needs at least one worker",
+            ));
+        }
+        std::fs::create_dir_all(&cfg.socket_dir)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let workers: Vec<WorkerHandle> = (0..cfg.workers)
+            .map(|i| WorkerHandle {
+                sock: cfg.socket_dir.join(format!("worker-{i}.sock")),
+                alive: AtomicBool::new(false),
+                state: Mutex::new(WorkerState { child: None, writer: None, generation: 0 }),
+            })
+            .collect();
+        let shared = Arc::new(FleetShared {
+            exe: cfg.exe,
+            worker_args: cfg.worker_args,
+            auth: cfg.auth,
+            max_jobs: cfg.max_jobs,
+            max_inflight: cfg.max_inflight,
+            restart: cfg.restart,
+            ring: HashRing::new(cfg.workers, cfg.vnodes),
+            workers,
+            pending: Mutex::new(HashMap::new()),
+            next_seq: AtomicU64::new(0),
+            metrics: RouterMetrics::new(cfg.workers),
+            shutdown: shutdown.clone(),
+        });
+        for shard in 0..shared.workers.len() {
+            if let Err(e) = spawn_worker(&shared, shard) {
+                shutdown.store(true, Ordering::SeqCst);
+                shutdown_workers(&shared);
+                return Err(e);
+            }
+        }
+        let monitor_thread = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("dare-fleet-monitor".into())
+                .spawn(move || monitor(&shared))
+                .expect("spawning fleet monitor")
+        };
+        let accept_thread = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("dare-fleet-accept".into())
+                .spawn(move || accept_loop(&shared, listener))
+                .expect("spawning fleet accept thread")
+        };
+        Ok(Fleet { shared, accept_thread, monitor_thread })
+    }
+
+    /// The flag that winds the fleet down (shared with every session).
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shared.shutdown.clone()
+    }
+
+    /// The live worker process ids, by shard (`None` = currently down).
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        self.shared
+            .workers
+            .iter()
+            .map(|w| w.state.lock().unwrap().child.as_ref().map(|c| c.id()))
+            .collect()
+    }
+
+    /// The current router metrics snapshot as JSON.
+    pub fn metrics_json(&self) -> String {
+        self.shared.metrics_json()
+    }
+
+    /// Block until drained: accept loop stopped and every session
+    /// answered, monitor joined, every worker asked to drain and reaped.
+    /// Returns the final router metrics snapshot (JSON).
+    pub fn join(self) -> String {
+        let _ = self.accept_thread.join();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.monitor_thread.join();
+        shutdown_workers(&self.shared);
+        self.shared.metrics_json()
+    }
+}
+
+/// The router accept loop: same structure as the single-process server,
+/// with [`router_session`] per connection.
+fn accept_loop(shared: &Arc<FleetShared>, listener: Listener) {
+    let mut sessions: Vec<(JoinHandle<()>, Stream)> = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) && !sigterm_received() {
+        let mut i = 0;
+        while i < sessions.len() {
+            if sessions[i].0.is_finished() {
+                let (handle, _conn) = sessions.swap_remove(i);
+                let _ = handle.join();
+            } else {
+                i += 1;
+            }
+        }
+        match listener.poll_accept() {
+            Ok(Some(stream)) => {
+                let _ = stream.set_blocking();
+                let Ok(watch) = stream.try_clone() else { continue };
+                let shared = shared.clone();
+                let handle = std::thread::spawn(move || router_session(&shared, stream));
+                sessions.push((handle, watch));
+            }
+            Ok(None) => std::thread::sleep(ACCEPT_POLL),
+            Err(_) => break, // persistent listener failure
+        }
+    }
+    // Drain: stop accepting, unblock every connected reader; sessions
+    // finish their in-flight jobs and emit their summaries.
+    shared.shutdown.store(true, Ordering::SeqCst);
+    for (_, conn) in &sessions {
+        conn.shutdown_read();
+    }
+    for (handle, _) in sessions {
+        let _ = handle.join();
+    }
+}
+
+/// Health checks: notice a worker whose process exited even when its
+/// socket hasn't reported EOF yet.
+fn monitor(shared: &Arc<FleetShared>) {
+    while !shared.shutdown.load(Ordering::SeqCst) && !sigterm_received() {
+        std::thread::sleep(HEALTH_POLL);
+        for (shard, w) in shared.workers.iter().enumerate() {
+            if !w.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let (generation, exited) = {
+                let mut st = w.state.lock().unwrap();
+                let exited = st
+                    .child
+                    .as_mut()
+                    .map(|c| matches!(c.try_wait(), Ok(Some(_))))
+                    .unwrap_or(false);
+                (st.generation, exited)
+            };
+            if exited {
+                handle_worker_death(shared, shard, generation);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_same_key_same_shard() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        assert_eq!(ring.shards(), 4);
+        let alive = [true; 4];
+        for key in [0u64, 1, 42, u64::MAX, 0xdead_beef_cafe_f00d] {
+            let a = ring.shard_for(key, &alive);
+            let b = ring.shard_for(key, &alive);
+            assert!(a.is_some());
+            assert_eq!(a, b, "placement must be deterministic for key {key}");
+        }
+        // A fresh ring over the same shard count places identically.
+        let ring2 = HashRing::new(4, DEFAULT_VNODES);
+        for key in 0..1000u64 {
+            assert_eq!(ring.shard_for(key, &alive), ring2.shard_for(key, &alive));
+        }
+    }
+
+    #[test]
+    fn ring_covers_every_shard() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        let alive = [true; 4];
+        let mut seen = [false; 4];
+        let mut rng_state = 0x1234_5678_9abc_def0u64;
+        for _ in 0..4000 {
+            // xorshift64: cheap spread of keys across the ring.
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            seen[ring.shard_for(rng_state, &alive).unwrap()] = true;
+        }
+        assert_eq!(seen, [true; 4], "virtual nodes must spread keys over all shards");
+    }
+
+    #[test]
+    fn ring_minimal_movement_on_shard_death() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        let all = [true; 4];
+        let keys: Vec<u64> = (0..1000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+        let before: Vec<usize> = keys.iter().map(|&k| ring.shard_for(k, &all).unwrap()).collect();
+        let dead = 2usize;
+        let mut alive = all;
+        alive[dead] = false;
+        let mut moved = 0usize;
+        for (&key, &owner) in keys.iter().zip(&before) {
+            let after = ring.shard_for(key, &alive).unwrap();
+            assert_ne!(after, dead, "dead shard must never be targeted");
+            if owner == dead {
+                moved += 1; // its keys must redistribute to live shards
+            } else {
+                assert_eq!(after, owner, "live shards' keys must not move (key {key})");
+            }
+        }
+        assert!(moved > 0, "the dead shard owned some of the keys");
+        // Revival restores the original placement exactly.
+        for (&key, &owner) in keys.iter().zip(&before) {
+            assert_eq!(ring.shard_for(key, &all).unwrap(), owner);
+        }
+    }
+
+    #[test]
+    fn ring_all_dead_is_none() {
+        let ring = HashRing::new(3, 8);
+        assert_eq!(ring.shard_for(7, &[false, false, false]), None);
+        assert_eq!(ring.shard_for(7, &[false, true, false]), Some(1));
+    }
+
+    #[test]
+    fn router_metrics_json_parses() {
+        let shared = FleetShared {
+            exe: PathBuf::from("/bin/true"),
+            worker_args: Vec::new(),
+            auth: None,
+            max_jobs: None,
+            max_inflight: None,
+            restart: true,
+            ring: HashRing::new(2, 8),
+            workers: (0..2)
+                .map(|i| WorkerHandle {
+                    sock: PathBuf::from(format!("/tmp/w{i}.sock")),
+                    alive: AtomicBool::new(i == 0),
+                    state: Mutex::new(WorkerState {
+                        child: None,
+                        writer: None,
+                        generation: 0,
+                    }),
+                })
+                .collect(),
+            pending: Mutex::new(HashMap::new()),
+            next_seq: AtomicU64::new(0),
+            metrics: RouterMetrics::new(2),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        };
+        shared.metrics.jobs_routed.store(5, Ordering::Relaxed);
+        shared.metrics.shard_jobs[1].store(3, Ordering::Relaxed);
+        let v = Json::parse(&shared.metrics_json()).unwrap();
+        assert_eq!(v.get("workers").and_then(Json::as_u64), Some(2));
+        assert_eq!(v.get("workers_alive").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("jobs_routed").and_then(Json::as_u64), Some(5));
+        match v.get("shard_jobs") {
+            Some(Json::Arr(items)) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[1].as_u64(), Some(3));
+            }
+            other => panic!("shard_jobs must be an array, got {other:?}"),
+        }
+    }
+}

@@ -49,6 +49,10 @@
 //! * [`transport`] — the socket server (`dare serve --socket/--tcp`):
 //!   one accept loop, per-connection pipelined sessions, streaming
 //!   responses, graceful shutdown/drain.
+//! * [`fleet`] — the sharded multi-process serve fleet (`dare fleet
+//!   --workers N`): a router consistent-hashes jobs by workload key to
+//!   N backend `dare serve` workers, health-checks and restarts them,
+//!   and fails pending jobs over to live shards.
 //! * [`metrics`] — atomic counters + the printable/JSON snapshot.
 //!
 //! `coordinator::run_many` is a thin wrapper over a transient [`Service`];
@@ -59,6 +63,7 @@
 
 pub mod cache;
 pub mod disk;
+pub mod fleet;
 pub mod job;
 pub mod metrics;
 pub mod protocol;
@@ -78,6 +83,142 @@ pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use protocol::{JobRequest, JobResponse, Json};
 pub use queue::JobQueue;
 pub use workers::{shared, shared_handle, Service, ServiceConfig};
+
+/// The shared service CLI surface, parsed once: `batch`, `serve`,
+/// `fleet`, `dare all`, and `dst` all accept the same
+/// `--threads/--cache/--sim-threads/--cache-dir/--cache-seed/
+/// --cache-max-mb/--no-result-cache` family, and a new flag lands here
+/// instead of in four per-command parsers. The fleet router also
+/// re-serializes these via [`ServiceOpts::forward_args`] when spawning
+/// its `dare serve` workers, so every shard runs the same config.
+#[derive(Debug, Clone)]
+pub struct ServiceOpts {
+    /// Service worker threads (`--threads`; 0 = one per core).
+    pub threads: usize,
+    /// Workload-cache capacity in built workloads (`--cache`).
+    pub cache_capacity: usize,
+    /// Per-job simulation shard threads (`--sim-threads`).
+    pub sim_threads: usize,
+    /// Writable on-disk cache directory (`--cache-dir`).
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Read-only seed cache directory (`--cache-seed`).
+    pub cache_seed: Option<std::path::PathBuf>,
+    /// GC bound in MiB (`--cache-max-mb`); `None` = flag absent, so
+    /// each consumer applies its own default ([`disk::DEFAULT_MAX_BYTES`]
+    /// for the service tiers, unbounded for DST determinism).
+    pub cache_max_mb: Option<u64>,
+    /// Simulation-result memoization (`--no-result-cache` sets false).
+    pub result_cache: bool,
+}
+
+impl Default for ServiceOpts {
+    fn default() -> Self {
+        let base = ServiceConfig::default();
+        Self {
+            threads: 0,
+            cache_capacity: base.cache_capacity,
+            sim_threads: base.sim_threads,
+            cache_dir: None,
+            cache_seed: None,
+            cache_max_mb: None,
+            result_cache: true,
+        }
+    }
+}
+
+impl ServiceOpts {
+    /// Parse the shared flags. The read-only seed tier needs a writable
+    /// tier to promote into, so `--cache-seed` without `--cache-dir` is
+    /// an error, and a missing seed directory is an operator error
+    /// (typo, unmounted volume), not a dir to silently mkdir.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<ServiceOpts, String> {
+        let base = ServiceOpts::default();
+        let cache_max_mb = match args.get("cache-max-mb") {
+            None => None,
+            Some(s) => {
+                Some(s.parse::<u64>().map_err(|e| format!("--cache-max-mb {s}: {e}"))?)
+            }
+        };
+        let cache_seed = args.get("cache-seed").map(std::path::PathBuf::from);
+        if let Some(seed) = &cache_seed {
+            if !seed.is_dir() {
+                return Err(format!("--cache-seed {}: not a directory", seed.display()));
+            }
+        }
+        let cache_dir = args.get("cache-dir").map(std::path::PathBuf::from);
+        if cache_seed.is_some() && cache_dir.is_none() {
+            return Err("--cache-seed requires --cache-dir (the writable tier seed hits \
+                        are promoted into)"
+                .to_string());
+        }
+        Ok(ServiceOpts {
+            threads: args.get_parse("threads", base.threads),
+            cache_capacity: args.get_parse("cache", base.cache_capacity),
+            sim_threads: args.get_parse("sim-threads", base.sim_threads),
+            cache_dir,
+            cache_seed,
+            cache_max_mb,
+            result_cache: !args.flag("no-result-cache"),
+        })
+    }
+
+    /// The GC bound in bytes: the explicit flag, or the service default.
+    pub fn max_bytes(&self) -> u64 {
+        self.cache_max_mb
+            .map(|mb| mb.saturating_mul(1024 * 1024))
+            .unwrap_or(disk::DEFAULT_MAX_BYTES)
+    }
+
+    /// The on-disk tier config, `None` unless `--cache-dir` was given.
+    pub fn disk(&self) -> Option<DiskConfig> {
+        self.cache_dir.as_ref().map(|dir| DiskConfig {
+            dir: dir.clone(),
+            max_bytes: self.max_bytes(),
+            seed: self.cache_seed.clone(),
+        })
+    }
+
+    /// The [`ServiceConfig`] these options describe.
+    pub fn service_config(&self) -> ServiceConfig {
+        ServiceConfig {
+            workers: self.threads,
+            cache_capacity: self.cache_capacity,
+            disk: self.disk(),
+            result_cache: self.result_cache,
+            sim_threads: self.sim_threads,
+            ..ServiceConfig::default()
+        }
+    }
+
+    /// Re-serialize as CLI flags — how the fleet router hands its own
+    /// service options down to the `dare serve` workers it spawns.
+    pub fn forward_args(&self) -> Vec<String> {
+        let mut v = vec![
+            "--threads".to_string(),
+            self.threads.to_string(),
+            "--cache".to_string(),
+            self.cache_capacity.to_string(),
+            "--sim-threads".to_string(),
+            self.sim_threads.to_string(),
+        ];
+        if let Some(dir) = &self.cache_dir {
+            v.push("--cache-dir".to_string());
+            v.push(dir.display().to_string());
+        }
+        if let Some(seed) = &self.cache_seed {
+            v.push("--cache-seed".to_string());
+            v.push(seed.display().to_string());
+        }
+        if let Some(mb) = self.cache_max_mb {
+            v.push("--cache-max-mb".to_string());
+            v.push(mb.to_string());
+        }
+        if !self.result_cache {
+            v.push("--no-result-cache".to_string());
+        }
+        v
+    }
+}
 
 /// Render a `catch_unwind` payload as the human-readable panic message.
 pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {

@@ -681,6 +681,163 @@ pub fn busy_event(queue_depth: usize) -> String {
     format!("{{\"event\":\"busy\",\"queue_depth\":{queue_depth}}}")
 }
 
+/// The protocol version this build speaks. A v2 session opens with a
+/// `{"cmd":"hello","proto":2,…}` negotiation frame; v1 clients (no
+/// hello at all) are still accepted for one release, but only on
+/// servers that do not require authentication.
+pub const PROTO_VERSION: u64 = 2;
+
+/// The `{"cmd":"hello","proto":…,"auth":…}` negotiation frame that
+/// opens a v2 session. The server answers `{"event":"hello","proto":…}`
+/// on success, or a typed [`error_event`] (and closes the session)
+/// on a version or credential mismatch — before reading any job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// The protocol version the client speaks.
+    pub proto: u64,
+    /// The shared-secret credential, when the server requires one.
+    pub auth: Option<String>,
+}
+
+impl Hello {
+    /// A current-version hello carrying `auth` (if any).
+    pub fn new(auth: Option<String>) -> Hello {
+        Hello { proto: PROTO_VERSION, auth }
+    }
+
+    /// Whether a parsed frame is a hello at all — even one whose other
+    /// fields are bad, which [`Hello::parse`] then rejects.
+    pub fn is_hello(v: &Json) -> bool {
+        v.get("cmd").and_then(Json::as_str) == Some("hello")
+    }
+
+    /// Parse a hello frame (`proto` must be a positive integer).
+    pub fn parse(v: &Json) -> Result<Hello, String> {
+        let proto = v
+            .get("proto")
+            .and_then(Json::as_u64)
+            .ok_or("hello frame missing integer field 'proto'")?;
+        if proto == 0 {
+            return Err("'proto' must be >= 1".into());
+        }
+        let auth = match v.get("auth") {
+            None | Some(Json::Null) => None,
+            Some(a) => Some(a.as_str().ok_or("'auth' must be a string")?.to_string()),
+        };
+        Ok(Hello { proto, auth })
+    }
+
+    /// The frame as a single JSONL line.
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"cmd\":\"hello\",\"proto\":{}", self.proto);
+        if let Some(auth) = &self.auth {
+            s.push_str(&format!(",\"auth\":\"{}\"", escape(auth)));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// The server's acceptance of a [`Hello`]: `{"event":"hello","proto":…}`
+/// with the version the server will speak for the rest of the session.
+pub fn hello_event(proto: u64) -> String {
+    format!("{{\"event\":\"hello\",\"proto\":{proto}}}")
+}
+
+/// Machine-readable classes of the one unified `{"event":"error",…}`
+/// frame every server emits (session loops and the fleet router alike).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame did not parse as a job, hello, or control line.
+    Malformed,
+    /// Authentication missing or wrong on an auth-required server.
+    Unauthorized,
+    /// A per-connection quota rejected the frame.
+    Quota,
+    /// No live worker shard could take the job (re-route exhausted).
+    ShardDown,
+    /// An internal server failure while handling the frame.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code, in wire order.
+    pub const ALL: [ErrorCode; 5] = [
+        ErrorCode::Malformed,
+        ErrorCode::Unauthorized,
+        ErrorCode::Quota,
+        ErrorCode::ShardDown,
+        ErrorCode::Internal,
+    ];
+
+    /// The stable wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Unauthorized => "unauthorized",
+            ErrorCode::Quota => "quota",
+            ErrorCode::ShardDown => "shard_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn from_name(name: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.into_iter().find(|c| c.name() == name)
+    }
+}
+
+/// One unified error frame: `{"event":"error","code":…,"detail":…,
+/// "seq":…}` plus the offending frame's `id` when it could be
+/// recovered. `seq` is the 1-based count of non-blank frames the
+/// session had received when the error fired, so a client can locate
+/// the offending input line even when it carried no `id`.
+pub fn error_event(code: ErrorCode, detail: &str, id: Option<&str>, seq: u64) -> String {
+    let mut s = format!(
+        "{{\"event\":\"error\",\"code\":\"{}\",\"detail\":\"{}\",\"seq\":{seq}",
+        code.name(),
+        escape(detail)
+    );
+    if let Some(id) = id {
+        s.push_str(&format!(",\"id\":\"{}\"", escape(id)));
+    }
+    s.push('}');
+    s
+}
+
+/// A parsed error frame — the decoder side of [`error_event`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorFrame {
+    /// The machine-readable class.
+    pub code: ErrorCode,
+    /// Human-readable detail.
+    pub detail: String,
+    /// The offending frame's `id`, when it could be recovered.
+    pub id: Option<String>,
+    /// 1-based index of the offending frame within the session input.
+    pub seq: u64,
+}
+
+impl ErrorFrame {
+    /// Parse an `{"event":"error",…}` line.
+    pub fn parse(line: &str) -> Result<ErrorFrame, String> {
+        let v = Json::parse(line)?;
+        if v.get("event").and_then(Json::as_str) != Some("error") {
+            return Err("not an error event".into());
+        }
+        let code_name =
+            v.get("code").and_then(Json::as_str).ok_or("error frame missing 'code'")?;
+        let code = ErrorCode::from_name(code_name)
+            .ok_or_else(|| format!("unknown error code '{code_name}'"))?;
+        Ok(ErrorFrame {
+            code,
+            detail: v.get("detail").and_then(Json::as_str).unwrap_or("").to_string(),
+            id: v.get("id").and_then(Json::as_str).map(String::from),
+            seq: v.get("seq").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -852,5 +1009,66 @@ mod tests {
         assert_eq!(m.get("wall_ms").and_then(Json::as_f64), Some(42.5));
         let svc = m.get("service").expect("service snapshot");
         assert_eq!(svc.get("jobs_per_sec").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn hello_round_trip() {
+        let plain = Hello::new(None);
+        assert_eq!(plain.proto, PROTO_VERSION);
+        let v = Json::parse(&plain.to_json()).unwrap();
+        assert!(Hello::is_hello(&v));
+        assert_eq!(Hello::parse(&v).unwrap(), plain);
+
+        let authed = Hello::new(Some("s3cr\"et".into()));
+        let v = Json::parse(&authed.to_json()).unwrap();
+        assert_eq!(Hello::parse(&v).unwrap(), authed);
+        assert_eq!(Hello::parse(&v).unwrap().auth.as_deref(), Some("s3cr\"et"));
+    }
+
+    #[test]
+    fn hello_parse_rejects_bad_frames() {
+        let missing = Json::parse("{\"cmd\":\"hello\"}").unwrap();
+        assert!(Hello::is_hello(&missing));
+        assert!(Hello::parse(&missing).is_err());
+        let zero = Json::parse("{\"cmd\":\"hello\",\"proto\":0}").unwrap();
+        assert!(Hello::parse(&zero).is_err());
+        let bad_auth = Json::parse("{\"cmd\":\"hello\",\"proto\":2,\"auth\":7}").unwrap();
+        assert!(Hello::parse(&bad_auth).is_err());
+        let job = Json::parse("{\"kernel\":\"spmm\"}").unwrap();
+        assert!(!Hello::is_hello(&job));
+    }
+
+    #[test]
+    fn hello_event_shape() {
+        let v = Json::parse(&hello_event(PROTO_VERSION)).unwrap();
+        assert_eq!(v.get("event").and_then(Json::as_str), Some("hello"));
+        assert_eq!(v.get("proto").and_then(Json::as_u64), Some(PROTO_VERSION));
+    }
+
+    #[test]
+    fn error_frame_round_trips_every_code() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::from_name(code.name()), Some(code));
+            let line = error_event(code, "why \"it\" broke", Some("j1"), 4);
+            let frame = ErrorFrame::parse(&line).unwrap();
+            assert_eq!(frame.code, code);
+            assert_eq!(frame.detail, "why \"it\" broke");
+            assert_eq!(frame.id.as_deref(), Some("j1"));
+            assert_eq!(frame.seq, 4);
+        }
+        // No id: the field is omitted entirely, not null.
+        let line = error_event(ErrorCode::Malformed, "bad json", None, 1);
+        assert!(!line.contains("\"id\""), "{line}");
+        let frame = ErrorFrame::parse(&line).unwrap();
+        assert_eq!(frame.id, None);
+        assert_eq!(frame.seq, 1);
+    }
+
+    #[test]
+    fn error_frame_parse_rejects_non_errors() {
+        assert!(ErrorFrame::parse(&busy_event(1)).is_err());
+        assert!(ErrorFrame::parse("{\"event\":\"error\",\"code\":\"nope\",\"seq\":1}").is_err());
+        assert_eq!(ErrorCode::from_name("shard_down"), Some(ErrorCode::ShardDown));
+        assert_eq!(ErrorCode::from_name("bogus"), None);
     }
 }

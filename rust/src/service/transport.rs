@@ -15,14 +15,22 @@
 //!   `{"event":"result",…}` lines in **completion** order (correlate by
 //!   `id`), and a `{"event":"done","metrics":…}` summary at each
 //!   barrier: a `{"cmd":"done"}` control line or end-of-input.
-//! * **Isolation** — a malformed frame produces an `"ok":false` result
-//!   event on that connection only; the server and every other client
-//!   keep running.
+//! * **Isolation** — a malformed frame produces a typed
+//!   `{"event":"error","code":"malformed",…}` frame on that connection
+//!   only; the server and every other client keep running.
+//! * **Handshake (protocol v2)** — a session may open with
+//!   `{"cmd":"hello","proto":2,"auth":…}`; the server answers
+//!   `{"event":"hello","proto":2}`. Servers started with `--auth SECRET`
+//!   reject any frame before a correctly-authenticated hello with an
+//!   `unauthorized` error and close the session — before reading jobs.
+//!   v1 clients (no hello at all) are still accepted for one release on
+//!   servers that don't require auth.
 //! * **Control plane** — `{"cmd":"metrics"}` answers immediately with a
-//!   live `{"event":"metrics","service":…}` snapshot (no barrier), and
-//!   a submission that finds the job queue full emits
+//!   live `{"event":"metrics","service":…}` snapshot (no barrier), a
+//!   submission that finds the job queue full emits
 //!   `{"event":"busy","queue_depth":…}` once per stall instead of
-//!   silently blocking the session's reader.
+//!   silently blocking the session's reader, and a `--max-jobs` cap
+//!   answers excess submissions with a `quota` error frame.
 //! * **Graceful shutdown/drain** — SIGTERM/SIGINT or a
 //!   `{"cmd":"shutdown"}` control line stop the accept loop, unblock
 //!   every connected reader, let in-flight jobs finish, emit each
@@ -32,7 +40,10 @@
 //! Zero external crates: `std::os::unix::net` + `std::net` only, and the
 //! SIGTERM hook is a direct `signal(2)` registration against libc.
 
-use super::protocol::{busy_event, done_event, metrics_event, Json};
+use super::protocol::{
+    busy_event, done_event, error_event, hello_event, metrics_event, ErrorCode, Hello, Json,
+    PROTO_VERSION,
+};
 use super::workers::Service;
 use super::{JobOutcome, JobRequest, JobResponse};
 use crate::coordinator::RunSpec;
@@ -47,18 +58,28 @@ use std::time::{Duration, Instant};
 
 /// Per-session behavior knobs (shared by socket, stdio and batch-stream
 /// sessions).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SessionOpts {
     /// Force functional verification on every job of the session.
     pub verify: bool,
+    /// Shared-secret auth (`--auth`): when set, every session must open
+    /// with a `{"cmd":"hello","proto":2,"auth":SECRET}` handshake before
+    /// anything else; a missing or wrong secret gets one `unauthorized`
+    /// error frame and the session closes without reading jobs. `None`
+    /// keeps v1 clients (no hello) working.
+    pub auth: Option<String>,
+    /// Per-session job quota (`--max-jobs`): submissions past the cap
+    /// are answered with a `quota` error frame instead of running.
+    pub max_jobs: Option<u64>,
 }
 
 /// What a finished session did.
 #[derive(Debug, Clone, Copy)]
 pub struct SessionSummary {
-    /// Result events emitted (submitted jobs + malformed frames).
+    /// Frames answered (submitted jobs + frames rejected with an error
+    /// event: malformed, over-quota, or unauthorized).
     pub jobs: u64,
-    /// Failed jobs, including malformed frames.
+    /// Failed jobs, including rejected frames.
     pub failed: u64,
     /// The session asked the whole server to shut down.
     pub shutdown_requested: bool,
@@ -145,6 +166,12 @@ impl SessionShared {
 /// line drains the session, emits its summary, then (for socket servers)
 /// flips `server_shutdown` so the accept loop winds the server down.
 ///
+/// Protocol v2: an optional `{"cmd":"hello","proto":…,"auth":…}` frame
+/// negotiates the version (answered with `{"event":"hello","proto":…}`);
+/// when `opts.auth` is set the hello is mandatory and must carry the
+/// right secret — the first unauthenticated frame gets an
+/// `unauthorized` error and ends the session before any job is read.
+///
 /// Errors: reader I/O failures abort the session immediately; output
 /// writes never block the pipeline mid-session, but the first write
 /// failure is returned as `Err` at the end so `dare batch --stream` /
@@ -198,10 +225,15 @@ pub fn run_session<R: BufRead>(
     };
 
     let mut submitted: u64 = 0; // jobs handed to the service
-    let mut errored: u64 = 0; // malformed frames answered inline
+    let mut errored: u64 = 0; // frames answered inline with an error event
     let mut dirty = false; // work since the last done event
     let mut emitted_done = false;
     let mut shutdown_requested = false;
+    // v1 compatibility window: with no server secret, a session that
+    // never says hello is a v1 client and every frame is accepted.
+    let mut authed = opts.auth.is_none();
+    let mut frames: u64 = 0; // non-blank input frames, for error seq
+    let mut aborted = false; // handshake rejection: close without done
 
     let emit_done = |shared: &SessionShared, submitted: u64, errored: u64| {
         shared.drain(submitted);
@@ -218,6 +250,57 @@ pub fn run_session<R: BufRead>(
         let trimmed = line.trim();
         if trimmed.is_empty() || trimmed.starts_with('#') {
             continue;
+        }
+        frames += 1;
+        let parsed = Json::parse(trimmed).ok();
+        if let Some(v) = parsed.as_ref().filter(|v| Hello::is_hello(v)) {
+            match Hello::parse(v) {
+                Ok(h) if h.proto > PROTO_VERSION => {
+                    let detail = format!(
+                        "unsupported protocol version {} (this server speaks {PROTO_VERSION})",
+                        h.proto
+                    );
+                    shared.write_line(&error_event(ErrorCode::Malformed, &detail, None, frames));
+                    errored += 1;
+                    aborted = true;
+                    break;
+                }
+                Ok(h) => {
+                    if let Some(secret) = &opts.auth {
+                        if h.auth.as_deref() != Some(secret.as_str()) {
+                            shared.write_line(&error_event(
+                                ErrorCode::Unauthorized,
+                                "bad or missing auth secret",
+                                None,
+                                frames,
+                            ));
+                            errored += 1;
+                            aborted = true;
+                            break;
+                        }
+                    }
+                    authed = true;
+                    shared.write_line(&hello_event(PROTO_VERSION));
+                }
+                Err(e) => {
+                    shared.write_line(&error_event(ErrorCode::Malformed, &e, None, frames));
+                    errored += 1;
+                    aborted = true;
+                    break;
+                }
+            }
+            continue;
+        }
+        if !authed {
+            shared.write_line(&error_event(
+                ErrorCode::Unauthorized,
+                "authentication required: open with {\"cmd\":\"hello\",\"proto\":2,\"auth\":…}",
+                None,
+                frames,
+            ));
+            errored += 1;
+            aborted = true;
+            break;
         }
         if let Some(cmd) = parse_control(trimmed) {
             match cmd {
@@ -238,6 +321,24 @@ pub fn run_session<R: BufRead>(
             }
             continue;
         }
+        // Echo the id if the frame was at least valid JSON.
+        let id = parsed
+            .as_ref()
+            .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)));
+        if let Some(cap) = opts.max_jobs {
+            if submitted + errored >= cap {
+                let detail = format!("per-session job quota of {cap} reached");
+                shared.write_line(&error_event(
+                    ErrorCode::Quota,
+                    &detail,
+                    id.as_deref(),
+                    frames,
+                ));
+                errored += 1;
+                dirty = true;
+                continue;
+            }
+        }
         match parse_job_line(trimmed, opts.verify) {
             Ok(job) => {
                 let name = job.spec.name();
@@ -254,11 +355,12 @@ pub fn run_session<R: BufRead>(
                 dirty = true;
             }
             Err(e) => {
-                // Echo the id if the frame was at least valid JSON.
-                let id = Json::parse(trimmed)
-                    .ok()
-                    .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)));
-                shared.write_line(&JobResponse::failure(id, "<invalid job>", e).to_event_json());
+                shared.write_line(&error_event(
+                    ErrorCode::Malformed,
+                    &e,
+                    id.as_deref(),
+                    frames,
+                ));
                 errored += 1;
                 dirty = true;
             }
@@ -267,8 +369,11 @@ pub fn run_session<R: BufRead>(
 
     // End of input (EOF or shutdown): drain in-flight jobs and emit the
     // final summary — unless an explicit `done` barrier already covered
-    // everything this session did.
-    if dirty || !emitted_done {
+    // everything this session did, or the session was rejected at the
+    // handshake (the error frame is the whole conversation then).
+    if aborted {
+        shared.drain(submitted);
+    } else if dirty || !emitted_done {
         emit_done(&shared, submitted, errored);
     } else {
         shared.drain(submitted);
@@ -318,7 +423,7 @@ impl Stream {
         })
     }
 
-    fn set_blocking(&self) -> io::Result<()> {
+    pub(crate) fn set_blocking(&self) -> io::Result<()> {
         match self {
             Stream::Unix(s) => s.set_nonblocking(false),
             Stream::Tcp(s) => s.set_nonblocking(false),
@@ -421,7 +526,7 @@ impl Listener {
     }
 
     /// Non-blocking accept: `Ok(None)` when no connection is pending.
-    fn poll_accept(&self) -> io::Result<Option<Stream>> {
+    pub(crate) fn poll_accept(&self) -> io::Result<Option<Stream>> {
         let accepted = match self {
             Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
@@ -448,7 +553,7 @@ impl Listener {
 }
 
 /// How often the accept loop checks for pending connections / shutdown.
-const ACCEPT_POLL: Duration = Duration::from_millis(20);
+pub(crate) const ACCEPT_POLL: Duration = Duration::from_millis(20);
 
 /// A running socket server. [`Server::join`] blocks until the server has
 /// fully drained: accept loop stopped, every session's in-flight jobs
@@ -511,6 +616,7 @@ pub fn spawn(
                         };
                         let service = service.clone();
                         let flag = flag.clone();
+                        let opts = opts.clone();
                         let handle = std::thread::spawn(move || {
                             let reader = BufReader::new(stream);
                             let _ = run_session(
@@ -668,15 +774,176 @@ mod tests {
         let metrics = done.get("metrics").unwrap();
         assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(3));
         assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(2));
-        // The typo'd frame still echoes its id.
-        let echoed = lines[..3].iter().any(|l| {
-            Json::parse(l)
-                .ok()
-                .and_then(|v| v.get("id").and_then(|j| j.as_str().map(String::from)))
-                .as_deref()
-                == Some("typo")
-        });
-        assert!(echoed, "{lines:?}");
+        // Both bad frames were answered with typed malformed errors; the
+        // good job still got its result event.
+        let errors: Vec<_> = lines[..3]
+            .iter()
+            .filter_map(|l| crate::service::protocol::ErrorFrame::parse(l).ok())
+            .collect();
+        assert_eq!(errors.len(), 2, "{lines:?}");
+        assert!(errors.iter().all(|e| e.code == ErrorCode::Malformed), "{errors:?}");
+        // The typo'd frame still echoes its id, and seq points at the
+        // offending input line (1-based over non-blank frames).
+        assert!(
+            errors.iter().any(|e| e.id.as_deref() == Some("typo") && e.seq == 3),
+            "{errors:?}"
+        );
+        let results = lines[..3]
+            .iter()
+            .filter(|l| {
+                Json::parse(l).unwrap().get("event").and_then(Json::as_str) == Some("result")
+            })
+            .count();
+        assert_eq!(results, 1, "{lines:?}");
+    }
+
+    #[test]
+    fn hello_handshake_negotiates_v2_then_serves() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!("{}\n{}\n", Hello::new(None).to_json(), job("h0", "baseline"));
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 1, "the hello frame is not a job");
+        assert_eq!(summary.failed, 0);
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 3, "hello + result + done: {lines:?}");
+        let hello = Json::parse(&lines[0]).unwrap();
+        assert_eq!(hello.get("event").and_then(Json::as_str), Some("hello"));
+        assert_eq!(hello.get("proto").and_then(Json::as_u64), Some(PROTO_VERSION));
+    }
+
+    #[test]
+    fn hello_from_the_future_is_rejected() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!("{{\"cmd\":\"hello\",\"proto\":99}}\n{}\n", job("x", "baseline"));
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 1, "only the rejected hello was answered");
+        assert_eq!(summary.failed, 1);
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 1, "error then close, no done: {lines:?}");
+        let e = crate::service::protocol::ErrorFrame::parse(&lines[0]).unwrap();
+        assert_eq!(e.code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn auth_server_accepts_right_secret_rejects_wrong_and_v1() {
+        let opts = SessionOpts { auth: Some("hunter2".into()), ..SessionOpts::default() };
+
+        // Right secret: handshake + job both answered.
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!(
+            "{}\n{}\n",
+            Hello::new(Some("hunter2".into())).to_json(),
+            job("a0", "baseline")
+        );
+        let buf = SharedBuf::default();
+        let summary =
+            run_session(&service, input.as_bytes(), Box::new(buf.clone()), &opts, None).unwrap();
+        assert_eq!(summary.jobs, 1);
+        assert_eq!(summary.failed, 0);
+        let lines = buf.take_lines();
+        assert_eq!(
+            Json::parse(&lines[0]).unwrap().get("event").and_then(Json::as_str),
+            Some("hello")
+        );
+
+        // Wrong secret: one unauthorized error, session closed, no jobs.
+        let input = format!(
+            "{}\n{}\n",
+            Hello::new(Some("wrong".into())).to_json(),
+            job("a1", "baseline")
+        );
+        let buf = SharedBuf::default();
+        let summary =
+            run_session(&service, input.as_bytes(), Box::new(buf.clone()), &opts, None).unwrap();
+        assert_eq!(summary.failed, 1);
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        let e = crate::service::protocol::ErrorFrame::parse(&lines[0]).unwrap();
+        assert_eq!(e.code, ErrorCode::Unauthorized);
+
+        // v1 client (no hello) against an auth server: rejected before
+        // the job frame is interpreted at all.
+        let input = format!("{}\n", job("a2", "baseline"));
+        let buf = SharedBuf::default();
+        let summary =
+            run_session(&service, input.as_bytes(), Box::new(buf.clone()), &opts, None).unwrap();
+        assert_eq!(summary.failed, 1);
+        let lines = buf.take_lines();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        let e = crate::service::protocol::ErrorFrame::parse(&lines[0]).unwrap();
+        assert_eq!(e.code, ErrorCode::Unauthorized);
+    }
+
+    #[test]
+    fn v1_client_without_hello_still_served_when_no_auth() {
+        // The compatibility window: a pre-v2 client speaks no hello and
+        // must keep working against a server with no --auth secret.
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!("{}\n{{\"cmd\":\"done\"}}\n", job("v1", "baseline"));
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 1);
+        assert_eq!(summary.failed, 0);
+        let lines = buf.take_lines();
+        assert!(lines
+            .iter()
+            .all(|l| Json::parse(l).unwrap().get("event").and_then(Json::as_str) != Some("hello")));
+    }
+
+    #[test]
+    fn max_jobs_quota_answers_excess_with_error_frames() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let opts = SessionOpts { max_jobs: Some(2), ..SessionOpts::default() };
+        let input: String =
+            (0..4).map(|i| format!("{}\n", job(&format!("q{i}"), "baseline"))).collect();
+        let buf = SharedBuf::default();
+        let summary =
+            run_session(&service, input.as_bytes(), Box::new(buf.clone()), &opts, None).unwrap();
+        assert_eq!(summary.jobs, 4, "2 run + 2 rejected");
+        assert_eq!(summary.failed, 2);
+        let lines = buf.take_lines();
+        let mut results = 0;
+        let mut quota = 0;
+        for l in &lines {
+            match Json::parse(l).unwrap().get("event").and_then(Json::as_str) {
+                Some("result") => results += 1,
+                Some("error") => {
+                    let e = crate::service::protocol::ErrorFrame::parse(l).unwrap();
+                    assert_eq!(e.code, ErrorCode::Quota, "{l}");
+                    assert!(e.id.as_deref().unwrap_or("").starts_with('q'), "{l}");
+                    quota += 1;
+                }
+                _ => {}
+            }
+        }
+        assert_eq!((results, quota), (2, 2), "{lines:?}");
+        let done = Json::parse(lines.last().unwrap()).unwrap();
+        let metrics = done.get("metrics").unwrap();
+        assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(4));
+        assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(2));
     }
 
     #[test]

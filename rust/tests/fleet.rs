@@ -1,0 +1,202 @@
+//! Integration tests for the sharded serve fleet: router + real worker
+//! subprocesses (the compiled `dare` binary), exactly-once delivery
+//! across a SIGKILL'd worker, and the router-side auth handshake.
+
+use dare::service::fleet::{Fleet, FleetConfig};
+use dare::service::transport::{Listener, Stream};
+use dare::service::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+
+extern "C" {
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+const SIGKILL: i32 = 9;
+
+/// A scratch directory for one test's sockets + shared cache dir.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dare-fleet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create fleet scratch dir");
+    dir
+}
+
+fn job_line(id: &str, kernel: &str, variant: &str, block: usize) -> String {
+    format!(
+        "{{\"id\":\"{id}\",\"kernel\":\"{kernel}\",\"dataset\":\"pubmed\",\
+         \"variant\":\"{variant}\",\"block\":{block},\"scale\":0.04}}"
+    )
+}
+
+#[test]
+fn fleet_survives_worker_sigkill_mid_batch() {
+    let dir = scratch("sigkill");
+    let router_sock = dir.join("router.sock");
+    let cache_dir = dir.join("cache");
+    std::fs::create_dir_all(&cache_dir).unwrap();
+
+    let mut cfg = FleetConfig::new(2, env!("CARGO_BIN_EXE_dare"), &dir);
+    // Shared cache dir: a re-routed job that already ran on the dead
+    // shard is a disk hit on the shard that picks it up.
+    cfg.worker_args = vec![
+        "--threads".into(),
+        "1".into(),
+        "--cache-dir".into(),
+        cache_dir.display().to_string(),
+    ];
+    let listener = Listener::bind_unix(router_sock.to_str().unwrap()).expect("bind router");
+    let fleet = Fleet::launch(cfg, listener).expect("launch fleet");
+    let pids = fleet.worker_pids();
+    assert_eq!(pids.len(), 2);
+    let victim = pids.iter().flatten().next().copied().expect("a live worker pid") as i32;
+
+    let mut stream = Stream::connect_unix(router_sock.to_str().unwrap()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // Pipelined batch across both kernels and blocks so the keys spread
+    // over the ring; duplicate specs under fresh ids are cache hits.
+    let mut want_ids = Vec::new();
+    let mut i = 0;
+    for rep in 0..2 {
+        for kernel in ["sddmm", "spmm"] {
+            for variant in ["baseline", "dare-full"] {
+                for block in [1usize, 2] {
+                    let id = format!("f/{rep}/{i}");
+                    writeln!(stream, "{}", job_line(&id, kernel, variant, block)).unwrap();
+                    want_ids.push(id);
+                    i += 1;
+                }
+            }
+        }
+    }
+    stream.flush().unwrap();
+    let n = want_ids.len() as u64; // 16
+
+    // SIGKILL one worker while the batch is in flight. The router must
+    // detect the death, re-route that shard's pending jobs, restart the
+    // worker — and still answer every job exactly once.
+    assert_eq!(unsafe { kill(victim, SIGKILL) }, 0, "kill worker {victim}");
+    writeln!(stream, "{{\"cmd\":\"done\"}}").unwrap();
+    stream.flush().unwrap();
+
+    let mut answered: HashMap<String, u64> = HashMap::new();
+    let mut line = String::new();
+    let done_metrics = loop {
+        line.clear();
+        let got = reader.read_line(&mut line).expect("read event line");
+        assert!(got > 0, "router closed the stream before done");
+        let v = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        match v.get("event").and_then(Json::as_str) {
+            Some("result") => {
+                assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+                let id = v.get("id").and_then(Json::as_str).expect("id echoed").to_string();
+                *answered.entry(id).or_insert(0) += 1;
+            }
+            Some("busy") => {}
+            Some("done") => break v.get("metrics").expect("done carries metrics").clone(),
+            other => panic!("unexpected event {other:?} in {line:?}"),
+        }
+    };
+    // Exactly once: every id answered, none answered twice.
+    assert_eq!(answered.len(), want_ids.len(), "{answered:?}");
+    for id in &want_ids {
+        assert_eq!(answered.get(id), Some(&1), "job {id} lost or duplicated");
+    }
+    assert_eq!(done_metrics.get("jobs").and_then(Json::as_u64), Some(n));
+    assert_eq!(done_metrics.get("failed").and_then(Json::as_u64), Some(0));
+
+    // A second connection polls the router metrics: the failover is
+    // visible, and the ring is fully repopulated (restart).
+    let mut probe = Stream::connect_unix(router_sock.to_str().unwrap()).expect("connect probe");
+    let mut probe_reader = BufReader::new(probe.try_clone().unwrap());
+    writeln!(probe, "{{\"cmd\":\"metrics\"}}").unwrap();
+    probe.flush().unwrap();
+    let mut line = String::new();
+    probe_reader.read_line(&mut line).expect("read metrics");
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("metrics"), "{line:?}");
+    let router = v.get("router").expect("router snapshot");
+    assert!(
+        router.get("failovers").and_then(Json::as_u64).unwrap() >= 1,
+        "SIGKILL must register as a failover: {line}"
+    );
+    assert_eq!(
+        router.get("jobs_routed").and_then(Json::as_u64).map(|r| r >= n),
+        Some(true),
+        "{line}"
+    );
+    writeln!(probe, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    probe.flush().unwrap();
+
+    let final_metrics = fleet.join();
+    let v = Json::parse(&final_metrics).unwrap();
+    assert_eq!(v.get("workers").and_then(Json::as_u64), Some(2));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_auth_requires_hello_handshake() {
+    let dir = scratch("auth");
+    let router_sock = dir.join("router.sock");
+    let mut cfg = FleetConfig::new(1, env!("CARGO_BIN_EXE_dare"), &dir);
+    cfg.auth = Some("fleet-secret".into());
+    cfg.worker_args = vec!["--threads".into(), "1".into()];
+    let listener = Listener::bind_unix(router_sock.to_str().unwrap()).expect("bind router");
+    let fleet = Fleet::launch(cfg, listener).expect("launch fleet");
+
+    // No hello: one unauthorized error frame, then the router closes the
+    // session without routing anything.
+    let mut bad = Stream::connect_unix(router_sock.to_str().unwrap()).expect("connect");
+    let mut bad_reader = BufReader::new(bad.try_clone().unwrap());
+    writeln!(bad, "{}", job_line("bad/0", "sddmm", "baseline", 1)).unwrap();
+    bad.flush().unwrap();
+    bad.shutdown_write();
+    let mut lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        if bad_reader.read_line(&mut line).expect("read rejection") == 0 {
+            break;
+        }
+        lines.push(line.trim().to_string());
+    }
+    assert_eq!(lines.len(), 1, "error then close: {lines:?}");
+    let v = Json::parse(&lines[0]).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("error"));
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("unauthorized"));
+
+    // Correct hello: handshake acknowledged, the job routes and answers.
+    let mut good = Stream::connect_unix(router_sock.to_str().unwrap()).expect("connect");
+    let mut good_reader = BufReader::new(good.try_clone().unwrap());
+    writeln!(good, "{{\"cmd\":\"hello\",\"proto\":2,\"auth\":\"fleet-secret\"}}").unwrap();
+    writeln!(good, "{}", job_line("good/0", "sddmm", "baseline", 1)).unwrap();
+    writeln!(good, "{{\"cmd\":\"done\"}}").unwrap();
+    good.flush().unwrap();
+    let mut line = String::new();
+    good_reader.read_line(&mut line).expect("read hello reply");
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("hello"), "{line:?}");
+    assert_eq!(v.get("proto").and_then(Json::as_u64), Some(2));
+    let mut results = 0;
+    let done_metrics = loop {
+        let mut line = String::new();
+        assert!(good_reader.read_line(&mut line).expect("read event") > 0, "closed early");
+        let v = Json::parse(line.trim()).unwrap();
+        match v.get("event").and_then(Json::as_str) {
+            Some("result") => {
+                assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+                assert_eq!(v.get("id").and_then(Json::as_str), Some("good/0"));
+                results += 1;
+            }
+            Some("busy") => {}
+            Some("done") => break v.get("metrics").unwrap().clone(),
+            other => panic!("unexpected event {other:?} in {line:?}"),
+        }
+    };
+    assert_eq!(results, 1);
+    assert_eq!(done_metrics.get("jobs").and_then(Json::as_u64), Some(1));
+    assert_eq!(done_metrics.get("failed").and_then(Json::as_u64), Some(0));
+
+    fleet.shutdown_handle().store(true, std::sync::atomic::Ordering::SeqCst);
+    fleet.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}

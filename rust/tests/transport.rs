@@ -20,17 +20,16 @@ struct Harness {
 
 impl Harness {
     fn start(tag: &str) -> Harness {
+        Harness::start_with(tag, SessionOpts::default())
+    }
+
+    fn start_with(tag: &str, opts: SessionOpts) -> Harness {
         let path = std::env::temp_dir()
             .join(format!("dare-transport-{tag}-{}.sock", std::process::id()));
         let listener = Listener::bind_unix(path.to_str().unwrap()).expect("bind unix socket");
         let service = Arc::new(Service::start(ServiceConfig::with_workers(2)));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let server = spawn(
-            listener,
-            service.clone(),
-            SessionOpts { verify: false },
-            shutdown.clone(),
-        );
+        let server = spawn(listener, service.clone(), opts, shutdown.clone());
         Harness { path, server, shutdown, service }
     }
 
@@ -151,24 +150,37 @@ fn streaming_results_precede_done_and_counts_match() {
 fn malformed_frame_is_isolated_to_its_connection() {
     let h = Harness::start("malformed");
 
-    // Client A: garbage frame + a valid job.
+    // Client A: garbage frame + a valid job. The garbage is answered
+    // with a typed {"event":"error","code":"malformed",…} frame; the
+    // valid job still runs.
     let mut a = h.connect();
     let mut a_reader = BufReader::new(a.try_clone().unwrap());
     writeln!(a, "this is not json at all").unwrap();
     writeln!(a, "{}", job_line("a/ok", "baseline")).unwrap();
     writeln!(a, "{{\"cmd\":\"done\"}}").unwrap();
     a.flush().unwrap();
-    let (a_results, a_metrics) = read_until_done(&mut a_reader);
-    assert_eq!(a_results.len(), 2);
-    let bad = a_results
-        .iter()
-        .find(|v| v.get("ok").and_then(Json::as_bool) == Some(false))
-        .expect("malformed frame answered with ok:false");
-    assert!(bad.get("error").is_some());
-    let good = a_results
-        .iter()
-        .find(|v| v.get("ok").and_then(Json::as_bool) == Some(true))
-        .expect("valid job still ran");
+    let mut a_results = Vec::new();
+    let mut a_errors = Vec::new();
+    let a_metrics = loop {
+        let mut line = String::new();
+        let n = a_reader.read_line(&mut line).expect("read event line");
+        assert!(n > 0, "connection closed before done event");
+        let v = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+        match v.get("event").and_then(Json::as_str) {
+            Some("result") => a_results.push(v),
+            Some("error") => a_errors.push(v),
+            Some("done") => break v.get("metrics").expect("done carries metrics").clone(),
+            other => panic!("unexpected event {other:?} in {line:?}"),
+        }
+    };
+    assert_eq!(a_results.len(), 1);
+    assert_eq!(a_errors.len(), 1);
+    let bad = &a_errors[0];
+    assert_eq!(bad.get("code").and_then(Json::as_str), Some("malformed"));
+    assert!(bad.get("detail").and_then(Json::as_str).is_some());
+    assert_eq!(bad.get("seq").and_then(Json::as_u64), Some(1), "points at frame 1");
+    let good = &a_results[0];
+    assert_eq!(good.get("ok").and_then(Json::as_bool), Some(true));
     assert_eq!(good.get("id").and_then(Json::as_str), Some("a/ok"));
     assert_eq!(a_metrics.get("jobs").and_then(Json::as_u64), Some(2));
     assert_eq!(a_metrics.get("failed").and_then(Json::as_u64), Some(1));
@@ -218,6 +230,71 @@ fn metrics_cmd_over_socket_returns_live_snapshot() {
     }
     assert_eq!(results, 1);
     assert!(saw_metrics, "a socket session must answer {{\"cmd\":\"metrics\"}}");
+    h.stop();
+}
+
+#[test]
+fn hello_handshake_over_socket_negotiates_v2() {
+    let h = Harness::start("hello");
+    let mut stream = h.connect();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{{\"cmd\":\"hello\",\"proto\":2}}").unwrap();
+    writeln!(stream, "{}", job_line("h/0", "baseline")).unwrap();
+    writeln!(stream, "{{\"cmd\":\"done\"}}").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read hello reply");
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("hello"), "{line:?}");
+    assert_eq!(v.get("proto").and_then(Json::as_u64), Some(2));
+    let (results, metrics) = read_until_done(&mut reader);
+    assert_eq!(results.len(), 1);
+    assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(1), "hello is not a job");
+    h.stop();
+}
+
+#[test]
+fn auth_socket_rejects_unauthenticated_and_serves_authed() {
+    let h = Harness::start_with(
+        "auth",
+        SessionOpts { auth: Some("sesame".into()), ..SessionOpts::default() },
+    );
+
+    // No hello at all (a v1 client): one unauthorized error frame, then
+    // the server closes the session without reading the job.
+    let mut bad = h.connect();
+    let mut bad_reader = BufReader::new(bad.try_clone().unwrap());
+    writeln!(bad, "{}", job_line("bad/0", "baseline")).unwrap();
+    bad.flush().unwrap();
+    bad.shutdown_write();
+    let mut lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        if bad_reader.read_line(&mut line).expect("read rejection") == 0 {
+            break;
+        }
+        lines.push(line.trim().to_string());
+    }
+    assert_eq!(lines.len(), 1, "error then close, no done: {lines:?}");
+    let v = Json::parse(&lines[0]).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("error"));
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("unauthorized"));
+
+    // Correct secret: handshake acknowledged, jobs served.
+    let mut good = h.connect();
+    let mut good_reader = BufReader::new(good.try_clone().unwrap());
+    writeln!(good, "{{\"cmd\":\"hello\",\"proto\":2,\"auth\":\"sesame\"}}").unwrap();
+    writeln!(good, "{}", job_line("good/0", "baseline")).unwrap();
+    writeln!(good, "{{\"cmd\":\"done\"}}").unwrap();
+    good.flush().unwrap();
+    let mut line = String::new();
+    good_reader.read_line(&mut line).expect("read hello reply");
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("hello"), "{line:?}");
+    let (results, metrics) = read_until_done(&mut good_reader);
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(0));
     h.stop();
 }
 
