@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Out-of-process differential checker behind ``dare oracle``.
+
+Reads one JSON case from stdin (sparse CSC operand, the exact dense
+operand bytes the rust compilers generated, and the simulator's raw
+output region), recomputes the kernel with the reference functions in
+``ref.py``, and prints a one-line JSON verdict::
+
+    {"ok": true, "max_rel_err": 1.2e-7, "n": 2048}
+
+``ref.py`` imports ``jax.numpy``; offline runners only have numpy, so a
+module shim substitutes numpy for jax.numpy before the import — every
+reference function here is pure array arithmetic, identical under both.
+
+Exit status: 0 when the check *ran* (even if the verdict is ``ok:
+false`` — the rust side owns pass/fail aggregation), nonzero only when
+the checker itself is broken (bad input, import failure).
+"""
+
+import json
+import os
+import sys
+import types
+
+import numpy as np
+
+if "jax" not in sys.modules:
+    _jax = types.ModuleType("jax")
+    _jax.numpy = np
+    sys.modules["jax"] = _jax
+    sys.modules["jax.numpy"] = np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import ref  # noqa: E402
+
+
+def recompute(case):
+    """The expected output region, in the simulator's layout."""
+    f = int(case["f"])
+    nrows, ncols = int(case["nrows"]), int(case["ncols"])
+    col_ptr = np.asarray(case["col_ptr"], dtype=np.int64)
+    row_idx = np.asarray(case["row_idx"], dtype=np.int64)
+    vals = np.asarray(case["vals"], dtype=np.float32)
+    b = np.asarray(case["b"], dtype=np.float32).reshape(ncols, f)
+
+    if case["kernel"] == "spmm":
+        # C[M,F] = S·B, accumulated column-by-column with the densified
+        # rank-1 update reference. Row indices within one CSC column are
+        # unique, so the fancy-indexed read-modify-write is exact.
+        out = np.zeros((nrows, f), dtype=np.float32)
+        for j in range(ncols):
+            lo, hi = col_ptr[j], col_ptr[j + 1]
+            if lo == hi:
+                continue
+            idx = row_idx[lo:hi]
+            out[idx] = ref.spmm_col_ref(out[idx], vals[lo:hi], b[j])
+        return out.reshape(-1)
+
+    if case["kernel"] == "sddmm":
+        # out[nnz] = (A·Bᵀ) sampled at the pattern, in CSC order. The
+        # compiled kernel samples the *pattern* only (values unused), so
+        # the mask is 1.0 at every stored position.
+        a = np.asarray(case["a"], dtype=np.float32).reshape(nrows, f)
+        mask = np.zeros((nrows, ncols), dtype=np.float32)
+        for j in range(ncols):
+            mask[row_idx[col_ptr[j]:col_ptr[j + 1]], j] = 1.0
+        full = np.asarray(ref.sddmm_tile_ref(a, b, mask))
+        parts = [full[row_idx[col_ptr[j]:col_ptr[j + 1]], j] for j in range(ncols)]
+        if not parts:
+            return np.zeros(0, dtype=np.float32)
+        return np.concatenate(parts)
+
+    raise ValueError("unknown kernel %r" % case.get("kernel"))
+
+
+def main():
+    case = json.load(sys.stdin)
+    want = recompute(case).astype(np.float32)
+    got = np.asarray(case["sim"], dtype=np.float32)
+    tol = float(case.get("tol", 1e-3))
+    if got.shape != want.shape:
+        print(json.dumps({
+            "ok": False,
+            "detail": "shape mismatch: sim %s vs ref %s" % (got.shape, want.shape),
+        }))
+        return
+    # Same relative tolerance rule as Workload::verify on the rust side.
+    scale = np.maximum(1.0, np.abs(want))
+    rel = np.abs(got - want) / scale
+    worst = int(np.argmax(rel)) if rel.size else 0
+    ok = bool(rel.size == 0 or rel[worst] <= tol)
+    print(json.dumps({
+        "ok": ok,
+        "max_rel_err": float(rel[worst]) if rel.size else 0.0,
+        "n": int(want.size),
+        "detail": "" if ok else "worst at [%d]: got %r want %r" % (
+            worst, float(got[worst]), float(want[worst])),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ use super::env::{FaultInjector, FlakyWriter, SharedBuf};
 use super::faults::{FaultClass, FaultSpec};
 use crate::coordinator::{run_prebuilt, BenchPoint, RunSpec};
 use crate::kernels::KernelKind;
+use crate::service::protocol::{ErrorCode, ErrorFrame};
 use crate::service::queue::{Closed, PushError};
 use crate::service::transport::{run_session, SessionOpts};
 use crate::service::{
@@ -364,7 +365,11 @@ fn session_step(
 ) -> Result<String, String> {
     let njobs = 1 + rng.below(3) as usize;
     let malformed = rng.chance(0.25);
-    let hello = rng.chance(0.5);
+    // The hello handshake is mandatory: Drain/DropConn sessions always
+    // open with it (their checks are about the drain/write paths), and
+    // Plain sessions skip it half the time to exercise the typed
+    // rejection instead.
+    let hello = rng.chance(0.5) || !matches!(mode, SessionMode::Plain);
     let mut input = String::new();
     if hello {
         input.push_str("{\"cmd\":\"hello\",\"proto\":2}\n");
@@ -413,6 +418,35 @@ fn session_step(
         server_shutdown,
     )
     .map_err(|e| format!("session against an in-memory sink failed: {e}"))?;
+
+    if !hello {
+        // No-hello sessions are rejected at the handshake: exactly one
+        // typed malformed error, no result/done events, nothing run.
+        if summary.jobs != 1 || summary.failed != 1 {
+            return Err(format!(
+                "no-hello session: expected jobs=1 failed=1, got jobs={} failed={}",
+                summary.jobs, summary.failed
+            ));
+        }
+        let lines = buf.take_lines();
+        if lines.len() != 1 {
+            return Err(format!(
+                "no-hello session: expected a single error line, got {lines:?}"
+            ));
+        }
+        let frame = ErrorFrame::parse(&lines[0])
+            .map_err(|e| format!("no-hello rejection is not a typed error frame: {e}"))?;
+        if frame.code != ErrorCode::Malformed {
+            return Err(format!(
+                "no-hello rejection carried code {:?}, expected malformed",
+                frame.code
+            ));
+        }
+        return Ok(format!(
+            "client: no-hello (jobs={njobs} malformed={}) -> typed rejection, session closed",
+            u64::from(malformed)
+        ));
+    }
 
     // Stream-shape invariants. Only *counts* and ordering of the final
     // `done` are asserted: with malformed frames in play, the reader

@@ -10,6 +10,7 @@ pub mod fig5;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod scenarios;
 pub mod tables;
 
 pub use common::HarnessOpts;

@@ -1,0 +1,139 @@
+//! Application scenarios promoted from `rust/examples/` into first-class
+//! harness figures: graph SpMM (the GNN aggregation primitive) and SDDMM
+//! over a pruned attention map — the paper's two flagship irregular
+//! workloads as user-facing sweeps rather than micro-ablations.
+//!
+//! Both scenarios run through the shared per-process service
+//! ([`run_shared`]) on the native functional backend with verification
+//! on for every point, so `dare all` and `dare scenarios` get build
+//! sharing, result-cache memoization, and machine-checked outputs for
+//! free. The XLA-executed end-to-end variant of the attention scenario
+//! remains `rust/examples/sddmm_attention.rs` (it needs the AOT
+//! artifacts).
+
+use super::common::{emit, run_shared, HarnessOpts};
+use crate::coordinator::{BenchPoint, RunSpec};
+use crate::energy::{efficiency, EnergyModel};
+use crate::kernels::KernelKind;
+use crate::sim::Variant;
+use crate::sparse::{Dataset, DatasetKind};
+use crate::util::table::Table;
+
+/// Graph-analytics scenario: SpMM feature propagation over the three
+/// graph datasets, sweeping block-pruning granularity, including the
+/// §V-G offline-profiling decision of when to disable GSA.
+pub fn spmm_graph(opts: HarnessOpts) {
+    let datasets = [DatasetKind::PubMed, DatasetKind::OgblCollab, DatasetKind::OgbnProteins];
+    let blocks = [1usize, 4, 16];
+    let variants = [Variant::Baseline, Variant::DareFre, Variant::DareFull];
+
+    println!("scenario: graph SpMM (GNN aggregation) across block-pruning granularities");
+    for d in datasets {
+        let ds = Dataset::load(d, opts.scale);
+        println!(
+            "dataset {:<14} n={} nnz={} irregularity(CoV)={:.2}",
+            ds.name(),
+            ds.matrix.ncols,
+            ds.matrix.nnz(),
+            ds.irregularity()
+        );
+    }
+
+    // One flat batch: the shared service compiles each (point, lowering)
+    // once and fans the sweep across its worker pool.
+    let mut specs = Vec::new();
+    for d in datasets {
+        for b in blocks {
+            for v in variants {
+                let mut s = RunSpec::new(BenchPoint::new(KernelKind::SpMM, d, b, opts.scale), v);
+                s.verify = true;
+                specs.push(s);
+            }
+        }
+    }
+    let rs = run_shared(&specs, opts);
+
+    let mut t = Table::new(
+        "SpMM cycles by design (lower is better)",
+        &["dataset", "B", "baseline", "dare-fre", "dare-full", "best design"],
+    );
+    for (i, chunk) in rs.chunks(variants.len()).enumerate() {
+        let d = datasets[i / blocks.len()];
+        let b = blocks[i % blocks.len()];
+        let (base, fre, full) =
+            (chunk[0].stats.cycles, chunk[1].stats.cycles, chunk[2].stats.cycles);
+        let best = if full < fre {
+            "dare-full (GSA on)"
+        } else {
+            "dare-fre (GSA off, per offline profiling)"
+        };
+        t.row(vec![
+            d.name().into(),
+            b.to_string(),
+            base.to_string(),
+            fre.to_string(),
+            full.to_string(),
+            best.into(),
+        ]);
+    }
+    emit(&t, "scenario_spmm_graph");
+    println!("all runs verified against the dense SpMM reference");
+}
+
+/// Attention scenario: SDDMM over the GPT-2-style pruned attention map,
+/// every design variant at two block sizes, with speedup / energy-
+/// efficiency / throughput columns (Fig 5 as an application).
+pub fn sddmm_attention(opts: HarnessOpts) {
+    let model = EnergyModel::default();
+    let blocks = [1usize, 8];
+    let variants =
+        [Variant::Baseline, Variant::Nvr, Variant::DareFre, Variant::DareGsa, Variant::DareFull];
+
+    println!("scenario: SDDMM on GPT-2-pruned attention (native backend)");
+    let mut specs = Vec::new();
+    for b in blocks {
+        for v in variants {
+            let mut s = RunSpec::new(
+                BenchPoint::new(KernelKind::Sddmm, DatasetKind::Gpt2Attention, b, opts.scale),
+                v,
+            );
+            s.verify = true;
+            specs.push(s);
+        }
+    }
+    let rs = run_shared(&specs, opts);
+
+    let mut t = Table::new(
+        "SDDMM on pruned attention — all design variants",
+        &["variant", "B", "cycles", "speedup", "energy eff", "GFLOP-equiv/s @2GHz", "verified"],
+    );
+    for (bi, chunk) in rs.chunks(variants.len()).enumerate() {
+        let base_cycles = chunk[0].stats.cycles;
+        let base_eff = efficiency(&chunk[0].stats, &model);
+        for (vi, r) in chunk.iter().enumerate() {
+            // useful MACs × 2 (mul+add) at 2 GHz
+            let gflops = r.stats.useful_macs as f64 * 2.0 / (r.stats.cycles as f64 / 2e9) / 1e9;
+            t.row(vec![
+                variants[vi].name().into(),
+                blocks[bi].to_string(),
+                r.stats.cycles.to_string(),
+                Table::x(base_cycles as f64 / r.stats.cycles as f64),
+                Table::x(efficiency(&r.stats, &model) / base_eff),
+                format!("{gflops:.2}"),
+                match r.verify_err {
+                    Some(e) => format!("err {e:.1e}"),
+                    None => "-".into(),
+                },
+            ]);
+        }
+    }
+    emit(&t, "scenario_sddmm_attention");
+    println!("all outputs verified against the reference semantics");
+}
+
+/// Run both application scenarios (the `dare scenarios` entry point).
+pub fn all(opts: HarnessOpts) {
+    spmm_graph(opts);
+    println!();
+    sddmm_attention(opts);
+}

@@ -36,6 +36,6 @@ pub mod workload;
 
 pub use gemm::compile_gemm;
 pub use layout::Layout;
-pub use sddmm::compile_sddmm;
-pub use spmm::compile_spmm;
+pub use sddmm::{compile_sddmm, sddmm_dense_operands};
+pub use spmm::{compile_spmm, spmm_dense_operand};
 pub use workload::{KernelKind, RegionCheck, SharedWorkload, Workload, WorkloadKey};

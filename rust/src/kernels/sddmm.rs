@@ -41,14 +41,23 @@ pub(crate) fn contiguous_runs(rows: &[u32]) -> Vec<(u32, usize)> {
     runs
 }
 
+/// The deterministic dense operands `(A, B)` (nrows×F and ncols×F) that
+/// [`compile_sddmm`] derives from `seed` — both drawn sequentially from
+/// one PRNG stream. Exposed so `dare oracle` can hand the *exact*
+/// operand bytes to the external Python reference.
+pub fn sddmm_dense_operands(s: &Csc, f: usize, seed: u64) -> (Dense, Dense) {
+    let mut rng = Pcg32::new(seed);
+    let a = Dense::from_fn(s.nrows, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25);
+    let bm = Dense::from_fn(s.ncols, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25);
+    (a, bm)
+}
+
 /// Compile SDDMM over the sparsity pattern `s` with feature dim `f`
 /// (multiple of 16). Dense operands are generated deterministically from
 /// `seed`. `gsa` selects the densified (gather) lowering.
 pub fn compile_sddmm(s: &Csc, f: usize, gsa: bool, seed: u64) -> Workload {
     assert!(f % FT == 0, "feature dim must be a multiple of 16");
-    let mut rng = Pcg32::new(seed);
-    let a = Dense::from_fn(s.nrows, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25);
-    let bm = Dense::from_fn(s.ncols, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25);
+    let (a, bm) = sddmm_dense_operands(s, f, seed);
 
     let row_bytes = (f * 4) as u64;
     let mut lay = Layout::new();

@@ -23,14 +23,21 @@ use crate::util::prng::Pcg32;
 
 const FT: usize = 16;
 
+/// The deterministic dense operand `B` (K×F, K = `s.ncols`) that
+/// [`compile_spmm`] derives from `seed` — exposed so `dare oracle` can
+/// hand the *exact* operand bytes to the external Python reference.
+pub fn spmm_dense_operand(s: &Csc, f: usize, seed: u64) -> Dense {
+    let mut rng = Pcg32::new(seed);
+    Dense::from_fn(s.ncols, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25)
+}
+
 /// Compile SpMM over sparse `s` (with values) and feature dim `f`
 /// (multiple of 16); the dense B is generated deterministically from
 /// `seed`.
 pub fn compile_spmm(s: &Csc, f: usize, gsa: bool, seed: u64) -> Workload {
     assert!(f % FT == 0, "feature dim must be a multiple of 16");
-    let mut rng = Pcg32::new(seed);
     // B is K×F where K = s.ncols (C = S·B).
-    let bm = Dense::from_fn(s.ncols, f, |_, _| (rng.below(8) as f32 - 3.5) * 0.25);
+    let bm = spmm_dense_operand(s, f, seed);
 
     let row_bytes = (f * 4) as u64;
     let ftiles = f / FT;

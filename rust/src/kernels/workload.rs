@@ -80,6 +80,9 @@ impl WorkloadKey {
     ) -> Self {
         assert!(scale > 0.0 && scale <= 1.0, "scale in (0,1]");
         assert!(block >= 1, "block size >= 1");
+        // Real `.mtx` datasets are never rescaled (the file is the
+        // artifact); canonicalize so every scale maps to one cache entry.
+        let scale = if matches!(dataset, DatasetKind::File(_)) { 1.0 } else { scale };
         Self {
             kernel,
             dataset,
@@ -105,7 +108,17 @@ impl WorkloadKey {
         let mut h = crate::util::fnv::Fnv64::new();
         h.update(self.kernel.name().as_bytes());
         h.update(&[0xFF]);
-        h.update(self.dataset.name().as_bytes());
+        // File datasets hash their *content digest*, never the display
+        // name (which carries the registration path): cache keys for a
+        // real matrix must survive renaming the file.
+        match self.dataset {
+            DatasetKind::File(tok) => {
+                h.update(b"file");
+                h.update(&[0xFF]);
+                h.update_u64(tok.digest());
+            }
+            other => h.update(other.name().as_bytes()),
+        }
         h.update(&[0xFF]);
         h.update_u64(self.block as u64);
         h.update(&[self.densify as u8]);
@@ -115,12 +128,18 @@ impl WorkloadKey {
 
     /// Filename stem of this key's on-disk cache entry: human-readable
     /// prefix for debuggability, stable hash suffix for uniqueness
-    /// (the scale, an arbitrary f64, rides in the hash).
+    /// (the scale, an arbitrary f64, rides in the hash). File datasets
+    /// use their content digest as the label — the path is neither
+    /// filename-safe nor stable across renames.
     pub fn cache_file_stem(&self) -> String {
+        let dataset = match self.dataset {
+            DatasetKind::File(tok) => format!("mtx{:016x}", tok.digest()),
+            other => other.name().to_string(),
+        };
         format!(
             "{}-{}-b{}-{}-{:016x}",
             self.kernel.name(),
-            self.dataset.name(),
+            dataset,
             self.block,
             if self.densify { "gsa" } else { "strided" },
             self.stable_hash()
@@ -271,6 +290,28 @@ mod tests {
         // Filename-safe: no separators or shell-special characters.
         let stem = a.cache_file_stem();
         assert!(stem.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'), "{stem}");
+    }
+
+    #[test]
+    fn file_keys_are_content_addressed() {
+        let mtx = "%%MatrixMarket matrix coordinate real general\n4 4 2\n1 1 1.0\n4 4 2.0\n";
+        let a = crate::sparse::mtx::register_text("one/path.mtx", mtx).unwrap();
+        let b = crate::sparse::mtx::register_text("totally/different.mtx", mtx).unwrap();
+        // Same bytes under two paths, different requested scales: one key.
+        let ka = WorkloadKey::new(KernelKind::SpMM, a, 1, true, 0.5);
+        let kb = WorkloadKey::new(KernelKind::SpMM, b, 1, true, 1.0);
+        assert_eq!(ka, kb);
+        assert_eq!(ka.stable_hash(), kb.stable_hash());
+        assert_eq!(ka.scale(), 1.0, "file scale canonicalized");
+        let stem = ka.cache_file_stem();
+        assert!(stem.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'), "{stem}");
+        let other = crate::sparse::mtx::register_text(
+            "x.mtx",
+            "%%MatrixMarket matrix coordinate real general\n4 4 1\n2 2 5.0\n",
+        )
+        .unwrap();
+        let ko = WorkloadKey::new(KernelKind::SpMM, other, 1, true, 1.0);
+        assert_ne!(ka.stable_hash(), ko.stable_hash(), "different content, different key");
     }
 
     #[test]

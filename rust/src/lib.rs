@@ -12,8 +12,10 @@
 //!   [`overhead`]), the host coordinator ([`coordinator`]), the batch
 //!   simulation service ([`service`]: bounded job queue, sharded
 //!   LRU workload cache, worker pool, JSONL protocol), the figure
-//!   harnesses ([`harness`]), and the deterministic simulation testing
-//!   harness that fault-injects the whole cache/service stack ([`dst`]).
+//!   harnesses ([`harness`]), the differential correctness oracle that
+//!   diffs simulator outputs against the Layer-2 Python reference
+//!   ([`oracle`]), and the deterministic simulation testing harness
+//!   that fault-injects the whole cache/service stack ([`dst`]).
 //! * **Layer 2/1 (python, build-time only)** — JAX + Pallas numerics,
 //!   AOT-lowered to HLO text in `artifacts/` and executed from rust via
 //!   the PJRT runtime ([`runtime`]).
@@ -29,6 +31,7 @@ pub mod energy;
 pub mod harness;
 pub mod isa;
 pub mod kernels;
+pub mod oracle;
 pub mod sim;
 pub mod mem;
 pub mod overhead;

@@ -5,8 +5,10 @@
 //! ```text
 //! dare fig1a|fig1b|fig1c|fig3a|fig3b|fig5|fig6|fig7|fig8|fig9   figures
 //! dare isa | config | overhead                                  tables
+//! dare scenarios                                                application scenarios
 //! dare all [--scale 0.5]                                        everything
 //! dare run --kernel sddmm --dataset gpt2 --block 8 --variant dare-full [--xla]
+//! dare oracle [--fixtures DIR]                                  differential check vs python ref
 //! dare batch <jobs.jsonl> [--stream] [--cache-dir D [--cache-seed S]]   service: run a JSONL job file
 //! dare serve [--socket P | --tcp H:P] [--cache-dir D] [--auth S]   service: JSONL jobs, stdio or socket
 //! dare fleet --workers N (--socket P | --tcp H:P)               sharded router + N serve workers
@@ -20,7 +22,7 @@
 
 use dare::coordinator::{run_one, BenchPoint, RunSpec};
 use dare::dst;
-use dare::harness::{common, fig1, fig3, fig5, fig7, fig8, fig9, tables, HarnessOpts};
+use dare::harness::{common, fig1, fig3, fig5, fig7, fig8, fig9, scenarios, tables, HarnessOpts};
 use dare::isa::asm;
 use dare::kernels::KernelKind;
 use dare::service::fleet::{Fleet, FleetConfig};
@@ -30,7 +32,7 @@ use dare::service::{DiskConfig, DiskStore, JobOutcome, JobResponse, Json, Servic
 use dare::sim::{Mpu, NativeMma, SimConfig, Variant};
 use dare::sparse::DatasetKind;
 use dare::util::cli::Args;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read as _, Write};
 use std::sync::atomic::AtomicBool;
 use std::sync::{mpsc, Arc};
 
@@ -40,8 +42,17 @@ const HELP: &str = "usage: dare <command> [options]\n\
 commands:\n\
   fig1a fig1b fig1c fig3a fig3b fig5 fig6 fig7 fig8 fig9   regenerate a figure\n\
   isa config overhead                                      print a table\n\
-  all            every figure + table (one shared workload cache across figures)\n\
-  run            run one benchmark point (--kernel --dataset --block --variant [--xla] [--verify])\n\
+  scenarios      application scenarios: graph SpMM (GNN aggregation) and SDDMM on a\n\
+                 pruned attention map, every point verified against the reference\n\
+  all            every figure + table + scenario (one shared workload cache throughout)\n\
+  run            run one benchmark point (--kernel --dataset --block --variant [--xla] [--verify]);\n\
+                 --dataset also accepts file:PATH for a MatrixMarket .mtx matrix\n\
+  oracle         differential correctness oracle: run every .mtx fixture under\n\
+                 --fixtures (default testdata) x {spmm,sddmm} x {strided,gsa}\n\
+                 through the simulator and diff the raw output region against both\n\
+                 the rust reference and python/compile/kernels/ref.py (exit nonzero\n\
+                 on any mismatch; a machine without python3 skips the python diff\n\
+                 with a notice)\n\
   batch          run a JSONL job file through the simulation service (results on stdout;\n\
                  file order by default, completion-order events with --stream)\n\
   serve          long-lived service: JSONL jobs on stdin (default) or over --socket/--tcp;\n\
@@ -106,6 +117,9 @@ options:\n\
   --metrics-json P   batch/serve: write the final service MetricsSnapshot as JSON to P\n\
   --poll-metrics     client: also send {\"cmd\":\"metrics\"} and print the live snapshot\n\
   --shutdown         client: send {\"cmd\":\"shutdown\"} after the jobs (if any)\n\
+  --fixtures DIR     oracle: directory of vendored .mtx fixtures (default testdata)\n\
+  --script P         oracle: explicit path to oracle_check.py (default: probe the repo)\n\
+  --python P         oracle: the python interpreter to invoke (default python3)\n\
   --seed N           dst: the schedule seed (default 1)\n\
   --steps M          dst: steps to run (default 1000)\n\
   --actors A         dst: `all` or a comma list of client,drain,drop-conn,direct,\n\
@@ -337,9 +351,12 @@ fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     let service = Service::start(service_opts(args)?.service_config());
     if args.flag("stream") {
         let file = std::fs::File::open(path)?;
+        // The session loop requires the v2 hello before any job; a plain
+        // jobs file doesn't carry one, so splice it in front.
+        let hello = format!("{}\n", Hello::new(None).to_json());
         let summary = transport::run_session(
             &service,
-            BufReader::new(file),
+            BufReader::new(std::io::Cursor::new(hello.into_bytes()).chain(file)),
             Box::new(std::io::stdout()),
             &SessionOpts { verify: opts.verify, ..SessionOpts::default() },
             None,
@@ -550,12 +567,10 @@ fn cmd_client(args: &Args, _opts: HarnessOpts) -> Result<(), CliError> {
         let _ = done_tx.send(None);
     });
     let mut writer = stream.try_clone()?;
-    // Protocol v2: `--auth SECRET` opens the session with the hello
-    // handshake (required by servers started with --auth; the server's
-    // {"event":"hello"} answer is echoed by the printer thread).
-    if let Some(secret) = args.get("auth") {
-        writeln!(writer, "{}", Hello::new(Some(secret.to_string())).to_json())?;
-    }
+    // Protocol v2: every session opens with the hello handshake
+    // (carrying --auth SECRET when the server requires one); the
+    // server's {"event":"hello"} answer is echoed by the printer thread.
+    writeln!(writer, "{}", Hello::new(args.get("auth").map(String::from)).to_json())?;
     let mut sent = 0u64;
     if let Some(path) = args.positional.first() {
         let text = std::fs::read_to_string(path)?;
@@ -654,6 +669,9 @@ fn main() -> Result<(), CliError> {
         "overhead" => {
             tables::overhead_report();
         }
+        "scenarios" => {
+            scenarios::all(opts);
+        }
         "all" => {
             // Start the shared service first so every figure harness
             // inherits the on-disk tiers (if requested) and the result
@@ -675,6 +693,7 @@ fn main() -> Result<(), CliError> {
             fig7::fig7(opts);
             fig8::fig8(opts);
             fig9::fig9(opts);
+            scenarios::all(opts);
             // Every figure ran through the per-process shared service:
             // report the cross-figure build reuse it bought us.
             if let Some(service) = dare::service::shared_handle() {
@@ -691,8 +710,7 @@ fn main() -> Result<(), CliError> {
             let kernel_name = args.get_or("kernel", "sddmm");
             let kernel = KernelKind::from_name(&kernel_name)
                 .ok_or_else(|| format!("unknown kernel '{kernel_name}'"))?;
-            let dataset =
-                DatasetKind::from_name(&args.get_or("dataset", "gpt2")).ok_or("unknown dataset")?;
+            let dataset = DatasetKind::resolve(&args.get_or("dataset", "gpt2"))?;
             let variant = Variant::from_name(&args.get_or("variant", "dare-full"))
                 .ok_or("unknown variant")?;
             let block: usize = args.get_parse("block", 1);
@@ -716,6 +734,14 @@ fn main() -> Result<(), CliError> {
             if let Some(err) = r.verify_err {
                 println!("  verified against reference (max rel err {err:.2e})");
             }
+        }
+        "oracle" => {
+            let oracle_opts = dare::oracle::OracleOpts {
+                fixtures: std::path::PathBuf::from(args.get_or("fixtures", "testdata")),
+                script: args.get("script").map(std::path::PathBuf::from),
+                python: args.get_or("python", "python3"),
+            };
+            dare::oracle::run_oracle(&oracle_opts)?;
         }
         "batch" => {
             cmd_batch(&args, opts)?;

@@ -1,0 +1,291 @@
+//! `dare oracle`: differential correctness checking of the simulator
+//! against the Layer-2 Python reference (`python/compile/kernels/ref.py`).
+//!
+//! For every (dataset × kernel × lowering) case the oracle
+//!
+//! 1. builds the workload through the production path
+//!    ([`WorkloadKey::build`] — same compilers, same operand seeds the
+//!    service uses),
+//! 2. runs it through the simulator's functional check-region path
+//!    ([`run_sharded`] + [`NativeMma`]) and reads the raw output region
+//!    back out of the final memory image,
+//! 3. dumps the sparse operand, the exact dense operand bytes, and the
+//!    simulator output as JSON and pipes them to
+//!    `python/compile/kernels/oracle_check.py`, which recomputes the
+//!    result with `ref.py`'s kernel functions (numpy standing in for
+//!    jax.numpy) and reports a verdict.
+//!
+//! Two *independent* references therefore gate each case: the crate's
+//! own Rust expectation (`Workload::verify`) and the out-of-process
+//! Python one. A runner without `python3` skips the Python diff with a
+//! visible notice instead of failing — CI machines differ — but any
+//! executed comparison that mismatches makes [`run_oracle`] return
+//! `Err`, which `dare oracle` turns into a nonzero exit.
+
+use crate::kernels::{KernelKind, WorkloadKey};
+use crate::sim::{run_sharded, MmaExec, NativeMma, SimConfig, Variant};
+use crate::sparse::{mtx, Csc, Dense};
+use crate::util::table::Table;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+/// Feature dimension the oracle compiles with (multiple of 16, ≤ 64 to
+/// fit the four ms2 feature-tile registers).
+const FEATURE_DIM_CAP: usize = 64;
+
+/// Options for [`run_oracle`].
+pub struct OracleOpts {
+    /// Directory of vendored `.mtx` fixtures (every `*.mtx` file in it
+    /// becomes a case).
+    pub fixtures: PathBuf,
+    /// Explicit path to `oracle_check.py`; `None` probes the repo's
+    /// standard locations relative to the working directory.
+    pub script: Option<PathBuf>,
+    /// The Python interpreter to invoke (default `python3`).
+    pub python: String,
+}
+
+/// One executed oracle case.
+struct CaseResult {
+    label: String,
+    rust_ok: Result<(), String>,
+    python_ok: Result<(), String>,
+}
+
+/// Locate `oracle_check.py`: an explicit override, the path as seen
+/// from `rust/` (where CI runs), the repo root, or the source tree the
+/// binary was built from.
+fn find_script(explicit: Option<&Path>) -> Option<PathBuf> {
+    if let Some(p) = explicit {
+        return p.exists().then(|| p.to_path_buf());
+    }
+    let candidates = [
+        Path::new("../python/compile/kernels/oracle_check.py").to_path_buf(),
+        Path::new("python/compile/kernels/oracle_check.py").to_path_buf(),
+        Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../python/compile/kernels/oracle_check.py"))
+            .to_path_buf(),
+    ];
+    candidates.into_iter().find(|p| p.exists())
+}
+
+/// Append a JSON array of f32 values (Rust's `{:?}` float formatting
+/// round-trips through `f64::from_str` exactly for every f32).
+fn push_f32_array(out: &mut String, key: &str, vs: &[f32]) {
+    out.push_str(&format!("\"{key}\":["));
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{v:?}"));
+    }
+    out.push_str("],");
+}
+
+/// Append a JSON array of u32 values.
+fn push_u32_array(out: &mut String, key: &str, vs: &[u32]) {
+    out.push_str(&format!("\"{key}\":["));
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{v}"));
+    }
+    out.push_str("],");
+}
+
+/// Serialize one case for `oracle_check.py`.
+fn case_json(
+    kernel: KernelKind,
+    m: &Csc,
+    f: usize,
+    dense: &[(&str, &Dense)],
+    sim: &[f32],
+) -> String {
+    let mut s = String::with_capacity(64 * 1024);
+    s.push('{');
+    s.push_str(&format!(
+        "\"kernel\":\"{}\",\"nrows\":{},\"ncols\":{},\"f\":{},\"tol\":0.001,",
+        kernel.name(),
+        m.nrows,
+        m.ncols,
+        f
+    ));
+    push_u32_array(&mut s, "col_ptr", &m.col_ptr);
+    push_u32_array(&mut s, "row_idx", &m.row_idx);
+    push_f32_array(&mut s, "vals", &m.vals);
+    for (name, d) in dense {
+        push_f32_array(&mut s, name, &d.data);
+    }
+    push_f32_array(&mut s, "sim", sim);
+    // trailing comma from the last array is invalid JSON; close with a
+    // throwaway member instead of tracking comma state everywhere.
+    s.push_str("\"end\":true}");
+    s
+}
+
+/// Run one case through the simulator's functional path and both
+/// references. `gsa` selects the densified lowering (and a DARE sim
+/// variant that supports `mgather`).
+fn run_case(
+    dataset: crate::sparse::DatasetKind,
+    kernel: KernelKind,
+    gsa: bool,
+    python: Option<(&str, &Path)>,
+) -> CaseResult {
+    let key = WorkloadKey::new(kernel, dataset, 1, gsa, 1.0);
+    let label = format!(
+        "{} {} {}",
+        dataset.name().rsplit('/').next().unwrap_or("?"),
+        kernel.name(),
+        if gsa { "gsa" } else { "strided" }
+    );
+    let (m, f) = key.operand();
+    let f = f.min(FEATURE_DIM_CAP);
+    debug_assert!(f % 16 == 0 && f <= 64);
+    let workload = key.build();
+
+    let variant = if gsa { Variant::DareFull } else { Variant::Baseline };
+    let mut cfg = SimConfig::for_variant(variant);
+    cfg.max_cycles = 200_000_000;
+    let regions: Vec<(u64, usize)> =
+        workload.checks.iter().map(|c| (c.addr, c.expect.len())).collect();
+    let (_stats, mem) = run_sharded(&cfg, &workload.program, &workload.mem, &regions, || {
+        Box::new(NativeMma) as Box<dyn MmaExec>
+    });
+
+    let rust_ok = workload.verify(&mem, 1e-3).map(|_| ());
+
+    let python_ok = match python {
+        None => Ok(()),
+        Some((python, script)) => {
+            let chk = &workload.checks[0];
+            let sim_out = mem.read_f32_slice(chk.addr, chk.expect.len());
+            let payload = match kernel {
+                KernelKind::SpMM => {
+                    let b = crate::kernels::spmm_dense_operand(&m, f, 0xBEEF);
+                    case_json(kernel, &m, f, &[("b", &b)], &sim_out)
+                }
+                KernelKind::Sddmm => {
+                    let (a, b) = crate::kernels::sddmm_dense_operands(&m, f, 0xBEEF);
+                    case_json(kernel, &m, f, &[("a", &a), ("b", &b)], &sim_out)
+                }
+                KernelKind::Gemm => unreachable!("oracle covers the sparse kernels"),
+            };
+            diff_against_python(python, script, &payload)
+        }
+    };
+
+    CaseResult { label, rust_ok, python_ok }
+}
+
+/// Pipe `payload` to the checker script and interpret its verdict line.
+fn diff_against_python(python: &str, script: &Path, payload: &str) -> Result<(), String> {
+    let mut child = Command::new(python)
+        .arg(script)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .map_err(|e| format!("spawn {python}: {e}"))?;
+    child
+        .stdin
+        .take()
+        .expect("piped stdin")
+        .write_all(payload.as_bytes())
+        .map_err(|e| format!("write to {python}: {e}"))?;
+    let out = child.wait_with_output().map_err(|e| format!("wait for {python}: {e}"))?;
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout.lines().last().unwrap_or("");
+    let v = crate::service::Json::parse(line).map_err(|e| {
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        format!("unparseable checker output ({e}): {line:?} stderr: {}", stderr.trim())
+    })?;
+    match v.get("ok").and_then(|j| j.as_bool()) {
+        Some(true) => Ok(()),
+        Some(false) => Err(format!(
+            "python reference disagrees: {}",
+            v.get("detail").and_then(|j| j.as_str()).unwrap_or("(no detail)")
+        )),
+        None => Err(format!("checker verdict missing 'ok': {line:?}")),
+    }
+}
+
+/// Run the differential oracle over every `.mtx` fixture in
+/// `opts.fixtures` × {spmm, sddmm} × {strided, gsa}. Prints a verdict
+/// table; `Err` means at least one case failed (or the corpus/setup is
+/// unusable) and the CLI should exit nonzero. A missing `python3` skips
+/// the Python diff with a notice — the Rust-side functional check still
+/// gates every case.
+pub fn run_oracle(opts: &OracleOpts) -> Result<(), String> {
+    let mut fixtures: Vec<PathBuf> = std::fs::read_dir(&opts.fixtures)
+        .map_err(|e| format!("fixtures dir {}: {e}", opts.fixtures.display()))?
+        .filter_map(|ent| ent.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "mtx"))
+        .collect();
+    fixtures.sort();
+    if fixtures.is_empty() {
+        return Err(format!("no .mtx fixtures under {}", opts.fixtures.display()));
+    }
+
+    let python_available = Command::new(&opts.python)
+        .arg("--version")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .map(|st| st.success())
+        .unwrap_or(false);
+    let script = find_script(opts.script.as_deref());
+    let python = match (python_available, &script) {
+        (true, Some(script)) => Some((opts.python.as_str(), script.as_path())),
+        (false, _) => {
+            println!(
+                "oracle: `{}` not found; skipping the Python differential check \
+                 (Rust-side functional verification still runs)",
+                opts.python
+            );
+            None
+        }
+        (true, None) => return Err("oracle_check.py not found (pass --script)".into()),
+    };
+
+    let mut cases = Vec::new();
+    for path in &fixtures {
+        let path_str = path.to_string_lossy();
+        let dataset = mtx::register_path(&path_str).map_err(|e| format!("{path_str}: {e}"))?;
+        for kernel in [KernelKind::SpMM, KernelKind::Sddmm] {
+            for gsa in [false, true] {
+                cases.push(run_case(dataset, kernel, gsa, python));
+            }
+        }
+    }
+
+    let mut table = Table::new("dare oracle — sim vs rust-ref vs python-ref", &[
+        "case",
+        "rust check",
+        "python check",
+    ]);
+    let mut failures = 0usize;
+    for c in &cases {
+        let fmt = |r: &Result<(), String>| match r {
+            Ok(()) => "ok".to_string(),
+            Err(e) => format!("FAIL: {e}"),
+        };
+        if c.rust_ok.is_err() || c.python_ok.is_err() {
+            failures += 1;
+        }
+        table.row(vec![c.label.clone(), fmt(&c.rust_ok), fmt(&c.python_ok)]);
+    }
+    table.print();
+    println!(
+        "oracle: {} cases over {} fixtures, {} failure(s){}",
+        cases.len(),
+        fixtures.len(),
+        failures,
+        if python.is_some() { "" } else { " [python diff skipped]" }
+    );
+    if failures > 0 {
+        return Err(format!("{failures} oracle case(s) failed"));
+    }
+    Ok(())
+}

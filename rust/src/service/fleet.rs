@@ -25,9 +25,11 @@
 //!   hits), and the worker is restarted. Results are delivered
 //!   **exactly once**: first answer wins, a late duplicate from a
 //!   presumed-dead worker is dropped.
-//! * **Auth/quotas** — the router enforces `--auth` (hello handshake),
-//!   `--max-jobs` (per-connection quota), and `--max-inflight`
+//! * **Auth/quotas** — the router requires the v2 hello handshake from
+//!   every client (with the `--auth` secret when one is set), and
+//!   enforces `--max-jobs` (per-connection quota) and `--max-inflight`
 //!   (per-connection in-flight cap, surfaced as `busy` backpressure).
+//!   The router itself opens each upstream worker session with a hello.
 //! * **Graceful drain** — SIGTERM or `{"cmd":"shutdown"}` stops the
 //!   accept loop, drains every client session, then asks each worker to
 //!   drain and waits for it to exit.
@@ -457,7 +459,7 @@ fn spawn_worker(shared: &Arc<FleetShared>, shard: usize) -> io::Result<()> {
             Err(_) => std::thread::sleep(CONNECT_POLL),
         }
     }
-    let Some(stream) = stream else {
+    let Some(mut stream) = stream else {
         let _ = child.kill();
         let _ = child.wait();
         return Err(io::Error::new(
@@ -465,6 +467,15 @@ fn spawn_worker(shared: &Arc<FleetShared>, shard: usize) -> io::Result<()> {
             format!("worker {shard} never bound {sock}"),
         ));
     };
+    // Workers speak the same session protocol and the hello handshake is
+    // mandatory: open the upstream session before any job is routed.
+    // (Workers carry no --auth; the router enforces auth client-side.)
+    if let Err(e) = writeln!(stream, "{}", Hello::new(None).to_json()).and_then(|_| stream.flush())
+    {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(io::Error::new(e.kind(), format!("worker {shard} hello failed: {e}")));
+    }
     let read_half = stream.try_clone()?;
     let generation = {
         let mut st = w.state.lock().unwrap();
@@ -559,7 +570,9 @@ fn router_session(shared: &Arc<FleetShared>, stream: Stream) {
     let mut submitted: u64 = 0;
     let mut errored: u64 = 0;
     let mut frames: u64 = 0;
-    let mut authed = shared.auth.is_none();
+    // The hello handshake is mandatory (same rule as `run_session`);
+    // `--auth` additionally requires the right secret inside it.
+    let mut authed = false;
     let mut dirty = false;
     let mut emitted_done = false;
     let mut aborted = false;
@@ -628,12 +641,18 @@ fn router_session(shared: &Arc<FleetShared>, stream: Stream) {
             continue;
         }
         if !authed {
-            session.write_line(&error_event(
-                ErrorCode::Unauthorized,
-                "authentication required: open with {\"cmd\":\"hello\",\"proto\":2,\"auth\":…}",
-                None,
-                frames,
-            ));
+            let (code, detail) = if shared.auth.is_some() {
+                (
+                    ErrorCode::Unauthorized,
+                    "authentication required: open with {\"cmd\":\"hello\",\"proto\":2,\"auth\":…}",
+                )
+            } else {
+                (
+                    ErrorCode::Malformed,
+                    "protocol v2: the session must open with {\"cmd\":\"hello\",\"proto\":2}",
+                )
+            };
+            session.write_line(&error_event(code, detail, None, frames));
             shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
             errored += 1;
             aborted = true;

@@ -18,13 +18,13 @@
 //! * **Isolation** — a malformed frame produces a typed
 //!   `{"event":"error","code":"malformed",…}` frame on that connection
 //!   only; the server and every other client keep running.
-//! * **Handshake (protocol v2)** — a session may open with
+//! * **Handshake (protocol v2)** — every session must open with
 //!   `{"cmd":"hello","proto":2,"auth":…}`; the server answers
-//!   `{"event":"hello","proto":2}`. Servers started with `--auth SECRET`
-//!   reject any frame before a correctly-authenticated hello with an
-//!   `unauthorized` error and close the session — before reading jobs.
-//!   v1 clients (no hello at all) are still accepted for one release on
-//!   servers that don't require auth.
+//!   `{"event":"hello","proto":2}`. A non-hello first frame gets one
+//!   typed error event (`unauthorized` when the server was started with
+//!   `--auth SECRET`, `malformed` otherwise) and the session closes —
+//!   before the frame is interpreted as a job. The v1 no-hello
+//!   compatibility window is over.
 //! * **Control plane** — `{"cmd":"metrics"}` answers immediately with a
 //!   live `{"event":"metrics","service":…}` snapshot (no barrier), a
 //!   submission that finds the job queue full emits
@@ -62,11 +62,11 @@ use std::time::{Duration, Instant};
 pub struct SessionOpts {
     /// Force functional verification on every job of the session.
     pub verify: bool,
-    /// Shared-secret auth (`--auth`): when set, every session must open
-    /// with a `{"cmd":"hello","proto":2,"auth":SECRET}` handshake before
-    /// anything else; a missing or wrong secret gets one `unauthorized`
-    /// error frame and the session closes without reading jobs. `None`
-    /// keeps v1 clients (no hello) working.
+    /// Shared-secret auth (`--auth`). The opening
+    /// `{"cmd":"hello","proto":2,…}` handshake is always mandatory; when
+    /// this is set the hello must additionally carry `"auth":SECRET` — a
+    /// missing or wrong secret gets one `unauthorized` error frame and
+    /// the session closes without reading jobs.
     pub auth: Option<String>,
     /// Per-session job quota (`--max-jobs`): submissions past the cap
     /// are answered with a `quota` error frame instead of running.
@@ -166,11 +166,12 @@ impl SessionShared {
 /// line drains the session, emits its summary, then (for socket servers)
 /// flips `server_shutdown` so the accept loop winds the server down.
 ///
-/// Protocol v2: an optional `{"cmd":"hello","proto":…,"auth":…}` frame
-/// negotiates the version (answered with `{"event":"hello","proto":…}`);
-/// when `opts.auth` is set the hello is mandatory and must carry the
-/// right secret — the first unauthenticated frame gets an
-/// `unauthorized` error and ends the session before any job is read.
+/// Protocol v2: the session must open with a
+/// `{"cmd":"hello","proto":…,"auth":…}` frame (answered with
+/// `{"event":"hello","proto":…}`); when `opts.auth` is set the hello
+/// must also carry the right secret. A non-hello first frame gets one
+/// typed error event (`unauthorized` under auth, `malformed` otherwise)
+/// and ends the session before any job is read.
 ///
 /// Errors: reader I/O failures abort the session immediately; output
 /// writes never block the pipeline mid-session, but the first write
@@ -229,9 +230,10 @@ pub fn run_session<R: BufRead>(
     let mut dirty = false; // work since the last done event
     let mut emitted_done = false;
     let mut shutdown_requested = false;
-    // v1 compatibility window: with no server secret, a session that
-    // never says hello is a v1 client and every frame is accepted.
-    let mut authed = opts.auth.is_none();
+    // The hello handshake is mandatory for every session (the v1
+    // no-hello window is closed); `--auth` additionally requires the
+    // right secret inside it.
+    let mut authed = false;
     let mut frames: u64 = 0; // non-blank input frames, for error seq
     let mut aborted = false; // handshake rejection: close without done
 
@@ -292,12 +294,18 @@ pub fn run_session<R: BufRead>(
             continue;
         }
         if !authed {
-            shared.write_line(&error_event(
-                ErrorCode::Unauthorized,
-                "authentication required: open with {\"cmd\":\"hello\",\"proto\":2,\"auth\":…}",
-                None,
-                frames,
-            ));
+            let (code, detail) = if opts.auth.is_some() {
+                (
+                    ErrorCode::Unauthorized,
+                    "authentication required: open with {\"cmd\":\"hello\",\"proto\":2,\"auth\":…}",
+                )
+            } else {
+                (
+                    ErrorCode::Malformed,
+                    "protocol v2: the session must open with {\"cmd\":\"hello\",\"proto\":2}",
+                )
+            };
+            shared.write_line(&error_event(code, detail, None, frames));
             errored += 1;
             aborted = true;
             break;
@@ -717,11 +725,21 @@ mod tests {
         )
     }
 
+    /// The mandatory opening frame, as a line.
+    fn hello_line() -> String {
+        format!("{}\n", Hello::new(None).to_json())
+    }
+
     #[test]
     fn session_streams_results_then_done() {
         let service = Service::start(ServiceConfig::with_workers(2));
-        let input =
-            format!("{}\n{}\n{}\n", job("a", "baseline"), job("b", "nvr"), job("c", "dare-fre"));
+        let input = format!(
+            "{}{}\n{}\n{}\n",
+            hello_line(),
+            job("a", "baseline"),
+            job("b", "nvr"),
+            job("c", "dare-fre")
+        );
         let buf = SharedBuf::default();
         let summary = run_session(
             &service,
@@ -735,14 +753,18 @@ mod tests {
         assert_eq!(summary.failed, 0);
         assert!(!summary.shutdown_requested);
         let lines = buf.take_lines();
-        assert_eq!(lines.len(), 4, "{lines:?}");
+        assert_eq!(lines.len(), 5, "{lines:?}");
+        assert_eq!(
+            Json::parse(&lines[0]).unwrap().get("event").and_then(Json::as_str),
+            Some("hello")
+        );
         // Every result event precedes the done summary.
-        for line in &lines[..3] {
+        for line in &lines[1..4] {
             let v = Json::parse(line).unwrap();
             assert_eq!(v.get("event").and_then(Json::as_str), Some("result"), "{line}");
             assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{line}");
         }
-        let done = Json::parse(&lines[3]).unwrap();
+        let done = Json::parse(&lines[4]).unwrap();
         assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
         let metrics = done.get("metrics").expect("done carries metrics");
         assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(3));
@@ -754,7 +776,8 @@ mod tests {
     fn session_malformed_frame_answers_inline_and_continues() {
         let service = Service::start(ServiceConfig::with_workers(1));
         let input = format!(
-            "this is not json\n{}\n{{\"id\":\"typo\",\"kernell\":\"spmm\"}}\n",
+            "{}this is not json\n{}\n{{\"id\":\"typo\",\"kernell\":\"spmm\"}}\n",
+            hello_line(),
             job("ok", "baseline")
         );
         let buf = SharedBuf::default();
@@ -769,26 +792,27 @@ mod tests {
         assert_eq!(summary.jobs, 3);
         assert_eq!(summary.failed, 2);
         let lines = buf.take_lines();
-        assert_eq!(lines.len(), 4);
+        assert_eq!(lines.len(), 5);
         let done = Json::parse(lines.last().unwrap()).unwrap();
         let metrics = done.get("metrics").unwrap();
         assert_eq!(metrics.get("jobs").and_then(Json::as_u64), Some(3));
         assert_eq!(metrics.get("failed").and_then(Json::as_u64), Some(2));
         // Both bad frames were answered with typed malformed errors; the
         // good job still got its result event.
-        let errors: Vec<_> = lines[..3]
+        let errors: Vec<_> = lines[1..4]
             .iter()
             .filter_map(|l| crate::service::protocol::ErrorFrame::parse(l).ok())
             .collect();
         assert_eq!(errors.len(), 2, "{lines:?}");
         assert!(errors.iter().all(|e| e.code == ErrorCode::Malformed), "{errors:?}");
         // The typo'd frame still echoes its id, and seq points at the
-        // offending input line (1-based over non-blank frames).
+        // offending input line (1-based over non-blank frames, counting
+        // the hello as frame 1).
         assert!(
-            errors.iter().any(|e| e.id.as_deref() == Some("typo") && e.seq == 3),
+            errors.iter().any(|e| e.id.as_deref() == Some("typo") && e.seq == 4),
             "{errors:?}"
         );
-        let results = lines[..3]
+        let results = lines[1..4]
             .iter()
             .filter(|l| {
                 Json::parse(l).unwrap().get("event").and_then(Json::as_str) == Some("result")
@@ -891,9 +915,10 @@ mod tests {
     }
 
     #[test]
-    fn v1_client_without_hello_still_served_when_no_auth() {
-        // The compatibility window: a pre-v2 client speaks no hello and
-        // must keep working against a server with no --auth secret.
+    fn client_without_hello_is_rejected_even_without_auth() {
+        // The v1 no-hello window is closed: a first frame that isn't a
+        // hello gets one typed malformed error and the session ends
+        // before the frame is interpreted as a job.
         let service = Service::start(ServiceConfig::with_workers(1));
         let input = format!("{}\n{{\"cmd\":\"done\"}}\n", job("v1", "baseline"));
         let buf = SharedBuf::default();
@@ -905,20 +930,23 @@ mod tests {
             None,
         )
         .unwrap();
-        assert_eq!(summary.jobs, 1);
-        assert_eq!(summary.failed, 0);
+        assert_eq!(summary.jobs, 1, "only the rejected frame was answered");
+        assert_eq!(summary.failed, 1);
         let lines = buf.take_lines();
-        assert!(lines
-            .iter()
-            .all(|l| Json::parse(l).unwrap().get("event").and_then(Json::as_str) != Some("hello")));
+        assert_eq!(lines.len(), 1, "error then close, no done: {lines:?}");
+        let e = crate::service::protocol::ErrorFrame::parse(&lines[0]).unwrap();
+        assert_eq!(e.code, ErrorCode::Malformed);
+        assert!(e.detail.contains("hello"), "{e:?}");
     }
 
     #[test]
     fn max_jobs_quota_answers_excess_with_error_frames() {
         let service = Service::start(ServiceConfig::with_workers(1));
         let opts = SessionOpts { max_jobs: Some(2), ..SessionOpts::default() };
-        let input: String =
-            (0..4).map(|i| format!("{}\n", job(&format!("q{i}"), "baseline"))).collect();
+        let jobs: String = (0..4)
+            .map(|i| format!("{}\n", job(&format!("q{i}"), "baseline")))
+            .collect();
+        let input: String = hello_line() + &jobs;
         let buf = SharedBuf::default();
         let summary =
             run_session(&service, input.as_bytes(), Box::new(buf.clone()), &opts, None).unwrap();
@@ -950,7 +978,7 @@ mod tests {
     fn done_barrier_mid_session_then_eof_stays_single() {
         // done cmd → summary; EOF with nothing new → no duplicate done.
         let service = Service::start(ServiceConfig::with_workers(1));
-        let input = format!("{}\n{{\"cmd\":\"done\"}}\n", job("only", "baseline"));
+        let input = format!("{}{}\n{{\"cmd\":\"done\"}}\n", hello_line(), job("only", "baseline"));
         let buf = SharedBuf::default();
         let summary = run_session(
             &service,
@@ -974,7 +1002,8 @@ mod tests {
     #[test]
     fn metrics_cmd_answers_live_snapshot_inline() {
         let service = Service::start(ServiceConfig::with_workers(1));
-        let input = format!("{}\n{{\"cmd\":\"metrics\"}}\n", job("m0", "baseline"));
+        let input =
+            format!("{}{}\n{{\"cmd\":\"metrics\"}}\n", hello_line(), job("m0", "baseline"));
         let buf = SharedBuf::default();
         let summary = run_session(
             &service,
@@ -986,7 +1015,7 @@ mod tests {
         .unwrap();
         assert_eq!(summary.jobs, 1, "a metrics poll is not a job");
         let lines = buf.take_lines();
-        assert_eq!(lines.len(), 3, "result + metrics + done: {lines:?}");
+        assert_eq!(lines.len(), 4, "hello + result + metrics + done: {lines:?}");
         let metrics_line = lines
             .iter()
             .find(|l| {
@@ -1009,8 +1038,10 @@ mod tests {
         let cfg = ServiceConfig { workers: 1, queue_capacity: 1, ..ServiceConfig::default() };
         let service = Service::start(cfg);
         let n = 6;
-        let input: String =
-            (0..n).map(|i| format!("{}\n", job(&format!("j{i}"), "baseline"))).collect();
+        let input: String = hello_line()
+            + &(0..n)
+                .map(|i| format!("{}\n", job(&format!("j{i}"), "baseline")))
+                .collect::<String>();
         let buf = SharedBuf::default();
         let summary = run_session(
             &service,
@@ -1049,8 +1080,10 @@ mod tests {
         let cfg = ServiceConfig { workers: 1, queue_capacity: 1, ..ServiceConfig::default() };
         let service = Service::start(cfg);
         let n = 8;
-        let mut input: String =
-            (0..n).map(|i| format!("{}\n", job(&format!("d{i}"), "baseline"))).collect();
+        let mut input: String = hello_line()
+            + &(0..n)
+                .map(|i| format!("{}\n", job(&format!("d{i}"), "baseline")))
+                .collect::<String>();
         input.push_str("{\"cmd\":\"shutdown\"}\n");
         let buf = SharedBuf::default();
         let flag = AtomicBool::new(false);
@@ -1077,6 +1110,7 @@ mod tests {
                 }
                 Some("busy") => busy += 1,
                 Some("done") => done += 1,
+                Some("hello") => {}
                 other => panic!("unexpected event {other:?}: {l}"),
             }
         }
@@ -1090,7 +1124,8 @@ mod tests {
     #[test]
     fn shutdown_cmd_drains_and_flips_server_flag() {
         let service = Service::start(ServiceConfig::with_workers(1));
-        let input = format!("{}\n{{\"cmd\":\"shutdown\"}}\n", job("last", "baseline"));
+        let input =
+            format!("{}{}\n{{\"cmd\":\"shutdown\"}}\n", hello_line(), job("last", "baseline"));
         let buf = SharedBuf::default();
         let flag = AtomicBool::new(false);
         let summary = run_session(
@@ -1105,8 +1140,8 @@ mod tests {
         assert!(flag.load(Ordering::SeqCst));
         let lines = buf.take_lines();
         // The in-flight job still completed and the summary was emitted.
-        assert_eq!(lines.len(), 2, "{lines:?}");
-        let done = Json::parse(&lines[1]).unwrap();
+        assert_eq!(lines.len(), 3, "{lines:?}");
+        let done = Json::parse(&lines[2]).unwrap();
         assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
         assert_eq!(done.get("metrics").unwrap().get("jobs").and_then(Json::as_u64), Some(1));
     }

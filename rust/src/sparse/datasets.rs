@@ -1,12 +1,16 @@
-//! The evaluation datasets (paper §V-A2), built as deterministic
-//! synthetic equivalents.
+//! The evaluation datasets (paper §V-A2): deterministic synthetic
+//! equivalents of the paper's corpus, plus real matrices ingested from
+//! MatrixMarket files.
 //!
 //! The paper uses subgraphs of PubMed, OGBL-collab and OGBN-proteins plus
-//! the attention map of GPT-2 on Wikitext2 pruned to 90 % sparsity. Those
-//! artifacts are not downloadable in this offline environment, so each is
-//! replaced by a seeded generator matched to the statistics that drive
-//! the paper's phenomena — size, density, and nnz-per-row/column skew
-//! (irregularity). See DESIGN.md §Substitutions.
+//! the attention map of GPT-2 on Wikitext2 pruned to 90 % sparsity. The
+//! full-size artifacts are replaced by seeded generators matched to the
+//! statistics that drive the paper's phenomena — size, density, and
+//! nnz-per-row/column skew (irregularity) — while *real* sparse matrices
+//! enter through the `.mtx` loader ([`super::mtx`]) as
+//! [`DatasetKind::File`] (`dataset: "file:<path>"` in job lines, vendored
+//! fixtures under `rust/testdata/`). See DESIGN.md §Substitutions and
+//! docs/DATASETS.md for the split and the `dare oracle` workflow.
 //!
 //! | dataset           | paper source             | generator                               |
 //! |-------------------|--------------------------|------------------------------------------|
@@ -16,11 +20,13 @@
 //! | `Gpt2Attention`   | pruned attention map     | causal band + heavy hitters, n=512, 90 % |
 
 use super::formats::{Csc, Triplet};
+use super::mtx::{self, MtxToken};
 use crate::util::prng::Pcg32;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 /// The four evaluation datasets (Table III), regenerated as
-/// statistically-matched synthetic matrices.
+/// statistically-matched synthetic matrices — plus real matrices loaded
+/// from MatrixMarket files.
 pub enum DatasetKind {
     /// Citation graph: power-law degrees, mean ≈ 4.5.
     PubMed,
@@ -30,6 +36,11 @@ pub enum DatasetKind {
     OgbnProteins,
     /// Sparsified causal attention map (90% zero).
     Gpt2Attention,
+    /// A real matrix ingested from a `.mtx` file and registered in the
+    /// process-global content-addressed registry ([`super::mtx`]). The
+    /// token is the FNV-1a64 digest of the file bytes, so cache keys
+    /// derived from this variant survive file renames.
+    File(MtxToken),
 }
 
 impl DatasetKind {
@@ -41,24 +52,42 @@ impl DatasetKind {
         DatasetKind::Gpt2Attention,
     ];
 
-    /// Short name used by the CLI and report tables.
+    /// Short name used by the CLI and report tables. For
+    /// [`DatasetKind::File`] this is `file:<path>` of the first
+    /// registration.
     pub fn name(self) -> &'static str {
         match self {
             DatasetKind::PubMed => "pubmed",
             DatasetKind::OgblCollab => "ogbl-collab",
             DatasetKind::OgbnProteins => "ogbn-proteins",
             DatasetKind::Gpt2Attention => "gpt2-attn",
+            DatasetKind::File(tok) => tok.name(),
         }
     }
 
     /// Inverse of [`DatasetKind::name`], plus common abbreviations.
+    /// `file:<path>` names load and register the `.mtx` file at that
+    /// path. Prefer [`DatasetKind::resolve`] where the error detail
+    /// matters (a bad file and an unknown name are different failures).
     pub fn from_name(s: &str) -> Option<Self> {
+        Self::resolve(s).ok()
+    }
+
+    /// Resolve a dataset name with a human-readable error: the builtin
+    /// synthetic names/abbreviations, or `file:<path>` which reads,
+    /// parses, and content-registers the MatrixMarket file at `path`.
+    pub fn resolve(s: &str) -> Result<Self, String> {
         match s {
-            "pubmed" => Some(DatasetKind::PubMed),
-            "ogbl-collab" | "collab" => Some(DatasetKind::OgblCollab),
-            "ogbn-proteins" | "proteins" => Some(DatasetKind::OgbnProteins),
-            "gpt2-attn" | "gpt2" => Some(DatasetKind::Gpt2Attention),
-            _ => None,
+            "pubmed" => Ok(DatasetKind::PubMed),
+            "ogbl-collab" | "collab" => Ok(DatasetKind::OgblCollab),
+            "ogbn-proteins" | "proteins" => Ok(DatasetKind::OgbnProteins),
+            "gpt2-attn" | "gpt2" => Ok(DatasetKind::Gpt2Attention),
+            other => match other.strip_prefix("file:") {
+                Some(path) if !path.is_empty() => {
+                    mtx::register_path(path).map_err(|e| format!("dataset '{other}': {e}"))
+                }
+                _ => Err(format!("unknown dataset '{other}'")),
+            },
         }
     }
 }
@@ -77,7 +106,9 @@ pub struct Dataset {
 
 impl Dataset {
     /// Build a dataset at its default evaluation size. `scale` in (0, 1]
-    /// shrinks the matrix for fast tests (1.0 = evaluation size).
+    /// shrinks the matrix for fast tests (1.0 = evaluation size). File
+    /// datasets are real artifacts and are never rescaled — `scale` is
+    /// ignored for them (and canonicalized to 1.0 in `WorkloadKey`).
     pub fn load(kind: DatasetKind, scale: f64) -> Self {
         assert!(scale > 0.0 && scale <= 1.0, "scale in (0,1]");
         let s = |n: usize| ((n as f64 * scale) as usize).max(32);
@@ -86,6 +117,11 @@ impl Dataset {
             DatasetKind::OgblCollab => powerlaw_graph(s(1024), 8.0, 2.1, 0xDA7A_0002),
             DatasetKind::OgbnProteins => powerlaw_graph(s(512), 32.0, 1.6, 0xDA7A_0003),
             DatasetKind::Gpt2Attention => attention_map(s(512), 0.90, 0xDA7A_0004),
+            DatasetKind::File(tok) => {
+                let rec = mtx::record(tok)
+                    .expect("BUG: .mtx token not registered in this process (tokens only come from mtx::register_*)");
+                return Dataset { kind, matrix: rec.matrix.clone(), feature_dim: rec.feature_dim };
+            }
         };
         Dataset { kind, matrix, feature_dim: 64 }
     }
@@ -276,5 +312,29 @@ mod tests {
             assert_eq!(DatasetKind::from_name(kind.name()), Some(kind));
         }
         assert_eq!(DatasetKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn file_datasets_load_from_the_registry() {
+        let kind = mtx::register_text(
+            "datasets-test",
+            "%%MatrixMarket matrix coordinate real general\n3 3 2\n1 1 1.0\n3 2 2.0\n",
+        )
+        .unwrap();
+        // scale is ignored for real files: both loads are the full matrix
+        let a = Dataset::load(kind, 0.125);
+        let b = Dataset::load(kind, 1.0);
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.matrix.nnz(), 2);
+        assert_eq!(a.feature_dim, 64);
+        assert!(a.name().starts_with("file:"), "{}", a.name());
+    }
+
+    #[test]
+    fn resolve_reports_file_errors() {
+        assert!(DatasetKind::resolve("file:").is_err(), "empty path");
+        let e = DatasetKind::resolve("file:/no/such/fixture.mtx").unwrap_err();
+        assert!(e.contains("/no/such/fixture.mtx"), "{e}");
+        assert!(DatasetKind::resolve("pubmed").is_ok());
     }
 }

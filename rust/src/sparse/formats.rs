@@ -46,8 +46,8 @@ pub struct Csr {
 }
 
 impl Csc {
-    /// Build from coordinate entries (sorted and deduplicated here;
-    /// duplicate coordinates sum).
+    /// Build from coordinate entries (sorted and deduplicated here; of
+    /// duplicate coordinates the first occurrence wins).
     pub fn from_triplets(nrows: usize, ncols: usize, mut ts: Vec<Triplet>) -> Self {
         ts.sort_by_key(|t| (t.col, t.row));
         ts.dedup_by_key(|t| (t.col, t.row));
@@ -73,9 +73,14 @@ impl Csc {
         self.row_idx.len()
     }
 
-    /// nnz as a fraction of the full matrix.
+    /// nnz as a fraction of the full matrix (0 for a degenerate empty
+    /// shape, which would otherwise divide by zero).
     pub fn density(&self) -> f64 {
-        self.nnz() as f64 / (self.nrows * self.ncols) as f64
+        let cells = self.nrows as f64 * self.ncols as f64;
+        if cells == 0.0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / cells
     }
 
     /// `1 - density`.
@@ -145,13 +150,21 @@ impl Csc {
         Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, col_idx, vals }
     }
 
-    /// Structural invariant check (used by property tests).
+    /// Structural invariant check (used by property tests and the
+    /// `.mtx` ingestion path). Degenerate shapes — an empty `col_ptr`,
+    /// an `ncols` whose `+ 1` would overflow — are validation errors,
+    /// never panics.
     pub fn check(&self) -> Result<(), String> {
-        if self.col_ptr.len() != self.ncols + 1 {
+        let want_len = self
+            .ncols
+            .checked_add(1)
+            .ok_or_else(|| "ncols + 1 overflows col_ptr length".to_string())?;
+        if self.col_ptr.len() != want_len {
             return Err("col_ptr length".into());
         }
-        if self.col_ptr[0] != 0 || *self.col_ptr.last().unwrap() as usize != self.nnz() {
-            return Err("col_ptr endpoints".into());
+        match (self.col_ptr.first(), self.col_ptr.last()) {
+            (Some(0), Some(&last)) if last as usize == self.nnz() => {}
+            _ => return Err("col_ptr endpoints".into()),
         }
         if self.vals.len() != self.row_idx.len() {
             return Err("vals/row_idx length mismatch".into());
@@ -352,5 +365,20 @@ mod tests {
         let mut m = small();
         m.row_idx[0] = 99;
         assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_degenerate_shapes_without_panicking() {
+        // Empty col_ptr used to hit col_ptr[0] / .last().unwrap().
+        let empty = Csc { nrows: 0, ncols: 0, col_ptr: vec![], row_idx: vec![], vals: vec![] };
+        assert!(empty.check().is_err(), "empty col_ptr must be an error, not a panic");
+        assert_eq!(empty.density(), 0.0, "degenerate shape must not divide by zero");
+        // ncols near usize::MAX used to overflow `ncols + 1`.
+        let huge =
+            Csc { nrows: 0, ncols: usize::MAX, col_ptr: vec![], row_idx: vec![], vals: vec![] };
+        assert!(huge.check().is_err(), "ncols overflow must be an error");
+        // The 0x0 matrix with the canonical one-element col_ptr is valid.
+        let unit = Csc { nrows: 0, ncols: 0, col_ptr: vec![0], row_idx: vec![], vals: vec![] };
+        assert!(unit.check().is_ok());
     }
 }

@@ -11,8 +11,10 @@ pub mod blockify;
 pub mod datasets;
 pub mod dense;
 pub mod formats;
+pub mod mtx;
 
 pub use blockify::{blockify, blockify_structurize, BlockPattern};
 pub use datasets::{Dataset, DatasetKind};
 pub use dense::Dense;
 pub use formats::{Csc, Csr, Triplet};
+pub use mtx::{MtxError, MtxToken};

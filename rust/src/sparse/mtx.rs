@@ -1,0 +1,570 @@
+//! MatrixMarket (`.mtx`) ingestion: a typed, panic-free loader for real
+//! sparse matrices, plus the process-global registry that turns a loaded
+//! file into a [`DatasetKind::File`] usable everywhere a synthetic
+//! dataset is.
+//!
+//! Supported subset of the MatrixMarket exchange format (the one every
+//! SuiteSparse/graph-repo matrix in the wild uses):
+//!
+//! * objects: `matrix`
+//! * formats: `coordinate` (sparse triplets) and `array` (column-major
+//!   dense, exact zeros dropped on ingestion)
+//! * fields: `real`, `integer`, `pattern` (pattern entries get value 1.0;
+//!   `pattern` is invalid for `array` files)
+//! * symmetries: `general` and `symmetric` (the stored lower triangle is
+//!   mirrored; `skew-symmetric`/`hermitian` are rejected as unsupported)
+//!
+//! Everything else — truncated headers, out-of-range 1-based
+//! coordinates, duplicate entries, non-finite values, entry-count
+//! mismatches, hostile dimensions — is a typed [`MtxError`], never a
+//! panic: the parser sits on the service's job-intake path
+//! (`{"dataset":"file:…"}`), so its inputs are untrusted by definition.
+//! The hostile-input property suite in `tests/mtx.rs` holds it to that
+//! under `catch_unwind`.
+//!
+//! # Content-addressed registry
+//!
+//! [`register_path`] digests the file bytes (FNV-1a64), parses, and
+//! records the matrix in a process-global registry keyed by the digest.
+//! The returned [`DatasetKind::File`] carries only the digest (as an
+//! [`MtxToken`]), so [`WorkloadKey`](crate::kernels::WorkloadKey) cache
+//! keys derived from it are **content-addressed, not path-addressed**:
+//! renaming or moving a fixture re-registers under the same token and
+//! every disk-cache entry (workload *and* result tier) still hits. See
+//! `docs/DATASETS.md` for the workflow.
+
+use super::datasets::DatasetKind;
+use super::formats::{Csc, Triplet};
+use crate::util::fnv::fnv1a64;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Largest accepted row/column count: a hostile size header cannot make
+/// the loader (or the kernel compilers downstream) allocate unboundedly.
+pub const MAX_DIM: usize = 1 << 20;
+
+/// Largest accepted nonzero count, same rationale as [`MAX_DIM`].
+pub const MAX_NNZ: usize = 1 << 26;
+
+/// Why a `.mtx` file failed to load. Every variant is a validation
+/// error the caller can surface; none of them is ever a panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MtxError {
+    /// The file could not be read at all.
+    Io {
+        /// The path that failed to open/read.
+        path: String,
+        /// The underlying I/O error text.
+        detail: String,
+    },
+    /// The `%%MatrixMarket` banner is missing, malformed, or names an
+    /// unsupported object/format/field/symmetry.
+    Banner {
+        /// What was wrong with the banner.
+        detail: String,
+    },
+    /// The size header line is missing or malformed.
+    Header {
+        /// 1-based line number of the offending line (0 = missing).
+        line: usize,
+        /// What was wrong with it.
+        detail: String,
+    },
+    /// A data entry is malformed, out of range, non-finite, or a
+    /// duplicate coordinate.
+    Entry {
+        /// 1-based line number of the offending entry.
+        line: usize,
+        /// What was wrong with it.
+        detail: String,
+    },
+    /// The file carries the wrong number of entries for its header.
+    Count {
+        /// Entries the size header declared.
+        want: usize,
+        /// Entries the file actually carries.
+        got: usize,
+    },
+    /// The matrix parsed cleanly but stores no nonzeros — degenerate
+    /// for every sparse kernel in the evaluation.
+    Empty,
+}
+
+impl fmt::Display for MtxError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MtxError::Io { path, detail } => write!(f, "{path}: {detail}"),
+            MtxError::Banner { detail } => write!(f, "bad MatrixMarket banner: {detail}"),
+            MtxError::Header { line, detail } => {
+                write!(f, "line {line}: bad size header: {detail}")
+            }
+            MtxError::Entry { line, detail } => write!(f, "line {line}: bad entry: {detail}"),
+            MtxError::Count { want, got } => {
+                write!(f, "entry count mismatch: header declares {want}, file has {got}")
+            }
+            MtxError::Empty => write!(f, "matrix has no nonzero entries"),
+        }
+    }
+}
+
+impl std::error::Error for MtxError {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MtxFormat {
+    Coordinate,
+    Array,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MtxField {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MtxSymmetry {
+    General,
+    Symmetric,
+}
+
+fn parse_banner(line: &str) -> Result<(MtxFormat, MtxField, MtxSymmetry), MtxError> {
+    let err = |detail: String| MtxError::Banner { detail };
+    let mut it = line.split_whitespace();
+    let tag = it.next().unwrap_or("");
+    if !tag.eq_ignore_ascii_case("%%MatrixMarket") {
+        return Err(err("first line must start with '%%MatrixMarket'".into()));
+    }
+    let object = it.next().unwrap_or("").to_ascii_lowercase();
+    if object != "matrix" {
+        return Err(err(format!("unsupported object '{object}' (expected 'matrix')")));
+    }
+    let format = match it.next().unwrap_or("").to_ascii_lowercase().as_str() {
+        "coordinate" => MtxFormat::Coordinate,
+        "array" => MtxFormat::Array,
+        other => return Err(err(format!("unsupported format '{other}'"))),
+    };
+    let field = match it.next().unwrap_or("").to_ascii_lowercase().as_str() {
+        "real" => MtxField::Real,
+        "integer" => MtxField::Integer,
+        "pattern" => MtxField::Pattern,
+        other => return Err(err(format!("unsupported field '{other}'"))),
+    };
+    let symmetry = match it.next().unwrap_or("").to_ascii_lowercase().as_str() {
+        "general" => MtxSymmetry::General,
+        "symmetric" => MtxSymmetry::Symmetric,
+        other => return Err(err(format!("unsupported symmetry '{other}'"))),
+    };
+    if it.next().is_some() {
+        return Err(err("trailing tokens after the symmetry qualifier".into()));
+    }
+    if format == MtxFormat::Array && field == MtxField::Pattern {
+        return Err(err("'array' files cannot use the 'pattern' field".into()));
+    }
+    Ok((format, field, symmetry))
+}
+
+fn parse_dim(tok: &str, line: usize, what: &str) -> Result<usize, MtxError> {
+    let n: usize = tok
+        .parse()
+        .map_err(|_| MtxError::Header { line, detail: format!("{what} '{tok}' is not a count") })?;
+    if n == 0 {
+        return Err(MtxError::Header { line, detail: format!("{what} must be >= 1") });
+    }
+    if n > MAX_DIM {
+        return Err(MtxError::Header {
+            line,
+            detail: format!("{what} {n} exceeds the {MAX_DIM} sanity bound"),
+        });
+    }
+    Ok(n)
+}
+
+fn parse_value(tok: &str, line: usize) -> Result<f32, MtxError> {
+    let v: f64 = tok
+        .parse()
+        .map_err(|_| MtxError::Entry { line, detail: format!("value '{tok}' is not a number") })?;
+    let v = v as f32;
+    if !v.is_finite() {
+        return Err(MtxError::Entry { line, detail: format!("value '{tok}' is not finite as f32") });
+    }
+    Ok(v)
+}
+
+/// A stored `(row, col, val)` after 1-based bounds checking, pre-mirror.
+fn parse_coord_entry(
+    toks: &[&str],
+    line: usize,
+    field: MtxField,
+    nrows: usize,
+    ncols: usize,
+) -> Result<(u32, u32, f32), MtxError> {
+    let want_toks = if field == MtxField::Pattern { 2 } else { 3 };
+    if toks.len() != want_toks {
+        return Err(MtxError::Entry {
+            line,
+            detail: format!("expected {want_toks} fields, got {}", toks.len()),
+        });
+    }
+    let idx = |tok: &str, dim: usize, what: &str| -> Result<u32, MtxError> {
+        let i: usize = tok.parse().map_err(|_| MtxError::Entry {
+            line,
+            detail: format!("{what} '{tok}' is not an index"),
+        })?;
+        if i == 0 || i > dim {
+            return Err(MtxError::Entry {
+                line,
+                detail: format!("{what} {i} out of range 1..={dim}"),
+            });
+        }
+        Ok((i - 1) as u32)
+    };
+    let r = idx(toks[0], nrows, "row")?;
+    let c = idx(toks[1], ncols, "column")?;
+    let v = if field == MtxField::Pattern { 1.0 } else { parse_value(toks[2], line)? };
+    Ok((r, c, v))
+}
+
+/// Parse MatrixMarket text into a [`Csc`]. See the module docs for the
+/// supported subset; any deviation is a typed [`MtxError`].
+pub fn parse_mtx(text: &str) -> Result<Csc, MtxError> {
+    // `str::lines` splits on both `\n` and `\r\n`; a stray trailing
+    // `\r` (mixed line endings) is trimmed per line below.
+    let mut lines = text.lines().enumerate().map(|(i, l)| (i + 1, l.trim_end_matches('\r')));
+    let (_, banner) =
+        lines.next().ok_or_else(|| MtxError::Banner { detail: "empty file".into() })?;
+    let (format, field, symmetry) = parse_banner(banner)?;
+
+    let mut data = lines.filter(|(_, l)| {
+        let t = l.trim();
+        !t.is_empty() && !t.starts_with('%')
+    });
+
+    let (hline, header) = data.next().ok_or_else(|| MtxError::Header {
+        line: 0,
+        detail: "missing size line".into(),
+    })?;
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    let want_header_toks = if format == MtxFormat::Coordinate { 3 } else { 2 };
+    if toks.len() != want_header_toks {
+        return Err(MtxError::Header {
+            line: hline,
+            detail: format!("expected {want_header_toks} fields, got {}", toks.len()),
+        });
+    }
+    let nrows = parse_dim(toks[0], hline, "row count")?;
+    let ncols = parse_dim(toks[1], hline, "column count")?;
+    if symmetry == MtxSymmetry::Symmetric && nrows != ncols {
+        return Err(MtxError::Header {
+            line: hline,
+            detail: format!("symmetric matrix must be square, got {nrows}x{ncols}"),
+        });
+    }
+
+    let mut ts: Vec<Triplet> = Vec::new();
+    let mut seen: HashSet<(u32, u32)> = HashSet::new();
+    let mut push = |row: u32, col: u32, val: f32, line: usize| -> Result<(), MtxError> {
+        if !seen.insert((row, col)) {
+            return Err(MtxError::Entry {
+                line,
+                detail: format!("duplicate entry at ({}, {})", row + 1, col + 1),
+            });
+        }
+        ts.push(Triplet { row, col, val });
+        Ok(())
+    };
+
+    match format {
+        MtxFormat::Coordinate => {
+            let nnz: usize = parse_dim(toks[2], hline, "nonzero count")?;
+            if nnz > MAX_NNZ {
+                return Err(MtxError::Header {
+                    line: hline,
+                    detail: format!("nonzero count {nnz} exceeds the {MAX_NNZ} sanity bound"),
+                });
+            }
+            if (nnz as u128) > (nrows as u128) * (ncols as u128) {
+                return Err(MtxError::Header {
+                    line: hline,
+                    detail: format!("nonzero count {nnz} exceeds {nrows}x{ncols} cells"),
+                });
+            }
+            let mut got = 0usize;
+            for (lineno, line) in data {
+                got += 1;
+                if got > nnz {
+                    return Err(MtxError::Count { want: nnz, got });
+                }
+                let toks: Vec<&str> = line.split_whitespace().collect();
+                let (r, c, v) = parse_coord_entry(&toks, lineno, field, nrows, ncols)?;
+                if symmetry == MtxSymmetry::Symmetric && r < c {
+                    return Err(MtxError::Entry {
+                        line: lineno,
+                        detail: format!(
+                            "({}, {}) is above the diagonal of a symmetric file",
+                            r + 1,
+                            c + 1
+                        ),
+                    });
+                }
+                push(r, c, v, lineno)?;
+                if symmetry == MtxSymmetry::Symmetric && r != c {
+                    push(c, r, v, lineno)?;
+                }
+            }
+            if got != nnz {
+                return Err(MtxError::Count { want: nnz, got });
+            }
+        }
+        MtxFormat::Array => {
+            // Column-major dense values; symmetric files store only the
+            // lower triangle (diagonal included), still column-major.
+            // The stored-entry count is declared by the dimensions alone,
+            // so bound it up front; the (r, c) cursor below walks the
+            // storage order arithmetically, so a hostile header cannot
+            // trigger a large allocation before any data is read.
+            let want = match symmetry {
+                MtxSymmetry::General => nrows.checked_mul(ncols),
+                // nrows == ncols was enforced above; n*(n+1)/2 <= n*n.
+                MtxSymmetry::Symmetric => nrows.checked_mul(nrows + 1).map(|n| n / 2),
+            }
+            .filter(|&n| n <= MAX_NNZ)
+            .ok_or_else(|| MtxError::Header {
+                line: hline,
+                detail: format!("{nrows}x{ncols} dense cells exceed the {MAX_NNZ} sanity bound"),
+            })?;
+            let (mut r, mut c) = (0usize, 0usize);
+            let mut got = 0usize;
+            for (lineno, line) in data {
+                for tok in line.split_whitespace() {
+                    if got >= want {
+                        return Err(MtxError::Count { want, got: got + 1 });
+                    }
+                    let v = parse_value(tok, lineno)?;
+                    got += 1;
+                    if v != 0.0 {
+                        // exact zeros are simply not stored
+                        push(r as u32, c as u32, v, lineno)?;
+                        if symmetry == MtxSymmetry::Symmetric && r != c {
+                            push(c as u32, r as u32, v, lineno)?;
+                        }
+                    }
+                    r += 1;
+                    if r >= nrows {
+                        c += 1;
+                        r = if symmetry == MtxSymmetry::Symmetric { c } else { 0 };
+                    }
+                }
+            }
+            if got != want {
+                return Err(MtxError::Count { want, got });
+            }
+        }
+    }
+
+    if ts.is_empty() {
+        return Err(MtxError::Empty);
+    }
+    Ok(Csc::from_triplets(nrows, ncols, ts))
+}
+
+// ---------------------------------------------------------------------
+// Content-addressed registry
+// ---------------------------------------------------------------------
+
+/// An opaque content-addressed handle to a registered `.mtx` dataset:
+/// the FNV-1a64 digest of the file's bytes. `Copy + Eq + Hash` so
+/// [`DatasetKind`] stays `Copy`; two files with identical bytes —
+/// including the same file after a rename — resolve to the same token,
+/// which is what keeps disk-cache keys stable across path changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MtxToken(u64);
+
+impl MtxToken {
+    /// The content digest (FNV-1a64 over the raw file bytes).
+    pub fn digest(self) -> u64 {
+        self.0
+    }
+
+    /// The registered display name (`file:<path or label>` of the first
+    /// registration). Tokens only come from [`register_path`] /
+    /// [`register_text`], so the lookup cannot miss through the public
+    /// API; the fallback avoids a panic regardless.
+    pub fn name(self) -> &'static str {
+        record(self).map(|r| r.name).unwrap_or("file:unregistered")
+    }
+}
+
+/// A registered `.mtx` dataset: display name, parsed matrix, and the
+/// dense feature dimension its workloads use.
+pub(crate) struct MtxRecord {
+    /// `file:<path>` of the first registration (leaked once per
+    /// distinct content digest, so `DatasetKind::name` can stay
+    /// `&'static str`).
+    pub(crate) name: &'static str,
+    /// The parsed sparse operand.
+    pub(crate) matrix: Csc,
+    /// Feature dimension of the dense operands (matches the synthetic
+    /// datasets' 64).
+    pub(crate) feature_dim: usize,
+}
+
+fn registry() -> &'static RwLock<HashMap<u64, Arc<MtxRecord>>> {
+    static REGISTRY: OnceLock<RwLock<HashMap<u64, Arc<MtxRecord>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// The registry record behind `token`, if this process registered it.
+pub(crate) fn record(token: MtxToken) -> Option<Arc<MtxRecord>> {
+    registry().read().expect("mtx registry poisoned").get(&token.0).cloned()
+}
+
+/// Parse `text` and register it under the display label `label`
+/// (tests and in-memory callers; file callers use [`register_path`]).
+/// Re-registering identical content is a cheap no-op that returns the
+/// existing token — the first registration's label wins.
+pub fn register_text(label: &str, text: &str) -> Result<DatasetKind, MtxError> {
+    let digest = fnv1a64(text.as_bytes());
+    let token = MtxToken(digest);
+    if record(token).is_some() {
+        return Ok(DatasetKind::File(token));
+    }
+    let matrix = parse_mtx(text)?;
+    let mut reg = registry().write().expect("mtx registry poisoned");
+    reg.entry(digest).or_insert_with(|| {
+        Arc::new(MtxRecord {
+            name: Box::leak(format!("file:{label}").into_boxed_str()),
+            matrix,
+            feature_dim: 64,
+        })
+    });
+    Ok(DatasetKind::File(token))
+}
+
+/// Read, parse, and register the `.mtx` file at `path`, returning the
+/// content-addressed [`DatasetKind::File`] for it. This is what
+/// `dataset: "file:<path>"` job lines and `--dataset file:<path>`
+/// resolve through.
+pub fn register_path(path: &str) -> Result<DatasetKind, MtxError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| MtxError::Io { path: path.to_string(), detail: e.to_string() })?;
+    register_text(path, &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "%%MatrixMarket matrix coordinate real general\n\
+                        % a comment\n\
+                        4 3 5\n\
+                        1 1 1.0\n\
+                        4 1 3.0\n\
+                        2 2 2.0\n\
+                        1 3 4.0\n\
+                        3 3 5.0\n";
+
+    #[test]
+    fn coordinate_general_parses() {
+        let m = parse_mtx(TINY).unwrap();
+        m.check().unwrap();
+        assert_eq!((m.nrows, m.ncols, m.nnz()), (4, 3, 5));
+        assert_eq!(m.col_rows(0), &[0, 3]);
+        assert_eq!(m.col_vals(2), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn crlf_and_comments_are_tolerated() {
+        let crlf = TINY.replace('\n', "\r\n");
+        assert_eq!(parse_mtx(&crlf).unwrap(), parse_mtx(TINY).unwrap());
+    }
+
+    #[test]
+    fn pattern_entries_get_unit_values() {
+        let m = parse_mtx(
+            "%%MatrixMarket matrix coordinate pattern general\n3 3 2\n1 1\n3 2\n",
+        )
+        .unwrap();
+        assert_eq!(m.col_vals(0), &[1.0]);
+        assert_eq!(m.col_rows(1), &[2]);
+    }
+
+    #[test]
+    fn symmetric_lower_triangle_mirrors() {
+        let m = parse_mtx(
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 3\n1 1 2.0\n3 1 -1.0\n3 2 0.5\n",
+        )
+        .unwrap();
+        m.check().unwrap();
+        assert_eq!(m.nnz(), 5, "two off-diagonal entries mirror");
+        let d = m.to_dense();
+        assert_eq!(d.at(0, 2), -1.0);
+        assert_eq!(d.at(2, 0), -1.0);
+        assert_eq!(d.at(1, 2), 0.5);
+    }
+
+    #[test]
+    fn symmetric_rejects_upper_triangle_entries() {
+        let e = parse_mtx("%%MatrixMarket matrix coordinate real symmetric\n3 3 1\n1 3 1.0\n")
+            .unwrap_err();
+        assert!(matches!(e, MtxError::Entry { line: 3, .. }), "{e}");
+    }
+
+    #[test]
+    fn array_format_drops_zeros_column_major() {
+        let m = parse_mtx("%%MatrixMarket matrix array real general\n2 2\n1.0\n0.0\n0.0\n4.0\n")
+            .unwrap();
+        assert_eq!(m.nnz(), 2);
+        let d = m.to_dense();
+        assert_eq!(d.at(0, 0), 1.0);
+        assert_eq!(d.at(1, 1), 4.0);
+    }
+
+    #[test]
+    fn hostile_inputs_are_typed_errors() {
+        for (text, what) in [
+            ("", "empty file"),
+            ("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 2\n", "complex"),
+            ("%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 1\n", "hermitian"),
+            ("%%MatrixMarket matrix coordinate real general\n", "missing size"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2\n", "short header"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 9\n1 1 1\n", "nnz > cells"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n", "row OOB"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n", "0-based"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nope\n", "bad value"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1e999\n", "overflow"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 1 2.0\n", "dup"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n", "too few"),
+            ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 1.0\n", "extra"),
+            ("%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 1 1.0\n", "non-square"),
+            ("%%MatrixMarket matrix array pattern general\n2 2\n", "array pattern"),
+            ("%%MatrixMarket matrix coordinate real general\n0 2 0\n", "zero dim"),
+        ] {
+            let e = parse_mtx(text).unwrap_err();
+            let _ = e.to_string();
+            assert!(parse_mtx(text).is_err(), "{what} must fail");
+        }
+    }
+
+    #[test]
+    fn registry_is_content_addressed() {
+        let a = register_text("fixtures/a.mtx", TINY).unwrap();
+        let b = register_text("renamed/elsewhere.mtx", TINY).unwrap();
+        assert_eq!(a, b, "identical bytes must resolve to one token");
+        let DatasetKind::File(tok) = a else { panic!("expected File") };
+        assert_eq!(tok.name(), "file:fixtures/a.mtx", "first registration's label wins");
+        let other = register_text(
+            "other.mtx",
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n",
+        )
+        .unwrap();
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn empty_matrix_is_rejected() {
+        let e = parse_mtx("%%MatrixMarket matrix coordinate real general\n4 4 0\n").unwrap_err();
+        assert_eq!(e, MtxError::Empty);
+    }
+}

@@ -53,6 +53,7 @@ fn fleet_survives_worker_sigkill_mid_batch() {
 
     let mut stream = Stream::connect_unix(router_sock.to_str().unwrap()).expect("connect");
     let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{{\"cmd\":\"hello\",\"proto\":2}}").unwrap();
     // Pipelined batch across both kernels and blocks so the keys spread
     // over the ring; duplicate specs under fresh ids are cache hits.
     let mut want_ids = Vec::new();
@@ -93,6 +94,7 @@ fn fleet_survives_worker_sigkill_mid_batch() {
                 *answered.entry(id).or_insert(0) += 1;
             }
             Some("busy") => {}
+            Some("hello") => {}
             Some("done") => break v.get("metrics").expect("done carries metrics").clone(),
             other => panic!("unexpected event {other:?} in {line:?}"),
         }
@@ -109,9 +111,14 @@ fn fleet_survives_worker_sigkill_mid_batch() {
     // visible, and the ring is fully repopulated (restart).
     let mut probe = Stream::connect_unix(router_sock.to_str().unwrap()).expect("connect probe");
     let mut probe_reader = BufReader::new(probe.try_clone().unwrap());
+    writeln!(probe, "{{\"cmd\":\"hello\",\"proto\":2}}").unwrap();
     writeln!(probe, "{{\"cmd\":\"metrics\"}}").unwrap();
     probe.flush().unwrap();
     let mut line = String::new();
+    probe_reader.read_line(&mut line).expect("read hello reply");
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("hello"), "{line:?}");
+    line.clear();
     probe_reader.read_line(&mut line).expect("read metrics");
     let v = Json::parse(line.trim()).unwrap();
     assert_eq!(v.get("event").and_then(Json::as_str), Some("metrics"), "{line:?}");

@@ -1,0 +1,312 @@
+//! Hostile-input property suite for the MatrixMarket loader
+//! (`sparse::mtx`). The parser sits on the service's job-intake path
+//! (`{"dataset":"file:…"}`), so its inputs are untrusted by definition:
+//! the properties here hold it to "typed `MtxError` or a valid matrix,
+//! never a panic" — every `parse_mtx` call runs under `catch_unwind` so
+//! a panic is reported as the property violation it is, with the
+//! offending input attached.
+//!
+//! Mirrors the fault-matrix idiom of `tests/disk.rs`: a generator for
+//! *valid* files, a catalogue of byte- and token-level mutations that
+//! turn them hostile, and seeded `util::prop` runs over both.
+
+use dare::sparse::mtx::{parse_mtx, register_text, MtxError, MAX_DIM, MAX_NNZ};
+use dare::sparse::Csc;
+use dare::util::prop::{self, Gen};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+// ---------------------------------------------------------------------
+// Harness: parse under catch_unwind, never accept a panic
+// ---------------------------------------------------------------------
+
+/// Parse `text`, converting a parser panic into a test failure that
+/// carries the hostile input. Returns the parser's typed verdict.
+fn parse_no_panic(text: &str) -> Result<Csc, MtxError> {
+    match catch_unwind(AssertUnwindSafe(|| parse_mtx(text))) {
+        Ok(verdict) => verdict,
+        Err(_) => panic!("parse_mtx panicked on hostile input:\n---\n{text}\n---"),
+    }
+}
+
+/// The invariant every input must satisfy: no panic, and on `Ok` the
+/// matrix is structurally valid and within the loader's sanity bounds.
+fn assert_total(text: &str) {
+    if let Ok(m) = parse_no_panic(text) {
+        m.check().unwrap_or_else(|e| {
+            panic!("parse_mtx accepted a structurally-invalid matrix ({e}):\n{text}")
+        });
+        assert!(m.nrows <= MAX_DIM && m.ncols <= MAX_DIM, "dims over bound: {text}");
+        assert!(m.nnz() <= 2 * MAX_NNZ, "nnz over bound (post-mirror): {text}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Valid-file generator
+// ---------------------------------------------------------------------
+
+/// A random *valid* coordinate-format file plus its expected stored-nnz
+/// count (mirror entries included) — the baseline the mutations corrupt.
+fn gen_valid(g: &mut Gen) -> (String, usize) {
+    let symmetric = g.bool(0.4);
+    let field = *g.pick(&["real", "integer", "pattern"]);
+    let n = g.size(24);
+    let (nrows, ncols) = if symmetric { (n, n) } else { (n, g.size(24)) };
+
+    // Distinct coordinates; symmetric files store only r >= c.
+    let mut coords: Vec<(usize, usize)> = Vec::new();
+    for r in 0..nrows {
+        for c in 0..ncols {
+            if !symmetric || r >= c {
+                coords.push((r, c));
+            }
+        }
+    }
+    g.shuffle(&mut coords);
+    let nnz = g.size(coords.len());
+    coords.truncate(nnz);
+
+    let symmetry = if symmetric { "symmetric" } else { "general" };
+    let mut text = format!("%%MatrixMarket matrix coordinate {field} {symmetry}\n");
+    if g.bool(0.5) {
+        text.push_str("% generated fixture\n");
+    }
+    text.push_str(&format!("{nrows} {ncols} {nnz}\n"));
+    let mut stored = 0usize;
+    for &(r, c) in &coords {
+        // 1-based indices; pattern files carry no value token. Values
+        // avoid exact zero so stored-nnz is predictable.
+        match field {
+            "pattern" => text.push_str(&format!("{} {}\n", r + 1, c + 1)),
+            "integer" => text.push_str(&format!("{} {} {}\n", r + 1, c + 1, g.usize_in(1, 9))),
+            _ => text.push_str(&format!("{} {} {:.4}\n", r + 1, c + 1, g.f32() * 1.9 + 0.05)),
+        }
+        stored += if symmetric && r != c { 2 } else { 1 };
+    }
+    (text, stored)
+}
+
+// ---------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_valid_files_parse_to_checked_matrices() {
+    prop::run("valid files parse", 200, |g| {
+        let (text, stored) = gen_valid(g);
+        let m = parse_no_panic(&text)
+            .unwrap_or_else(|e| panic!("valid file rejected ({e}):\n{text}"));
+        m.check().expect("loader output passes Csc::check");
+        assert_eq!(m.nnz(), stored, "stored nnz (mirror included):\n{text}");
+    });
+}
+
+#[test]
+fn prop_comment_blank_and_crlf_noise_is_transparent() {
+    // Comment lines, blank lines, and CRLF endings may appear anywhere
+    // after the banner without changing the parse.
+    prop::run("comment/CRLF noise", 150, |g| {
+        let (text, _) = gen_valid(g);
+        let mut noisy = String::new();
+        for (i, line) in text.lines().enumerate() {
+            noisy.push_str(line);
+            noisy.push_str(if g.bool(0.5) { "\r\n" } else { "\n" });
+            if i > 0 && g.bool(0.3) {
+                noisy.push_str(if g.bool(0.5) { "% noise comment\r\n" } else { "\n" });
+            }
+        }
+        let a = parse_no_panic(&text).expect("baseline valid");
+        let b = parse_no_panic(&noisy)
+            .unwrap_or_else(|e| panic!("noise changed the verdict ({e}):\n{noisy}"));
+        assert_eq!(a, b, "noise changed the matrix:\n{noisy}");
+    });
+}
+
+#[test]
+fn prop_truncation_never_panics() {
+    // Every prefix of a valid file — cut mid-banner, mid-header,
+    // mid-entry, mid-token — is a typed error or (rarely) still valid.
+    prop::run("truncation", 200, |g| {
+        let (text, _) = gen_valid(g);
+        let cut = g.usize_in(0, text.len() + 1);
+        // Cut on a char boundary (the generator is ASCII, but stay safe).
+        let cut = (0..=cut).rev().find(|&i| text.is_char_boundary(i)).unwrap_or(0);
+        assert_total(&text[..cut]);
+    });
+}
+
+#[test]
+fn prop_token_mutations_never_panic() {
+    // Replace one whitespace-separated token anywhere in the file with a
+    // hostile literal: overflow sizes, 0/negative indices, non-numbers,
+    // non-finite values, huge exponents.
+    const HOSTILE: [&str; 12] = [
+        "0",
+        "-1",
+        "18446744073709551616",          // > u64::MAX
+        "99999999999999999999999999999", // way past usize
+        "1e999",                         // f64 overflow -> inf
+        "-1e999",
+        "nan",
+        "inf",
+        "nope",
+        "1.0.0",
+        "0x10",
+        "",
+    ];
+    prop::run("token mutation", 300, |g| {
+        let (text, _) = gen_valid(g);
+        let mut tokens: Vec<String> = Vec::new();
+        for line in text.lines() {
+            for tok in line.split_whitespace() {
+                tokens.push(tok.to_string());
+            }
+        }
+        // Rebuild the file with one token swapped for a hostile one;
+        // line structure is preserved so the mutation lands in-place.
+        let victim = g.usize_in(0, tokens.len());
+        let hostile = *g.pick(&HOSTILE);
+        let mut i = 0usize;
+        let mut mutated = String::new();
+        for line in text.lines() {
+            let mut first = true;
+            for tok in line.split_whitespace() {
+                if !first {
+                    mutated.push(' ');
+                }
+                first = false;
+                mutated.push_str(if i == victim { hostile } else { tok });
+                i += 1;
+            }
+            mutated.push('\n');
+        }
+        assert_total(&mutated);
+    });
+}
+
+#[test]
+fn prop_line_shuffles_dups_and_deletions_never_panic() {
+    // Structural damage: drop a line, duplicate a line (duplicate
+    // coordinates or a count mismatch), or shuffle the data lines
+    // (out-of-triangle entries for symmetric files).
+    prop::run("line damage", 300, |g| {
+        let (text, _) = gen_valid(g);
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        match g.usize_in(0, 3) {
+            0 => {
+                let i = g.usize_in(0, lines.len());
+                lines.remove(i);
+            }
+            1 => {
+                let i = g.usize_in(0, lines.len());
+                let dup = lines[i].clone();
+                lines.insert(i, dup);
+            }
+            _ => {
+                // Keep the banner in place; shuffle everything below it
+                // (the size header may land mid-data).
+                g.shuffle(&mut lines[1..]);
+            }
+        }
+        let mutated = lines.join("\n");
+        assert_total(&mutated);
+    });
+}
+
+#[test]
+fn prop_random_bytes_never_panic() {
+    // No structure at all: printable-ish noise, sometimes starting with
+    // a real banner so the parser gets deep before the damage hits.
+    const BANNERS: [&str; 3] = [
+        "",
+        "%%MatrixMarket matrix coordinate real general\n",
+        "%%MatrixMarket matrix array real symmetric\n",
+    ];
+    prop::run("random bytes", 300, |g| {
+        let mut text = g.pick(&BANNERS).to_string();
+        let len = g.size(512);
+        const ALPHABET: &[u8] = b"0123456789 .-+eE%\n\r\tMatrixmarket";
+        for _ in 0..len {
+            text.push(ALPHABET[g.usize_in(0, ALPHABET.len())] as char);
+        }
+        assert_total(&text);
+    });
+}
+
+#[test]
+fn prop_registry_is_content_addressed_for_generated_files() {
+    prop::run("registry content-addressing", 50, |g| {
+        let (text, _) = gen_valid(g);
+        let label_a = format!("prop/{}.mtx", g.ident(12));
+        let label_b = format!("prop/renamed/{}.mtx", g.ident(12));
+        let a = register_text(&label_a, &text).expect("valid file registers");
+        let b = register_text(&label_b, &text).expect("re-registration is a no-op");
+        assert_eq!(a, b, "identical bytes must resolve to one token");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Deterministic hostile cases (the named edges the issue calls out)
+// ---------------------------------------------------------------------
+
+#[test]
+fn hostile_headers_are_typed_errors_not_allocations() {
+    // Overflow-shaped headers must be rejected *before* any data-sized
+    // allocation: a fabricated nnz (or a dense dim pair) past the sanity
+    // bounds fails fast even though the file carries no data at all.
+    for text in [
+        // truncated header: banner only, then EOF
+        "%%MatrixMarket matrix coordinate real general\n",
+        // truncated header: one token of three
+        "%%MatrixMarket matrix coordinate real general\n7\n",
+        // nnz over the sanity bound
+        &format!("%%MatrixMarket matrix coordinate real general\n1000 1000 {}\n", MAX_NNZ + 1),
+        // nnz > cells
+        "%%MatrixMarket matrix coordinate real general\n2 2 5\n1 1 1.0\n",
+        // dims over the sanity bound
+        &format!("%%MatrixMarket matrix coordinate real general\n{} 2 1\n1 1 1.0\n", MAX_DIM + 1),
+        // dense cell count overflows the bound without overflowing usize
+        "%%MatrixMarket matrix array real general\n1048576 1048576\n",
+    ] {
+        let e = parse_no_panic(text).unwrap_err();
+        assert!(
+            matches!(e, MtxError::Header { .. } | MtxError::Entry { .. } | MtxError::Count { .. }),
+            "{text:?} -> {e}"
+        );
+    }
+}
+
+#[test]
+fn out_of_range_and_duplicate_coordinates_are_entry_errors() {
+    for (text, want_line) in [
+        // 0-based index smuggled into a 1-based format
+        ("%%MatrixMarket matrix coordinate real general\n3 3 1\n0 1 1.0\n", 3),
+        // row past nrows
+        ("%%MatrixMarket matrix coordinate real general\n3 3 1\n4 1 1.0\n", 3),
+        // column past ncols
+        ("%%MatrixMarket matrix coordinate real general\n3 3 1\n1 4 1.0\n", 3),
+        // duplicate coordinate
+        ("%%MatrixMarket matrix coordinate real general\n3 3 2\n2 2 1.0\n2 2 5.0\n", 4),
+        // symmetric mirror collides with an explicit transpose entry
+        ("%%MatrixMarket matrix coordinate real symmetric\n3 3 2\n2 1 1.0\n2 1 5.0\n", 4),
+    ] {
+        match parse_no_panic(text).unwrap_err() {
+            MtxError::Entry { line, .. } => assert_eq!(line, want_line, "{text:?}"),
+            other => panic!("{text:?} -> expected Entry error, got {other}"),
+        }
+    }
+}
+
+#[test]
+fn comment_and_crlf_edges_parse() {
+    // Comments between data lines, a comment as the last line, CRLF
+    // everywhere, and indented entries are all fine.
+    let text = "%%MatrixMarket matrix coordinate real general\r\n\
+                % leading comment\r\n\
+                3 3 2\r\n\
+                % mid-data comment\r\n\
+                \x20\x201 1 1.5\r\n\
+                3\t2\t2.5\r\n\
+                % trailing comment\r\n";
+    let m = parse_no_panic(text).expect("CRLF + comments + tabs parse");
+    assert_eq!((m.nrows, m.ncols, m.nnz()), (3, 3, 2));
+}

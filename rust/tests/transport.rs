@@ -52,8 +52,14 @@ fn job_line(id: &str, variant: &str) -> String {
     )
 }
 
+/// Open the (mandatory) v2 handshake on a fresh connection.
+fn send_hello(stream: &mut Stream) {
+    writeln!(stream, "{{\"cmd\":\"hello\",\"proto\":2}}").unwrap();
+}
+
 /// Read events until (and including) the first `done`; panics on a
-/// non-event line or a closed connection.
+/// non-event line or a closed connection. The server's `hello` answer
+/// is tolerated anywhere before `done`.
 fn read_until_done(reader: &mut impl BufRead) -> (Vec<Json>, Json) {
     let mut results = Vec::new();
     let mut line = String::new();
@@ -64,6 +70,7 @@ fn read_until_done(reader: &mut impl BufRead) -> (Vec<Json>, Json) {
         let v = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
         match v.get("event").and_then(Json::as_str) {
             Some("result") => results.push(v),
+            Some("hello") => {}
             Some("done") => {
                 let metrics = v.get("metrics").expect("done carries metrics").clone();
                 return (results, metrics);
@@ -85,6 +92,7 @@ fn two_clients_pipeline_jobs_and_correlate_by_id() {
             std::thread::spawn(move || {
                 let mut stream = Stream::connect_unix(path.to_str().unwrap()).expect("connect");
                 let mut reader = BufReader::new(stream.try_clone().unwrap());
+                send_hello(&mut stream);
                 // Pipelined: all four jobs go out before any read.
                 for (i, variant) in VARIANTS.iter().enumerate() {
                     writeln!(stream, "{}", job_line(&format!("{tag}/{i}"), variant)).unwrap();
@@ -127,6 +135,7 @@ fn streaming_results_precede_done_and_counts_match() {
     let h = Harness::start("stream");
     let mut stream = h.connect();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
+    send_hello(&mut stream);
     let n = 6;
     for i in 0..n {
         writeln!(stream, "{}", job_line(&format!("s/{i}"), VARIANTS[i % VARIANTS.len()]))
@@ -155,6 +164,7 @@ fn malformed_frame_is_isolated_to_its_connection() {
     // valid job still runs.
     let mut a = h.connect();
     let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    send_hello(&mut a);
     writeln!(a, "this is not json at all").unwrap();
     writeln!(a, "{}", job_line("a/ok", "baseline")).unwrap();
     writeln!(a, "{{\"cmd\":\"done\"}}").unwrap();
@@ -169,6 +179,7 @@ fn malformed_frame_is_isolated_to_its_connection() {
         match v.get("event").and_then(Json::as_str) {
             Some("result") => a_results.push(v),
             Some("error") => a_errors.push(v),
+            Some("hello") => {}
             Some("done") => break v.get("metrics").expect("done carries metrics").clone(),
             other => panic!("unexpected event {other:?} in {line:?}"),
         }
@@ -178,7 +189,8 @@ fn malformed_frame_is_isolated_to_its_connection() {
     let bad = &a_errors[0];
     assert_eq!(bad.get("code").and_then(Json::as_str), Some("malformed"));
     assert!(bad.get("detail").and_then(Json::as_str).is_some());
-    assert_eq!(bad.get("seq").and_then(Json::as_u64), Some(1), "points at frame 1");
+    // Frame 1 is the hello; the garbage is frame 2.
+    assert_eq!(bad.get("seq").and_then(Json::as_u64), Some(2), "points at frame 2");
     let good = &a_results[0];
     assert_eq!(good.get("ok").and_then(Json::as_bool), Some(true));
     assert_eq!(good.get("id").and_then(Json::as_str), Some("a/ok"));
@@ -188,6 +200,7 @@ fn malformed_frame_is_isolated_to_its_connection() {
     // The server survived: a second client connects and runs cleanly.
     let mut b = h.connect();
     let mut b_reader = BufReader::new(b.try_clone().unwrap());
+    send_hello(&mut b);
     writeln!(b, "{}", job_line("b/0", "nvr")).unwrap();
     writeln!(b, "{{\"cmd\":\"done\"}}").unwrap();
     b.flush().unwrap();
@@ -203,6 +216,7 @@ fn metrics_cmd_over_socket_returns_live_snapshot() {
     let h = Harness::start("metrics");
     let mut stream = h.connect();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
+    send_hello(&mut stream);
     writeln!(stream, "{}", job_line("m/0", "baseline")).unwrap();
     writeln!(stream, "{{\"cmd\":\"metrics\"}}").unwrap();
     writeln!(stream, "{{\"cmd\":\"done\"}}").unwrap();
@@ -216,6 +230,7 @@ fn metrics_cmd_over_socket_returns_live_snapshot() {
         let v = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
         match v.get("event").and_then(Json::as_str) {
             Some("result") => results += 1,
+            Some("hello") => {}
             Some("metrics") => {
                 saw_metrics = true;
                 let svc = v.get("service").expect("metrics carries a live snapshot");
@@ -299,6 +314,32 @@ fn auth_socket_rejects_unauthenticated_and_serves_authed() {
 }
 
 #[test]
+fn no_hello_first_frame_is_rejected_even_without_auth() {
+    // The v1 no-hello compatibility window is closed: the first frame
+    // of every session must be a hello, auth or not.
+    let h = Harness::start("nohello");
+    let mut stream = h.connect();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{}", job_line("v1/0", "baseline")).unwrap();
+    stream.flush().unwrap();
+    stream.shutdown_write();
+    let mut lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).expect("read rejection") == 0 {
+            break;
+        }
+        lines.push(line.trim().to_string());
+    }
+    assert_eq!(lines.len(), 1, "error then close, no done: {lines:?}");
+    let v = Json::parse(&lines[0]).unwrap();
+    assert_eq!(v.get("event").and_then(Json::as_str), Some("error"));
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("malformed"));
+    assert!(v.get("detail").and_then(Json::as_str).unwrap().contains("hello"));
+    h.stop();
+}
+
+#[test]
 fn bind_unix_refuses_to_replace_non_socket_files() {
     let path = std::env::temp_dir().join(format!("dare-notsocket-{}.txt", std::process::id()));
     std::fs::write(&path, "precious").unwrap();
@@ -313,6 +354,7 @@ fn shutdown_cmd_drains_server_and_join_returns() {
     let h = Harness::start("shutdown");
     let mut stream = h.connect();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
+    send_hello(&mut stream);
     writeln!(stream, "{}", job_line("final", "dare-full")).unwrap();
     writeln!(stream, "{{\"cmd\":\"shutdown\"}}").unwrap();
     stream.flush().unwrap();
