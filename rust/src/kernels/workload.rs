@@ -108,14 +108,14 @@ impl WorkloadKey {
         let mut h = crate::util::fnv::Fnv64::new();
         h.update(self.kernel.name().as_bytes());
         h.update(&[0xFF]);
-        // File datasets hash their *content digest*, never the display
-        // name (which carries the registration path): cache keys for a
-        // real matrix must survive renaming the file.
+        // File datasets hash their *content digest* (truncated SHA-256),
+        // never the display name (which carries the registration path):
+        // cache keys for a real matrix must survive renaming the file.
         match self.dataset {
             DatasetKind::File(tok) => {
                 h.update(b"file");
                 h.update(&[0xFF]);
-                h.update_u64(tok.digest());
+                h.update(&tok.digest().to_be_bytes());
             }
             other => h.update(other.name().as_bytes()),
         }
@@ -133,7 +133,7 @@ impl WorkloadKey {
     /// filename-safe nor stable across renames.
     pub fn cache_file_stem(&self) -> String {
         let dataset = match self.dataset {
-            DatasetKind::File(tok) => format!("mtx{:016x}", tok.digest()),
+            DatasetKind::File(tok) => format!("mtx{:032x}", tok.digest()),
             other => other.name().to_string(),
         };
         format!(

@@ -111,6 +111,8 @@ options:\n\
   --max-jobs N       serve/fleet: per-connection job quota (excess answered with a\n\
                      {\"event\":\"error\",\"code\":\"quota\"} frame)\n\
   --max-inflight N   fleet: per-connection in-flight cap (busy backpressure)\n\
+  --allow-file-datasets  serve/fleet: let socket/TCP clients submit dataset:\"file:…\"\n\
+                     jobs (off by default — network peers can't read server paths)\n\
   --fleet-dir D      fleet: directory for worker unix sockets (default under /tmp)\n\
   --no-restart       fleet: leave dead workers down (their keys stay re-routed)\n\
   --stream           batch: emit streaming result/done events in completion order\n\
@@ -358,7 +360,12 @@ fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
             &service,
             BufReader::new(std::io::Cursor::new(hello.into_bytes()).chain(file)),
             Box::new(std::io::stdout()),
-            &SessionOpts { verify: opts.verify, ..SessionOpts::default() },
+            // Local jobs files are operator-authored, so file: datasets stay allowed.
+            &SessionOpts {
+                verify: opts.verify,
+                allow_file_datasets: true,
+                ..SessionOpts::default()
+            },
             None,
         )?;
         eprintln!("{}", service.metrics());
@@ -378,7 +385,7 @@ fn cmd_batch(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let job = transport::parse_job_line(line, opts.verify)
+        let job = transport::parse_job_line(line, opts.verify, true)
             .map_err(|e| format!("{path}:{}: {e}", lineno + 1))?;
         jobs.push(job);
     }
@@ -433,6 +440,9 @@ fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
         verify: opts.verify,
         auth: args.get("auth").map(String::from),
         max_jobs: max_jobs_opt(args)?,
+        // Socket/TCP clients are untrusted: file: datasets stay off unless
+        // the operator opts in at launch. (Overridden below for stdio.)
+        allow_file_datasets: args.flag("allow-file-datasets"),
     };
     if socket.is_some() || tcp.is_some() {
         let listener = match (&socket, &tcp) {
@@ -459,12 +469,14 @@ fn cmd_serve(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
         return Ok(());
     }
     // stdio: the same pipelined session loop the socket transport runs.
+    // The stdio peer is whoever launched the process, so file: datasets
+    // are allowed without the flag.
     let stdin = std::io::stdin();
     transport::run_session(
         &service,
         stdin.lock(),
         Box::new(std::io::stdout()),
-        &session_opts,
+        &SessionOpts { allow_file_datasets: true, ..session_opts },
         None,
     )?;
     eprintln!("{}", service.metrics());
@@ -502,6 +514,7 @@ fn cmd_fleet(args: &Args, opts: HarnessOpts) -> Result<(), CliError> {
     }
     cfg.auth = args.get("auth").map(String::from);
     cfg.max_jobs = max_jobs_opt(args)?;
+    cfg.allow_file_datasets = args.flag("allow-file-datasets");
     cfg.max_inflight = match args.get("max-inflight") {
         None => None,
         Some(s) => Some(s.parse::<u64>().map_err(|e| format!("--max-inflight {s}: {e}"))?),

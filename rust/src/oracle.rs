@@ -141,9 +141,18 @@ fn run_case(
         if gsa { "gsa" } else { "strided" }
     );
     let (m, f) = key.operand();
-    let f = f.min(FEATURE_DIM_CAP);
-    debug_assert!(f % 16 == 0 && f <= 64);
+    // The python operands below are regenerated from (m, f); if f were
+    // clamped or misaligned here the references would silently check a
+    // different problem than the one the simulator ran, so refuse instead.
+    if f == 0 || f % 16 != 0 || f > FEATURE_DIM_CAP {
+        let why = format!("unsupported feature dim {f} (need a multiple of 16 <= {FEATURE_DIM_CAP})");
+        return CaseResult { label, rust_ok: Err(why), python_ok: Ok(()) };
+    }
     let workload = key.build();
+    if workload.checks.is_empty() {
+        let why = "workload has no check regions to verify".to_string();
+        return CaseResult { label, rust_ok: Err(why), python_ok: Ok(()) };
+    }
 
     let variant = if gsa { Variant::DareFull } else { Variant::Baseline };
     let mut cfg = SimConfig::for_variant(variant);

@@ -139,6 +139,11 @@ pub struct FleetConfig {
     /// Restart a worker that dies (`--no-restart` sets false; its keys
     /// then stay re-routed to the surviving shards).
     pub restart: bool,
+    /// Permit `file:` datasets in client job lines
+    /// (`--allow-file-datasets`). Off by default: fleet clients are
+    /// remote by definition, and must not be able to make the router
+    /// (or its workers) open arbitrary server-side paths.
+    pub allow_file_datasets: bool,
 }
 
 impl FleetConfig {
@@ -154,6 +159,7 @@ impl FleetConfig {
             max_inflight: None,
             vnodes: DEFAULT_VNODES,
             restart: true,
+            allow_file_datasets: false,
         }
     }
 }
@@ -290,6 +296,7 @@ struct FleetShared {
     max_jobs: Option<u64>,
     max_inflight: Option<u64>,
     restart: bool,
+    allow_file_datasets: bool,
     ring: HashRing,
     workers: Vec<WorkerHandle>,
     pending: Mutex<HashMap<u64, PendingJob>>,
@@ -444,6 +451,10 @@ fn spawn_worker(shared: &Arc<FleetShared>, shard: usize) -> io::Result<()> {
         .arg("serve")
         .arg("--socket")
         .arg(&sock)
+        // A worker is itself a socket server with the default deny-file:
+        // policy; when the router was opted in, forwarded file: jobs
+        // (already policy-checked client-side) must still resolve there.
+        .args(if shared.allow_file_datasets { &["--allow-file-datasets"][..] } else { &[] })
         .args(&shared.worker_args)
         .stdin(Stdio::null())
         .stdout(Stdio::null())
@@ -689,7 +700,9 @@ fn router_session(shared: &Arc<FleetShared>, stream: Stream) {
                 continue;
             }
         }
-        match JobRequest::parse(trimmed) {
+        // Router clients are remote: apply the fleet's file: policy
+        // before the dataset name can touch the filesystem.
+        match JobRequest::parse_policed(trimmed, shared.allow_file_datasets) {
             Ok(mut req) => {
                 let key = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     req.to_spec().workload_key().stable_hash()
@@ -796,6 +809,7 @@ impl Fleet {
             max_jobs: cfg.max_jobs,
             max_inflight: cfg.max_inflight,
             restart: cfg.restart,
+            allow_file_datasets: cfg.allow_file_datasets,
             ring: HashRing::new(cfg.workers, cfg.vnodes),
             workers,
             pending: Mutex::new(HashMap::new()),

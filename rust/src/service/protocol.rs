@@ -390,8 +390,22 @@ impl JobRequest {
         }
     }
 
-    /// Parse one job line (strict: unknown keys are rejected).
+    /// Parse one job line (strict: unknown keys are rejected) from a
+    /// **trusted, local** source — CLI job files, operator pipes. A
+    /// `file:` dataset resolves freely, opening the named path. Lines
+    /// arriving over a socket must go through
+    /// [`JobRequest::parse_policed`] so the server's `file:` policy is
+    /// applied before any filesystem access.
     pub fn parse(line: &str) -> Result<Self, String> {
+        Self::parse_policed(line, true)
+    }
+
+    /// [`JobRequest::parse`] with an explicit `file:` dataset policy.
+    /// With `allow_file_datasets` false — the default for every
+    /// network-facing session — a `file:` dataset is rejected as a
+    /// malformed frame before the server touches its filesystem; see
+    /// [`DatasetKind::resolve_policed`].
+    pub fn parse_policed(line: &str, allow_file_datasets: bool) -> Result<Self, String> {
         let obj = Json::parse(line)?;
         match &obj {
             Json::Obj(fields) => {
@@ -411,8 +425,7 @@ impl JobRequest {
         let kernel = KernelKind::from_name(kernel_name)
             .ok_or_else(|| format!("unknown kernel '{kernel_name}'"))?;
         let dataset_name = str_field("dataset").ok_or("missing string field 'dataset'")?;
-        let dataset = DatasetKind::from_name(dataset_name)
-            .ok_or_else(|| format!("unknown dataset '{dataset_name}'"))?;
+        let dataset = DatasetKind::resolve_policed(dataset_name, allow_file_datasets)?;
         let variant_name = str_field("variant").ok_or("missing string field 'variant'")?;
         let variant = Variant::from_name(variant_name)
             .ok_or_else(|| format!("unknown variant '{variant_name}'"))?;
@@ -928,6 +941,23 @@ mod tests {
         let typo = r#"{"kernel":"spmm","dataset":"pubmed","variant":"nvr","bloc":8}"#;
         let err = JobRequest::parse(typo).unwrap_err();
         assert!(err.contains("unknown job field 'bloc'"), "{err}");
+    }
+
+    #[test]
+    fn policed_parse_refuses_file_datasets() {
+        // A network frame naming a server-side path is rejected by
+        // policy — no filesystem access, no I/O detail echoed back.
+        let line = r#"{"kernel":"spmm","dataset":"file:/etc/hostname","variant":"nvr"}"#;
+        let err = JobRequest::parse_policed(line, false).unwrap_err();
+        assert!(err.contains("--allow-file-datasets"), "{err}");
+        assert!(!err.contains("/etc/hostname"), "path echoed: {err}");
+        // Synthetic datasets parse under either policy.
+        let synth = r#"{"kernel":"spmm","dataset":"pubmed","variant":"nvr"}"#;
+        assert!(JobRequest::parse_policed(synth, false).is_ok());
+        // The opted-in server resolves file: names (and reports a real
+        // loader error for a missing path).
+        let gone = r#"{"kernel":"spmm","dataset":"file:/no/such.mtx","variant":"nvr"}"#;
+        assert!(JobRequest::parse_policed(gone, true).unwrap_err().contains("/no/such.mtx"));
     }
 
     #[test]

@@ -71,6 +71,13 @@ pub struct SessionOpts {
     /// Per-session job quota (`--max-jobs`): submissions past the cap
     /// are answered with a `quota` error frame instead of running.
     pub max_jobs: Option<u64>,
+    /// Permit `file:` datasets in this session's job lines
+    /// (`--allow-file-datasets`). Off by default: a remote client must
+    /// not be able to make the server open arbitrary server-side paths
+    /// (unbounded reads, path probing). Local sessions whose input is
+    /// the operator's own (stdio serve, `dare batch --stream`) turn it
+    /// on.
+    pub allow_file_datasets: bool,
 }
 
 /// What a finished session did.
@@ -96,9 +103,16 @@ pub struct ParsedJob {
 }
 
 /// Parse one JSONL job line into a submission (shared by `dare batch`
-/// and every session loop). `verify` forces verification on.
-pub fn parse_job_line(line: &str, verify: bool) -> Result<ParsedJob, String> {
-    let req = JobRequest::parse(line)?;
+/// and every session loop). `verify` forces verification on;
+/// `allow_file_datasets` is the session's `file:` policy (pass false
+/// for anything a remote client wrote — see
+/// [`SessionOpts::allow_file_datasets`]).
+pub fn parse_job_line(
+    line: &str,
+    verify: bool,
+    allow_file_datasets: bool,
+) -> Result<ParsedJob, String> {
+    let req = JobRequest::parse_policed(line, allow_file_datasets)?;
     let mut spec = req.to_spec();
     spec.verify = spec.verify || verify;
     Ok(ParsedJob { id: req.id, spec, use_xla: req.use_xla })
@@ -347,7 +361,7 @@ pub fn run_session<R: BufRead>(
                 continue;
             }
         }
-        match parse_job_line(trimmed, opts.verify) {
+        match parse_job_line(trimmed, opts.verify, opts.allow_file_datasets) {
             Ok(job) => {
                 let name = job.spec.name();
                 // Reserve the seq and register its context *before*
@@ -937,6 +951,65 @@ mod tests {
         let e = crate::service::protocol::ErrorFrame::parse(&lines[0]).unwrap();
         assert_eq!(e.code, ErrorCode::Malformed);
         assert!(e.detail.contains("hello"), "{e:?}");
+    }
+
+    #[test]
+    fn file_datasets_are_refused_by_default_sessions() {
+        // A session with the default policy (what socket servers run
+        // unless --allow-file-datasets) answers a file: job with a
+        // malformed error that names the policy — it never opens the
+        // path, so no I/O detail can leak which paths exist.
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let input = format!(
+            "{}{{\"id\":\"f0\",\"kernel\":\"spmm\",\"dataset\":\"file:/etc/hostname\",\
+             \"variant\":\"baseline\"}}\n",
+            hello_line()
+        );
+        let buf = SharedBuf::default();
+        let summary = run_session(
+            &service,
+            input.as_bytes(),
+            Box::new(buf.clone()),
+            &SessionOpts::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.jobs, 1);
+        assert_eq!(summary.failed, 1);
+        let lines = buf.take_lines();
+        let e = lines[1..]
+            .iter()
+            .find_map(|l| crate::service::protocol::ErrorFrame::parse(l).ok())
+            .expect("error frame emitted");
+        assert_eq!(e.code, ErrorCode::Malformed);
+        assert!(e.detail.contains("--allow-file-datasets"), "{e:?}");
+        assert!(!e.detail.contains("/etc/hostname"), "path echoed: {e:?}");
+    }
+
+    #[test]
+    fn opted_in_session_serves_file_datasets() {
+        let service = Service::start(ServiceConfig::with_workers(1));
+        let dir = std::env::temp_dir().join(format!("dare-session-mtx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n8 8 3\n1 1 1.0\n5 3 2.0\n8 8 3.0\n",
+        )
+        .unwrap();
+        let input = format!(
+            "{}{{\"id\":\"f1\",\"kernel\":\"spmm\",\"dataset\":\"file:{}\",\
+             \"variant\":\"baseline\",\"verify\":true}}\n",
+            hello_line(),
+            path.display()
+        );
+        let opts = SessionOpts { allow_file_datasets: true, ..SessionOpts::default() };
+        let buf = SharedBuf::default();
+        let summary =
+            run_session(&service, input.as_bytes(), Box::new(buf.clone()), &opts, None).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(summary.jobs, 1);
+        assert_eq!(summary.failed, 0, "{:?}", buf.take_lines());
     }
 
     #[test]

@@ -38,8 +38,9 @@ pub enum DatasetKind {
     Gpt2Attention,
     /// A real matrix ingested from a `.mtx` file and registered in the
     /// process-global content-addressed registry ([`super::mtx`]). The
-    /// token is the FNV-1a64 digest of the file bytes, so cache keys
-    /// derived from this variant survive file renames.
+    /// token is the truncated-SHA-256 digest of the file bytes, so cache
+    /// keys derived from this variant survive file renames — and cannot
+    /// be aliased by a crafted hash collision.
     File(MtxToken),
 }
 
@@ -76,7 +77,22 @@ impl DatasetKind {
     /// Resolve a dataset name with a human-readable error: the builtin
     /// synthetic names/abbreviations, or `file:<path>` which reads,
     /// parses, and content-registers the MatrixMarket file at `path`.
+    ///
+    /// This is the **trusted** entry point (CLI flags, local job files):
+    /// it will open any path. Input arriving over the network must go
+    /// through [`DatasetKind::resolve_policed`] instead, which refuses
+    /// `file:` names unless the server operator opted in.
     pub fn resolve(s: &str) -> Result<Self, String> {
+        Self::resolve_policed(s, true)
+    }
+
+    /// [`DatasetKind::resolve`] with an explicit `file:` policy. With
+    /// `allow_files` false — the default for every network-facing
+    /// session — a `file:` name is refused *before any filesystem
+    /// access*, so a remote client can neither make the server read an
+    /// attacker-chosen path nor probe which paths exist through echoed
+    /// I/O error details. Synthetic dataset names resolve regardless.
+    pub fn resolve_policed(s: &str, allow_files: bool) -> Result<Self, String> {
         match s {
             "pubmed" => Ok(DatasetKind::PubMed),
             "ogbl-collab" | "collab" => Ok(DatasetKind::OgblCollab),
@@ -84,6 +100,13 @@ impl DatasetKind {
             "gpt2-attn" | "gpt2" => Ok(DatasetKind::Gpt2Attention),
             other => match other.strip_prefix("file:") {
                 Some(path) if !path.is_empty() => {
+                    if !allow_files {
+                        return Err(
+                            "'file:' datasets are disabled on this server \
+                             (start it with --allow-file-datasets to serve them)"
+                                .into(),
+                        );
+                    }
                     mtx::register_path(path).map_err(|e| format!("dataset '{other}': {e}"))
                 }
                 _ => Err(format!("unknown dataset '{other}'")),
@@ -336,5 +359,21 @@ mod tests {
         let e = DatasetKind::resolve("file:/no/such/fixture.mtx").unwrap_err();
         assert!(e.contains("/no/such/fixture.mtx"), "{e}");
         assert!(DatasetKind::resolve("pubmed").is_ok());
+    }
+
+    #[test]
+    fn policed_resolve_refuses_files_without_touching_the_fs() {
+        // Denied before any filesystem access: the error names the
+        // policy, never echoes I/O detail ("no such file" vs
+        // "permission denied" would let a remote client probe paths).
+        let e = DatasetKind::resolve_policed("file:/etc/hostname", false).unwrap_err();
+        assert!(e.contains("--allow-file-datasets"), "{e}");
+        assert!(!e.contains("/etc/hostname"), "path echoed: {e}");
+        // Synthetic names are unaffected by the policy.
+        assert_eq!(DatasetKind::resolve_policed("pubmed", false), Ok(DatasetKind::PubMed));
+        // Opting in restores file resolution.
+        assert!(DatasetKind::resolve_policed("file:/no/such.mtx", true)
+            .unwrap_err()
+            .contains("/no/such.mtx"));
     }
 }

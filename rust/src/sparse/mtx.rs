@@ -24,18 +24,29 @@
 //!
 //! # Content-addressed registry
 //!
-//! [`register_path`] digests the file bytes (FNV-1a64), parses, and
-//! records the matrix in a process-global registry keyed by the digest.
-//! The returned [`DatasetKind::File`] carries only the digest (as an
-//! [`MtxToken`]), so [`WorkloadKey`](crate::kernels::WorkloadKey) cache
-//! keys derived from it are **content-addressed, not path-addressed**:
-//! renaming or moving a fixture re-registers under the same token and
-//! every disk-cache entry (workload *and* result tier) still hits. See
+//! [`register_path`] digests the file bytes (SHA-256, truncated to 128
+//! bits — collisions must be *cryptographically* out of reach, not just
+//! unlikely, because two colliding matrices would silently serve each
+//! other's cached results), parses, and records the matrix in a
+//! process-global registry keyed by the digest. The returned
+//! [`DatasetKind::File`] carries only the digest (as an [`MtxToken`]),
+//! so [`WorkloadKey`](crate::kernels::WorkloadKey) cache keys derived
+//! from it are **content-addressed, not path-addressed**: renaming or
+//! moving a fixture re-registers under the same token and every
+//! disk-cache entry (workload *and* result tier) still hits. See
 //! `docs/DATASETS.md` for the workflow.
+//!
+//! File reads are bounded the same way parsing is: [`register_path`]
+//! refuses non-regular files (device nodes, directories, `/proc`
+//! pseudo-files) and caps the bytes it will pull in at
+//! [`MAX_FILE_BYTES`] *before* buffering, so a hostile path cannot
+//! drive an unbounded allocation. Whether an untrusted *network* client
+//! may name server-side paths at all is the transport layer's decision
+//! (`--allow-file-datasets`, see `DatasetKind::resolve_policed`).
 
 use super::datasets::DatasetKind;
 use super::formats::{Csc, Triplet};
-use crate::util::fnv::fnv1a64;
+use crate::util::sha256::sha256_trunc128;
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -46,6 +57,12 @@ pub const MAX_DIM: usize = 1 << 20;
 
 /// Largest accepted nonzero count, same rationale as [`MAX_DIM`].
 pub const MAX_NNZ: usize = 1 << 26;
+
+/// Largest `.mtx` file [`register_path`] will read (64 MiB). The cap is
+/// enforced with a bounded reader, not a trusted size probe: pseudo-
+/// files (`/proc/kcore`, pipes) can report sizes their reads don't
+/// honor, and `/dev/zero` would otherwise stream forever.
+pub const MAX_FILE_BYTES: u64 = 64 << 20;
 
 /// Why a `.mtx` file failed to load. Every variant is a validation
 /// error the caller can surface; none of them is ever a panic.
@@ -374,16 +391,21 @@ pub fn parse_mtx(text: &str) -> Result<Csc, MtxError> {
 // ---------------------------------------------------------------------
 
 /// An opaque content-addressed handle to a registered `.mtx` dataset:
-/// the FNV-1a64 digest of the file's bytes. `Copy + Eq + Hash` so
-/// [`DatasetKind`] stays `Copy`; two files with identical bytes —
-/// including the same file after a rename — resolve to the same token,
-/// which is what keeps disk-cache keys stable across path changes.
+/// the first 128 bits of the SHA-256 of the file's bytes. `Copy + Eq +
+/// Hash` so [`DatasetKind`] stays `Copy`; two files with identical
+/// bytes — including the same file after a rename — resolve to the same
+/// token, which is what keeps disk-cache keys stable across path
+/// changes. The digest is cryptographic on purpose: the registry trusts
+/// digest equality to mean content equality (workload- and result-cache
+/// keys are derived from it), and a 64-bit non-cryptographic hash would
+/// let a crafted collision alias two different matrices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct MtxToken(u64);
+pub struct MtxToken(u128);
 
 impl MtxToken {
-    /// The content digest (FNV-1a64 over the raw file bytes).
-    pub fn digest(self) -> u64 {
+    /// The content digest (SHA-256 of the raw file bytes, truncated to
+    /// its first 128 bits, big-endian).
+    pub fn digest(self) -> u128 {
         self.0
     }
 
@@ -410,8 +432,8 @@ pub(crate) struct MtxRecord {
     pub(crate) feature_dim: usize,
 }
 
-fn registry() -> &'static RwLock<HashMap<u64, Arc<MtxRecord>>> {
-    static REGISTRY: OnceLock<RwLock<HashMap<u64, Arc<MtxRecord>>>> = OnceLock::new();
+fn registry() -> &'static RwLock<HashMap<u128, Arc<MtxRecord>>> {
+    static REGISTRY: OnceLock<RwLock<HashMap<u128, Arc<MtxRecord>>>> = OnceLock::new();
     REGISTRY.get_or_init(|| RwLock::new(HashMap::new()))
 }
 
@@ -425,7 +447,7 @@ pub(crate) fn record(token: MtxToken) -> Option<Arc<MtxRecord>> {
 /// Re-registering identical content is a cheap no-op that returns the
 /// existing token — the first registration's label wins.
 pub fn register_text(label: &str, text: &str) -> Result<DatasetKind, MtxError> {
-    let digest = fnv1a64(text.as_bytes());
+    let digest = sha256_trunc128(text.as_bytes());
     let token = MtxToken(digest);
     if record(token).is_some() {
         return Ok(DatasetKind::File(token));
@@ -446,9 +468,38 @@ pub fn register_text(label: &str, text: &str) -> Result<DatasetKind, MtxError> {
 /// content-addressed [`DatasetKind::File`] for it. This is what
 /// `dataset: "file:<path>"` job lines and `--dataset file:<path>`
 /// resolve through.
+///
+/// The read is defensive: only regular files are accepted (no device
+/// nodes, directories, FIFOs, or `/proc` pseudo-files), and at most
+/// [`MAX_FILE_BYTES`] are ever buffered — enforced by a bounded reader,
+/// not by trusting the reported size, so `/dev/zero`-style endless
+/// streams and size-lying pseudo-files both fail with a typed error
+/// before any data-sized allocation.
 pub fn register_path(path: &str) -> Result<DatasetKind, MtxError> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| MtxError::Io { path: path.to_string(), detail: e.to_string() })?;
+    use std::io::Read as _;
+    let err = |detail: String| MtxError::Io { path: path.to_string(), detail };
+    let file = std::fs::File::open(path).map_err(|e| err(e.to_string()))?;
+    let meta = file.metadata().map_err(|e| err(e.to_string()))?;
+    if !meta.is_file() {
+        return Err(err("not a regular file".into()));
+    }
+    if meta.len() > MAX_FILE_BYTES {
+        return Err(err(format!(
+            "{} bytes exceeds the {MAX_FILE_BYTES}-byte .mtx size bound",
+            meta.len()
+        )));
+    }
+    // Pre-size from the (bounded) metadata but cap the read itself one
+    // byte past the limit, so a file that grows — or lies about its
+    // size — is detected without reading past the bound.
+    let mut text = String::with_capacity(meta.len() as usize);
+    let read = file
+        .take(MAX_FILE_BYTES + 1)
+        .read_to_string(&mut text)
+        .map_err(|e| err(e.to_string()))?;
+    if read as u64 > MAX_FILE_BYTES {
+        return Err(err(format!("longer than the {MAX_FILE_BYTES}-byte .mtx size bound")));
+    }
     register_text(path, &text)
 }
 
@@ -566,5 +617,42 @@ mod tests {
     fn empty_matrix_is_rejected() {
         let e = parse_mtx("%%MatrixMarket matrix coordinate real general\n4 4 0\n").unwrap_err();
         assert_eq!(e, MtxError::Empty);
+    }
+
+    #[test]
+    fn register_path_rejects_non_regular_files() {
+        // A directory opens fine but is not a regular file; device nodes
+        // and /proc pseudo-files fail the same check.
+        let dir = std::env::temp_dir();
+        let e = register_path(&dir.to_string_lossy()).unwrap_err();
+        match e {
+            MtxError::Io { detail, .. } => {
+                assert!(detail.contains("not a regular file") || detail.contains("directory"), "{detail}")
+            }
+            other => panic!("expected Io error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn register_path_bounds_the_read() {
+        // A sparse file over the cap costs no disk but trips the size
+        // check before anything is buffered.
+        let path = std::env::temp_dir().join(format!("dare-mtx-big-{}.mtx", std::process::id()));
+        let f = std::fs::File::create(&path).unwrap();
+        f.set_len(MAX_FILE_BYTES + 1).unwrap();
+        drop(f);
+        let e = register_path(&path.to_string_lossy()).unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        match e {
+            MtxError::Io { detail, .. } => assert!(detail.contains("size bound"), "{detail}"),
+            other => panic!("expected Io error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn token_digest_is_truncated_sha256() {
+        let a = register_text("sha-a.mtx", TINY).unwrap();
+        let DatasetKind::File(tok) = a else { panic!("expected File") };
+        assert_eq!(tok.digest(), crate::util::sha256::sha256_trunc128(TINY.as_bytes()));
     }
 }

@@ -11,5 +11,6 @@ pub mod cli;
 pub mod fnv;
 pub mod prng;
 pub mod prop;
+pub mod sha256;
 pub mod stats;
 pub mod table;
